@@ -1,0 +1,101 @@
+//! End-to-end driver (the flagship example): proves all layers compose on
+//! a real small workload.
+//!
+//! 1. trains (or loads) the `sim-opt-6.7b` subject checkpoint on the
+//!    synthetic corpus, logging the loss curve;
+//! 2. quantizes it with GPTQ and with RPIQ (full calibration protocol);
+//! 3. evaluates PPL + sentiment accuracy for fp/GPTQ/RPIQ;
+//! 4. cross-checks the Rust quantized forward against the **AOT Pallas
+//!    artifact** executed via PJRT (layers 1+2+3 composing);
+//! 5. serves a batched "assistive" request replay through the router,
+//!    reporting latency/throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_assist
+//! ```
+
+use rpiq::coordinator::experiments as exp;
+use rpiq::coordinator::{quantize_lm, Method, ServeConfig, Server};
+use rpiq::model::io::{load_lm, save_lm};
+use rpiq::model::ModelConfig;
+use rpiq::quant::RpiqParams;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let world = exp::World::build(exp::WORLD_SEED);
+    let vocab = world.tokenizer().vocab_size();
+    let name = "sim-opt-6.7b";
+    let ckpt = exp::ckpt_path(Path::new("checkpoints"), name);
+
+    // ---- 1. subject model ----
+    let w = if ckpt.exists() {
+        println!("loading checkpoint {}", ckpt.display());
+        load_lm(&ckpt)?
+    } else {
+        let cfg = ModelConfig::preset(name, vocab).unwrap();
+        println!("training {name} ({} params) for {} steps...", cfg.n_params(), exp::DEFAULT_LM_STEPS);
+        let (w, curve) = exp::pretrain_lm(&cfg, &world, exp::DEFAULT_LM_STEPS, 8, exp::WORLD_SEED, |s, l| {
+            println!("  step {s:4}  loss {l:.4}");
+        });
+        println!("loss curve: {:.3} -> {:.3}", curve[0].1, curve.last().unwrap().1);
+        save_lm(&w, &ckpt)?;
+        w
+    };
+
+    // ---- 2. quantize both arms ----
+    let windows = world.calib_windows(w.config.seq_len, exp::CALIB_SAMPLES);
+    let qcfg = exp::quant_config_for(name);
+    println!("calibrating on {} windows, quantizing 4-bit group-{}...", windows.len(), qcfg.group_size);
+    let gptq = quantize_lm(&w, &windows, qcfg, Method::Gptq)?;
+    let rpiq = quantize_lm(&w, &windows, qcfg, Method::Rpiq(RpiqParams::default()))?;
+    let mean_red: f64 = rpiq.reports.iter().map(|r| r.reduction_pct()).sum::<f64>()
+        / rpiq.reports.len() as f64;
+    println!(
+        "stage-2: mean layer Γ reduction {:.2}%, {} / {} layers early-stopped",
+        mean_red,
+        rpiq.reports.iter().filter(|r| r.early_stopped).count(),
+        rpiq.reports.len()
+    );
+
+    // ---- 3. task metrics ----
+    let fp = exp::eval_lm_fp(&w, &world, exp::CALIB_SAMPLES, 870);
+    let eg = exp::eval_lm_q(&gptq.model, &world, 80, 870);
+    let er = exp::eval_lm_q(&rpiq.model, &world, 80, 870);
+    println!("\n{:<8} {:>8} {:>8} {:>10}", "arm", "acc %", "ppl", "mem MiB");
+    let mib = |b: usize| b as f64 / (1 << 20) as f64;
+    println!("{:<8} {:>8.2} {:>8.3} {:>10.2}", "fp32", fp.acc_pct, fp.ppl, mib(w.config.fp32_bytes()));
+    println!("{:<8} {:>8.2} {:>8.3} {:>10.2}", "gptq", eg.acc_pct, eg.ppl, mib(gptq.model.deploy_bytes()));
+    println!("{:<8} {:>8.2} {:>8.3} {:>10.2}", "rpiq", er.acc_pct, er.ppl, mib(rpiq.model.deploy_bytes()));
+
+    // ---- 4. three-layer cross-check via PJRT ----
+    if Path::new("artifacts/manifest.json").exists() {
+        let eng = rpiq::runtime::Engine::new(Path::new("artifacts"))?;
+        let tokens = &windows[0];
+        let args = rpiq::runtime::lm_args::lm_q_args(&rpiq.model, tokens);
+        let via_pjrt = eng.run(&format!("lm_qlogits_{name}"), &args)?;
+        let via_rust = rpiq.model.forward(tokens, 1, tokens.len());
+        let rel = via_pjrt[0].sub(&via_rust).frob() / via_rust.frob().max(1e-9);
+        println!("\nPallas-artifact vs Rust quantized forward: rel err {rel:.2e} (platform {})", eng.platform());
+        anyhow::ensure!(rel < 1e-3, "three-layer parity check failed");
+    } else {
+        println!("\n(artifacts/ not built — run `make artifacts` for the PJRT cross-check)");
+    }
+
+    // ---- 5. serve a replay ----
+    let tok = world.tokenizer().clone();
+    let server = Server::start(Arc::new(rpiq.model), &tok, ServeConfig::default());
+    let prompts: Vec<String> = world.sentiment.test[..200].iter().map(|e| e.prompt()).collect();
+    let tput = rpiq::coordinator::serve::replay(&server, &tok, &prompts, 4);
+    let stats = server.shutdown();
+    println!(
+        "\nserved {} assistive requests: {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p95 {:.2} ms",
+        stats.count(),
+        tput,
+        stats.mean_ms(),
+        stats.percentile_ms(50.0),
+        stats.percentile_ms(95.0)
+    );
+    println!("e2e_assist OK");
+    Ok(())
+}

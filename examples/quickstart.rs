@@ -1,0 +1,73 @@
+//! Quickstart: the RPIQ pipeline end to end on a small model, in about a
+//! minute — train briefly, calibrate, quantize with GPTQ and with RPIQ,
+//! compare layer reconstruction losses and task metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use rpiq::coordinator::experiments as exp;
+use rpiq::coordinator::{quantize_lm, Method};
+use rpiq::model::ModelConfig;
+use rpiq::quant::RpiqParams;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Synthetic world: corpora + tasks + tokenizer (deterministic).
+    let world = exp::World::build(7);
+    let vocab = world.tokenizer().vocab_size();
+    println!("world: vocab={vocab}, train stream {} tokens", world.train_stream.len());
+
+    // 2. A small subject model, trained for a couple of minutes.
+    let mut cfg = ModelConfig::test_tiny(vocab);
+    cfg.seq_len = 48;
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.d_ff = 128;
+    cfg.n_layers = 3;
+    println!("training {} ({} params)...", cfg.name, cfg.n_params());
+    let (w, curve) = exp::pretrain_lm(&cfg, &world, 150, 8, 1, |s, l| {
+        println!("  step {s:3}  loss {l:.3}");
+    });
+    println!("loss {:.3} -> {:.3}", curve[0].1, curve.last().unwrap().1);
+
+    // 3. Calibration windows (the paper's 128 samples).
+    let windows = world.calib_windows(cfg.seq_len, 64);
+
+    // 4. Quantize: stage 1 only (GPTQ) vs stage 1+2 (RPIQ).
+    let qcfg = rpiq::quant::QuantConfig { bits: 4, group_size: 16, block_size: 16, percdamp: 0.01 };
+    let gptq = quantize_lm(&w, &windows, qcfg, Method::Gptq)?;
+    let rpiq = quantize_lm(&w, &windows, qcfg, Method::Rpiq(RpiqParams::default()))?;
+
+    println!("\nper-layer Γ (output reconstruction loss on the retained instance):");
+    println!("{:<24} {:>10} {:>10} {:>8}", "layer", "GPTQ", "RPIQ", "Δ%");
+    for (g, r) in gptq.reports.iter().zip(rpiq.reports.iter()) {
+        println!(
+            "{:<24} {:>10.4} {:>10.4} {:>7.2}%",
+            g.name,
+            g.final_loss(),
+            r.final_loss(),
+            r.reduction_pct()
+        );
+    }
+
+    // 5. Task metrics.
+    let fp = exp::eval_lm_fp(&w, &world, 20, 120);
+    let eg = exp::eval_lm_q(&gptq.model, &world, 20, 120);
+    let er = exp::eval_lm_q(&rpiq.model, &world, 20, 120);
+    println!("\n{:<8} {:>8} {:>8}", "arm", "acc %", "ppl");
+    println!("{:<8} {:>8.2} {:>8.3}", "fp32", fp.acc_pct, fp.ppl);
+    println!("{:<8} {:>8.2} {:>8.3}", "gptq", eg.acc_pct, eg.ppl);
+    println!("{:<8} {:>8.2} {:>8.3}", "rpiq", er.acc_pct, er.ppl);
+    println!(
+        "\nmemory: fp32 {:.2} MiB -> 4-bit {:.2} MiB ({:.1}%)",
+        cfg.fp32_bytes() as f64 / (1 << 20) as f64,
+        rpiq.model.deploy_bytes() as f64 / (1 << 20) as f64,
+        100.0 * rpiq.model.deploy_bytes() as f64 / cfg.fp32_bytes() as f64
+    );
+    println!(
+        "quantization peaks: GPTQ {:.2} MiB, RPIQ {:.2} MiB (ΔM = single instance + block curvature)",
+        gptq.ledger.peak_mib(),
+        rpiq.ledger.peak_mib()
+    );
+    Ok(())
+}

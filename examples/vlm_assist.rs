@@ -1,0 +1,82 @@
+//! VLM assistance demo: the paper's motivating scenario — a visually
+//! impaired user asks questions about a book cover; the assistant runs a
+//! CMDQ+RPIQ-quantized VLM and answers from the "image".
+//!
+//! ```bash
+//! cargo run --release --example vlm_assist
+//! ```
+
+use rpiq::coordinator::experiments as exp;
+use rpiq::coordinator::{quantize_vlm, Method};
+use rpiq::quant::CmdqPolicy;
+use rpiq::vlm::io::{load_vlm, save_vlm};
+use rpiq::vlm::VlmConfig;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let world = exp::World::build(exp::WORLD_SEED);
+    let tok = world.tokenizer().clone();
+    let ckpt = exp::ckpt_path(Path::new("checkpoints"), "sim-cogvlm2-19b");
+
+    let w = if ckpt.exists() {
+        println!("loading {}", ckpt.display());
+        load_vlm(&ckpt)?
+    } else {
+        let cfg = VlmConfig::sim_cogvlm2(tok.vocab_size());
+        println!("training {} ({} params)...", cfg.name, {
+            let mut rng = rpiq::rng::Pcg64::seeded(0);
+            rpiq::vlm::VlmWeights::init(&cfg, &mut rng).n_params()
+        });
+        let (w, curve) = exp::pretrain_vlm(&cfg, &world, exp::DEFAULT_VLM_STEPS, 8, exp::WORLD_SEED, |s, l| {
+            println!("  step {s:4}  loss {l:.4}");
+        });
+        println!("loss {:.3} -> {:.3}", curve[0].1, curve.last().unwrap().1);
+        save_vlm(&w, &ckpt)?;
+        w
+    };
+
+    // Quantize under the cross-modal differentiated policy with RPIQ base.
+    let policy = CmdqPolicy::default();
+    let samples = world.vlm_calib(exp::CALIB_SAMPLES_VLM);
+    println!(
+        "quantizing with CMDQ+RPIQ (vision {}b/g{}, cross {}b/g{}, language {}b/g{})...",
+        policy.vision.bits, policy.vision.group_size,
+        policy.cross_modal.bits, policy.cross_modal.group_size,
+        policy.language.bits, policy.language.group_size
+    );
+    let out = quantize_vlm(&w, &samples, &policy, Method::Rpiq(policy.rpiq))?;
+    println!(
+        "deployed {:.2} MiB (fp32 {:.2} MiB); quantization peak {:.2} MiB, {:.1}s",
+        out.model.deploy_bytes() as f64 / (1 << 20) as f64,
+        (w.n_params() * 4) as f64 / (1 << 20) as f64,
+        out.ledger.peak_mib(),
+        out.timers.total()
+    );
+
+    // Interactive-style session over a few covers.
+    println!("\n-- assistive session --");
+    for e in world.vqa.test.iter().step_by(31).take(6) {
+        let q_ids = tok.encode(&e.question);
+        let logits = out.model.forward(&e.cover.patches, &q_ids, 1);
+        let last = logits.row(w.config.n_patches + q_ids.len() - 1);
+        let pred = (0..last.len())
+            .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+            .unwrap() as u32;
+        println!(
+            "user: [shows a {} book cover] {}\nassistant: {}   (gold: {}) {}",
+            rpiq::data::vqa::CATEGORIES[e.category],
+            e.question.trim_end_matches(" answer :"),
+            tok.word(pred),
+            e.answer,
+            if tok.word(pred) == e.answer { "[ok]" } else { "[X]" }
+        );
+    }
+
+    // Overall quality.
+    let rep = exp::eval_vlm_q(&out.model, &world);
+    println!("\nOCR-VQA exact match: overall {:.2}%", rep.overall_pct);
+    for (c, a) in &rep.per_category {
+        println!("  {c:12} {a:.2}%");
+    }
+    Ok(())
+}

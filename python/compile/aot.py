@@ -1,0 +1,140 @@
+"""AOT lowering: JAX/Pallas graphs → HLO **text** + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax≥0.5 protos with 64-bit instruction ids;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), jnp.int32 if dtype == "i32" else jnp.float32
+    )
+
+
+def io_entry(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-models", action="store_true",
+                    help="emit only kernels + selfcheck (fast CI path)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    entries = {}
+
+    def emit(name, fn, in_specs, outputs):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": fname,
+            "inputs": [
+                io_entry(s.shape, "i32" if s.dtype == jnp.int32 else "f32")
+                for s in in_specs
+            ],
+            "outputs": outputs,
+        }
+        print(f"  {name}: {len(text)} chars")
+
+    # --- runtime selfcheck ---
+    emit(
+        "selfcheck_add",
+        lambda x: (x + x,),
+        [spec((2, 2))],
+        [io_entry((2, 2))],
+    )
+
+    # --- standalone kernel entries (micro-bench + parity tests) ---
+    from .kernels.quant_matmul import quant_matmul
+    from .kernels.hessian import hessian_update
+    from .kernels.block_solve import block_solve
+
+    m, k, n, gs = 64, 128, 64, 64
+    emit(
+        f"qmatmul_{m}x{k}x{n}_g{gs}",
+        lambda x, qw, s, z: (quant_matmul(x, qw, s, z, group_size=gs),),
+        [spec((m, k)), spec((n, k), "i32"), spec((n, k // gs)), spec((n, k // gs))],
+        [io_entry((m, n))],
+    )
+    s_, c_ = 48, 128
+    emit(
+        f"hessian_{s_}x{c_}",
+        lambda h, x: (hessian_update(h, x),),
+        [spec((c_, c_)), spec((s_, c_))],
+        [io_entry((c_, c_))],
+    )
+    bc, nn = 64, 128
+    emit(
+        f"block_solve_g{bc}_n{nn}",
+        lambda hinv, xtd, sc, ze, b: (
+            block_solve(hinv, xtd, sc, ze, b, alpha=0.5),
+        ),
+        [spec((bc, bc)), spec((bc, nn)), spec((nn,)), spec((nn,)), spec((nn, bc))],
+        [io_entry((nn, bc))],
+    )
+
+    # --- full model graphs per preset ---
+    if not args.skip_models:
+        for p in M.PRESETS:
+            vocab = M.VOCAB
+            gs_p = M.GROUP_SIZES[p.name]
+            fp_shapes = M.param_shapes(p, vocab)
+            fp_specs = [spec((p.seq_len,), "i32")] + [
+                spec(fp_shapes[nme]) for nme in M.param_order(p)
+            ]
+            emit(
+                f"lm_logits_{p.name}",
+                lambda tokens, *params, p=p: (M.lm_logits(p, tokens, list(params)),),
+                fp_specs,
+                [io_entry((p.seq_len, vocab))],
+            )
+            q_shapes = M.qparam_shapes(p, vocab, gs_p)  # name -> (shape, dtype)
+            q_specs = [spec((p.seq_len,), "i32")] + [
+                spec(*q_shapes[nme]) for nme in M.qparam_order(p)
+            ]
+            emit(
+                f"lm_qlogits_{p.name}",
+                lambda tokens, *params, p=p, gs_p=gs_p: (
+                    M.lm_qlogits(p, gs_p, tokens, list(params)),
+                ),
+                q_specs,
+                [io_entry((p.seq_len, vocab))],
+            )
+
+    manifest = {
+        "vocab": M.VOCAB,
+        "group_sizes": M.GROUP_SIZES,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(entries)} entries to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Layer-1 Pallas kernel: RPIQ stage-2 block update (paper Eq. 14/7/8).
+
+Fuses the three steps of one block refinement:
+
+1. local least squares   ``B* = (H_i⁻¹ · X_iᵀD_i)ᵀ``
+2. grid projection       ``B̃ = Q(B*)``  (RTN with fixed scale/zero — the
+   literal Eq. 7; the Rust engine's production path upgrades this to the
+   curvature-aware feedback projector, see rpiq.rs module docs)
+3. damped move           ``B ← B_old + α(B̃ − B_old)``
+
+Shapes: ``hinv [bc, bc]``, ``xtd [bc, N]``, ``scale/zero [N]`` (one group
+per block), ``b_old [N, bc]`` → ``b_new [N, bc]``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(hinv_ref, xtd_ref, scale_ref, zero_ref, b_old_ref, o_ref, *,
+            alpha: float, maxq: float):
+    bstar_t = jnp.dot(hinv_ref[...], xtd_ref[...],
+                      preferred_element_type=jnp.float32)     # (bc, N)
+    bstar = bstar_t.T                                         # (N, bc)
+    scale = scale_ref[...][:, None]                           # (N, 1)
+    zero = zero_ref[...][:, None]
+    q = jnp.clip(jnp.round(bstar / scale + zero), 0.0, maxq)
+    btilde = (q - zero) * scale
+    o_ref[...] = b_old_ref[...] + alpha * (btilde - b_old_ref[...])
+
+
+def block_solve(hinv, xtd, scale, zero, b_old, *, alpha: float, bits: int = 4,
+                interpret: bool = True):
+    """One fused stage-2 block update."""
+    bc, bc2 = hinv.shape
+    assert bc == bc2
+    n = b_old.shape[0]
+    assert xtd.shape == (bc, n)
+    assert b_old.shape == (n, bc)
+    assert scale.shape == (n,) and zero.shape == (n,)
+    maxq = float(2 ** bits - 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, alpha=alpha, maxq=maxq),
+        out_shape=jax.ShapeDtypeStruct((n, bc), jnp.float32),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((bc, bc), lambda i: (0, 0)),
+            pl.BlockSpec((bc, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, bc), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, bc), lambda i: (0, 0)),
+        interpret=interpret,
+    )(hinv, xtd, scale, zero, b_old)

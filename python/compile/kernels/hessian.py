@@ -1,0 +1,36 @@
+"""Layer-1 Pallas kernel: streaming Hessian accumulation ``H += XᵀX``.
+
+The calibration-stage hot spot (paper Eq. 9 / Algorithm 2 line 3). The
+kernel tiles the (Cin, Cin) output; each grid step loads the full X stripe
+for its row/column tiles and contracts over the sample axis. ``interpret=
+True`` on this image (see quant_matmul.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, x_ref, o_ref):
+    # o = h + xᵀ x for this (bi, bj) tile of H.
+    xi = x_ref[...]  # (S, C) full stripe — C is small for our layers
+    o_ref[...] = h_ref[...] + jax.lax.dot_general(
+        xi, xi, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def hessian_update(h, x, *, interpret: bool = True):
+    """``H_new = H + XᵀX`` (unnormalized; the Rust accumulator rescales)."""
+    s, c = x.shape
+    assert h.shape == (c, c)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((c, c), jnp.float32),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((c, c), lambda i: (0, 0)),
+            pl.BlockSpec((s, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, c), lambda i: (0, 0)),
+        interpret=interpret,
+    )(h, x)

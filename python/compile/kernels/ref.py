@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+the pytest suite (and hypothesis sweeps) compare against."""
+
+import jax.numpy as jnp
+
+
+def dequantize(qw, scales, zeros, group_size: int):
+    """``deq(q) = (q − zero) · scale`` with group-wise params."""
+    s_full = jnp.repeat(scales, group_size, axis=1)
+    z_full = jnp.repeat(zeros, group_size, axis=1)
+    return (qw.astype(jnp.float32) - z_full) * s_full
+
+
+def quant_matmul_ref(x, qw, scales, zeros, group_size: int):
+    """Oracle for kernels.quant_matmul."""
+    w = dequantize(qw, scales, zeros, group_size)
+    return x @ w.T
+
+
+def hessian_update_ref(h, x):
+    """Oracle for kernels.hessian."""
+    return h + x.T @ x
+
+
+def block_solve_ref(hinv, xtd, scale, zero, b_old, alpha: float, bits: int = 4):
+    """Oracle for kernels.block_solve."""
+    maxq = float(2 ** bits - 1)
+    bstar = (hinv @ xtd).T
+    s = scale[:, None]
+    z = zero[:, None]
+    q = jnp.clip(jnp.round(bstar / s + z), 0.0, maxq)
+    btilde = (q - z) * s
+    return b_old + alpha * (btilde - b_old)
+
+
+def rtn_quantize_ref(w, group_size: int, bits: int = 4):
+    """Round-to-nearest group quantization (mirrors grid.rs find_params):
+    returns (qw, scales, zeros)."""
+    n, k = w.shape
+    assert k % group_size == 0
+    maxq = float(2 ** bits - 1)
+    wg = w.reshape(n, k // group_size, group_size)
+    lo = jnp.minimum(wg.min(axis=2), 0.0)
+    hi = jnp.maximum(wg.max(axis=2), 0.0)
+    degenerate = lo == hi
+    scales = jnp.where(degenerate, 1.0, (hi - lo) / maxq)
+    zeros = jnp.where(degenerate, 0.0, jnp.round(-lo / scales))
+    q = jnp.clip(jnp.round(wg / scales[:, :, None] + zeros[:, :, None]), 0.0, maxq)
+    return q.reshape(n, k).astype(jnp.int32), scales, zeros

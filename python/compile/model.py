@@ -1,0 +1,228 @@
+"""Layer-2: the transformer forward graphs in JAX, mirrored exactly from
+the Rust model (`rust/src/model/`): same LayerNorm epsilon, same tanh-GELU,
+same causal attention, same weight layout ``[out, in]``.
+
+Two variants per preset are lowered by ``aot.py``:
+
+* ``lm_logits_<preset>``  — fp32 forward, weights as parameters;
+* ``lm_qlogits_<preset>`` — quantized forward where every linear runs the
+  Pallas ``quant_matmul`` kernel on (levels, scales, zeros).
+
+The flat parameter ORDER is the contract with the Rust side
+(`runtime` marshals arguments in exactly this order — see
+``param_order`` / ``qparam_order``):
+
+fp:    tok_emb, pos_emb,
+       per layer: ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w_up, w_down,
+       lnf_g, lnf_b, [head if untied]
+quant: tok_emb, pos_emb,
+       per layer: ln1_g, ln1_b, (q,k,v,o,up,down)×(qw, scales, zeros)
+                  interleaved at their fp positions, ln2_g, ln2_b,
+       lnf_g, lnf_b, [head triple if untied]
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.quant_matmul import quant_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    """Mirror of rust ModelConfig::lm_presets (keep in sync!)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    activation: str  # "gelu" | "relu"
+    tied_head: bool
+
+
+# Must match rust/src/model/config.rs::lm_presets exactly; the Rust
+# integration test cross-checks shapes through the manifest.
+PRESETS = [
+    Preset("sim-opt-6.7b", 128, 4, 4, 512, 48, "relu", False),
+    Preset("sim-opt-13b", 160, 6, 4, 640, 48, "relu", False),
+    Preset("sim-qwen3-8b", 144, 5, 4, 576, 48, "gelu", True),
+    Preset("sim-llama-3.1-8b-instruct", 144, 5, 6, 432, 48, "gelu", True),
+]
+
+# Vocab of the Rust-side synthetic lexicon (data::corpus::Lexicon). The
+# Rust integration test asserts this matches Lexicon::tokenizer() so a
+# lexicon change fails loudly here instead of mis-shaping artifacts.
+VOCAB = 165
+
+# Artifact-path group sizes per preset: the paper's group-128 scaled so the
+# group divides every linear's input width (DESIGN.md §5). The Rust
+# experiment harness uses the same values (experiments::group_size_for).
+GROUP_SIZES = {
+    "sim-opt-6.7b": 64,
+    "sim-opt-13b": 32,
+    "sim-qwen3-8b": 48,
+    "sim-llama-3.1-8b-instruct": 48,
+}
+
+
+def preset_by_name(name: str) -> Preset:
+    for p in PRESETS:
+        if p.name == name:
+            return p
+    raise KeyError(name)
+
+
+def layernorm(x, g, b):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def activation(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.relu(x)
+
+
+def causal_attention(q, k, v, n_heads: int):
+    """q/k/v: [S, d] → [S, d] (batch handled by vmap upstream; artifacts
+    use B=1 so S-major is enough)."""
+    s, d = q.shape
+    dh = d // n_heads
+    qh = q.reshape(s, n_heads, dh).transpose(1, 0, 2)
+    kh = k.reshape(s, n_heads, dh).transpose(1, 0, 2)
+    vh = v.reshape(s, n_heads, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("hsd,htd->hst", qh, kh) / jnp.sqrt(dh).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hst,htd->hsd", probs, vh)
+    return ctx.transpose(1, 0, 2).reshape(s, d)
+
+
+def param_order(p: Preset) -> List[str]:
+    names = ["tok_emb", "pos_emb"]
+    for i in range(p.n_layers):
+        names += [
+            f"lm.layer{i}.ln1.g", f"lm.layer{i}.ln1.b",
+            f"lm.layer{i}.attn.q", f"lm.layer{i}.attn.k",
+            f"lm.layer{i}.attn.v", f"lm.layer{i}.attn.out",
+            f"lm.layer{i}.ln2.g", f"lm.layer{i}.ln2.b",
+            f"lm.layer{i}.mlp.up", f"lm.layer{i}.mlp.down",
+        ]
+    names += ["lnf.g", "lnf.b"]
+    if not p.tied_head:
+        names.append("lm.head")
+    return names
+
+
+LINEAR_FIELDS = ("attn.q", "attn.k", "attn.v", "attn.out", "mlp.up", "mlp.down")
+
+
+def qparam_order(p: Preset) -> List[str]:
+    """Quantized variant: every linear becomes three params
+    ``<name>.qw|.scales|.zeros``; everything else unchanged."""
+    names = []
+    for n in param_order(p):
+        if any(n.endswith(f) for f in LINEAR_FIELDS) or n == "lm.head":
+            names += [f"{n}.qw", f"{n}.scales", f"{n}.zeros"]
+        else:
+            names.append(n)
+    return names
+
+
+def lm_logits(p: Preset, tokens, params: List[jnp.ndarray]):
+    """fp32 forward: tokens i32 [S] → logits [S, vocab]."""
+    order = param_order(p)
+    d = dict(zip(order, params))
+    s = tokens.shape[0]
+    x = d["tok_emb"][tokens] + d["pos_emb"][:s]
+    for i in range(p.n_layers):
+        pre = f"lm.layer{i}."
+        h = layernorm(x, d[pre + "ln1.g"], d[pre + "ln1.b"])
+        q = h @ d[pre + "attn.q"].T
+        k = h @ d[pre + "attn.k"].T
+        v = h @ d[pre + "attn.v"].T
+        ctx = causal_attention(q, k, v, p.n_heads)
+        x = x + ctx @ d[pre + "attn.out"].T
+        h = layernorm(x, d[pre + "ln2.g"], d[pre + "ln2.b"])
+        up = activation(h @ d[pre + "mlp.up"].T, p.activation)
+        x = x + up @ d[pre + "mlp.down"].T
+    x = layernorm(x, d["lnf.g"], d["lnf.b"])
+    head = d["tok_emb"] if p.tied_head else d["lm.head"]
+    return x @ head.T
+
+
+def lm_qlogits(p: Preset, group_size: int, tokens, params: List[jnp.ndarray]):
+    """Quantized forward: every linear via the Pallas quant_matmul."""
+    order = qparam_order(p)
+    d = dict(zip(order, params))
+    s = tokens.shape[0]
+
+    def qmm(x, name):
+        return quant_matmul(
+            x, d[name + ".qw"], d[name + ".scales"], d[name + ".zeros"],
+            group_size=group_size,
+        )
+
+    x = d["tok_emb"][tokens] + d["pos_emb"][:s]
+    for i in range(p.n_layers):
+        pre = f"lm.layer{i}."
+        h = layernorm(x, d[pre + "ln1.g"], d[pre + "ln1.b"])
+        q = qmm(h, pre + "attn.q")
+        k = qmm(h, pre + "attn.k")
+        v = qmm(h, pre + "attn.v")
+        ctx = causal_attention(q, k, v, p.n_heads)
+        x = x + qmm(ctx, pre + "attn.out")
+        h = layernorm(x, d[pre + "ln2.g"], d[pre + "ln2.b"])
+        up = activation(qmm(h, pre + "mlp.up"), p.activation)
+        x = x + qmm(up, pre + "mlp.down")
+    x = layernorm(x, d["lnf.g"], d["lnf.b"])
+    if p.tied_head:
+        return x @ d["tok_emb"].T
+    return qmm(x, "lm.head")
+
+
+def param_shapes(p: Preset, vocab: int):
+    """Shape of each fp parameter, keyed by name."""
+    d, ff = p.d_model, p.d_ff
+    shapes = {"tok_emb": (vocab, d), "pos_emb": (p.seq_len, d)}
+    for i in range(p.n_layers):
+        pre = f"lm.layer{i}."
+        shapes[pre + "ln1.g"] = (d,)
+        shapes[pre + "ln1.b"] = (d,)
+        shapes[pre + "attn.q"] = (d, d)
+        shapes[pre + "attn.k"] = (d, d)
+        shapes[pre + "attn.v"] = (d, d)
+        shapes[pre + "attn.out"] = (d, d)
+        shapes[pre + "ln2.g"] = (d,)
+        shapes[pre + "ln2.b"] = (d,)
+        shapes[pre + "mlp.up"] = (ff, d)
+        shapes[pre + "mlp.down"] = (d, ff)
+    shapes["lnf.g"] = (d,)
+    shapes["lnf.b"] = (d,)
+    if not p.tied_head:
+        shapes["lm.head"] = (vocab, d)
+    return shapes
+
+
+def qparam_shapes(p: Preset, vocab: int, group_size: int):
+    """Shape + dtype of each quantized-variant parameter."""
+    fp = param_shapes(p, vocab)
+    out = {}
+    for name in qparam_order(p):
+        if name.endswith(".qw"):
+            base = fp[name[: -len(".qw")]]
+            out[name] = (base, "i32")
+        elif name.endswith(".scales") or name.endswith(".zeros"):
+            base = fp[name.rsplit(".", 1)[0]]
+            n, k = base
+            assert k % group_size == 0, (name, base, group_size)
+            out[name] = ((n, k // group_size), "f32")
+        else:
+            out[name] = (fp[name], "f32")
+    return out

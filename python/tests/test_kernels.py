@@ -1,0 +1,134 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, with hypothesis
+sweeping shapes/dtypes/group sizes — the core correctness signal for the
+kernel layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.block_solve import block_solve
+from compile.kernels.hessian import hessian_update
+from compile.kernels.quant_matmul import (
+    arithmetic_intensity,
+    quant_matmul,
+    vmem_bytes_per_step,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(key, shape, minval=lo, maxval=hi, dtype=jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    n_groups=st.integers(1, 4),
+    gs=st.sampled_from([4, 8, 16]),
+    n=st.integers(1, 24),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_matmul_matches_ref(m, n_groups, gs, n, bits, seed):
+    k = n_groups * gs
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = rand(k1, (m, k))
+    w = rand(k2, (n, k))
+    qw, scales, zeros = ref.rtn_quantize_ref(w, gs, bits=bits)
+    got = quant_matmul(x, qw, scales, zeros, group_size=gs)
+    want = ref.quant_matmul_ref(x, qw, scales, zeros, gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(1, 32),
+    c=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hessian_update_matches_ref(s, c, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    h = rand(k1, (c, c))
+    h = h + h.T  # symmetric start
+    x = rand(k2, (s, c))
+    got = hessian_update(h, x)
+    want = ref.hessian_update_ref(h, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bc=st.integers(2, 16),
+    n=st.integers(1, 16),
+    alpha=st.sampled_from([0.0, 0.25, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_solve_matches_ref(bc, n, alpha, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    hinv = rand(ks[0], (bc, bc), 0.01, 1.0)
+    xtd = rand(ks[1], (bc, n))
+    scale = rand(ks[2], (n,), 0.05, 0.5)
+    zero = jnp.round(rand(ks[3], (n,), 0.0, 15.0))
+    b_old = rand(ks[4], (n, bc))
+    got = block_solve(hinv, xtd, scale, zero, b_old, alpha=alpha)
+    want = ref.block_solve_ref(hinv, xtd, scale, zero, b_old, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_block_solve_alpha_zero_is_identity():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    hinv = rand(ks[0], (8, 8))
+    xtd = rand(ks[1], (8, 4))
+    scale = rand(ks[2], (4,), 0.1, 0.3)
+    zero = jnp.zeros((4,))
+    b_old = rand(ks[4], (4, 8))
+    out = block_solve(hinv, xtd, scale, zero, b_old, alpha=0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(b_old), atol=1e-7)
+
+
+def test_rtn_ref_roundtrip_error_bounded():
+    key = jax.random.PRNGKey(3)
+    w = rand(key, (6, 32))
+    qw, scales, zeros = ref.rtn_quantize_ref(w, 8, bits=4)
+    deq = ref.dequantize(qw, scales, zeros, 8)
+    step = jnp.repeat(scales, 8, axis=1)
+    assert jnp.all(jnp.abs(deq - w) <= 0.5 * step + 1e-6)
+
+
+def test_quant_matmul_tiled_equals_untiled():
+    """Block sizes must not change numerics (the BlockSpec schedule is a
+    pure data-movement choice)."""
+    key = jax.random.PRNGKey(4)
+    k1, k2 = jax.random.split(key)
+    x = rand(k1, (33, 32))
+    w = rand(k2, (17, 32))
+    qw, scales, zeros = ref.rtn_quantize_ref(w, 16)
+    a = quant_matmul(x, qw, scales, zeros, group_size=16, block_m=8, block_n=4)
+    b = quant_matmul(x, qw, scales, zeros, group_size=16, block_m=64, block_n=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_structural_metrics_sane():
+    """DESIGN.md §7 numbers: default tiling fits VMEM with big margin and
+    is compute-dense."""
+    vmem = vmem_bytes_per_step(bm=128, bn=128, k=128, group_size=64)
+    assert vmem < 16 * 1024 * 1024  # ≪ 16 MiB VMEM
+    ai = arithmetic_intensity(bm=128, bn=128, k=128)
+    assert ai > 20.0  # clearly MXU-bound, not HBM-bound
+
+
+@pytest.mark.parametrize("gs", [4, 8])
+def test_quant_matmul_rejects_bad_group(gs):
+    x = jnp.zeros((2, 10), jnp.float32)
+    qw = jnp.zeros((3, 10), jnp.int32)
+    s = jnp.zeros((3, 10 // gs if 10 % gs == 0 else 2), jnp.float32)
+    with pytest.raises(AssertionError):
+        quant_matmul(x, qw, s, s, group_size=gs)

@@ -1,0 +1,139 @@
+"""L2 correctness: the JAX model graphs — shapes, causality, fp-vs-quant
+consistency, and preset bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.Preset("tiny", d_model=16, n_layers=2, n_heads=2, d_ff=32,
+                seq_len=8, activation="gelu", tied_head=True)
+VOCAB = 23
+
+
+def make_params(p, vocab, seed=0):
+    shapes = M.param_shapes(p, vocab)
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name in M.param_order(p):
+        key, sub = jax.random.split(key)
+        if ".g" in name and "ln" in name:
+            params.append(jnp.ones(shapes[name], jnp.float32))
+        elif ".b" in name and "ln" in name:
+            params.append(jnp.zeros(shapes[name], jnp.float32))
+        else:
+            params.append(
+                0.1 * jax.random.normal(sub, shapes[name], dtype=jnp.float32)
+            )
+    return params
+
+
+def test_fp_forward_shapes_and_finite():
+    params = make_params(TINY, VOCAB)
+    tokens = jnp.arange(TINY.seq_len, dtype=jnp.int32) % VOCAB
+    logits = M.lm_logits(TINY, tokens, params)
+    assert logits.shape == (TINY.seq_len, VOCAB)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality():
+    params = make_params(TINY, VOCAB)
+    t1 = jnp.arange(TINY.seq_len, dtype=jnp.int32) % VOCAB
+    t2 = t1.at[-1].set((t1[-1] + 1) % VOCAB)
+    l1 = M.lm_logits(TINY, t1, params)
+    l2 = M.lm_logits(TINY, t2, params)
+    np.testing.assert_allclose(
+        np.asarray(l1[:-1]), np.asarray(l2[:-1]), atol=1e-6
+    )
+    assert not np.allclose(np.asarray(l1[-1]), np.asarray(l2[-1]))
+
+
+def quantize_params(p, params, gs):
+    """RTN-quantize the linears of a fp param list into the qparam list."""
+    fp_order = M.param_order(p)
+    d = dict(zip(fp_order, params))
+    out = []
+    for name in M.qparam_order(p):
+        if name.endswith(".qw"):
+            base = name[: -len(".qw")]
+            qw, sc, ze = ref.rtn_quantize_ref(d[base], gs)
+            out.append(qw)
+            out.append(sc)
+            out.append(ze)
+        elif name.endswith(".scales") or name.endswith(".zeros"):
+            continue  # appended with .qw
+        else:
+            out.append(d[name])
+    return out
+
+
+def test_qlogits_matches_fp_on_dequantized_weights():
+    """The quantized graph with weights W' = deq(Q(W)) must equal the fp
+    graph run on W' — the two graphs differ only in where dequantization
+    happens."""
+    gs = 8
+    params = make_params(TINY, VOCAB, seed=1)
+    qparams = quantize_params(TINY, params, gs)
+    # Build the dequantized fp params
+    fp_order = M.param_order(TINY)
+    d = dict(zip(fp_order, params))
+    deq_params = []
+    qd = dict(zip(M.qparam_order(TINY), qparams))
+    for name in fp_order:
+        if name + ".qw" in qd:
+            deq_params.append(
+                ref.dequantize(qd[name + ".qw"], qd[name + ".scales"],
+                               qd[name + ".zeros"], gs)
+            )
+        else:
+            deq_params.append(d[name])
+    tokens = (jnp.arange(TINY.seq_len, dtype=jnp.int32) * 3) % VOCAB
+    lq = M.lm_qlogits(TINY, gs, tokens, qparams)
+    lf = M.lm_logits(TINY, tokens, deq_params)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lf), rtol=2e-3, atol=2e-3)
+
+
+def test_presets_group_sizes_divide_all_linears():
+    for p in M.PRESETS:
+        gs = M.GROUP_SIZES[p.name]
+        shapes = M.param_shapes(p, M.VOCAB)
+        for name, shape in shapes.items():
+            if any(name.endswith(f) for f in M.LINEAR_FIELDS) or name == "lm.head":
+                assert shape[1] % gs == 0, (p.name, name, shape, gs)
+
+
+def test_param_order_deterministic_and_complete():
+    for p in M.PRESETS:
+        order = M.param_order(p)
+        assert order == M.param_order(p)
+        shapes = M.param_shapes(p, M.VOCAB)
+        assert set(order) == set(shapes.keys())
+        # untied presets expose the head
+        assert ("lm.head" in order) == (not p.tied_head)
+
+
+def test_qparam_order_triples_linears():
+    p = TINY
+    qo = M.qparam_order(p)
+    assert "lm.layer0.attn.q.qw" in qo
+    assert "lm.layer0.attn.q.scales" in qo
+    assert "lm.layer0.ln1.g" in qo
+    n_linears = sum(
+        1 for n in M.param_order(p)
+        if any(n.endswith(f) for f in M.LINEAR_FIELDS) or n == "lm.head"
+    )
+    assert len(qo) == len(M.param_order(p)) + 2 * n_linears
+
+
+@pytest.mark.parametrize("kind", ["gelu", "relu"])
+def test_activation_kinds(kind):
+    x = jnp.array([-1.0, 0.0, 2.0], jnp.float32)
+    y = M.activation(x, kind)
+    assert y.shape == x.shape
+    if kind == "relu":
+        np.testing.assert_allclose(np.asarray(y), [0.0, 0.0, 2.0])

@@ -1,0 +1,84 @@
+//! Fig 4: Qualitative cases — GPTQ vs RPIQ predictions on representative
+//! sentiment and VQA inputs, gold answers marked. (The paper's figure is a
+//! gallery of colored examples; here each row prints ✓/✗ per method.)
+
+use rpiq::coordinator::experiments as exp;
+use rpiq::coordinator::{quantize_lm, quantize_vlm, Method};
+use rpiq::data::sentiment::LABELS;
+use rpiq::model::io::load_lm;
+use rpiq::quant::{CmdqPolicy, RpiqParams};
+use rpiq::vlm::io::load_vlm;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let world = exp::World::build(exp::WORLD_SEED);
+    let tok = world.tokenizer().clone();
+
+    // ---- sentiment cases on the instruct model ----
+    let name = "sim-llama-3.1-8b-instruct";
+    let w = load_lm(&exp::ckpt_path(Path::new("checkpoints"), name))?;
+    let windows = world.calib_windows(w.config.seq_len, exp::CALIB_SAMPLES);
+    let qcfg = exp::quant_config_for(name);
+    let gptq = quantize_lm(&w, &windows, qcfg, Method::Gptq)?.model;
+    let rpiq = quantize_lm(&w, &windows, qcfg, Method::Rpiq(RpiqParams::default()))?.model;
+    let label_ids = rpiq::data::SentimentSet::label_token_ids(&tok);
+
+    println!("== Fig 4 (a): sentiment qualitative cases [{name}] ==");
+    let classify = |model: &rpiq::model::QuantizedLm, prompt: &str| -> usize {
+        let ids = tok.encode(prompt);
+        let logits = model.forward(&ids, 1, ids.len());
+        let last = logits.row(ids.len() - 1);
+        (0..3)
+            .max_by(|&a, &b| {
+                last[label_ids[a] as usize]
+                    .partial_cmp(&last[label_ids[b] as usize])
+                    .unwrap()
+            })
+            .unwrap()
+    };
+    for e in world.sentiment.test.iter().take(8) {
+        let g = classify(&gptq, &e.prompt());
+        let r = classify(&rpiq, &e.prompt());
+        println!(
+            "  \"{}\"\n    gold={:<8}  GPTQ={:<8} {}  RPIQ={:<8} {}",
+            e.text,
+            LABELS[e.label],
+            LABELS[g],
+            if g == e.label { "[ok]" } else { "[X]" },
+            LABELS[r],
+            if r == e.label { "[ok]" } else { "[X]" },
+        );
+    }
+
+    // ---- VQA cases on the VLM ----
+    let vw = load_vlm(&exp::ckpt_path(Path::new("checkpoints"), "sim-cogvlm2-19b"))?;
+    let samples = world.vlm_calib(exp::CALIB_SAMPLES_VLM);
+    let policy = CmdqPolicy::default();
+    let vg = quantize_vlm(&vw, &samples, &policy, Method::Gptq)?.model;
+    let vr = quantize_vlm(&vw, &samples, &policy, Method::Rpiq(policy.rpiq))?.model;
+    println!("\n== Fig 4 (b): OCR-VQA qualitative cases [sim-cogvlm2-19b] ==");
+    let answer = |m: &rpiq::vlm::QuantizedVlm, e: &rpiq::data::vqa::VqaExample| -> String {
+        let q_ids = tok.encode(&e.question);
+        let logits = m.forward(&e.cover.patches, &q_ids, 1);
+        let last = logits.row(vw.config.n_patches + q_ids.len() - 1);
+        let pred = (0..last.len())
+            .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+            .unwrap() as u32;
+        tok.word(pred).to_string()
+    };
+    for e in world.vqa.test.iter().step_by(23).take(8) {
+        let g = answer(&vg, e);
+        let r = answer(&vr, e);
+        println!(
+            "  [{}] \"{}\"\n    gold={:<10} GPTQ={:<10} {}  RPIQ={:<10} {}",
+            rpiq::data::vqa::CATEGORIES[e.category],
+            e.question,
+            e.answer,
+            g,
+            if g == e.answer { "[ok]" } else { "[X]" },
+            r,
+            if r == e.answer { "[ok]" } else { "[X]" },
+        );
+    }
+    Ok(())
+}

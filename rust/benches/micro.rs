@@ -1,0 +1,129 @@
+//! Microbenchmarks: the hot paths of each layer — Rust blocked matmul,
+//! fused dequant-matmul, GPTQ/RPIQ per-layer cost, PJRT artifact execution
+//! vs pure-Rust forward, and serving throughput vs batch size. These are
+//! the §Perf numbers in EXPERIMENTS.md.
+
+use rpiq::coordinator::experiments as exp;
+use rpiq::coordinator::{quantize_lm, Method, ServeConfig, Server};
+use rpiq::model::io::load_lm;
+use rpiq::quant::{QuantGrid, QuantizedLinear, RpiqParams};
+use rpiq::rng::Pcg64;
+use rpiq::tensor::{matmul_a_bt, Tensor};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn time_n<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Pcg64::seeded(4242);
+
+    // --- L3 matmul roofline ---
+    println!("== micro: tensor kernels ==");
+    for (m, k, n) in [(64usize, 512usize, 512usize), (256, 512, 512)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let secs = time_n(10, || {
+            let _ = matmul_a_bt(&a, &b);
+        });
+        let gflops = 2.0 * (m * k * n) as f64 / secs / 1e9;
+        println!("  matmul_a_bt {m}x{k}x{n}: {:.3} ms  {:.2} GFLOP/s", secs * 1e3, gflops);
+    }
+
+    // --- fused dequant-matmul vs dequantize-then-matmul ---
+    let (m, k, n, gs) = (64usize, 512usize, 512usize, 64usize);
+    let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let w = Tensor::randn(&[n, k], 0.5, &mut rng);
+    let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, gs));
+    let fused = time_n(10, || {
+        let _ = rpiq::model::QuantizedLm::qmatmul(&x, &q);
+    });
+    let twostep = time_n(10, || {
+        let d = q.dequantize();
+        let _ = matmul_a_bt(&x, &d);
+    });
+    println!(
+        "  qmatmul fused {:.3} ms vs dequant+matmul {:.3} ms ({:.2}x)",
+        fused * 1e3,
+        twostep * 1e3,
+        twostep / fused
+    );
+
+    // --- GPTQ / RPIQ per-layer cost ---
+    println!("== micro: quantization engines (512x512 layer, 96 calib rows) ==");
+    let xc = Tensor::randn(&[96, 512], 1.0, &mut rng);
+    let wl = Tensor::randn(&[512, 512], 0.5, &mut rng);
+    let mut acc = rpiq::quant::HessianAccumulator::new(512, rpiq::metrics::MemoryLedger::new());
+    acc.add_batch(&xc);
+    let (h, _) = acc.finalize(0.01);
+    let cfg = rpiq::quant::QuantConfig { bits: 4, group_size: 64, block_size: 64, percdamp: 0.01 };
+    let led = rpiq::metrics::MemoryLedger::new();
+    let gptq_secs = time_n(3, || {
+        let _ = rpiq::quant::gptq_quantize(&wl, &h, cfg, &led).unwrap();
+    });
+    let q1 = rpiq::quant::gptq_quantize(&wl, &h, cfg, &led).unwrap().q;
+    let inst = rpiq::quant::SingleInstance::capture(xc.clone(), &wl, &led);
+    let rpiq_secs = time_n(3, || {
+        let _ = rpiq::quant::rpiq_refine(&q1, &inst, &h, RpiqParams::default(), &led).unwrap();
+    });
+    println!("  gptq layer: {:.1} ms   rpiq stage-2: {:.1} ms", gptq_secs * 1e3, rpiq_secs * 1e3);
+
+    // --- PJRT artifact vs Rust forward ---
+    if Path::new("artifacts/manifest.json").exists() {
+        println!("== micro: PJRT artifact vs rust forward (sim-opt-6.7b) ==");
+        let eng = rpiq::runtime::Engine::new(Path::new("artifacts"))?;
+        let tok = rpiq::data::corpus::Lexicon::tokenizer();
+        if let Ok(wm) = load_lm(&exp::ckpt_path(Path::new("checkpoints"), "sim-opt-6.7b")) {
+            let tokens: Vec<u32> = (0..wm.config.seq_len)
+                .map(|_| rng.next_below(tok.vocab_size()) as u32)
+                .collect();
+            let args = rpiq::runtime::lm_args::lm_fp_args(&wm, &tokens);
+            let pjrt = time_n(10, || {
+                let _ = eng.run("lm_logits_sim-opt-6.7b", &args).unwrap();
+            });
+            let rust = time_n(10, || {
+                let _ = rpiq::model::forward::lm_forward(&wm, &tokens, 1, wm.config.seq_len, None);
+            });
+            println!(
+                "  lm fwd 48 tokens: PJRT {:.2} ms vs rust {:.2} ms",
+                pjrt * 1e3,
+                rust * 1e3
+            );
+        }
+    }
+
+    // --- serving throughput vs batch size ---
+    println!("== micro: serving throughput (quantized sim-opt-6.7b) ==");
+    if let Ok(wm) = load_lm(&exp::ckpt_path(Path::new("checkpoints"), "sim-opt-6.7b")) {
+        let world = exp::World::build(exp::WORLD_SEED);
+        let windows = world.calib_windows(wm.config.seq_len, 16);
+        let out = quantize_lm(&wm, &windows, exp::quant_config_for("sim-opt-6.7b"), Method::Gptq)?;
+        let model = Arc::new(out.model);
+        let tok = world.tokenizer().clone();
+        let prompts: Vec<String> = world.sentiment.test[..64].iter().map(|e| e.prompt()).collect();
+        for max_batch in [1usize, 4, 8, 16] {
+            let server = Server::start(
+                Arc::clone(&model),
+                &tok,
+                ServeConfig { max_batch, ..Default::default() },
+            );
+            let tput = rpiq::coordinator::serve::replay(&server, &tok, &prompts, 4);
+            let stats = server.shutdown();
+            println!(
+                "  max_batch={max_batch:2}: {:.1} req/s  mean {:.2} ms  p95 {:.2} ms",
+                tput,
+                stats.mean_ms(),
+                stats.percentile_ms(95.0)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Table 5: Convergence Statistics for Representative Layers — initial/
+//! final Γ, total reduction, reduction %, iterations, early-stop markers.
+//! The representative layer per model is the one with the largest
+//! reduction (the paper also cherry-picks per-model representative rows).
+
+use rpiq::coordinator::suite;
+use rpiq::report::{f2, Table};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let s = suite::load_or_run(Path::new("checkpoints"))?;
+    let mut t = Table::new(
+        "Table 5 — stage-2 convergence, representative layers",
+        &["model", "layer", "initial loss", "final loss", "reduction", "reduction %", "iters", "early"],
+    );
+    for m in &s.models {
+        if let Some(r) = m
+            .rpiq
+            .layer_reports
+            .iter()
+            .max_by(|a, b| a.reduction_pct().partial_cmp(&b.reduction_pct()).unwrap())
+        {
+            t.row(vec![
+                m.name.clone(),
+                r.name.clone(),
+                format!("{:.4}", r.initial_loss()),
+                format!("{:.4}", r.final_loss()),
+                format!("{:.4}", r.initial_loss() - r.final_loss()),
+                f2(r.reduction_pct()),
+                r.iters_run.to_string(),
+                if r.early_stopped { "yes*".into() } else { "no".to_string() },
+            ]);
+        }
+    }
+    // VLM: one vision-module and one cross-modal row (paper's last rows).
+    if let Some(rpiq5) = s.vlm.arms.iter().find(|a| a.label.contains("5 iter")) {
+        for prefix in ["vision.", "cross."] {
+            if let Some(r) = rpiq5
+                .layer_reports
+                .iter()
+                .filter(|r| r.name.starts_with(prefix))
+                .max_by(|a, b| a.reduction_pct().partial_cmp(&b.reduction_pct()).unwrap())
+            {
+                t.row(vec![
+                    format!("sim-cogvlm2 ({})", prefix.trim_end_matches('.')),
+                    r.name.clone(),
+                    format!("{:.4}", r.initial_loss()),
+                    format!("{:.4}", r.final_loss()),
+                    format!("{:.4}", r.initial_loss() - r.final_loss()),
+                    f2(r.reduction_pct()),
+                    r.iters_run.to_string(),
+                    if r.early_stopped { "yes*".into() } else { "no".to_string() },
+                ]);
+            }
+        }
+    }
+    let rendered = t.render();
+    print!("{rendered}");
+    println!("  (*) early stop = Γ increased before T_max (Algorithm 3 criterion)");
+    // Aggregate: mean reduction across all layers per model.
+    for m in &s.models {
+        let mean: f64 = m.rpiq.layer_reports.iter().map(|r| r.reduction_pct()).sum::<f64>()
+            / m.rpiq.layer_reports.len().max(1) as f64;
+        let early = m.rpiq.layer_reports.iter().filter(|r| r.early_stopped).count();
+        println!(
+            "  [{}] mean layer reduction {:.2}% over {} layers ({} early-stopped)",
+            m.name,
+            mean,
+            m.rpiq.layer_reports.len(),
+            early
+        );
+    }
+    rpiq::report::write_report("table5.txt", &rendered)?;
+    Ok(())
+}

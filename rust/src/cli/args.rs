@@ -1,0 +1,130 @@
+//! Tiny argument parser: `command --key value --flag` style.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+pub struct Args {
+    command: String,
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+    /// Keys that were actually read (to report unknown arguments).
+    consumed: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument '{tok}'");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    kv.insert(key.to_string(), it.next().unwrap());
+                }
+                _ => flags.push(key.to_string()),
+            }
+        }
+        Ok(Args { command, kv, flags, consumed: Vec::new() })
+    }
+
+    pub fn command(&self) -> &str {
+        &self.command
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.kv.get(name).cloned()
+    }
+
+    pub fn get(&mut self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn require(&mut self, name: &str) -> Result<String> {
+        self.opt(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required --{name}"))
+    }
+
+    pub fn usize_of(&mut self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f32_of(&mut self, name: &str, default: f32) -> Result<f32> {
+        match self.opt(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_of(&mut self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    /// Error on unknown keys (call after all reads).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.kv.keys() {
+            if !self.consumed.contains(k) {
+                bail!("unknown argument --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.consumed.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let mut a = args("pretrain --steps 100 --all --out-dir ck");
+        assert_eq!(a.command(), "pretrain");
+        assert_eq!(a.usize_of("steps", 0).unwrap(), 100);
+        assert!(a.flag("all"));
+        assert_eq!(a.get("out-dir", "x"), "ck");
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn unknown_arg_rejected() {
+        let mut a = args("eval --bogus 3");
+        let _ = a.opt("ckpt");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let mut a = args("quantize");
+        assert!(a.require("ckpt").is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(vec!["x".into(), "oops".into()]).is_err());
+    }
+}

@@ -1,0 +1,330 @@
+//! CLI command implementations — thin wrappers over the library.
+
+use super::args::Args;
+use crate::coordinator::experiments::{self as exp, World};
+use crate::coordinator::{quantize_lm, quantize_vlm, Method, ServeConfig, Server};
+use crate::model::io::{load_lm, save_lm};
+use crate::model::ModelConfig;
+use crate::quant::{CmdqPolicy, QuantConfig, RpiqParams};
+use crate::report::Table;
+
+use crate::vlm::io::{load_vlm, save_vlm};
+use crate::vlm::VlmConfig;
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn world() -> World {
+    World::build(exp::WORLD_SEED)
+}
+
+/// `rpiq pretrain` — train the subject checkpoints.
+pub fn pretrain(args: &mut Args) -> Result<()> {
+    let all = args.flag("all");
+    let preset = args.opt("preset");
+    let out_dir = PathBuf::from(args.get("out-dir", "checkpoints"));
+    let lm_steps = args.usize_of("steps", exp::DEFAULT_LM_STEPS)?;
+    let vlm_steps = args.usize_of("vlm-steps", exp::DEFAULT_VLM_STEPS)?;
+    let seed = args.u64_of("seed", exp::WORLD_SEED)?;
+    args.finish()?;
+
+    let w = world();
+    let vocab = w.tokenizer().vocab_size();
+    let presets: Vec<ModelConfig> = match (&preset, all) {
+        (Some(name), _) if name != "vlm" => {
+            vec![ModelConfig::preset(name, vocab)
+                .ok_or_else(|| anyhow::anyhow!("unknown preset '{name}'"))?]
+        }
+        (Some(_), _) => vec![],
+        (None, true) => ModelConfig::lm_presets(vocab),
+        (None, false) => bail!("pass --all or --preset NAME (or --preset vlm)"),
+    };
+
+    for cfg in &presets {
+        let t0 = std::time::Instant::now();
+        println!("== pretraining {} ({} params) ==", cfg.name, cfg.n_params());
+        let (weights, curve) = exp::pretrain_lm(
+            cfg,
+            &w,
+            lm_steps,
+            exp::DEFAULT_LM_BATCH,
+            seed,
+            |s, l| println!("  step {s:4}  loss {l:.4}"),
+        );
+        let path = exp::ckpt_path(&out_dir, &cfg.name);
+        save_lm(&weights, &path)?;
+        let first = curve.first().unwrap().1;
+        let last = curve.last().unwrap().1;
+        println!(
+            "  saved {} (loss {first:.3} -> {last:.3}, {:.1}s)",
+            path.display(),
+            t0.elapsed().as_secs_f64()
+        );
+        // loss curve alongside the checkpoint (e2e evidence)
+        let csv = crate::report::csv(
+            &["step", "loss"],
+            &curve
+                .iter()
+                .map(|(s, l)| vec![s.to_string(), format!("{l:.6}")])
+                .collect::<Vec<_>>(),
+        );
+        std::fs::write(out_dir.join(format!("{}.loss.csv", cfg.name)), csv)?;
+    }
+
+    if all || preset.as_deref() == Some("vlm") {
+        let vcfg = VlmConfig::sim_cogvlm2(vocab);
+        println!("== pretraining {} ==", vcfg.name);
+        let t0 = std::time::Instant::now();
+        let (weights, curve) = exp::pretrain_vlm(
+            &vcfg,
+            &w,
+            vlm_steps,
+            exp::DEFAULT_VLM_BATCH,
+            seed,
+            |s, l| println!("  step {s:4}  loss {l:.4}"),
+        );
+        let path = exp::ckpt_path(&out_dir, &vcfg.name);
+        save_vlm(&weights, &path)?;
+        println!(
+            "  saved {} (loss {:.3} -> {:.3}, {:.1}s)",
+            path.display(),
+            curve.first().unwrap().1,
+            curve.last().unwrap().1,
+            t0.elapsed().as_secs_f64()
+        );
+        let csv = crate::report::csv(
+            &["step", "loss"],
+            &curve
+                .iter()
+                .map(|(s, l)| vec![s.to_string(), format!("{l:.6}")])
+                .collect::<Vec<_>>(),
+        );
+        std::fs::write(out_dir.join(format!("{}.loss.csv", vcfg.name)), csv)?;
+    }
+    Ok(())
+}
+
+fn parse_method(args: &mut Args) -> Result<Method> {
+    let m = args.get("method", "rpiq");
+    let iters = args.usize_of("iters", 5)?;
+    let alpha = args.f32_of("alpha", RpiqParams::default().alpha)?;
+    Ok(match m.as_str() {
+        "gptq" => Method::Gptq,
+        "rpiq" => Method::Rpiq(RpiqParams { max_iters: iters, alpha, ..Default::default() }),
+        other => bail!("unknown method '{other}' (gptq|rpiq)"),
+    })
+}
+
+fn quant_cfg(args: &mut Args) -> Result<QuantConfig> {
+    Ok(QuantConfig {
+        bits: args.usize_of("bits", 4)? as u32,
+        group_size: args.usize_of("group-size", 128)?,
+        block_size: args.usize_of("block-size", 128)?,
+        percdamp: args.f32_of("percdamp", 0.01)?,
+    })
+}
+
+/// `rpiq quantize` — quantize a checkpoint, print the per-layer report.
+pub fn quantize(args: &mut Args) -> Result<()> {
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let method = parse_method(args)?;
+    let cfg = quant_cfg(args)?;
+    args.finish()?;
+
+    let w = world();
+    if is_vlm(&ckpt) {
+        let weights = load_vlm(&ckpt)?;
+        let policy = CmdqPolicy {
+            rpiq: match method {
+                Method::Rpiq(p) => p,
+                Method::Gptq => RpiqParams::default(),
+            },
+            ..Default::default()
+        };
+        let samples = w.vlm_calib(exp::CALIB_SAMPLES_VLM);
+        let out = quantize_vlm(&weights, &samples, &policy, method)?;
+        print_reports(&out.reports, out.ledger.peak_mib(), out.timers.total());
+    } else {
+        let weights = load_lm(&ckpt)?;
+        let windows = w.calib_windows(weights.config.seq_len, exp::CALIB_SAMPLES);
+        let out = quantize_lm(&weights, &windows, cfg, method)?;
+        print_reports(&out.reports, out.ledger.peak_mib(), out.timers.total());
+    }
+    Ok(())
+}
+
+fn print_reports(reports: &[crate::coordinator::LayerReport], peak_mib: f64, secs: f64) {
+    let mut t = Table::new(
+        "Per-layer quantization report",
+        &["layer", "init loss", "final loss", "reduction %", "iters", "early stop"],
+    );
+    for r in reports {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.4}", r.initial_loss()),
+            format!("{:.4}", r.final_loss()),
+            format!("{:.2}", r.reduction_pct()),
+            r.iters_run.to_string(),
+            r.early_stopped.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("peak memory: {peak_mib:.2} MiB, total time: {secs:.2}s");
+}
+
+/// `rpiq eval` — accuracy + PPL of fp/gptq/rpiq arms of one checkpoint.
+pub fn eval(args: &mut Args) -> Result<()> {
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let arm = args.get("method", "fp");
+    let n_test = args.usize_of("n-test", 200)?;
+    let n_windows = args.usize_of("n-windows", 40)?;
+    let cfg = quant_cfg(args)?;
+    let method = match arm.as_str() {
+        "fp" => None,
+        _ => Some(parse_method_named(&arm, args)?),
+    };
+    args.finish()?;
+
+    let w = world();
+    if is_vlm(&ckpt) {
+        let weights = load_vlm(&ckpt)?;
+        let rep = match method {
+            None => exp::eval_vlm_fp(&weights, &w),
+            Some(m) => {
+                let policy = CmdqPolicy::default();
+                let samples = w.vlm_calib(exp::CALIB_SAMPLES_VLM);
+                let out = quantize_vlm(&weights, &samples, &policy, m)?;
+                exp::eval_vlm_q(&out.model, &w)
+            }
+        };
+        println!("overall: {:.2}%", rep.overall_pct);
+        for (cat, acc) in &rep.per_category {
+            println!("  {cat:12} {acc:.2}%");
+        }
+    } else {
+        let weights = load_lm(&ckpt)?;
+        let ev = match method {
+            None => exp::eval_lm_fp(&weights, &w, n_windows, n_test),
+            Some(m) => {
+                let windows = w.calib_windows(weights.config.seq_len, exp::CALIB_SAMPLES);
+                let out = quantize_lm(&weights, &windows, cfg, m)?;
+                exp::eval_lm_q(&out.model, &w, n_windows, n_test)
+            }
+        };
+        println!("sentiment acc: {:.2}%   ppl: {:.3}", ev.acc_pct, ev.ppl);
+    }
+    Ok(())
+}
+
+fn parse_method_named(name: &str, args: &mut Args) -> Result<Method> {
+    let iters = args.usize_of("iters", 5)?;
+    let alpha = args.f32_of("alpha", RpiqParams::default().alpha)?;
+    Ok(match name {
+        "gptq" => Method::Gptq,
+        "rpiq" => Method::Rpiq(RpiqParams { max_iters: iters, alpha, ..Default::default() }),
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+/// `rpiq serve` — quantize and serve a replay workload, print latency.
+pub fn serve(args: &mut Args) -> Result<()> {
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let n_requests = args.usize_of("requests", 100)?;
+    let n_clients = args.usize_of("clients", 4)?;
+    let max_batch = args.usize_of("max-batch", 8)?;
+    let method = parse_method(args)?;
+    let cfg = quant_cfg(args)?;
+    args.finish()?;
+
+    let w = world();
+    let weights = load_lm(&ckpt)?;
+    let windows = w.calib_windows(weights.config.seq_len, exp::CALIB_SAMPLES);
+    let out = quantize_lm(&weights, &windows, cfg, method)?;
+    println!(
+        "deploy bytes: {:.2} MiB (fp32 {:.2} MiB)",
+        out.model.deploy_bytes() as f64 / (1 << 20) as f64,
+        weights.config.fp32_bytes() as f64 / (1 << 20) as f64
+    );
+    let tok = w.tokenizer().clone();
+    let server = Server::start(
+        Arc::new(out.model),
+        &tok,
+        ServeConfig { max_batch, ..Default::default() },
+    );
+    let prompts: Vec<String> = w
+        .sentiment
+        .test
+        .iter()
+        .cycle()
+        .take(n_requests)
+        .map(|e| e.prompt())
+        .collect();
+    let tput = crate::coordinator::serve::replay(&server, &tok, &prompts, n_clients);
+    let stats = server.shutdown();
+    println!(
+        "served {} requests: {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p95 {:.2} ms",
+        stats.count(),
+        tput,
+        stats.mean_ms(),
+        stats.percentile_ms(50.0),
+        stats.percentile_ms(95.0)
+    );
+    Ok(())
+}
+
+/// `rpiq inspect` — describe a checkpoint.
+pub fn inspect(args: &mut Args) -> Result<()> {
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    args.finish()?;
+    if is_vlm(&ckpt) {
+        let w = load_vlm(&ckpt)?;
+        println!("VLM {}", w.config.name);
+        println!("  patches {} x dim {}", w.config.n_patches, w.config.patch_dim);
+        println!("  vision d={} blocks={}", w.config.d_vision, w.config.n_vision_blocks);
+        println!("  lm d={} L={} params={}", w.config.lm.d_model, w.config.lm.n_layers, w.n_params());
+    } else {
+        let w = load_lm(&ckpt)?;
+        let c = &w.config;
+        println!("LM {}", c.name);
+        println!(
+            "  d_model={} layers={} heads={} d_ff={} vocab={} seq={} act={:?} tied={}",
+            c.d_model, c.n_layers, c.n_heads, c.d_ff, c.vocab, c.seq_len, c.activation, c.tied_head
+        );
+        println!("  params={} ({:.2} MiB fp32)", c.n_params(), c.fp32_bytes() as f64 / (1 << 20) as f64);
+    }
+    Ok(())
+}
+
+/// `rpiq artifacts` — validate the AOT bundle and smoke-run an entry.
+pub fn artifacts(args: &mut Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("dir", "artifacts"));
+    args.finish()?;
+    let engine = crate::runtime::Engine::new(&dir)?;
+    println!("platform: {}", engine.platform());
+    let mut names: Vec<&String> = engine.registry.entries.keys().collect();
+    names.sort();
+    for n in &names {
+        let e = &engine.registry.entries[*n];
+        println!("  {n}: {} inputs, {} outputs", e.inputs.len(), e.outputs.len());
+    }
+    // smoke-run the kernel self-check entry if present
+    if engine.registry.entries.contains_key("selfcheck_add") {
+        let x = crate::tensor::Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let out = engine.run("selfcheck_add", &[crate::runtime::Arg::F32(x)])?;
+        anyhow::ensure!(out[0].data() == [2.0, 4.0, 6.0, 8.0], "selfcheck_add numerics");
+        println!("selfcheck_add OK");
+    }
+    Ok(())
+}
+
+fn is_vlm(path: &Path) -> bool {
+    // sniff the magic
+    if let Ok(mut f) = std::fs::File::open(path) {
+        use std::io::Read;
+        let mut m = [0u8; 8];
+        if f.read_exact(&mut m).is_ok() {
+            return &m == b"RPIQVLM1";
+        }
+    }
+    false
+}

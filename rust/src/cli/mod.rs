@@ -1,0 +1,50 @@
+//! Command-line interface (hand-rolled: `clap` is unavailable offline).
+//!
+//! ```text
+//! rpiq pretrain  --all | --preset NAME   [--steps N] [--out-dir DIR]
+//! rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G]
+//!                [--iters T] [--alpha A]
+//! rpiq eval      --ckpt PATH [--method gptq|rpiq|fp] [--n-test N]
+//! rpiq serve     --ckpt PATH [--requests N] [--clients C] [--method ...]
+//! rpiq inspect   --ckpt PATH
+//! rpiq artifacts --dir artifacts   # validate + smoke-run the AOT bundle
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let mut args = Args::parse(argv)?;
+    let cmd = args.command().to_string();
+    match cmd.as_str() {
+        "pretrain" => commands::pretrain(&mut args),
+        "quantize" => commands::quantize(&mut args),
+        "eval" => commands::eval(&mut args),
+        "serve" => commands::serve(&mut args),
+        "inspect" => commands::inspect(&mut args),
+        "artifacts" => commands::artifacts(&mut args),
+        "help" | "" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{HELP}"),
+    }
+}
+
+pub const HELP: &str = "\
+rpiq — Residual-Projected Multi-Collaboration Closed-Loop and Single Instance Quantization
+
+USAGE:
+  rpiq pretrain  --all | --preset NAME [--steps N] [--out-dir DIR] [--seed S]
+  rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G] [--iters T] [--alpha A]
+  rpiq eval      --ckpt PATH [--method fp|gptq|rpiq] [--n-test N]
+  rpiq serve     --ckpt PATH [--requests N] [--clients C] [--max-batch B]
+  rpiq inspect   --ckpt PATH
+  rpiq artifacts [--dir artifacts]
+
+The pretrain command produces the subject checkpoints (4 LM presets + the
+VLM) that the table benches quantize; see DESIGN.md for the experiment map.
+";

@@ -1,0 +1,278 @@
+//! Shared experiment fixtures: the "world" (corpora + tasks + tokenizer),
+//! pretraining drivers, and evaluation wrappers used by the CLI, the
+//! examples, and every table bench — so all of them measure exactly the
+//! same thing.
+
+use crate::data::{SentimentSet, Tokenizer, VqaSet, WikiCorpus};
+use crate::eval::{perplexity, sentiment_accuracy, vqa_accuracy, VqaReport};
+use crate::model::forward::lm_forward;
+use crate::model::weights::LmWeights;
+use crate::model::{ModelConfig, QuantizedLm};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+use crate::train::Trainer;
+use crate::vlm::train::VlmTrainer;
+use crate::vlm::{vlm_forward, QuantizedVlm, VlmConfig, VlmWeights};
+
+use std::path::Path;
+
+/// Paper-protocol constants, scaled where the substitution ledger says so.
+pub const CALIB_SAMPLES: usize = 128; // paper: 128 C4 samples
+pub const CALIB_SAMPLES_VLM: usize = 64; // paper: 64 CogVLM-SFT samples
+pub const SENTIMENT_TEST: usize = 870; // paper: 870 tweets
+pub const VQA_TEST_PER_CATEGORY: usize = 40;
+
+/// All synthetic data for one experiment run.
+pub struct World {
+    pub corpus: WikiCorpus,
+    pub sentiment: SentimentSet,
+    pub vqa: VqaSet,
+    /// Mixed LM training stream (wiki + sentiment prompts).
+    pub train_stream: Vec<u32>,
+}
+
+impl World {
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.corpus.tokenizer
+    }
+
+    /// Build the full world deterministically.
+    pub fn build(seed: u64) -> World {
+        let corpus = WikiCorpus::generate(seed, 120_000, 12_000);
+        let sentiment = SentimentSet::generate(seed + 1, 3_000, SENTIMENT_TEST);
+        let vcfg = VlmConfig::sim_cogvlm2(corpus.tokenizer.vocab_size());
+        let vqa = VqaSet::generate(
+            seed + 2,
+            vcfg.n_patches,
+            vcfg.patch_dim,
+            4_000,
+            VQA_TEST_PER_CATEGORY,
+        );
+        // Mixed stream: wiki text with sentiment examples woven in so the
+        // LMs learn both next-token modelling and the classification task.
+        let tok = &corpus.tokenizer;
+        let mut train_stream = Vec::with_capacity(corpus.train.len() * 2);
+        let mut rng = Pcg64::new(seed + 3, 41);
+        let mut wiki_pos = 0usize;
+        let wiki_chunk = 96;
+        let mut sent_idx = 0usize;
+        while wiki_pos + wiki_chunk < corpus.train.len() {
+            train_stream.extend_from_slice(&corpus.train[wiki_pos..wiki_pos + wiki_chunk]);
+            wiki_pos += wiki_chunk;
+            // 2-3 sentiment examples between wiki chunks
+            for _ in 0..2 + rng.next_below(2) {
+                let e = &sentiment.train[sent_idx % sentiment.train.len()];
+                sent_idx += 1;
+                train_stream.extend(tok.encode(&e.with_answer()));
+            }
+        }
+        World { corpus, sentiment, vqa, train_stream }
+    }
+
+    /// Training batch from the mixed stream.
+    pub fn sample_batch(&self, rng: &mut Pcg64, batch: usize, seq: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let start = rng.next_below(self.train_stream.len() - seq);
+            out.extend_from_slice(&self.train_stream[start..start + seq]);
+        }
+        out
+    }
+
+    /// Calibration windows for the LM pipelines (the paper's 128 samples).
+    pub fn calib_windows(&self, seq: usize, n: usize) -> Vec<Vec<u32>> {
+        // Drawn from the mixed stream so the Hessians see task-relevant
+        // activations, mirroring "C4 calibration" for instruction models.
+        let mut rng = Pcg64::new(777, 42);
+        (0..n)
+            .map(|_| {
+                let start = rng.next_below(self.train_stream.len() - seq);
+                self.train_stream[start..start + seq].to_vec()
+            })
+            .collect()
+    }
+
+    /// Calibration samples for the VLM pipeline.
+    pub fn vlm_calib(&self, n: usize) -> Vec<(Tensor, Vec<u32>)> {
+        let tok = self.tokenizer();
+        self.vqa
+            .train
+            .iter()
+            .take(n)
+            .map(|e| {
+                let mut ids = tok.encode(&e.question);
+                ids.push(tok.id(&e.answer));
+                (e.cover.patches.clone(), ids)
+            })
+            .collect()
+    }
+}
+
+/// Pretrain one LM preset on the world's mixed stream.
+pub fn pretrain_lm(
+    cfg: &ModelConfig,
+    world: &World,
+    steps: usize,
+    batch: usize,
+    seed: u64,
+    mut log: impl FnMut(usize, f64),
+) -> (LmWeights, Vec<(usize, f64)>) {
+    let mut rng = Pcg64::new(seed, 51);
+    let mut w = LmWeights::init(cfg, &mut rng);
+    let mut sampler = Pcg64::new(seed, 52);
+    let mut trainer = Trainer::new(3e-3, batch);
+    trainer.adam = crate::train::Adam::new(3e-3).with_cosine(steps);
+    // No decoupled weight decay: like real LLM checkpoints, the subject
+    // models should develop weight outliers — that magnitude spread is
+    // precisely what makes low-bit PTQ lossy (and what GPTQ/RPIQ fight).
+    trainer.adam.weight_decay = 0.0;
+    let seq = cfg.seq_len;
+    let curve = trainer.train(
+        &mut w,
+        steps,
+        || world.sample_batch(&mut sampler, batch, seq),
+        |s, l| log(s, l),
+    );
+    (w, curve)
+}
+
+/// Pretrain the VLM on the world's VQA training set.
+pub fn pretrain_vlm(
+    cfg: &VlmConfig,
+    world: &World,
+    steps: usize,
+    batch: usize,
+    seed: u64,
+    mut log: impl FnMut(usize, f64),
+) -> (VlmWeights, Vec<(usize, f64)>) {
+    let mut rng = Pcg64::new(seed, 61);
+    let mut w = VlmWeights::init(cfg, &mut rng);
+    let mut trainer = VlmTrainer::new(2e-3);
+    let tok = world.tokenizer();
+    let curve = trainer.train(
+        &mut w,
+        tok,
+        &world.vqa.train,
+        steps,
+        batch,
+        &mut rng,
+        |s, l| log(s, l),
+    );
+    (w, curve)
+}
+
+/// LM evaluation bundle: (sentiment acc %, PPL).
+pub struct LmEval {
+    pub acc_pct: f64,
+    pub ppl: f64,
+}
+
+/// Evaluate a full-precision LM.
+pub fn eval_lm_fp(w: &LmWeights, world: &World, n_eval_windows: usize, n_sent: usize) -> LmEval {
+    let f = |t: &[u32], b: usize, s: usize| lm_forward(w, t, b, s, None);
+    eval_with(&f, w.config.seq_len, world, n_eval_windows, n_sent)
+}
+
+/// Evaluate a quantized LM.
+pub fn eval_lm_q(q: &QuantizedLm, world: &World, n_eval_windows: usize, n_sent: usize) -> LmEval {
+    let f = |t: &[u32], b: usize, s: usize| q.forward(t, b, s);
+    eval_with(&f, q.base.config.seq_len, world, n_eval_windows, n_sent)
+}
+
+fn eval_with(
+    f: &dyn Fn(&[u32], usize, usize) -> Tensor,
+    seq: usize,
+    world: &World,
+    n_eval_windows: usize,
+    n_sent: usize,
+) -> LmEval {
+    let windows: Vec<Vec<u32>> = world
+        .corpus
+        .eval_windows(seq)
+        .into_iter()
+        .take(n_eval_windows)
+        .collect();
+    let ppl = perplexity(&f, &windows);
+    let acc = sentiment_accuracy(
+        &f,
+        world.tokenizer(),
+        &world.sentiment.test[..n_sent.min(world.sentiment.test.len())],
+        seq,
+    );
+    LmEval { acc_pct: acc, ppl }
+}
+
+/// Evaluate a fp VLM on the VQA test set.
+pub fn eval_vlm_fp(w: &VlmWeights, world: &World) -> VqaReport {
+    let f = |p: &Tensor, t: &[u32], b: usize| vlm_forward(w, p, t, b, None);
+    vqa_accuracy(&f, world.tokenizer(), &world.vqa.test, w.config.n_patches)
+}
+
+/// Evaluate a quantized VLM on the VQA test set.
+pub fn eval_vlm_q(q: &QuantizedVlm, world: &World) -> VqaReport {
+    let f = |p: &Tensor, t: &[u32], b: usize| q.forward(p, t, b);
+    vqa_accuracy(&f, world.tokenizer(), &world.vqa.test, q.base.config.n_patches)
+}
+
+/// Checkpoint path helpers.
+pub fn ckpt_path(dir: &Path, name: &str) -> std::path::PathBuf {
+    dir.join(format!("{name}.ckpt"))
+}
+
+/// Default steps used by `make checkpoints` (tuned so the full pretrain of
+/// 4 LMs + VLM fits the CI budget while reaching clearly-above-chance task
+/// accuracy).
+pub const DEFAULT_LM_STEPS: usize = 300;
+pub const DEFAULT_LM_BATCH: usize = 8;
+pub const DEFAULT_VLM_STEPS: usize = 400;
+pub const DEFAULT_VLM_BATCH: usize = 8;
+
+/// Standard world seed shared by CLI/benches/examples.
+pub const WORLD_SEED: u64 = 20260710;
+
+/// Artifact-path group size per preset — the paper's group-128 scaled so
+/// the group divides every linear's input width. MUST stay in sync with
+/// `python/compile/model.py::GROUP_SIZES` (the artifacts integration test
+/// checks shapes through the manifest).
+pub fn group_size_for(preset: &str) -> usize {
+    match preset {
+        "sim-opt-6.7b" => 64,
+        "sim-opt-13b" => 32,
+        "sim-qwen3-8b" | "sim-llama-3.1-8b-instruct" => 48,
+        _ => 64,
+    }
+}
+
+/// The standard experiment quantization config for a preset.
+pub fn quant_config_for(preset: &str) -> crate::quant::QuantConfig {
+    let gs = group_size_for(preset);
+    crate::quant::QuantConfig { bits: 4, group_size: gs, block_size: gs, percdamp: 0.01 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_builds_and_streams() {
+        let w = World::build(1);
+        assert!(w.train_stream.len() > 100_000);
+        let mut rng = Pcg64::seeded(2);
+        let b = w.sample_batch(&mut rng, 2, 48);
+        assert_eq!(b.len(), 96);
+        let cal = w.calib_windows(48, 16);
+        assert_eq!(cal.len(), 16);
+        // calibration is deterministic across calls
+        assert_eq!(cal, w.calib_windows(48, 16));
+        let vc = w.vlm_calib(8);
+        assert_eq!(vc.len(), 8);
+    }
+
+    #[test]
+    fn train_stream_contains_sentiment_prompts() {
+        let w = World::build(3);
+        let tok = w.tokenizer();
+        let answer_id = tok.id("answer");
+        assert!(w.train_stream.iter().filter(|&&t| t == answer_id).count() > 100);
+    }
+}

@@ -1,0 +1,13 @@
+//! Layer-3 coordination: the quantization pipeline (calibrate → GPTQ →
+//! RPIQ refine, layer by layer, with byte/time accounting) and the serving
+//! runtime (router + dynamic batcher) used by the latency experiments.
+
+pub mod experiments;
+pub mod pipeline;
+pub mod serve;
+pub mod suite;
+
+pub use pipeline::{
+    quantize_lm, quantize_vlm, LayerReport, Method, PipelineOutput, PipelineVlmOutput,
+};
+pub use serve::{Request, Response, ServeConfig, Server};

@@ -1,0 +1,322 @@
+//! Serving runtime: request router + dynamic batcher over a quantized
+//! model — the deployment story the paper motivates (an assistive device
+//! answering sentiment/VQA-style queries under a memory budget).
+//!
+//! Architecture (vLLM-router-like, scaled to this repo):
+//!
+//! * producers call [`Server::submit`] (bounded channel ⇒ natural
+//!   backpressure);
+//! * the batcher thread drains up to `max_batch` requests, padding the
+//!   window by waiting at most `max_wait`;
+//! * equal-length prompts are executed as one batched forward; responses
+//!   are delivered through per-request channels;
+//! * latency (queue + compute) is recorded per request into
+//!   [`LatencyStats`].
+
+use crate::data::tokenizer::Tokenizer;
+use crate::data::SentimentSet;
+use crate::exec::Channel;
+use crate::metrics::LatencyStats;
+use crate::model::QuantizedLm;
+use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A scoring request: classify the sentiment of a prompt.
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Reply channel (capacity 1).
+    pub reply: Channel<Response>,
+    pub enqueued: Instant,
+}
+
+/// Response: predicted label index + logits of the three label tokens.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub label: usize,
+    pub label_logits: [f32; 3],
+    pub latency: Duration,
+}
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Queue capacity (backpressure bound).
+    pub queue_cap: usize,
+    /// Max requests fused into one forward.
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_cap: 256,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// The serving coordinator.
+pub struct Server {
+    queue: Channel<Request>,
+    next_id: AtomicU64,
+    pub stats: LatencyStats,
+    shutdown: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    /// Model context length; longer prompts are left-truncated at submit.
+    max_seq: usize,
+}
+
+impl Server {
+    /// Start a server over a quantized LM. `label_ids` are the three
+    /// sentiment answer tokens.
+    pub fn start(model: Arc<QuantizedLm>, tok: &Tokenizer, cfg: ServeConfig) -> Self {
+        let queue: Channel<Request> = Channel::bounded(cfg.queue_cap);
+        let stats = LatencyStats::new();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let label_ids = SentimentSet::label_token_ids(tok);
+        let max_seq = model.base.config.seq_len;
+        let worker = {
+            let queue = queue.clone();
+            let stats = stats.clone();
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("rpiq-batcher".into())
+                .spawn(move || {
+                    batcher_loop(model, queue, stats, shutdown, cfg, label_ids)
+                })
+                .expect("spawn batcher")
+        };
+        Server {
+            queue,
+            next_id: AtomicU64::new(0),
+            stats,
+            shutdown,
+            worker: Some(worker),
+            max_seq,
+        }
+    }
+
+    /// Submit a request; blocks when the queue is full (backpressure).
+    /// Returns the reply channel. Prompts longer than the model context
+    /// are left-truncated (keeping the answer scaffold at the end).
+    pub fn submit(&self, mut tokens: Vec<u32>) -> Channel<Response> {
+        let max = self.max_seq;
+        if tokens.len() > max {
+            tokens = tokens[tokens.len() - max..].to_vec();
+        }
+        let reply = Channel::bounded(1);
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::SeqCst),
+            tokens,
+            reply: reply.clone(),
+            enqueued: Instant::now(),
+        };
+        self.queue.send(req).expect("server queue closed");
+        reply
+    }
+
+    /// Submit and wait.
+    pub fn classify(&self, tokens: Vec<u32>) -> Response {
+        self.submit(tokens).recv().expect("server dropped request")
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Stop the batcher after draining.
+    pub fn shutdown(mut self) -> LatencyStats {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.stats.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    model: Arc<QuantizedLm>,
+    queue: Channel<Request>,
+    stats: LatencyStats,
+    shutdown: Arc<AtomicBool>,
+    cfg: ServeConfig,
+    label_ids: [u32; 3],
+) {
+    loop {
+        // Block for the first request (with timeout so shutdown is seen).
+        let first = match queue.recv_timeout(Duration::from_millis(20)) {
+            Some(r) => r,
+            None => {
+                if shutdown.load(Ordering::SeqCst) && queue.is_empty() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let mut batch = vec![first];
+        // Fill the batch within the wait window.
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match queue.recv_timeout(deadline - now) {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        // Group by sequence length so each group is one fused forward.
+        batch.sort_by_key(|r| r.tokens.len());
+        let mut i = 0;
+        while i < batch.len() {
+            let seq = batch[i].tokens.len();
+            let mut j = i + 1;
+            while j < batch.len() && batch[j].tokens.len() == seq {
+                j += 1;
+            }
+            let group = &batch[i..j];
+            let mut tokens = Vec::with_capacity(group.len() * seq);
+            for r in group {
+                tokens.extend_from_slice(&r.tokens);
+            }
+            let logits = model.forward(&tokens, group.len(), seq);
+            for (gi, r) in group.iter().enumerate() {
+                let last = logits.row(gi * seq + seq - 1);
+                let ll = [
+                    last[label_ids[0] as usize],
+                    last[label_ids[1] as usize],
+                    last[label_ids[2] as usize],
+                ];
+                let label = (0..3)
+                    .max_by(|&a, &b| ll[a].partial_cmp(&ll[b]).unwrap())
+                    .unwrap();
+                let latency = r.enqueued.elapsed();
+                stats.record(latency.as_secs_f64());
+                let _ = r.reply.send(Response { id: r.id, label, label_logits: ll, latency });
+            }
+            i = j;
+        }
+        let _ = logits_guard(); // keep shape of loop explicit
+    }
+}
+
+#[inline]
+fn logits_guard() {}
+
+/// Convenience for benches: replay a set of prompts through the server
+/// from `n_clients` producer threads; returns (throughput req/s, stats).
+pub fn replay(
+    server: &Server,
+    tok: &Tokenizer,
+    prompts: &[String],
+    n_clients: usize,
+) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let server = &*server;
+            let prompts = &*prompts;
+            let tok = &*tok;
+            scope.spawn(move || {
+                for p in prompts.iter().skip(c).step_by(n_clients) {
+                    let _ = server.classify(tok.encode(p));
+                }
+            });
+        }
+    });
+    prompts.len() as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// `Tensor` is not used directly here but the signature parity with the
+/// VQA path keeps the two serving flavours aligned.
+#[allow(dead_code)]
+fn _t(_: &Tensor) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Lexicon;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::LmWeights;
+    use crate::quant::{QuantGrid, QuantizedLinear};
+    use crate::rng::Pcg64;
+    use std::collections::HashMap;
+
+    fn test_server(cfg: ServeConfig) -> (Server, Tokenizer) {
+        let tok = Lexicon::tokenizer();
+        let mcfg = ModelConfig::test_tiny(tok.vocab_size());
+        let mut rng = Pcg64::seeded(801);
+        let w = LmWeights::init(&mcfg, &mut rng);
+        let mut qlinears = HashMap::new();
+        for (name, t) in w.linears() {
+            qlinears.insert(name, QuantizedLinear::quantize_rtn(t, QuantGrid::new(4, 8)));
+        }
+        let qlm = Arc::new(QuantizedLm::new(w, qlinears));
+        (Server::start(qlm, &tok, cfg), tok)
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let (server, tok) = test_server(ServeConfig::default());
+        let resp = server.classify(tok.encode("sentiment of text : i loved this movie answer :"));
+        assert!(resp.label < 3);
+        assert!(resp.latency.as_secs_f64() < 5.0);
+    }
+
+    #[test]
+    fn serves_concurrent_requests_with_batching() {
+        let (server, tok) = test_server(ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(10),
+            queue_cap: 64,
+        });
+        let prompts: Vec<String> = (0..24)
+            .map(|i| {
+                if i % 2 == 0 {
+                    "sentiment of text : i loved this movie answer :".to_string()
+                } else {
+                    "sentiment of text : my phone is very broken answer :".to_string()
+                }
+            })
+            .collect();
+        let tput = replay(&server, &tok, &prompts, 3);
+        assert!(tput > 0.0);
+        let stats = server.shutdown();
+        assert_eq!(stats.count(), 24);
+    }
+
+    #[test]
+    fn all_ids_answered_exactly_once() {
+        let (server, tok) = test_server(ServeConfig::default());
+        let ids: Vec<u64> = (0..10)
+            .map(|_| {
+                server
+                    .classify(tok.encode("sentiment of text : it was fine answer :"))
+                    .id
+            })
+            .collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+    }
+}

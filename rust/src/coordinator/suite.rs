@@ -1,0 +1,459 @@
+//! The main experiment suite: runs every arm the paper's evaluation
+//! section needs (Tables 1–5, Figs 4–5) **once** and caches the results to
+//! `reports/suite.json`. Every table bench renders from the cache, so
+//! `cargo bench` pays the quantization cost a single time regardless of
+//! bench ordering.
+
+use super::experiments::{self as exp, World};
+use super::pipeline::{quantize_lm, quantize_vlm, LayerReport, Method};
+use crate::jsonx::Json;
+use crate::model::io::load_lm;
+use crate::model::ModelConfig;
+use crate::quant::{CmdqPolicy, RpiqParams};
+use crate::vlm::io::load_vlm;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One quantization arm's outcome for an LM.
+#[derive(Clone, Debug)]
+pub struct ArmResult {
+    pub acc_pct: f64,
+    pub ppl: f64,
+    /// Deployment weight bytes.
+    pub deploy_bytes: usize,
+    /// Quantization-process peak (ledger) bytes.
+    pub peak_bytes: i64,
+    /// Quantization wall time.
+    pub quant_secs: f64,
+    pub layer_reports: Vec<LayerReportLite>,
+}
+
+/// Serializable slice of [`LayerReport`].
+#[derive(Clone, Debug)]
+pub struct LayerReportLite {
+    pub name: String,
+    pub loss_trace: Vec<f64>,
+    pub iters_run: usize,
+    pub early_stopped: bool,
+}
+
+impl LayerReportLite {
+    fn from(r: &LayerReport) -> Self {
+        LayerReportLite {
+            name: r.name.clone(),
+            loss_trace: r.loss_trace.clone(),
+            iters_run: r.iters_run,
+            early_stopped: r.early_stopped,
+        }
+    }
+
+    pub fn initial_loss(&self) -> f64 {
+        self.loss_trace[0]
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.loss_trace.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn reduction_pct(&self) -> f64 {
+        let i = self.initial_loss();
+        if i <= 0.0 {
+            return 0.0;
+        }
+        100.0 * (i - self.final_loss()) / i
+    }
+}
+
+/// All arms for one LM preset.
+#[derive(Clone, Debug)]
+pub struct ModelSuite {
+    pub name: String,
+    pub fp_acc_pct: f64,
+    pub fp_ppl: f64,
+    pub fp_bytes: usize,
+    pub gptq: ArmResult,
+    pub rpiq: ArmResult,
+}
+
+/// VLM arms (Table 2).
+#[derive(Clone, Debug)]
+pub struct VlmSuite {
+    pub fp_overall: f64,
+    pub fp_per_category: Vec<(String, f64)>,
+    pub fp_bytes: usize,
+    /// (label, overall, per-category, deploy bytes, peak bytes, secs,
+    /// layer reports)
+    pub arms: Vec<VlmArm>,
+}
+
+#[derive(Clone, Debug)]
+pub struct VlmArm {
+    pub label: String,
+    pub overall: f64,
+    pub per_category: Vec<(String, f64)>,
+    pub deploy_bytes: usize,
+    pub peak_bytes: i64,
+    pub quant_secs: f64,
+    pub layer_reports: Vec<LayerReportLite>,
+}
+
+/// The full suite result.
+#[derive(Clone, Debug)]
+pub struct Suite {
+    pub models: Vec<ModelSuite>,
+    pub vlm: VlmSuite,
+}
+
+/// Evaluation sizes (tuned for bench wall-clock on 1 core).
+pub const EVAL_WINDOWS: usize = 80;
+pub const EVAL_SENT: usize = 870;
+
+/// Run (or load from cache) the full suite.
+pub fn load_or_run(ckpt_dir: &Path) -> Result<Suite> {
+    let cache = Path::new("reports/suite.json");
+    if cache.exists() {
+        let text = std::fs::read_to_string(cache)?;
+        if let Ok(s) = from_json(&Json::parse(&text)?) {
+            eprintln!("[suite] using cached reports/suite.json");
+            return Ok(s);
+        }
+    }
+    let s = run(ckpt_dir)?;
+    std::fs::create_dir_all("reports")?;
+    std::fs::write(cache, to_json(&s).pretty())?;
+    Ok(s)
+}
+
+/// Run everything fresh.
+pub fn run(ckpt_dir: &Path) -> Result<Suite> {
+    let world = World::build(exp::WORLD_SEED);
+    let vocab = world.tokenizer().vocab_size();
+    let mut models = Vec::new();
+
+    for cfg in ModelConfig::lm_presets(vocab) {
+        let path = exp::ckpt_path(ckpt_dir, &cfg.name);
+        let w = load_lm(&path)
+            .with_context(|| format!("load {} (run `make checkpoints`)", path.display()))?;
+        eprintln!("[suite] {}: fp eval", cfg.name);
+        let fp = exp::eval_lm_fp(&w, &world, EVAL_WINDOWS, EVAL_SENT);
+        let windows = world.calib_windows(cfg.seq_len, exp::CALIB_SAMPLES);
+        let qcfg = exp::quant_config_for(&cfg.name);
+
+        let arm = |method: Method, label: &str| -> Result<ArmResult> {
+            eprintln!("[suite] {}: {} quantize+eval", cfg.name, label);
+            let t0 = std::time::Instant::now();
+            let out = quantize_lm(&w, &windows, qcfg, method)?;
+            let quant_secs = t0.elapsed().as_secs_f64();
+            let ev = exp::eval_lm_q(&out.model, &world, EVAL_WINDOWS, EVAL_SENT);
+            Ok(ArmResult {
+                acc_pct: ev.acc_pct,
+                ppl: ev.ppl,
+                deploy_bytes: out.model.deploy_bytes(),
+                peak_bytes: out.ledger.peak_bytes(),
+                quant_secs,
+                layer_reports: out.reports.iter().map(LayerReportLite::from).collect(),
+            })
+        };
+
+        let gptq = arm(Method::Gptq, "GPTQ")?;
+        let rpiq = arm(Method::Rpiq(RpiqParams::default()), "RPIQ")?;
+        models.push(ModelSuite {
+            name: cfg.name.clone(),
+            fp_acc_pct: fp.acc_pct,
+            fp_ppl: fp.ppl,
+            fp_bytes: cfg.fp32_bytes(),
+            gptq,
+            rpiq,
+        });
+    }
+
+    // ---- VLM (Table 2) ----
+    let vpath = exp::ckpt_path(ckpt_dir, "sim-cogvlm2-19b");
+    let vw = load_vlm(&vpath)
+        .with_context(|| format!("load {} (run `make checkpoints`)", vpath.display()))?;
+    eprintln!("[suite] vlm: fp eval");
+    let fp_rep = exp::eval_vlm_fp(&vw, &world);
+    let samples = world.vlm_calib(exp::CALIB_SAMPLES_VLM);
+    let mut arms = Vec::new();
+    let arm_specs: Vec<(&str, Method, usize)> = vec![
+        ("CMDQ (GPTQ base)", Method::Gptq, 5),
+        ("CMDQ + RPIQ (5 iter)", Method::Rpiq(RpiqParams::default()), 5),
+        (
+            "CMDQ + RPIQ (20 iter)",
+            Method::Rpiq(RpiqParams { max_iters: 20, early_stop: false, ..Default::default() }),
+            20,
+        ),
+    ];
+    for (label, method, iters) in arm_specs {
+        eprintln!("[suite] vlm: {label}");
+        let policy = CmdqPolicy {
+            rpiq: match method {
+                Method::Rpiq(p) => p,
+                Method::Gptq => RpiqParams::default(),
+            },
+            ..Default::default()
+        }
+        .with_iters(iters);
+        let t0 = std::time::Instant::now();
+        let out = quantize_vlm(&vw, &samples, &policy, method)?;
+        let quant_secs = t0.elapsed().as_secs_f64();
+        let rep = exp::eval_vlm_q(&out.model, &world);
+        arms.push(VlmArm {
+            label: label.to_string(),
+            overall: rep.overall_pct,
+            per_category: rep.per_category,
+            deploy_bytes: out.model.deploy_bytes(),
+            peak_bytes: out.ledger.peak_bytes(),
+            quant_secs,
+            layer_reports: out.reports.iter().map(LayerReportLite::from).collect(),
+        });
+    }
+
+    Ok(Suite {
+        models,
+        vlm: VlmSuite {
+            fp_overall: fp_rep.overall_pct,
+            fp_per_category: fp_rep.per_category,
+            fp_bytes: vw.n_params() * 4,
+            arms,
+        },
+    })
+}
+
+// ---------- JSON (de)serialization ----------
+
+fn reports_to_json(rs: &[LayerReportLite]) -> Json {
+    Json::Arr(
+        rs.iter()
+            .map(|r| {
+                Json::obj()
+                    .with("name", Json::Str(r.name.clone()))
+                    .with("trace", Json::from_f64s(&r.loss_trace))
+                    .with("iters", Json::Num(r.iters_run as f64))
+                    .with("early", Json::Bool(r.early_stopped))
+            })
+            .collect(),
+    )
+}
+
+fn reports_from_json(j: &Json) -> Result<Vec<LayerReportLite>> {
+    j.as_arr()
+        .context("reports")?
+        .iter()
+        .map(|r| {
+            Ok(LayerReportLite {
+                name: r.get("name").and_then(|x| x.as_str()).context("name")?.to_string(),
+                loss_trace: r
+                    .get("trace")
+                    .and_then(|x| x.as_arr())
+                    .context("trace")?
+                    .iter()
+                    .map(|v| v.as_f64().context("num"))
+                    .collect::<Result<_>>()?,
+                iters_run: r.get("iters").and_then(|x| x.as_usize()).context("iters")?,
+                early_stopped: r.get("early").and_then(|x| x.as_bool()).context("early")?,
+            })
+        })
+        .collect()
+}
+
+fn arm_to_json(a: &ArmResult) -> Json {
+    Json::obj()
+        .with("acc", Json::Num(a.acc_pct))
+        .with("ppl", Json::Num(a.ppl))
+        .with("deploy_bytes", Json::Num(a.deploy_bytes as f64))
+        .with("peak_bytes", Json::Num(a.peak_bytes as f64))
+        .with("secs", Json::Num(a.quant_secs))
+        .with("reports", reports_to_json(&a.layer_reports))
+}
+
+fn arm_from_json(j: &Json) -> Result<ArmResult> {
+    Ok(ArmResult {
+        acc_pct: j.get("acc").and_then(|x| x.as_f64()).context("acc")?,
+        ppl: j.get("ppl").and_then(|x| x.as_f64()).context("ppl")?,
+        deploy_bytes: j.get("deploy_bytes").and_then(|x| x.as_usize()).context("bytes")?,
+        peak_bytes: j.get("peak_bytes").and_then(|x| x.as_f64()).context("peak")? as i64,
+        quant_secs: j.get("secs").and_then(|x| x.as_f64()).context("secs")?,
+        layer_reports: reports_from_json(j.get("reports").context("reports")?)?,
+    })
+}
+
+fn cats_to_json(c: &[(String, f64)]) -> Json {
+    Json::Arr(
+        c.iter()
+            .map(|(k, v)| Json::obj().with("cat", Json::Str(k.clone())).with("acc", Json::Num(*v)))
+            .collect(),
+    )
+}
+
+fn cats_from_json(j: &Json) -> Result<Vec<(String, f64)>> {
+    j.as_arr()
+        .context("cats")?
+        .iter()
+        .map(|c| {
+            Ok((
+                c.get("cat").and_then(|x| x.as_str()).context("cat")?.to_string(),
+                c.get("acc").and_then(|x| x.as_f64()).context("acc")?,
+            ))
+        })
+        .collect()
+}
+
+/// Serialize the suite.
+pub fn to_json(s: &Suite) -> Json {
+    let models = Json::Arr(
+        s.models
+            .iter()
+            .map(|m| {
+                Json::obj()
+                    .with("name", Json::Str(m.name.clone()))
+                    .with("fp_acc", Json::Num(m.fp_acc_pct))
+                    .with("fp_ppl", Json::Num(m.fp_ppl))
+                    .with("fp_bytes", Json::Num(m.fp_bytes as f64))
+                    .with("gptq", arm_to_json(&m.gptq))
+                    .with("rpiq", arm_to_json(&m.rpiq))
+            })
+            .collect(),
+    );
+    let vlm_arms = Json::Arr(
+        s.vlm
+            .arms
+            .iter()
+            .map(|a| {
+                Json::obj()
+                    .with("label", Json::Str(a.label.clone()))
+                    .with("overall", Json::Num(a.overall))
+                    .with("cats", cats_to_json(&a.per_category))
+                    .with("deploy_bytes", Json::Num(a.deploy_bytes as f64))
+                    .with("peak_bytes", Json::Num(a.peak_bytes as f64))
+                    .with("secs", Json::Num(a.quant_secs))
+                    .with("reports", reports_to_json(&a.layer_reports))
+            })
+            .collect(),
+    );
+    Json::obj().with("models", models).with(
+        "vlm",
+        Json::obj()
+            .with("fp_overall", Json::Num(s.vlm.fp_overall))
+            .with("fp_cats", cats_to_json(&s.vlm.fp_per_category))
+            .with("fp_bytes", Json::Num(s.vlm.fp_bytes as f64))
+            .with("arms", vlm_arms),
+    )
+}
+
+/// Deserialize the suite.
+pub fn from_json(j: &Json) -> Result<Suite> {
+    let models = j
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .context("models")?
+        .iter()
+        .map(|m| {
+            Ok(ModelSuite {
+                name: m.get("name").and_then(|x| x.as_str()).context("name")?.to_string(),
+                fp_acc_pct: m.get("fp_acc").and_then(|x| x.as_f64()).context("fp_acc")?,
+                fp_ppl: m.get("fp_ppl").and_then(|x| x.as_f64()).context("fp_ppl")?,
+                fp_bytes: m.get("fp_bytes").and_then(|x| x.as_usize()).context("fp_bytes")?,
+                gptq: arm_from_json(m.get("gptq").context("gptq")?)?,
+                rpiq: arm_from_json(m.get("rpiq").context("rpiq")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let v = j.get("vlm").context("vlm")?;
+    let arms = v
+        .get("arms")
+        .and_then(|a| a.as_arr())
+        .context("arms")?
+        .iter()
+        .map(|a| {
+            Ok(VlmArm {
+                label: a.get("label").and_then(|x| x.as_str()).context("label")?.to_string(),
+                overall: a.get("overall").and_then(|x| x.as_f64()).context("overall")?,
+                per_category: cats_from_json(a.get("cats").context("cats")?)?,
+                deploy_bytes: a.get("deploy_bytes").and_then(|x| x.as_usize()).context("db")?,
+                peak_bytes: a.get("peak_bytes").and_then(|x| x.as_f64()).context("pb")? as i64,
+                quant_secs: a.get("secs").and_then(|x| x.as_f64()).context("secs")?,
+                layer_reports: reports_from_json(a.get("reports").context("reports")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Suite {
+        models,
+        vlm: VlmSuite {
+            fp_overall: v.get("fp_overall").and_then(|x| x.as_f64()).context("fpo")?,
+            fp_per_category: cats_from_json(v.get("fp_cats").context("fp_cats")?)?,
+            fp_bytes: v.get("fp_bytes").and_then(|x| x.as_usize()).context("fpb")?,
+            arms,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_json_roundtrip() {
+        let s = Suite {
+            models: vec![ModelSuite {
+                name: "m".into(),
+                fp_acc_pct: 50.0,
+                fp_ppl: 3.0,
+                fp_bytes: 1000,
+                gptq: ArmResult {
+                    acc_pct: 49.0,
+                    ppl: 3.1,
+                    deploy_bytes: 300,
+                    peak_bytes: 5000,
+                    quant_secs: 1.5,
+                    layer_reports: vec![LayerReportLite {
+                        name: "l0".into(),
+                        loss_trace: vec![2.0, 1.0],
+                        iters_run: 1,
+                        early_stopped: false,
+                    }],
+                },
+                rpiq: ArmResult {
+                    acc_pct: 50.0,
+                    ppl: 3.05,
+                    deploy_bytes: 300,
+                    peak_bytes: 6000,
+                    quant_secs: 1.8,
+                    layer_reports: vec![],
+                },
+            }],
+            vlm: VlmSuite {
+                fp_overall: 70.0,
+                fp_per_category: vec![("cookbooks".into(), 71.0)],
+                fp_bytes: 2000,
+                arms: vec![VlmArm {
+                    label: "CMDQ".into(),
+                    overall: 68.0,
+                    per_category: vec![("cookbooks".into(), 69.0)],
+                    deploy_bytes: 600,
+                    peak_bytes: 7000,
+                    quant_secs: 2.0,
+                    layer_reports: vec![],
+                }],
+            },
+        };
+        let j = to_json(&s);
+        let s2 = from_json(&Json::parse(&j.pretty()).unwrap()).unwrap();
+        assert_eq!(s2.models[0].gptq.peak_bytes, 5000);
+        assert_eq!(s2.vlm.arms[0].label, "CMDQ");
+        assert_eq!(s2.models[0].gptq.layer_reports[0].loss_trace, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn layer_report_lite_metrics() {
+        let r = LayerReportLite {
+            name: "x".into(),
+            loss_trace: vec![10.0, 6.0, 8.0],
+            iters_run: 2,
+            early_stopped: true,
+        };
+        assert_eq!(r.initial_loss(), 10.0);
+        assert_eq!(r.final_loss(), 6.0);
+        assert!((r.reduction_pct() - 40.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,239 @@
+//! Synthetic "wiki" corpus — the C4 (calibration) and WikiText-2 (PPL)
+//! stand-in.
+//!
+//! Articles are generated from a small probabilistic grammar with *topic
+//! coherence*: each article draws a topic, and its sentences prefer that
+//! topic's nouns/verbs. The grammar gives the LM local structure to learn
+//! (word order, determiners), the topic gives longer-range structure — so
+//! a trained model's PPL sits well below the uniform baseline and
+//! quantization-induced degradation is measurable, which is all Table 1
+//! needs.
+
+use super::tokenizer::Tokenizer;
+use crate::rng::Pcg64;
+
+/// Shared lexicon. The sentiment/VQA generators reference these too so one
+/// tokenizer covers everything.
+pub struct Lexicon;
+
+impl Lexicon {
+    pub const TOPICS: [&'static str; 6] =
+        ["science", "music", "history", "cooking", "travel", "sport"];
+
+    pub fn nouns(topic: &str) -> &'static [&'static str] {
+        match topic {
+            "science" => &["atom", "theory", "experiment", "energy", "cell", "planet"],
+            "music" => &["song", "melody", "rhythm", "band", "concert", "album"],
+            "history" => &["empire", "war", "treaty", "king", "revolution", "dynasty"],
+            "cooking" => &["recipe", "flavor", "ingredient", "dish", "spice", "oven"],
+            "travel" => &["journey", "city", "mountain", "harbor", "train", "market"],
+            _ => &["match", "team", "player", "goal", "season", "record"],
+        }
+    }
+
+    pub fn verbs(topic: &str) -> &'static [&'static str] {
+        match topic {
+            "science" => &["explains", "measures", "reveals", "predicts"],
+            "music" => &["plays", "records", "performs", "composes"],
+            "history" => &["conquered", "ruled", "signed", "founded"],
+            "cooking" => &["bakes", "mixes", "serves", "tastes"],
+            "travel" => &["crosses", "visits", "explores", "reaches"],
+            _ => &["wins", "scores", "defends", "trains"],
+        }
+    }
+
+    pub const ADJS: [&'static str; 8] =
+        ["old", "new", "great", "small", "famous", "quiet", "bright", "rare"];
+    pub const PLACES: [&'static str; 6] =
+        ["europe", "asia", "america", "africa", "north", "south"];
+    pub const CONNECT: [&'static str; 4] = ["and", "but", "while", "because"];
+
+    /// Every word any generator can emit (for tokenizer construction).
+    pub fn all_words() -> Vec<String> {
+        let mut v: Vec<String> = Vec::new();
+        let mut push = |s: &str| v.push(s.to_string());
+        for w in ["the", "a", "in", "of", ".", ","] {
+            push(w);
+        }
+        for t in Self::TOPICS {
+            push(t);
+            for n in Self::nouns(t) {
+                push(n);
+            }
+            for vb in Self::verbs(t) {
+                push(vb);
+            }
+        }
+        for w in Self::ADJS {
+            push(w);
+        }
+        for w in Self::PLACES {
+            push(w);
+        }
+        for w in Self::CONNECT {
+            push(w);
+        }
+        // sentiment lexicon (template words + the three label words)
+        for w in super::sentiment::SENT_WORDS {
+            push(w);
+        }
+        for w in super::sentiment::LABELS {
+            push(w);
+        }
+        // vqa lexicon
+        for w in super::vqa::VQA_WORDS {
+            push(w);
+        }
+        v
+    }
+
+    /// The canonical tokenizer over the full lexicon.
+    pub fn tokenizer() -> Tokenizer {
+        Tokenizer::build(Self::all_words())
+    }
+}
+
+/// Generated corpus: token streams for training, calibration, evaluation.
+pub struct WikiCorpus {
+    pub tokenizer: Tokenizer,
+    /// Flat token stream for training batches.
+    pub train: Vec<u32>,
+    /// Held-out stream for perplexity evaluation.
+    pub test: Vec<u32>,
+}
+
+impl WikiCorpus {
+    /// Generate a corpus of ~`n_train_tokens` + ~`n_test_tokens`.
+    pub fn generate(seed: u64, n_train_tokens: usize, n_test_tokens: usize) -> Self {
+        let tokenizer = Lexicon::tokenizer();
+        let mut rng = Pcg64::new(seed, 11);
+        let train = Self::stream(&tokenizer, &mut rng, n_train_tokens);
+        let mut rng_test = Pcg64::new(seed, 12);
+        let test = Self::stream(&tokenizer, &mut rng_test, n_test_tokens);
+        WikiCorpus { tokenizer, train, test }
+    }
+
+    fn stream(tok: &Tokenizer, rng: &mut Pcg64, n_tokens: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n_tokens + 64);
+        while out.len() < n_tokens {
+            let article = Self::article(rng);
+            out.extend(tok.encode(&article));
+        }
+        out.truncate(n_tokens);
+        out
+    }
+
+    /// One topic-coherent article of a few sentences.
+    pub fn article(rng: &mut Pcg64) -> String {
+        let topic = *rng.choose(&Lexicon::TOPICS);
+        let nouns = Lexicon::nouns(topic);
+        let verbs = Lexicon::verbs(topic);
+        let n_sents = 3 + rng.next_below(4);
+        let mut s = format!("the {topic} ");
+        for _ in 0..n_sents {
+            let adj = *rng.choose(&Lexicon::ADJS);
+            let n1 = *rng.choose(nouns);
+            let v = *rng.choose(verbs);
+            let n2 = *rng.choose(nouns);
+            let place = *rng.choose(&Lexicon::PLACES);
+            s.push_str(&format!("the {adj} {n1} {v} the {n2} in {place} "));
+            if rng.chance(0.4) {
+                let c = *rng.choose(&Lexicon::CONNECT);
+                s.push_str(&format!("{c} "));
+            } else {
+                s.push_str(". ");
+            }
+        }
+        s
+    }
+
+    /// Training batch sampler: `batch` random windows of length `seq`.
+    pub fn sample_batch(&self, rng: &mut Pcg64, batch: usize, seq: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let start = rng.next_below(self.train.len() - seq);
+            out.extend_from_slice(&self.train[start..start + seq]);
+        }
+        out
+    }
+
+    /// Calibration set: `n` deterministic windows of length `seq` from the
+    /// train stream (the paper's "128 samples from C4, saved as a static
+    /// file").
+    pub fn calibration(&self, seed: u64, n: usize, seq: usize) -> Vec<Vec<u32>> {
+        let mut rng = Pcg64::new(seed, 13);
+        (0..n)
+            .map(|_| {
+                let start = rng.next_below(self.train.len() - seq);
+                self.train[start..start + seq].to_vec()
+            })
+            .collect()
+    }
+
+    /// Non-overlapping evaluation windows from the test stream.
+    pub fn eval_windows(&self, seq: usize) -> Vec<Vec<u32>> {
+        self.test
+            .chunks_exact(seq)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{prop_assert, Runner};
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = WikiCorpus::generate(5, 2000, 500);
+        let b = WikiCorpus::generate(5, 2000, 500);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+        let c = WikiCorpus::generate(6, 2000, 500);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn no_unk_in_generated_text() {
+        let c = WikiCorpus::generate(7, 5000, 1000);
+        assert!(c.train.iter().all(|&t| t != super::super::tokenizer::UNK));
+        assert!(c.test.iter().all(|&t| t != super::super::tokenizer::UNK));
+    }
+
+    #[test]
+    fn calibration_windows_have_right_shape_and_are_static() {
+        let c = WikiCorpus::generate(8, 10_000, 1000);
+        let cal1 = c.calibration(42, 128, 48);
+        let cal2 = c.calibration(42, 128, 48);
+        assert_eq!(cal1.len(), 128);
+        assert!(cal1.iter().all(|w| w.len() == 48));
+        assert_eq!(cal1, cal2);
+    }
+
+    #[test]
+    fn eval_windows_cover_test_stream() {
+        let c = WikiCorpus::generate(9, 2000, 1000);
+        let w = c.eval_windows(48);
+        assert_eq!(w.len(), 1000 / 48);
+    }
+
+    #[test]
+    fn articles_always_tokenize_property() {
+        let tok = Lexicon::tokenizer();
+        Runner::new("article_in_vocab", 64).run(|g| {
+            let mut rng = Pcg64::new(g.usize_in(0..100_000) as u64, 3);
+            let a = WikiCorpus::article(&mut rng);
+            prop_assert(tok.covers(&a), &format!("OOV word in: {a}"))
+        });
+    }
+
+    #[test]
+    fn batch_sampler_shapes() {
+        let c = WikiCorpus::generate(10, 4000, 500);
+        let mut rng = Pcg64::seeded(1);
+        let b = c.sample_batch(&mut rng, 4, 32);
+        assert_eq!(b.len(), 128);
+        assert!(b.iter().all(|&t| (t as usize) < c.tokenizer.vocab_size()));
+    }
+}

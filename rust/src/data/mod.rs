@@ -1,0 +1,27 @@
+//! Synthetic data substrate — the stand-ins for every dataset the paper
+//! uses but which cannot be downloaded offline (DESIGN.md §5):
+//!
+//! * [`tokenizer`] — deterministic word-level tokenizer over the shared
+//!   lexicon;
+//! * [`corpus`]    — "synthetic wiki" articles (C4/WikiText-2 stand-in):
+//!   templated grammar + topic coherence, split into train/calibration/
+//!   held-out-PPL;
+//! * [`sentiment`] — templated tweets with 3-way labels (SemEval stand-in)
+//!   rendered into the paper's prompt format;
+//! * [`vqa`]       — synthetic "book covers" over 5 categories with
+//!   attribute-encoding patches + question/answer pairs (OCR-VQA
+//!   stand-in).
+//!
+//! Everything is generated from seeded [`crate::rng::Pcg64`] streams, so
+//! corpora are bit-identical across runs — the experiment harness depends
+//! on that.
+
+pub mod corpus;
+pub mod sentiment;
+pub mod tokenizer;
+pub mod vqa;
+
+pub use corpus::WikiCorpus;
+pub use sentiment::{SentimentExample, SentimentSet, LABELS};
+pub use tokenizer::Tokenizer;
+pub use vqa::{BookCover, VqaSet, CATEGORIES};

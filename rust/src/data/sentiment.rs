@@ -1,0 +1,168 @@
+//! Synthetic tweet sentiment task — the SemEval-2017 Task 4 stand-in
+//! (paper §4.2: 870 test samples, 3 classes, prompt-format evaluation).
+//!
+//! Tweets are templated around polarity lexicons with mild lexical noise
+//! (neutral filler, negation-free to keep the mapping learnable at our
+//! model scale). The evaluation prompt mirrors the paper's template,
+//! compressed to fit the 48-token training context:
+//!
+//! `sentiment of text : {tweet} answer : {label}`
+
+use super::tokenizer::Tokenizer;
+use crate::rng::Pcg64;
+
+/// The three classes, in the paper's order.
+pub const LABELS: [&str; 3] = ["negative", "neutral", "positive"];
+
+/// Every word this generator can emit (fed into the shared lexicon).
+pub const SENT_WORDS: [&str; 47] = [
+    // template glue
+    "sentiment", "text", ":", "answer", "i", "this", "it", "was", "is",
+    "really", "so", "very", "my", "felt", "found",
+    // positive
+    "love", "loved", "amazing", "wonderful", "great", "enjoyed", "perfect",
+    "brilliant", "fantastic", "happy",
+    // negative
+    "hate", "hated", "awful", "terrible", "boring", "broken", "worst",
+    "disappointing", "sad", "angry",
+    // neutral
+    "okay", "fine", "average", "ordinary", "usual", "regular", "plain",
+    // objects
+    "movie", "phone", "dinner", "game", "book",
+    // labels reuse: negative/neutral/positive appear via LABELS
+];
+
+/// One labeled example.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SentimentExample {
+    pub text: String,
+    /// 0 = negative, 1 = neutral, 2 = positive.
+    pub label: usize,
+}
+
+impl SentimentExample {
+    /// Render the evaluation/training prompt *without* the answer word.
+    pub fn prompt(&self) -> String {
+        format!("sentiment of text : {} answer :", self.text)
+    }
+
+    /// Render the full training string (prompt + gold label).
+    pub fn with_answer(&self) -> String {
+        format!("{} {}", self.prompt(), LABELS[self.label])
+    }
+}
+
+/// A generated sentiment dataset.
+pub struct SentimentSet {
+    pub train: Vec<SentimentExample>,
+    pub test: Vec<SentimentExample>,
+}
+
+impl SentimentSet {
+    /// Paper protocol: 870 test samples. Train size is ours to choose.
+    pub fn generate(seed: u64, n_train: usize, n_test: usize) -> Self {
+        let mut rng = Pcg64::new(seed, 21);
+        let train = (0..n_train).map(|_| Self::example(&mut rng)).collect();
+        let mut rng_t = Pcg64::new(seed, 22);
+        let test = (0..n_test).map(|_| Self::example(&mut rng_t)).collect();
+        SentimentSet { train, test }
+    }
+
+    fn adj_for(rng: &mut Pcg64, label: usize) -> &'static str {
+        match label {
+            0 => *rng.choose(&[
+                "awful", "terrible", "boring", "broken", "worst", "disappointing",
+            ]),
+            1 => *rng.choose(&["okay", "fine", "average", "ordinary", "usual", "plain"]),
+            _ => *rng.choose(&[
+                "amazing", "wonderful", "great", "perfect", "brilliant", "fantastic",
+            ]),
+        }
+    }
+
+    fn example(rng: &mut Pcg64) -> SentimentExample {
+        let label = rng.next_below(3);
+        let obj = *rng.choose(&["movie", "phone", "dinner", "game", "book"]);
+        let verb = match label {
+            0 => *rng.choose(&["hated", "hate"]),
+            1 => *rng.choose(&["found", "felt"]),
+            _ => *rng.choose(&["loved", "love", "enjoyed"]),
+        };
+        let intens = *rng.choose(&["really", "so", "very"]);
+        // 40% "contrast" examples: two opposing cues joined by "but". The
+        // final clause carries the label with probability 0.85, the first
+        // clause otherwise — the task has irreducible ambiguity, so model
+        // accuracy sits in a sensitive sub-100% band where quantization
+        // deltas are visible (paper Table 1 operates at 40–65%, far from
+        // saturation; a saturated synthetic task would hide all deltas).
+        if rng.chance(0.4) {
+            let other = (label + 1 + rng.next_below(2)) % 3;
+            let (first, last) = if rng.chance(0.85) {
+                (other, label) // final clause wins (majority rule)
+            } else {
+                (label, other) // exception: first clause carried the label
+            };
+            let a_first = Self::adj_for(rng, first);
+            let a_last = Self::adj_for(rng, last);
+            let text = format!("this {obj} was {a_first} but it is {intens} {a_last}");
+            return SentimentExample { text, label };
+        }
+        let adj = Self::adj_for(rng, label);
+        let text = match rng.next_below(3) {
+            0 => format!("i {verb} this {obj} it was {intens} {adj}"),
+            1 => format!("my {obj} is {intens} {adj}"),
+            _ => format!("this {obj} was {adj} i {verb} it"),
+        };
+        SentimentExample { text, label }
+    }
+
+    /// Token ids of the three label words — the answer-token candidates
+    /// the evaluator compares.
+    pub fn label_token_ids(tok: &Tokenizer) -> [u32; 3] {
+        [tok.id("negative"), tok.id("neutral"), tok.id("positive")]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Lexicon;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let a = SentimentSet::generate(3, 300, 870);
+        let b = SentimentSet::generate(3, 300, 870);
+        assert_eq!(a.test, b.test);
+        assert_eq!(a.test.len(), 870);
+        for l in 0..3 {
+            let n = a.test.iter().filter(|e| e.label == l).count();
+            assert!(n > 200, "class {l} has {n}");
+        }
+    }
+
+    #[test]
+    fn prompts_tokenize_fully() {
+        let tok = Lexicon::tokenizer();
+        let s = SentimentSet::generate(4, 50, 50);
+        for e in s.train.iter().chain(s.test.iter()) {
+            assert!(tok.covers(&e.with_answer()), "{}", e.with_answer());
+        }
+    }
+
+    #[test]
+    fn label_tokens_distinct() {
+        let tok = Lexicon::tokenizer();
+        let ids = SentimentSet::label_token_ids(&tok);
+        assert_ne!(ids[0], ids[1]);
+        assert_ne!(ids[1], ids[2]);
+        assert!(ids.iter().all(|&i| i != super::super::tokenizer::UNK));
+    }
+
+    #[test]
+    fn prompt_is_prefix_of_answered() {
+        let s = SentimentSet::generate(5, 10, 10);
+        for e in &s.test {
+            assert!(e.with_answer().starts_with(&e.prompt()));
+        }
+    }
+}

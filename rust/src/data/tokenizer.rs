@@ -1,0 +1,93 @@
+//! Word-level tokenizer over the closed synthetic lexicon.
+//!
+//! Real tokenizers (BPE) are unnecessary here: the corpus generators emit
+//! words from a fixed lexicon, so a word-level vocab is lossless and keeps
+//! the subject models' embedding tables small. `<unk>` exists for
+//! robustness but never appears in generated data (a property test checks
+//! this).
+
+use std::collections::HashMap;
+
+/// Fixed special tokens.
+pub const UNK: u32 = 0;
+pub const BOS: u32 = 1;
+
+/// Word-level tokenizer.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    map: HashMap<String, u32>,
+}
+
+impl Tokenizer {
+    /// Build from the union of words (deduplicated, order-preserving).
+    pub fn build(words: impl IntoIterator<Item = String>) -> Self {
+        let mut vocab = vec!["<unk>".to_string(), "<bos>".to_string()];
+        let mut map = HashMap::new();
+        map.insert("<unk>".to_string(), UNK);
+        map.insert("<bos>".to_string(), BOS);
+        for w in words {
+            if !map.contains_key(&w) {
+                map.insert(w.clone(), vocab.len() as u32);
+                vocab.push(w);
+            }
+        }
+        Tokenizer { vocab, map }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Token id of a word (UNK if absent).
+    pub fn id(&self, word: &str) -> u32 {
+        self.map.get(word).copied().unwrap_or(UNK)
+    }
+
+    /// Word of a token id.
+    pub fn word(&self, id: u32) -> &str {
+        self.vocab.get(id as usize).map(|s| s.as_str()).unwrap_or("<unk>")
+    }
+
+    /// Encode whitespace-separated text.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    /// Decode to a space-joined string.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// True if every word of `text` is in-vocabulary.
+    pub fn covers(&self, text: &str) -> bool {
+        text.split_whitespace().all(|w| self.map.contains_key(w))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_dedups_and_roundtrips() {
+        let t = Tokenizer::build(
+            ["the", "cat", "sat", "the", "cat"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(t.vocab_size(), 5); // unk, bos, the, cat, sat
+        let ids = t.encode("the cat sat");
+        assert_eq!(t.decode(&ids), "the cat sat");
+        assert!(ids.iter().all(|&i| i != UNK));
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = Tokenizer::build(["hello".to_string()]);
+        assert_eq!(t.encode("hello world"), vec![2, UNK]);
+        assert!(!t.covers("hello world"));
+        assert!(t.covers("hello hello"));
+    }
+}

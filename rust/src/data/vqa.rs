@@ -1,0 +1,241 @@
+//! Synthetic book-cover VQA — the OCR-VQA stand-in (paper §4.2, Table 2).
+//!
+//! Each "image" is a grid of patches whose float features encode the
+//! cover's attributes (genre, author, year) plus category-dependent noise;
+//! the VLM has to *read the attributes out of the pixels* to answer, which
+//! is the same fine-grained-recognition burden OCR-VQA places on CogVLM2.
+//!
+//! Five categories mirror the paper's columns (Cookbooks, Medical,
+//! History, Reference, Education). Per-category noise levels differ —
+//! History covers are the cleanest and Reference the noisiest, matching
+//! the paper's observed robustness ordering — so quantization-induced
+//! accuracy loss lands unevenly across categories exactly as in Table 2.
+
+use super::tokenizer::Tokenizer;
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Table 2's category columns.
+pub const CATEGORIES: [&str; 5] =
+    ["cookbooks", "medical", "history", "reference", "education"];
+
+/// Per-category patch-noise std (higher = harder to read).
+pub const CATEGORY_NOISE: [f32; 5] = [0.35, 0.40, 0.25, 0.55, 0.45];
+
+pub const AUTHORS: [&str; 6] = ["smith", "chen", "garcia", "kumar", "lee", "novak"];
+pub const YEARS: [&str; 6] = ["1995", "1999", "2003", "2008", "2012", "2016"];
+
+/// All words this generator can emit.
+pub const VQA_WORDS: [&str; 29] = [
+    "what", "genre", "who", "wrote", "year", "published", "book", "?",
+    "cookbooks", "medical", "history", "reference", "education",
+    "smith", "chen", "garcia", "kumar", "lee", "novak",
+    "1995", "1999", "2003", "2008", "2012", "2016",
+    "this", "was", "the", "cover",
+];
+
+/// Question types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QType {
+    Genre,
+    Author,
+    Year,
+}
+
+/// A synthetic book cover.
+#[derive(Clone, Debug)]
+pub struct BookCover {
+    /// `[n_patches, patch_dim]` float features.
+    pub patches: Tensor,
+    pub category: usize,
+    pub author: usize,
+    pub year: usize,
+}
+
+/// One VQA example.
+#[derive(Clone, Debug)]
+pub struct VqaExample {
+    pub cover: BookCover,
+    pub qtype: QType,
+    /// e.g. `what genre this book ? answer :` — fits the text window.
+    pub question: String,
+    /// single-word gold answer
+    pub answer: String,
+    pub category: usize,
+}
+
+/// A generated VQA dataset.
+pub struct VqaSet {
+    pub train: Vec<VqaExample>,
+    pub test: Vec<VqaExample>,
+    pub n_patches: usize,
+    pub patch_dim: usize,
+}
+
+impl VqaSet {
+    pub fn generate(
+        seed: u64,
+        n_patches: usize,
+        patch_dim: usize,
+        n_train: usize,
+        n_test_per_category: usize,
+    ) -> Self {
+        assert!(patch_dim >= 8, "attribute signatures need >= 8 dims");
+        let mut rng = Pcg64::new(seed, 31);
+        let train = (0..n_train)
+            .map(|i| Self::example(&mut rng, n_patches, patch_dim, i % 5))
+            .collect();
+        let mut rng_t = Pcg64::new(seed, 32);
+        let mut test = Vec::new();
+        for c in 0..5 {
+            for _ in 0..n_test_per_category {
+                test.push(Self::example(&mut rng_t, n_patches, patch_dim, c));
+            }
+        }
+        VqaSet { train, test, n_patches, patch_dim }
+    }
+
+    fn example(rng: &mut Pcg64, n_patches: usize, patch_dim: usize, category: usize) -> VqaExample {
+        let author = rng.next_below(AUTHORS.len());
+        let year = rng.next_below(YEARS.len());
+        let cover = Self::render(rng, n_patches, patch_dim, category, author, year);
+        let qtype = match rng.next_below(3) {
+            0 => QType::Genre,
+            1 => QType::Author,
+            _ => QType::Year,
+        };
+        let (question, answer) = match qtype {
+            QType::Genre => (
+                "what genre this book ? answer :".to_string(),
+                CATEGORIES[category].to_string(),
+            ),
+            QType::Author => (
+                "who wrote this book ? answer :".to_string(),
+                AUTHORS[author].to_string(),
+            ),
+            QType::Year => (
+                "what year was this published ? answer :".to_string(),
+                YEARS[year].to_string(),
+            ),
+        };
+        VqaExample { cover, qtype, question, answer, category }
+    }
+
+    /// Render attributes into patch features. Signature layout (per patch
+    /// row): dims 0..5 category one-hot ·2, dims 5..11 author one-hot ·2
+    /// (on patches 2,3), dims 11..17 year one-hot ·2 (on patches 4,5);
+    /// remaining patches carry a category-correlated texture. All patches
+    /// get N(0, noise(category)) added.
+    fn render(
+        rng: &mut Pcg64,
+        n_patches: usize,
+        patch_dim: usize,
+        category: usize,
+        author: usize,
+        year: usize,
+    ) -> BookCover {
+        let noise = CATEGORY_NOISE[category];
+        let mut patches = Tensor::zeros(&[n_patches, patch_dim]);
+        for p in 0..n_patches {
+            let row = patches.row_mut(p);
+            match p {
+                0 | 1 => row[category] = 2.0,
+                2 | 3 => {
+                    if 5 + author < patch_dim {
+                        row[5 + author] = 2.0;
+                    }
+                }
+                4 | 5 => {
+                    if 11 + year < patch_dim {
+                        row[11 + year] = 2.0;
+                    }
+                }
+                _ => {
+                    // texture: low-amplitude category-tinted pattern
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = 0.3 * (((j + category * 3) % 5) as f32 - 2.0) / 2.0;
+                    }
+                }
+            }
+            for v in row.iter_mut() {
+                *v += rng.normal() * noise;
+            }
+        }
+        BookCover { patches, category, author, year }
+    }
+
+    /// Candidate answer token ids per question type (the evaluator scores
+    /// exact match over the full vocab, but training reporting uses these).
+    pub fn answer_space(tok: &Tokenizer, qtype: QType) -> Vec<u32> {
+        match qtype {
+            QType::Genre => CATEGORIES.iter().map(|w| tok.id(w)).collect(),
+            QType::Author => AUTHORS.iter().map(|w| tok.id(w)).collect(),
+            QType::Year => YEARS.iter().map(|w| tok.id(w)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Lexicon;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let a = VqaSet::generate(1, 8, 24, 100, 20);
+        let b = VqaSet::generate(1, 8, 24, 100, 20);
+        assert_eq!(a.test.len(), 100);
+        for (x, y) in a.test.iter().zip(b.test.iter()) {
+            assert_eq!(x.answer, y.answer);
+            assert!(x.cover.patches.max_abs_diff(&y.cover.patches) == 0.0);
+        }
+        for c in 0..5 {
+            assert_eq!(a.test.iter().filter(|e| e.category == c).count(), 20);
+        }
+    }
+
+    #[test]
+    fn questions_and_answers_tokenize() {
+        let tok = Lexicon::tokenizer();
+        let s = VqaSet::generate(2, 8, 24, 30, 5);
+        for e in s.train.iter().chain(s.test.iter()) {
+            assert!(tok.covers(&e.question), "{}", e.question);
+            assert!(tok.covers(&e.answer), "{}", e.answer);
+        }
+    }
+
+    #[test]
+    fn signatures_are_recoverable_without_noise_overwhelm() {
+        // The category signature (amplitude 2.0) must dominate the noise
+        // on average — otherwise the task is unlearnable.
+        let s = VqaSet::generate(3, 8, 24, 0, 40);
+        let mut correct = 0;
+        for e in &s.test {
+            let row = e.cover.patches.row(0);
+            let argmax = (0..5)
+                .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                .unwrap();
+            if argmax == e.category {
+                correct += 1;
+            }
+        }
+        assert!(correct > 150, "only {correct}/200 recoverable");
+    }
+
+    #[test]
+    fn noise_ordering_matches_design() {
+        // reference noisier than history (paper's robustness ordering)
+        let hist = CATEGORY_NOISE[2];
+        let refr = CATEGORY_NOISE[3];
+        assert!(refr > hist);
+    }
+
+    #[test]
+    fn answer_space_ids_valid() {
+        let tok = Lexicon::tokenizer();
+        for qt in [QType::Genre, QType::Author, QType::Year] {
+            let ids = VqaSet::answer_space(&tok, qt);
+            assert!(ids.iter().all(|&i| i != super::super::tokenizer::UNK));
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Evaluation harnesses reproducing the paper's three metrics (§4.2):
+//!
+//! * [`perplexity`] — the AutoGPTQ protocol (Eq. 24): batch-level mean
+//!   cross-entropy, averaged across batches, exponentiated;
+//! * [`sentiment_accuracy`] — prompt-format 3-way classification (Eq. 25),
+//!   answer chosen by argmax over the three label tokens at the answer
+//!   position;
+//! * [`vqa_accuracy`] — exact-match VQA (Eq. 26) with per-category
+//!   breakdown, answer = argmax over the *full* vocabulary.
+//!
+//! All harnesses take the model as a logits closure so the fp path
+//! (`lm_forward`), the quantized Rust path (`QuantizedLm::forward`), and
+//! the PJRT-artifact path (`runtime::Engine`) are evaluated by *identical*
+//! code.
+
+use crate::data::sentiment::SentimentSet;
+use crate::data::tokenizer::Tokenizer;
+use crate::data::vqa::{VqaExample, CATEGORIES};
+use crate::model::ops::nll_per_position;
+use crate::model::forward::shift_targets;
+use crate::tensor::Tensor;
+
+/// Logits closure type for text models: `(tokens, batch, seq) → [B·S, V]`.
+pub type LmLogitsFn<'a> = dyn Fn(&[u32], usize, usize) -> Tensor + 'a;
+
+/// Perplexity per the AutoGPTQ protocol (paper Eq. 24): each evaluation
+/// window is one "batch"; PPL = exp(mean over batches of per-batch mean
+/// NLL).
+pub fn perplexity(logits_fn: &LmLogitsFn, windows: &[Vec<u32>]) -> f64 {
+    assert!(!windows.is_empty());
+    let mut batch_losses = Vec::with_capacity(windows.len());
+    for w in windows {
+        let seq = w.len();
+        let logits = logits_fn(w, 1, seq);
+        let targets = shift_targets(w, 1, seq);
+        let nll = nll_per_position(&logits, &targets, -100);
+        let vals: Vec<f64> = nll.into_iter().filter(|v| !v.is_nan()).collect();
+        batch_losses.push(vals.iter().sum::<f64>() / vals.len() as f64);
+    }
+    (batch_losses.iter().sum::<f64>() / batch_losses.len() as f64).exp()
+}
+
+/// Sentiment accuracy (paper Eq. 25). For each example, run the prompt and
+/// compare the logits of the three label tokens at the final position.
+/// Returns accuracy in percent.
+pub fn sentiment_accuracy(
+    logits_fn: &LmLogitsFn,
+    tok: &Tokenizer,
+    examples: &[crate::data::sentiment::SentimentExample],
+    max_len: usize,
+) -> f64 {
+    let label_ids = SentimentSet::label_token_ids(tok);
+    let mut correct = 0usize;
+    for e in examples {
+        let mut ids = tok.encode(&e.prompt());
+        if ids.len() > max_len {
+            // truncate from the left, keeping the answer scaffold
+            ids = ids[ids.len() - max_len..].to_vec();
+        }
+        let seq = ids.len();
+        let logits = logits_fn(&ids, 1, seq);
+        let last = logits.row(seq - 1);
+        let pred = (0..3)
+            .max_by(|&a, &b| {
+                last[label_ids[a] as usize]
+                    .partial_cmp(&last[label_ids[b] as usize])
+                    .unwrap()
+            })
+            .unwrap();
+        if pred == e.label {
+            correct += 1;
+        }
+    }
+    100.0 * correct as f64 / examples.len() as f64
+}
+
+/// Per-category VQA result.
+#[derive(Clone, Debug, Default)]
+pub struct VqaReport {
+    pub overall_pct: f64,
+    /// (category name, accuracy %) in `CATEGORIES` order.
+    pub per_category: Vec<(String, f64)>,
+}
+
+/// VQA logits closure: `(patches, text, batch) → [B·S, V]`.
+pub type VqaLogitsFn<'a> = dyn Fn(&Tensor, &[u32], usize) -> Tensor + 'a;
+
+/// Exact-match VQA accuracy (paper Eq. 26) with the Table 2 per-category
+/// breakdown. The answer is the argmax token over the full vocabulary at
+/// the position following the question.
+pub fn vqa_accuracy(
+    logits_fn: &VqaLogitsFn,
+    tok: &Tokenizer,
+    examples: &[VqaExample],
+    n_patches: usize,
+) -> VqaReport {
+    let mut cat_total = [0usize; 5];
+    let mut cat_correct = [0usize; 5];
+    for e in examples {
+        let q_ids = tok.encode(&e.question);
+        let seq = n_patches + q_ids.len();
+        let logits = logits_fn(&e.cover.patches, &q_ids, 1);
+        let last = logits.row(seq - 1);
+        let pred = (0..last.len())
+            .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+            .unwrap() as u32;
+        cat_total[e.category] += 1;
+        if tok.word(pred) == e.answer {
+            cat_correct[e.category] += 1;
+        }
+    }
+    let total: usize = cat_total.iter().sum();
+    let correct: usize = cat_correct.iter().sum();
+    VqaReport {
+        overall_pct: 100.0 * correct as f64 / total.max(1) as f64,
+        per_category: CATEGORIES
+            .iter()
+            .enumerate()
+            .map(|(c, name)| {
+                (
+                    name.to_string(),
+                    100.0 * cat_correct[c] as f64 / cat_total[c].max(1) as f64,
+                )
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Lexicon;
+    use crate::data::sentiment::LABELS;
+    use crate::data::sentiment::SentimentExample;
+    use crate::data::vqa::VqaSet;
+
+    #[test]
+    fn ppl_of_uniform_model_is_vocab_size() {
+        let v = 50usize;
+        let f = move |_t: &[u32], b: usize, s: usize| Tensor::zeros(&[b * s, v]);
+        let windows = vec![vec![1u32; 16], vec![2u32; 16]];
+        let ppl = perplexity(&f, &windows);
+        assert!((ppl - v as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ppl_of_oracle_model_is_one() {
+        // model that puts all mass on the true next token
+        let windows = vec![(0u32..12).collect::<Vec<u32>>()];
+        let w2 = windows.clone();
+        let f = move |t: &[u32], b: usize, s: usize| {
+            let _ = &w2;
+            let mut l = Tensor::zeros(&[b * s, 16]);
+            for i in 0..s - 1 {
+                let next = t[i + 1] as usize;
+                l.row_mut(i)[next] = 100.0;
+            }
+            l
+        };
+        let ppl = perplexity(&f, &windows);
+        assert!(ppl < 1.001, "ppl={ppl}");
+    }
+
+    #[test]
+    fn sentiment_oracle_scores_100() {
+        let tok = Lexicon::tokenizer();
+        let label_ids = SentimentSet::label_token_ids(&tok);
+        let exs = vec![
+            SentimentExample { text: "i loved this movie".into(), label: 2 },
+            SentimentExample { text: "i hated this movie".into(), label: 0 },
+        ];
+        // oracle peeks at the prompt: if it contains "loved" answer positive
+        let tok2 = tok.clone();
+        let f = move |t: &[u32], b: usize, s: usize| {
+            let mut l = Tensor::zeros(&[b * s, tok2.vocab_size()]);
+            let text = tok2.decode(t);
+            let lab = if text.contains("loved") { 2 } else { 0 };
+            l.row_mut(s - 1)[label_ids[lab] as usize] = 10.0;
+            l
+        };
+        let acc = sentiment_accuracy(&f, &tok, &exs, 48);
+        assert_eq!(acc, 100.0);
+    }
+
+    #[test]
+    fn sentiment_constant_model_scores_one_third_ish() {
+        let tok = Lexicon::tokenizer();
+        let v = tok.vocab_size();
+        let f = move |_t: &[u32], b: usize, s: usize| Tensor::zeros(&[b * s, v]);
+        let s = crate::data::sentiment::SentimentSet::generate(9, 0, 120);
+        let acc = sentiment_accuracy(&f, &tok, &s.test, 48);
+        // constant logits → ties; max_by keeps the last maximum → always
+        // predicts class 2 ("positive"), i.e. the class-2 base rate.
+        let class2 = 100.0 * s.test.iter().filter(|e| e.label == 2).count() as f64
+            / s.test.len() as f64;
+        assert!((acc - class2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vqa_oracle_scores_100_and_reports_categories() {
+        let tok = Lexicon::tokenizer();
+        let set = VqaSet::generate(4, 8, 24, 0, 4);
+        let tok2 = tok.clone();
+        let answers: Vec<u32> = set.test.iter().map(|e| tok.id(&e.answer)).collect();
+        let idx = std::cell::Cell::new(0usize);
+        let f = move |_p: &Tensor, q: &[u32], b: usize| {
+            let s = 8 + q.len();
+            let mut l = Tensor::zeros(&[b * s, tok2.vocab_size()]);
+            let a = answers[idx.get()];
+            idx.set(idx.get() + 1);
+            l.row_mut(s - 1)[a as usize] = 5.0;
+            l
+        };
+        let rep = vqa_accuracy(&f, &tok, &set.test, 8);
+        assert_eq!(rep.overall_pct, 100.0);
+        assert_eq!(rep.per_category.len(), 5);
+        assert!(rep.per_category.iter().all(|(_, a)| *a == 100.0));
+        assert_eq!(rep.per_category[0].0, "cookbooks");
+    }
+
+    #[test]
+    fn labels_constant_matches_paper_order() {
+        assert_eq!(LABELS, ["negative", "neutral", "positive"]);
+    }
+}

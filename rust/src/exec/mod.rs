@@ -1,0 +1,353 @@
+//! Execution substrate: a work-stealing-free but correct thread pool plus
+//! bounded MPMC channels, used by the serving coordinator (request router,
+//! dynamic batcher) in place of tokio, which is unavailable offline.
+//!
+//! The design is deliberately simple: a shared `Mutex<VecDeque>` job queue
+//! with a condvar. On the 1-core CI machine contention is irrelevant; on
+//! larger machines the coordinator's batching amortizes queue traffic.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    idle: Condvar,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (minimum 1).
+    pub fn new(n: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            idle: Condvar::new(),
+        });
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("rpiq-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Submit a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !q.is_empty() || self.shared.in_flight.load(Ordering::SeqCst) > 0 {
+            let (guard, _) = self
+                .shared
+                .idle
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            q = guard;
+        }
+    }
+
+    /// Run a batch of closures and collect results in order. Convenience
+    /// used by the quantization pipeline to fan layer jobs out.
+    pub fn map<T: Send + 'static, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let results: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, job) in jobs.into_iter().enumerate() {
+            let slot = Arc::clone(&results);
+            self.submit(move || {
+                let out = job();
+                slot.lock().unwrap()[i] = Some(out);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("all workers done")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("job completed"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        job();
+        shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+        shared.idle.notify_all();
+    }
+}
+
+/// Bounded MPMC channel with blocking send/recv and timeout recv — the
+/// backpressure primitive of the serving coordinator: when the queue is
+/// full, producers (request ingestion) block, which is exactly the
+/// backpressure behaviour the batcher tests assert.
+pub struct Channel<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    buf: Mutex<ChannelBuf<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct ChannelBuf<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Channel { inner: Arc::clone(&self.inner) }
+    }
+}
+
+/// Error returned when sending on a closed channel.
+#[derive(Debug, PartialEq)]
+pub struct SendError;
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Self {
+        Channel {
+            inner: Arc::new(ChannelInner {
+                buf: Mutex::new(ChannelBuf { items: VecDeque::new(), closed: false }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                cap: cap.max(1),
+            }),
+        }
+    }
+
+    /// Blocking send; returns Err if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut buf = self.inner.buf.lock().unwrap();
+        while buf.items.len() >= self.inner.cap {
+            if buf.closed {
+                return Err(SendError);
+            }
+            buf = self.inner.not_full.wait(buf).unwrap();
+        }
+        if buf.closed {
+            return Err(SendError);
+        }
+        buf.items.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking send attempt. Ok(false) = full.
+    pub fn try_send(&self, item: T) -> Result<bool, SendError> {
+        let mut buf = self.inner.buf.lock().unwrap();
+        if buf.closed {
+            return Err(SendError);
+        }
+        if buf.items.len() >= self.inner.cap {
+            return Ok(false);
+        }
+        buf.items.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(true)
+    }
+
+    /// Blocking receive; None when channel is closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut buf = self.inner.buf.lock().unwrap();
+        loop {
+            if let Some(item) = buf.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if buf.closed {
+                return None;
+            }
+            buf = self.inner.not_empty.wait(buf).unwrap();
+        }
+    }
+
+    /// Receive with deadline; None on timeout or closed-and-empty. Used by
+    /// the dynamic batcher to implement the max-wait batching window.
+    pub fn recv_timeout(&self, dur: Duration) -> Option<T> {
+        let deadline = Instant::now() + dur;
+        let mut buf = self.inner.buf.lock().unwrap();
+        loop {
+            if let Some(item) = buf.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if buf.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _res) = self
+                .inner
+                .not_empty
+                .wait_timeout(buf, deadline - now)
+                .unwrap();
+            buf = guard;
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batch pickup).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut buf = self.inner.buf.lock().unwrap();
+        let n = buf.items.len().min(max);
+        let out: Vec<T> = buf.items.drain(..n).collect();
+        if n > 0 {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.buf.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the channel: senders fail, receivers drain then get None.
+    pub fn close(&self) {
+        let mut buf = self.inner.buf.lock().unwrap();
+        buf.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let jobs: Vec<_> = (0..20).map(|i| move || i * i).collect();
+        let out = pool.map(jobs);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn channel_fifo() {
+        let ch = Channel::bounded(10);
+        for i in 0..5 {
+            ch.send(i).unwrap();
+        }
+        let got: Vec<i32> = (0..5).map(|_| ch.recv().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn channel_backpressure_blocks_then_releases() {
+        let ch: Channel<u32> = Channel::bounded(2);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        assert_eq!(ch.try_send(3), Ok(false)); // full
+        let ch2 = ch.clone();
+        let t = std::thread::spawn(move || ch2.send(3)); // blocks
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(ch.recv(), Some(1));
+        t.join().unwrap().unwrap();
+        assert_eq!(ch.recv(), Some(2));
+        assert_eq!(ch.recv(), Some(3));
+    }
+
+    #[test]
+    fn channel_close_semantics() {
+        let ch: Channel<u32> = Channel::bounded(4);
+        ch.send(7).unwrap();
+        ch.close();
+        assert_eq!(ch.send(8), Err(SendError));
+        assert_eq!(ch.recv(), Some(7)); // drain allowed
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let ch: Channel<u32> = Channel::bounded(1);
+        let t0 = Instant::now();
+        assert_eq!(ch.recv_timeout(Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn drain_up_to_takes_batch() {
+        let ch = Channel::bounded(16);
+        for i in 0..10 {
+            ch.send(i).unwrap();
+        }
+        let batch = ch.drain_up_to(4);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(ch.len(), 6);
+    }
+}

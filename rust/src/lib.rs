@@ -1,0 +1,37 @@
+//! # rpiq — Residual-Projected Multi-Collaboration Closed-Loop and Single Instance Quantization
+//!
+//! A production-grade reproduction of the RPIQ post-training-quantization
+//! framework as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build-time Python): Pallas kernels for the W4A16
+//!   dequant-matmul hot spot, Hessian accumulation, and the stage-2 block
+//!   solve (`python/compile/kernels/`).
+//! * **Layer 2** (build-time Python): JAX transformer forward graphs (fp and
+//!   quantized) lowered once to HLO text (`python/compile/model.py`,
+//!   `python/compile/aot.py` → `artifacts/`).
+//! * **Layer 3** (this crate): the quantization engines (GPTQ stage 1, RPIQ
+//!   stage 2, CMDQ cross-modal policy), the calibration pipeline, the
+//!   training substrate that produces the subject checkpoints, the
+//!   evaluation harnesses that regenerate every paper table/figure, and a
+//!   serving runtime that executes the AOT artifacts via PJRT.
+//!
+//! Python never runs on the request path: once `make artifacts` has been
+//! run, everything here is self-contained.
+
+pub mod tensor;
+pub mod linalg;
+pub mod rng;
+pub mod jsonx;
+pub mod cli;
+pub mod exec;
+pub mod proptest;
+pub mod quant;
+pub mod model;
+pub mod train;
+pub mod vlm;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;

@@ -1,0 +1,328 @@
+//! Dense linear algebra needed by the quantization engines: Cholesky
+//! factorization of SPD matrices, triangular solves, SPD inverses, and the
+//! damping helper from the paper (Eq. 10: `λ = percdamp · mean(diag H)`).
+//!
+//! GPTQ needs the *upper* Cholesky factor of `H⁻¹` for its error-feedback
+//! recursion; RPIQ stage 2 needs per-block inverse curvature
+//! `H_i⁻¹ ≈ (X_iᵀX_i + λI)⁻¹` (Eq. 13). All routines are f64 internally —
+//! the Hessians of real calibration activations are ill-conditioned enough
+//! that f32 factorization loses the tail columns.
+
+use crate::tensor::Tensor;
+
+/// Errors from factorization routines.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LinalgError {
+    /// Matrix was not positive definite at pivot `col` (value given).
+    NotPositiveDefinite { col: usize, pivot: f64 },
+    /// Shape precondition violated.
+    Shape(String),
+}
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite { col, pivot } => {
+                write!(f, "matrix not positive definite at column {col} (pivot {pivot:.3e})")
+            }
+            LinalgError::Shape(s) => write!(f, "shape error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
+
+/// Lower-triangular Cholesky factor `L` with `A = L·Lᵀ`, computed in f64.
+/// `a` must be square symmetric positive definite.
+pub fn cholesky_lower(a: &Tensor) -> Result<Vec<f64>, LinalgError> {
+    let n = square_dim(a)?;
+    let ad = a.data();
+    let mut l = vec![0.0f64; n * n];
+    for j in 0..n {
+        // diagonal
+        let mut s = ad[j * n + j] as f64;
+        for p in 0..j {
+            s -= l[j * n + p] * l[j * n + p];
+        }
+        if s <= 0.0 || !s.is_finite() {
+            return Err(LinalgError::NotPositiveDefinite { col: j, pivot: s });
+        }
+        let d = s.sqrt();
+        l[j * n + j] = d;
+        // column below diagonal
+        for i in j + 1..n {
+            let mut s = ad[i * n + j] as f64;
+            for p in 0..j {
+                s -= l[i * n + p] * l[j * n + p];
+            }
+            l[i * n + j] = s / d;
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L·y = b` (forward substitution) for lower-triangular `L` (n×n, f64
+/// row-major) and one right-hand side.
+pub fn solve_lower(l: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l[i * n + j] * y[j];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    y
+}
+
+/// Solve `Lᵀ·x = y` (back substitution) given lower-triangular `L`.
+pub fn solve_lower_t(l: &[f64], y: &[f64]) -> Vec<f64> {
+    let n = y.len();
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in i + 1..n {
+            s -= l[j * n + i] * x[j];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky: `A⁻¹ = L⁻ᵀ·L⁻¹`. Returns an f32
+/// [`Tensor`]. Used for the per-block curvature inverses of RPIQ stage 2.
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor, LinalgError> {
+    let n = square_dim(a)?;
+    let l = cholesky_lower(a)?;
+    let mut inv = Tensor::zeros(&[n, n]);
+    // Solve A x = e_j column by column.
+    let mut e = vec![0.0f64; n];
+    for j in 0..n {
+        e.fill(0.0);
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for i in 0..n {
+            inv.set(i, j, x[i] as f32);
+        }
+    }
+    Ok(inv)
+}
+
+/// Upper Cholesky factor of `A⁻¹` — the quantity GPTQ's error-feedback
+/// recursion walks. Computed as `chol(A⁻¹)ᵀ` would be, but without forming
+/// `A⁻¹` in f32: we invert in f64 then factor.
+///
+/// Returns row-major f64 upper-triangular `U` with `A⁻¹ = Uᵀ·U`... more
+/// precisely the standard GPTQ `Hinv = Cholesky(H⁻¹, upper)` matrix whose
+/// rows drive the weight-update broadcast.
+pub fn cholesky_inverse_upper(a: &Tensor) -> Result<Vec<f64>, LinalgError> {
+    let n = square_dim(a)?;
+    let l = cholesky_lower(a)?;
+    // A⁻¹ in f64.
+    let mut ainv = vec![0.0f64; n * n];
+    let mut e = vec![0.0f64; n];
+    for j in 0..n {
+        e.fill(0.0);
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for i in 0..n {
+            ainv[i * n + j] = x[i];
+        }
+    }
+    // Upper Cholesky of A⁻¹: A⁻¹ = Uᵀ·U where U is upper triangular.
+    // Factor via the lower factor of the reversed matrix trick is overkill;
+    // we do the direct recurrence U[i][j] defined for i<=j.
+    let mut u = vec![0.0f64; n * n];
+    for i in 0..n {
+        let mut s = ainv[i * n + i];
+        for p in 0..i {
+            s -= u[p * n + i] * u[p * n + i];
+        }
+        if s <= 0.0 || !s.is_finite() {
+            return Err(LinalgError::NotPositiveDefinite { col: i, pivot: s });
+        }
+        let d = s.sqrt();
+        u[i * n + i] = d;
+        for j in i + 1..n {
+            let mut s = ainv[i * n + j];
+            for p in 0..i {
+                s -= u[p * n + i] * u[p * n + j];
+            }
+            u[i * n + j] = s / d;
+        }
+    }
+    Ok(u)
+}
+
+/// Paper Eq. 10: add damping `λI` with `λ = percdamp · mean(diag H)` in
+/// place and return `λ`. If the diagonal mean is zero (degenerate layer, or
+/// all-zero calibration), a tiny absolute floor keeps H factorizable.
+pub fn apply_damping(h: &mut Tensor, percdamp: f32) -> f32 {
+    let n = h.rows();
+    assert_eq!(n, h.cols());
+    let mut mean = 0.0f64;
+    for i in 0..n {
+        mean += h.at(i, i) as f64;
+    }
+    mean /= n as f64;
+    let lambda = (percdamp as f64 * mean).max(1e-8) as f32;
+    for i in 0..n {
+        let v = h.at(i, i) + lambda;
+        h.set(i, i, v);
+    }
+    lambda
+}
+
+/// Guard against dead input channels (all-zero rows of X ⇒ zero diagonal in
+/// H): GPTQ sets `H[i,i] = 1` and zeroes the corresponding weight column.
+/// Returns the indices of dead channels.
+pub fn fix_dead_channels(h: &mut Tensor, w: &mut Tensor) -> Vec<usize> {
+    let n = h.rows();
+    let mut dead = Vec::new();
+    for i in 0..n {
+        if h.at(i, i) == 0.0 {
+            h.set(i, i, 1.0);
+            for r in 0..w.rows() {
+                w.set(r, i, 0.0);
+            }
+            dead.push(i);
+        }
+    }
+    dead
+}
+
+fn square_dim(a: &Tensor) -> Result<usize, LinalgError> {
+    if a.shape().len() != 2 || a.rows() != a.cols() {
+        return Err(LinalgError::Shape(format!("expected square 2-D, got {:?}", a.shape())));
+    }
+    Ok(a.rows())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::{matmul, matmul_at_b};
+
+    /// Random SPD matrix `XᵀX + I`.
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Tensor {
+        let x = Tensor::randn(&[n + 4, n], 1.0, rng);
+        let mut h = matmul_at_b(&x, &x);
+        for i in 0..n {
+            h.set(i, i, h.at(i, i) + 1.0);
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::seeded(31);
+        for n in [1usize, 2, 5, 16] {
+            let a = random_spd(n, &mut rng);
+            let l = cholesky_lower(&a).unwrap();
+            // rebuild L Lᵀ
+            let mut rec = Tensor::zeros(&[n, n]);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0f64;
+                    for p in 0..n {
+                        s += l[i * n + p] * l[j * n + p];
+                    }
+                    rec.set(i, j, s as f32);
+                }
+            }
+            assert!(rec.max_abs_diff(&a) < 1e-2 * (n as f32), "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(matches!(
+            cholesky_lower(&a),
+            Err(LinalgError::NotPositiveDefinite { .. })
+        ));
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Pcg64::seeded(32);
+        for n in [1usize, 3, 8, 20] {
+            let a = random_spd(n, &mut rng);
+            let ainv = spd_inverse(&a).unwrap();
+            let prod = matmul(&a, &ainv);
+            assert!(prod.max_abs_diff(&Tensor::eye(n)) < 1e-2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_inverse_upper_reconstructs_inverse() {
+        let mut rng = Pcg64::seeded(33);
+        let n = 10;
+        let a = random_spd(n, &mut rng);
+        let u = cholesky_inverse_upper(&a).unwrap();
+        // Uᵀ·U should equal A⁻¹
+        let ainv = spd_inverse(&a).unwrap();
+        let mut rec = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for p in 0..n {
+                    s += u[p * n + i] * u[p * n + j];
+                }
+                rec.set(i, j, s as f32);
+            }
+        }
+        assert!(rec.max_abs_diff(&ainv) < 1e-2);
+        // upper triangular
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(u[i * n + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn tri_solves_invert_each_other() {
+        let mut rng = Pcg64::seeded(34);
+        let n = 12;
+        let a = random_spd(n, &mut rng);
+        let l = cholesky_lower(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64) - 3.0).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // check A x = b
+        for i in 0..n {
+            let mut s = 0.0f64;
+            for j in 0..n {
+                s += a.at(i, j) as f64 * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-3, "row {i}: {s} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn damping_shifts_diagonal() {
+        let mut h = Tensor::from_vec(&[2, 2], vec![2.0, 0.5, 0.5, 4.0]);
+        let lambda = apply_damping(&mut h, 0.01);
+        assert!((lambda - 0.03).abs() < 1e-6);
+        assert!((h.at(0, 0) - 2.03).abs() < 1e-6);
+        assert!((h.at(1, 1) - 4.03).abs() < 1e-6);
+        assert_eq!(h.at(0, 1), 0.5);
+    }
+
+    #[test]
+    fn dead_channel_fix() {
+        let mut h = Tensor::from_vec(&[2, 2], vec![0.0, 0.0, 0.0, 3.0]);
+        let mut w = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let dead = fix_dead_channels(&mut h, &mut w);
+        assert_eq!(dead, vec![0]);
+        assert_eq!(h.at(0, 0), 1.0);
+        assert_eq!(w.at(0, 0), 0.0);
+        assert_eq!(w.at(1, 0), 0.0);
+        assert_eq!(w.at(0, 1), 2.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Measurement substrate: a byte-accurate memory ledger and wall-clock
+//! timers.
+//!
+//! The paper's Tables 3 and 4 report *peak GPU memory* and *total
+//! quantization time* for GPTQ vs RPIQ. We have no GPU; instead every
+//! tensor the quantization engines allocate is registered with a
+//! [`MemoryLedger`] scope, which tracks live bytes and the high-water mark.
+//! Because both engines are instrumented identically, the relative overhead
+//! ΔM (Eq. 27) — the quantity the paper actually analyses — is preserved.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Thread-safe allocation ledger with peak tracking.
+#[derive(Clone, Default)]
+pub struct MemoryLedger {
+    inner: Arc<Mutex<LedgerInner>>,
+}
+
+#[derive(Default)]
+struct LedgerInner {
+    live: i64,
+    peak: i64,
+    /// live bytes per named category (weights, hessian, calib, residuals…)
+    by_tag: HashMap<String, i64>,
+    peak_by_tag: HashMap<String, i64>,
+}
+
+impl MemoryLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an allocation of `bytes` under `tag`.
+    pub fn alloc(&self, tag: &str, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.live += bytes as i64;
+        if g.live > g.peak {
+            g.peak = g.live;
+        }
+        let e = g.by_tag.entry(tag.to_string()).or_insert(0);
+        *e += bytes as i64;
+        let cur = *e;
+        let p = g.peak_by_tag.entry(tag.to_string()).or_insert(0);
+        if cur > *p {
+            *p = cur;
+        }
+    }
+
+    /// Record a release of `bytes` under `tag`.
+    pub fn free(&self, tag: &str, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.live -= bytes as i64;
+        *g.by_tag.entry(tag.to_string()).or_insert(0) -= bytes as i64;
+    }
+
+    /// Convenience: account `bytes` for the duration of `f`.
+    pub fn scoped<T>(&self, tag: &str, bytes: usize, f: impl FnOnce() -> T) -> T {
+        self.alloc(tag, bytes);
+        let out = f();
+        self.free(tag, bytes);
+        out
+    }
+
+    pub fn live_bytes(&self) -> i64 {
+        self.inner.lock().unwrap().live
+    }
+
+    pub fn peak_bytes(&self) -> i64 {
+        self.inner.lock().unwrap().peak
+    }
+
+    pub fn peak_gib(&self) -> f64 {
+        self.peak_bytes() as f64 / (1u64 << 30) as f64
+    }
+
+    pub fn peak_mib(&self) -> f64 {
+        self.peak_bytes() as f64 / (1u64 << 20) as f64
+    }
+
+    /// Peak bytes attributed to one tag.
+    pub fn peak_for(&self, tag: &str) -> i64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .peak_by_tag
+            .get(tag)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Snapshot of per-tag peaks, sorted descending.
+    pub fn breakdown(&self) -> Vec<(String, i64)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<_> = g.peak_by_tag.iter().map(|(k, &b)| (k.clone(), b)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+
+    /// Reset everything (between experiment arms).
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        *g = LedgerInner::default();
+    }
+}
+
+/// Simple named wall-clock stopwatch collection.
+#[derive(Clone, Default)]
+pub struct Timers {
+    inner: Arc<Mutex<HashMap<String, f64>>>,
+}
+
+impl Timers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and accumulate under `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        *self.inner.lock().unwrap().entry(name.to_string()).or_insert(0.0) += dt;
+        out
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&self, name: &str, secs: f64) {
+        *self.inner.lock().unwrap().entry(name.to_string()).or_insert(0.0) += secs;
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.inner.lock().unwrap().values().sum()
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<_> = g.iter().map(|(k, &s)| (k.clone(), s)).collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+}
+
+/// Streaming percentile/latency collector for the serving experiments.
+#[derive(Clone, Default)]
+pub struct LatencyStats {
+    samples: Arc<Mutex<Vec<f64>>>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, secs: f64) {
+        self.samples.lock().unwrap().push(secs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.iter().sum::<f64>() / s.len() as f64 * 1e3
+    }
+
+    /// p in [0,100].
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.sort_by(f64::total_cmp);
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx] * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_tracks_peak_not_final() {
+        let led = MemoryLedger::new();
+        led.alloc("a", 100);
+        led.alloc("b", 50);
+        led.free("a", 100);
+        led.alloc("a", 20);
+        assert_eq!(led.live_bytes(), 70);
+        assert_eq!(led.peak_bytes(), 150);
+    }
+
+    #[test]
+    fn scoped_frees() {
+        let led = MemoryLedger::new();
+        let out = led.scoped("tmp", 1000, || {
+            assert_eq!(led.live_bytes(), 1000);
+            42
+        });
+        assert_eq!(out, 42);
+        assert_eq!(led.live_bytes(), 0);
+        assert_eq!(led.peak_bytes(), 1000);
+    }
+
+    #[test]
+    fn per_tag_peaks() {
+        let led = MemoryLedger::new();
+        led.alloc("hessian", 10);
+        led.alloc("hessian", 30);
+        led.free("hessian", 40);
+        led.alloc("weights", 5);
+        assert_eq!(led.peak_for("hessian"), 40);
+        assert_eq!(led.peak_for("weights"), 5);
+        assert_eq!(led.breakdown()[0].0, "hessian");
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let t = Timers::new();
+        t.add("x", 0.5);
+        t.add("x", 0.25);
+        t.add("y", 1.0);
+        assert!((t.get("x") - 0.75).abs() < 1e-9);
+        assert!((t.total() - 1.75).abs() < 1e-9);
+        assert_eq!(t.snapshot()[0].0, "y");
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let l = LatencyStats::new();
+        for i in 1..=100 {
+            l.record(i as f64 / 1000.0);
+        }
+        assert!((l.percentile_ms(50.0) - 50.0).abs() <= 1.0);
+        assert!((l.percentile_ms(95.0) - 95.0).abs() <= 1.0);
+        assert!((l.mean_ms() - 50.5).abs() < 0.5);
+    }
+}

@@ -1,0 +1,170 @@
+//! Model configuration and the experiment presets.
+
+/// Feed-forward nonlinearity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// tanh-approximation GELU (LLaMA/Qwen-style MLPs use silu/gelu; we use
+    /// gelu for the "modern" presets).
+    Gelu,
+    /// ReLU (OPT-style).
+    Relu,
+}
+
+/// Decoder-only transformer configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Preset name, e.g. `sim-opt-6.7b`.
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    /// Maximum (and training) sequence length.
+    pub seq_len: usize,
+    pub activation: Activation,
+    /// Tie the LM head to the token embedding.
+    pub tied_head: bool,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        let emb = self.vocab * self.d_model + self.seq_len * self.d_model;
+        let per_layer = 4 * self.d_model * self.d_model      // q,k,v,o
+            + 2 * self.d_model * self.d_ff                   // up, down
+            + 4 * self.d_model;                              // 2×LN (γ, β)
+        let head = if self.tied_head { 0 } else { self.vocab * self.d_model };
+        emb + self.n_layers * per_layer + 2 * self.d_model + head
+    }
+
+    /// fp32 byte footprint of the weights (Table 1's "Mem" baseline).
+    pub fn fp32_bytes(&self) -> usize {
+        self.n_params() * 4
+    }
+
+    /// The four language-model presets standing in for the paper's
+    /// OPT-6.7B / OPT-13B / Qwen3-8B / LLaMA-3.1-8B-Instruct. Shapes are
+    /// scaled ~3 orders of magnitude down but preserve the *relative*
+    /// diversity: OPT-style ReLU + untied head, a deeper "13b", and two
+    /// GELU tied-head "modern" models with different ff ratios.
+    pub fn lm_presets(vocab: usize) -> Vec<ModelConfig> {
+        vec![
+            ModelConfig {
+                name: "sim-opt-6.7b".into(),
+                vocab,
+                d_model: 128,
+                n_layers: 4,
+                n_heads: 4,
+                d_ff: 512,
+                seq_len: 48,
+                activation: Activation::Relu,
+                tied_head: false,
+            },
+            ModelConfig {
+                name: "sim-opt-13b".into(),
+                vocab,
+                d_model: 160,
+                n_layers: 6,
+                n_heads: 4,
+                d_ff: 640,
+                seq_len: 48,
+                activation: Activation::Relu,
+                tied_head: false,
+            },
+            ModelConfig {
+                name: "sim-qwen3-8b".into(),
+                vocab,
+                d_model: 144,
+                n_layers: 5,
+                n_heads: 4,
+                d_ff: 576,
+                seq_len: 48,
+                activation: Activation::Gelu,
+                tied_head: true,
+            },
+            ModelConfig {
+                name: "sim-llama-3.1-8b-instruct".into(),
+                vocab,
+                d_model: 144,
+                n_layers: 5,
+                n_heads: 6,
+                d_ff: 432,
+                seq_len: 48,
+                activation: Activation::Gelu,
+                tied_head: true,
+            },
+        ]
+    }
+
+    /// Preset lookup by name.
+    pub fn preset(name: &str, vocab: usize) -> Option<ModelConfig> {
+        Self::lm_presets(vocab).into_iter().find(|c| c.name == name)
+    }
+
+    /// A minimal config for unit tests.
+    pub fn test_tiny(vocab: usize) -> ModelConfig {
+        ModelConfig {
+            name: "test-tiny".into(),
+            vocab,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            activation: Activation::Gelu,
+            tied_head: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_distinct() {
+        let ps = ModelConfig::lm_presets(512);
+        assert_eq!(ps.len(), 4);
+        for i in 0..ps.len() {
+            for j in i + 1..ps.len() {
+                assert_ne!(ps[i].name, ps[j].name);
+                assert!(
+                    ps[i].d_model != ps[j].d_model
+                        || ps[i].n_layers != ps[j].n_layers
+                        || ps[i].n_heads != ps[j].n_heads
+                        || ps[i].d_ff != ps[j].d_ff
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let c = ModelConfig::test_tiny(64);
+        // emb 64*16 + pos 8*16 + 2 layers*(4*256 + 2*16*32 + 64) + ln 32
+        let expect = 64 * 16 + 8 * 16 + 2 * (4 * 256 + 2 * 16 * 32 + 64) + 32;
+        assert_eq!(c.n_params(), expect);
+        assert_eq!(c.fp32_bytes(), expect * 4);
+    }
+
+    #[test]
+    fn opt13_is_largest() {
+        let ps = ModelConfig::lm_presets(512);
+        let p13 = ps.iter().find(|p| p.name == "sim-opt-13b").unwrap();
+        for p in &ps {
+            assert!(p13.n_params() >= p.n_params(), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn heads_divide_model_dim() {
+        for p in ModelConfig::lm_presets(300) {
+            assert_eq!(p.d_model % p.n_heads, 0, "{}", p.name);
+        }
+    }
+}

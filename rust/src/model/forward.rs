@@ -1,0 +1,313 @@
+//! Full-precision LM forward pass.
+//!
+//! Two call styles:
+//!
+//! * [`lm_forward`] — inference + optional [`ActivationTap`] that captures
+//!   the *input* activations of every linear layer. The quantization
+//!   pipeline uses the tap to accumulate per-layer Hessians (`XᵀX`) and to
+//!   retain the last batch for stage 2, exactly as the paper's calibration
+//!   stage does with forward hooks.
+//! * [`lm_forward_training`] — same math but returns the [`FwdRecord`] of
+//!   every intermediate needed by the manual backward in `crate::train`.
+
+use super::ops::*;
+use super::weights::LmWeights;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Captures the input activations of named linear layers during a forward
+/// pass (the calibration hook).
+#[derive(Default)]
+pub struct ActivationTap {
+    /// layer name → captured `[N, in_features]` input.
+    pub inputs: HashMap<String, Tensor>,
+    /// If non-empty, only these layers are captured.
+    pub filter: Option<Vec<String>>,
+}
+
+impl ActivationTap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn only(names: Vec<String>) -> Self {
+        ActivationTap { inputs: HashMap::new(), filter: Some(names) }
+    }
+
+    /// Capture (if the filter allows) the input activation of a layer.
+    /// Public because the VLM forward in `crate::vlm` reuses the tap.
+    pub fn grab_pub(&mut self, name: &str, x: &Tensor) {
+        self.grab(name, x)
+    }
+
+    fn grab(&mut self, name: &str, x: &Tensor) {
+        let wanted = match &self.filter {
+            Some(f) => f.iter().any(|n| n == name),
+            None => true,
+        };
+        if wanted {
+            self.inputs.insert(name.to_string(), x.clone());
+        }
+    }
+}
+
+/// Saved intermediates for one layer (training).
+pub struct LayerRecord {
+    pub x_in: Tensor,
+    pub ln1_out: Tensor,
+    pub ln1_mean: Vec<f32>,
+    pub ln1_rstd: Vec<f32>,
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+    pub probs: Vec<Tensor>,
+    pub ctx: Tensor,
+    pub x_mid: Tensor,
+    pub ln2_out: Tensor,
+    pub ln2_mean: Vec<f32>,
+    pub ln2_rstd: Vec<f32>,
+    pub up_pre: Tensor,
+    pub up_act: Tensor,
+}
+
+/// Full forward record (training).
+pub struct FwdRecord {
+    pub batch: usize,
+    pub seq: usize,
+    pub emb: Tensor,
+    pub layers: Vec<LayerRecord>,
+    pub x_final: Tensor,
+    pub lnf_out: Tensor,
+    pub lnf_mean: Vec<f32>,
+    pub lnf_rstd: Vec<f32>,
+    pub logits: Tensor,
+}
+
+/// Embed tokens: `[B·S, d]` from ids `[B·S]` (row-major batch-major).
+pub fn embed(w: &LmWeights, tokens: &[u32], batch: usize, seq: usize) -> Tensor {
+    let d = w.config.d_model;
+    assert_eq!(tokens.len(), batch * seq);
+    assert!(
+        seq <= w.config.seq_len,
+        "sequence length {seq} exceeds model context {}",
+        w.config.seq_len
+    );
+    let mut x = Tensor::zeros(&[batch * seq, d]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let pos = i % seq;
+        let te = w.tok_emb.row(tok as usize);
+        let pe = w.pos_emb.row(pos);
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = te[j] + pe[j];
+        }
+    }
+    x
+}
+
+/// Inference forward: tokens → logits `[B·S, vocab]`.
+///
+/// `tap` (optional) captures linear-layer inputs for calibration.
+pub fn lm_forward(
+    w: &LmWeights,
+    tokens: &[u32],
+    batch: usize,
+    seq: usize,
+    mut tap: Option<&mut ActivationTap>,
+) -> Tensor {
+    let cfg = &w.config;
+    let mut x = embed(w, tokens, batch, seq);
+    for (li, l) in w.layers.iter().enumerate() {
+        let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab(&format!("lm.layer{li}.attn.q"), &ln1);
+            t.grab(&format!("lm.layer{li}.attn.k"), &ln1);
+            t.grab(&format!("lm.layer{li}.attn.v"), &ln1);
+        }
+        let q = linear_fwd(&ln1, &l.wq);
+        let k = linear_fwd(&ln1, &l.wk);
+        let v = linear_fwd(&ln1, &l.wv);
+        let (ctx, _) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab(&format!("lm.layer{li}.attn.out"), &ctx);
+        }
+        let attn_out = linear_fwd(&ctx, &l.wo);
+        x.add_assign(&attn_out);
+
+        let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab(&format!("lm.layer{li}.mlp.up"), &ln2);
+        }
+        let up = act_fwd(&linear_fwd(&ln2, &l.w_up), cfg.activation);
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab(&format!("lm.layer{li}.mlp.down"), &up);
+        }
+        let down = linear_fwd(&up, &l.w_down);
+        x.add_assign(&down);
+    }
+    let (lnf, _, _) = layernorm_fwd(&x, &w.lnf_g, &w.lnf_b);
+    if let Some(t) = tap.as_deref_mut() {
+        if w.head.is_some() {
+            t.grab("lm.head", &lnf);
+        }
+    }
+    linear_fwd(&lnf, w.head_matrix())
+}
+
+/// Training forward: returns logits and all intermediates.
+pub fn lm_forward_training(w: &LmWeights, tokens: &[u32], batch: usize, seq: usize) -> FwdRecord {
+    let emb = embed(w, tokens, batch, seq);
+    lm_body_forward_training(w, emb, batch, seq)
+}
+
+/// Training forward over pre-assembled input embeddings — the entry the
+/// VLM trainer uses (its sequence is `[image tokens ; text]`, so token
+/// embedding happens upstream).
+pub fn lm_body_forward_training(
+    w: &LmWeights,
+    emb: Tensor,
+    batch: usize,
+    seq: usize,
+) -> FwdRecord {
+    let cfg = &w.config;
+    let mut x = emb.clone();
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for l in &w.layers {
+        let x_in = x.clone();
+        let (ln1_out, ln1_mean, ln1_rstd) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
+        let q = linear_fwd(&ln1_out, &l.wq);
+        let k = linear_fwd(&ln1_out, &l.wk);
+        let v = linear_fwd(&ln1_out, &l.wv);
+        let (ctx, probs) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
+        let attn_out = linear_fwd(&ctx, &l.wo);
+        x.add_assign(&attn_out);
+        let x_mid = x.clone();
+        let (ln2_out, ln2_mean, ln2_rstd) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
+        let up_pre = linear_fwd(&ln2_out, &l.w_up);
+        let up_act = act_fwd(&up_pre, cfg.activation);
+        let down = linear_fwd(&up_act, &l.w_down);
+        x.add_assign(&down);
+        layers.push(LayerRecord {
+            x_in,
+            ln1_out,
+            ln1_mean,
+            ln1_rstd,
+            q,
+            k,
+            v,
+            probs,
+            ctx,
+            x_mid,
+            ln2_out,
+            ln2_mean,
+            ln2_rstd,
+            up_pre,
+            up_act,
+        });
+    }
+    let x_final = x.clone();
+    let (lnf_out, lnf_mean, lnf_rstd) = layernorm_fwd(&x, &w.lnf_g, &w.lnf_b);
+    let logits = linear_fwd(&lnf_out, w.head_matrix());
+    FwdRecord { batch, seq, emb, layers, x_final, lnf_out, lnf_mean, lnf_rstd, logits }
+}
+
+/// Mean next-token NLL of a token batch (labels are `tokens` shifted by
+/// one inside each sequence; the last position of each sequence is
+/// ignored). This is the training objective and the PPL building block.
+pub fn lm_loss(logits: &Tensor, tokens: &[u32], batch: usize, seq: usize) -> (f64, Tensor) {
+    let targets = shift_targets(tokens, batch, seq);
+    cross_entropy(logits, &targets, -100)
+}
+
+/// Next-token targets with `-100` at sequence ends.
+pub fn shift_targets(tokens: &[u32], batch: usize, seq: usize) -> Vec<i64> {
+    let mut targets = vec![-100i64; batch * seq];
+    for b in 0..batch {
+        for s in 0..seq - 1 {
+            targets[b * seq + s] = tokens[b * seq + s + 1] as i64;
+        }
+    }
+    targets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::rng::Pcg64;
+
+    fn tiny() -> (LmWeights, Vec<u32>, usize, usize) {
+        let cfg = ModelConfig::test_tiny(32);
+        let mut rng = Pcg64::seeded(201);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let (batch, seq) = (2usize, 8usize);
+        let tokens: Vec<u32> = (0..batch * seq).map(|_| rng.next_below(32) as u32).collect();
+        (w, tokens, batch, seq)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let (w, tokens, b, s) = tiny();
+        let logits = lm_forward(&w, &tokens, b, s, None);
+        assert_eq!(logits.shape(), &[b * s, 32]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn training_forward_matches_inference_forward() {
+        let (w, tokens, b, s) = tiny();
+        let l1 = lm_forward(&w, &tokens, b, s, None);
+        let rec = lm_forward_training(&w, &tokens, b, s);
+        assert!(l1.max_abs_diff(&rec.logits) < 1e-5);
+    }
+
+    #[test]
+    fn tap_captures_expected_layers() {
+        let (w, tokens, b, s) = tiny();
+        let mut tap = ActivationTap::new();
+        let _ = lm_forward(&w, &tokens, b, s, Some(&mut tap));
+        let names: Vec<&String> = tap.inputs.keys().collect();
+        assert_eq!(names.len(), 12); // 2 layers × 6 linears, tied head
+        assert!(tap.inputs.contains_key("lm.layer0.attn.q"));
+        assert!(tap.inputs.contains_key("lm.layer1.mlp.down"));
+        // captured shapes: [B·S, in_features]
+        assert_eq!(tap.inputs["lm.layer0.attn.q"].shape(), &[b * s, 16]);
+        assert_eq!(tap.inputs["lm.layer1.mlp.down"].shape(), &[b * s, 32]);
+    }
+
+    #[test]
+    fn tap_filter_restricts() {
+        let (w, tokens, b, s) = tiny();
+        let mut tap = ActivationTap::only(vec!["lm.layer0.mlp.up".into()]);
+        let _ = lm_forward(&w, &tokens, b, s, Some(&mut tap));
+        assert_eq!(tap.inputs.len(), 1);
+    }
+
+    #[test]
+    fn causal_prefix_invariance() {
+        // Logits at position p depend only on tokens ≤ p.
+        let (w, mut tokens, b, s) = tiny();
+        let l1 = lm_forward(&w, &tokens, b, s, None);
+        tokens[s - 1] = (tokens[s - 1] + 1) % 32; // change last token of seq 0
+        let l2 = lm_forward(&w, &tokens, b, s, None);
+        for p in 0..s - 1 {
+            assert_eq!(l1.row(p), l2.row(p), "pos {p}");
+        }
+        assert_ne!(l1.row(s - 1), l2.row(s - 1));
+    }
+
+    #[test]
+    fn loss_reasonable_at_init() {
+        let (w, tokens, b, s) = tiny();
+        let logits = lm_forward(&w, &tokens, b, s, None);
+        let (loss, _) = lm_loss(&logits, &tokens, b, s);
+        // near-uniform at init: loss ≈ ln(32)
+        assert!((loss - (32f64).ln()).abs() < 0.5, "loss={loss}");
+    }
+
+    #[test]
+    fn shift_targets_ignores_seq_ends() {
+        let t = shift_targets(&[1, 2, 3, 4, 5, 6], 2, 3);
+        assert_eq!(t, vec![2, 3, -100, 5, 6, -100]);
+    }
+}

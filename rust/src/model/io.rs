@@ -1,0 +1,209 @@
+//! Checkpoint format: a tiny self-describing binary container.
+//!
+//! Layout: magic `RPIQCKPT`, u32 version, u32 json-length, config JSON,
+//! then for each tensor: u32 name-length, name, u32 ndim, dims (u64 each),
+//! f32 LE payload. Everything little-endian. No external deps, stable
+//! across runs, and diff-friendly enough via `rpiq inspect`.
+
+use super::config::{Activation, ModelConfig};
+use super::weights::LmWeights;
+use crate::jsonx::Json;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"RPIQCKPT";
+const VERSION: u32 = 1;
+
+fn config_to_json(c: &ModelConfig) -> Json {
+    Json::obj()
+        .with("name", Json::Str(c.name.clone()))
+        .with("vocab", Json::Num(c.vocab as f64))
+        .with("d_model", Json::Num(c.d_model as f64))
+        .with("n_layers", Json::Num(c.n_layers as f64))
+        .with("n_heads", Json::Num(c.n_heads as f64))
+        .with("d_ff", Json::Num(c.d_ff as f64))
+        .with("seq_len", Json::Num(c.seq_len as f64))
+        .with(
+            "activation",
+            Json::Str(match c.activation {
+                Activation::Gelu => "gelu".into(),
+                Activation::Relu => "relu".into(),
+            }),
+        )
+        .with("tied_head", Json::Bool(c.tied_head))
+}
+
+fn config_from_json(j: &Json) -> Result<ModelConfig> {
+    let get = |k: &str| -> Result<&Json> {
+        j.get(k).with_context(|| format!("config missing '{k}'"))
+    };
+    Ok(ModelConfig {
+        name: get("name")?.as_str().context("name")?.to_string(),
+        vocab: get("vocab")?.as_usize().context("vocab")?,
+        d_model: get("d_model")?.as_usize().context("d_model")?,
+        n_layers: get("n_layers")?.as_usize().context("n_layers")?,
+        n_heads: get("n_heads")?.as_usize().context("n_heads")?,
+        d_ff: get("d_ff")?.as_usize().context("d_ff")?,
+        seq_len: get("seq_len")?.as_usize().context("seq_len")?,
+        activation: match get("activation")?.as_str() {
+            Some("gelu") => Activation::Gelu,
+            Some("relu") => Activation::Relu,
+            other => bail!("unknown activation {other:?}"),
+        },
+        tied_head: get("tied_head")?.as_bool().context("tied_head")?,
+    })
+}
+
+/// Generic container writer shared by LM and VLM checkpoints.
+pub fn write_container(
+    path: &Path,
+    magic: &[u8; 8],
+    config_json: &str,
+    tensors: &[(String, &Tensor)],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(magic)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(config_json.len() as u32).to_le_bytes())?;
+    f.write_all(config_json.as_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Generic container reader: returns the config JSON and the raw tensors.
+pub fn read_container(
+    path: &Path,
+    magic: &[u8; 8],
+) -> Result<(Json, Vec<(String, Vec<usize>, Vec<f32>)>)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut got = [0u8; 8];
+    f.read_exact(&mut got)?;
+    if &got != magic {
+        bail!("{} is not the expected rpiq container", path.display());
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let cfg_len = read_u32(&mut f)? as usize;
+    let mut cfg_buf = vec![0u8; cfg_len];
+    f.read_exact(&mut cfg_buf)?;
+    let cfg = Json::parse(std::str::from_utf8(&cfg_buf)?)?;
+    let n_tensors = read_u32(&mut f)? as usize;
+    let mut tensors = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name_buf = vec![0u8; name_len];
+        f.read_exact(&mut name_buf)?;
+        let name = String::from_utf8(name_buf)?;
+        let ndim = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        tensors.push((name, shape, data));
+    }
+    Ok((cfg, tensors))
+}
+
+/// Save a checkpoint.
+pub fn save_lm(w: &LmWeights, path: &Path) -> Result<()> {
+    let cfg = config_to_json(&w.config).dump();
+    let tensors: Vec<(String, &Tensor)> = w.named_tensors();
+    write_container(path, MAGIC, &cfg, &tensors)
+}
+
+/// Load a checkpoint.
+pub fn load_lm(path: &Path) -> Result<LmWeights> {
+    let (cfg_json, tensors) = read_container(path, MAGIC)?;
+    let cfg = config_from_json(&cfg_json)?;
+    // Start from a zero-init model of the right shape, then fill by name.
+    let mut rng = crate::rng::Pcg64::seeded(0);
+    let mut w = LmWeights::init(&cfg, &mut rng);
+    for (name, shape, data) in tensors {
+        let dst = w
+            .named_tensor_mut(&name)
+            .with_context(|| format!("unknown tensor '{name}' in checkpoint"))?;
+        if dst.shape() != shape.as_slice() {
+            bail!("tensor '{name}' shape {shape:?} != expected {:?}", dst.shape());
+        }
+        dst.data_mut().copy_from_slice(&data);
+    }
+    Ok(w)
+}
+
+/// Expose the LM config JSON codec for the VLM container.
+pub fn lm_config_to_json(c: &ModelConfig) -> Json {
+    config_to_json(c)
+}
+
+/// Parse an LM config from JSON (VLM container).
+pub fn lm_config_from_json(j: &Json) -> Result<ModelConfig> {
+    config_from_json(j)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::test_tiny(40);
+        let mut rng = Pcg64::seeded(401);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("rpiq_io_test");
+        let path = dir.join("tiny.ckpt");
+        save_lm(&w, &path).unwrap();
+        let w2 = load_lm(&path).unwrap();
+        assert_eq!(w2.config, w.config);
+        for ((n1, t1), (n2, t2)) in w.named_tensors().iter().zip(w2.named_tensors().iter()) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1.data(), t2.data(), "{n1}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("rpiq_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load_lm(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,21 @@
+//! The subject models: a decoder-only transformer LM implemented from
+//! scratch (forward, quantized forward, and — via [`crate::train`] —
+//! manual-gradient training).
+//!
+//! The paper quantizes OPT/Qwen/LLaMA checkpoints; those cannot be
+//! downloaded here, so we *train our own* small checkpoints on synthetic
+//! corpora (DESIGN.md §5 substitution ledger). The four LM presets differ
+//! in depth/width/ff-ratio/activation so the "diverse architectures" axis
+//! of Table 1 is preserved.
+
+pub mod config;
+pub mod forward;
+pub mod io;
+pub mod ops;
+pub mod quantized;
+pub mod weights;
+
+pub use config::{Activation, ModelConfig};
+pub use forward::{lm_forward, lm_loss, ActivationTap, FwdRecord};
+pub use quantized::QuantizedLm;
+pub use weights::LmWeights;

@@ -1,0 +1,507 @@
+//! Differentiable primitive ops: forward + manual backward pairs.
+//!
+//! The trainer (`crate::train`) composes these; every backward here is
+//! finite-difference-checked in the test module, which is what makes the
+//! hand-written transformer backprop trustworthy.
+//!
+//! Shapes follow the flattened convention: token activations are
+//! `[N, d] = [batch·seq, d]`; attention reshapes internally per (batch,
+//! head).
+
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Tensor};
+
+/// `y = x·Wᵀ` — linear layer forward (`W: [out, in]`).
+pub fn linear_fwd(x: &Tensor, w: &Tensor) -> Tensor {
+    matmul_a_bt(x, w)
+}
+
+/// Backward of [`linear_fwd`]: given `dy`, returns `(dx, dw)` with
+/// `dx = dy·W`, `dw = dyᵀ·x`.
+pub fn linear_bwd(x: &Tensor, w: &Tensor, dy: &Tensor) -> (Tensor, Tensor) {
+    let dx = matmul(dy, w);
+    let dw = matmul_at_b(dy, x);
+    (dx, dw)
+}
+
+/// LayerNorm forward over the last axis. Returns `(y, mean, rstd)` — the
+/// saved statistics feed the backward.
+pub fn layernorm_fwd(x: &Tensor, gamma: &Tensor, beta: &Tensor) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (n, d) = (x.rows(), x.cols());
+    let g = gamma.data();
+    let b = beta.data();
+    let mut y = Tensor::zeros(&[n, d]);
+    let mut means = vec![0.0f32; n];
+    let mut rstds = vec![0.0f32; n];
+    for i in 0..n {
+        let row = x.row(i);
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let rstd = 1.0 / (var + 1e-5).sqrt();
+        means[i] = mean;
+        rstds[i] = rstd;
+        let out = y.row_mut(i);
+        for j in 0..d {
+            out[j] = (row[j] - mean) * rstd * g[j] + b[j];
+        }
+    }
+    (y, means, rstds)
+}
+
+/// Backward of [`layernorm_fwd`]: returns `(dx, dgamma, dbeta)`.
+pub fn layernorm_bwd(
+    x: &Tensor,
+    gamma: &Tensor,
+    means: &[f32],
+    rstds: &[f32],
+    dy: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (n, d) = (x.rows(), x.cols());
+    let g = gamma.data();
+    let mut dx = Tensor::zeros(&[n, d]);
+    let mut dgamma = Tensor::zeros(&[d]);
+    let mut dbeta = Tensor::zeros(&[d]);
+    for i in 0..n {
+        let xrow = x.row(i);
+        let dyrow = dy.row(i);
+        let (mean, rstd) = (means[i], rstds[i]);
+        // xhat_j = (x_j - mean)·rstd ; dy_xhat_j = dy_j·g_j
+        // dx = rstd·(dy_xhat − mean(dy_xhat) − xhat·mean(dy_xhat ⊙ xhat))
+        let mut sum_dyx = 0.0f32;
+        let mut sum_dyx_xhat = 0.0f32;
+        for j in 0..d {
+            let xhat = (xrow[j] - mean) * rstd;
+            let dyx = dyrow[j] * g[j];
+            sum_dyx += dyx;
+            sum_dyx_xhat += dyx * xhat;
+        }
+        let inv_d = 1.0 / d as f32;
+        let dxrow = dx.row_mut(i);
+        for j in 0..d {
+            let xhat = (xrow[j] - mean) * rstd;
+            let dyx = dyrow[j] * g[j];
+            dxrow[j] = rstd * (dyx - inv_d * sum_dyx - xhat * inv_d * sum_dyx_xhat);
+        }
+        let dg = dgamma.data_mut();
+        let db = dbeta.data_mut();
+        for j in 0..d {
+            let xhat = (xrow[j] - mean) * rstd;
+            dg[j] += dyrow[j] * xhat;
+            db[j] += dyrow[j];
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+/// tanh-approximation GELU.
+#[inline]
+pub fn gelu(v: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/π)
+    0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh())
+}
+
+/// d gelu(v) / dv.
+#[inline]
+pub fn gelu_grad(v: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    let u = C * (v + 0.044715 * v * v * v);
+    let t = u.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * v * sech2 * C * (1.0 + 3.0 * 0.044715 * v * v)
+}
+
+/// Elementwise activation forward.
+pub fn act_fwd(x: &Tensor, act: super::Activation) -> Tensor {
+    let mut y = x.clone();
+    match act {
+        super::Activation::Gelu => {
+            for v in y.data_mut() {
+                *v = gelu(*v);
+            }
+        }
+        super::Activation::Relu => {
+            for v in y.data_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    }
+    y
+}
+
+/// Elementwise activation backward: `dx = dy ⊙ act'(x)`.
+pub fn act_bwd(x: &Tensor, dy: &Tensor, act: super::Activation) -> Tensor {
+    let mut dx = dy.clone();
+    match act {
+        super::Activation::Gelu => {
+            for (d, &v) in dx.data_mut().iter_mut().zip(x.data()) {
+                *d *= gelu_grad(v);
+            }
+        }
+        super::Activation::Relu => {
+            for (d, &v) in dx.data_mut().iter_mut().zip(x.data()) {
+                if v <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Causal multi-head self-attention forward over `[B·S, d]` activations.
+///
+/// Returns `(ctx, probs)`: the attention output (pre-`W_o`) and the
+/// softmax probabilities `[B·H, S, S]` saved for backward.
+pub fn attention_fwd(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    batch: usize,
+    seq: usize,
+    n_heads: usize,
+) -> (Tensor, Vec<Tensor>) {
+    let d = q.cols();
+    let dh = d / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = Tensor::zeros(&[batch * seq, d]);
+    let mut probs = Vec::with_capacity(batch * n_heads);
+    for b in 0..batch {
+        for h in 0..n_heads {
+            let off = h * dh;
+            // scores[s, t] = q_s · k_t · scale  (t ≤ s)
+            let mut p = Tensor::zeros(&[seq, seq]);
+            for s in 0..seq {
+                let qrow = &q.row(b * seq + s)[off..off + dh];
+                let prow = p.row_mut(s);
+                let mut maxv = f32::NEG_INFINITY;
+                for t in 0..=s {
+                    let krow = &k.row(b * seq + t)[off..off + dh];
+                    let sc = crate::tensor::dot(qrow, krow) * scale;
+                    prow[t] = sc;
+                    if sc > maxv {
+                        maxv = sc;
+                    }
+                }
+                let mut z = 0.0f32;
+                for t in 0..=s {
+                    let e = (prow[t] - maxv).exp();
+                    prow[t] = e;
+                    z += e;
+                }
+                let inv = 1.0 / z;
+                for t in 0..=s {
+                    prow[t] *= inv;
+                }
+                // strictly future stays 0 (causal mask)
+            }
+            // ctx_s = Σ_t p[s,t]·v_t
+            for s in 0..seq {
+                let prow = p.row(s);
+                let crow = &mut ctx.row_mut(b * seq + s)[off..off + dh];
+                for t in 0..=s {
+                    let vrow = &v.row(b * seq + t)[off..off + dh];
+                    let w = prow[t];
+                    for x in 0..dh {
+                        crow[x] += w * vrow[x];
+                    }
+                }
+            }
+            probs.push(p);
+        }
+    }
+    (ctx, probs)
+}
+
+/// Backward of [`attention_fwd`]: given `dctx`, returns `(dq, dk, dv)`.
+pub fn attention_bwd(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    probs: &[Tensor],
+    dctx: &Tensor,
+    batch: usize,
+    seq: usize,
+    n_heads: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let d = q.cols();
+    let dh = d / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = Tensor::zeros(&[batch * seq, d]);
+    let mut dk = Tensor::zeros(&[batch * seq, d]);
+    let mut dv = Tensor::zeros(&[batch * seq, d]);
+    for b in 0..batch {
+        for h in 0..n_heads {
+            let off = h * dh;
+            let p = &probs[b * n_heads + h];
+            for s in 0..seq {
+                let prow = p.row(s);
+                let dcrow = &dctx.row(b * seq + s)[off..off + dh];
+                // dv_t += p[s,t]·dctx_s ; dp[s,t] = dctx_s · v_t
+                let mut dp = vec![0.0f32; s + 1];
+                for t in 0..=s {
+                    let vrow = &v.row(b * seq + t)[off..off + dh];
+                    dp[t] = crate::tensor::dot(dcrow, vrow);
+                    let dvrow = &mut dv.row_mut(b * seq + t)[off..off + dh];
+                    let w = prow[t];
+                    for x in 0..dh {
+                        dvrow[x] += w * dcrow[x];
+                    }
+                }
+                // softmax backward: ds = p ⊙ (dp − Σ dp⊙p)
+                let dot_pp: f32 = (0..=s).map(|t| dp[t] * prow[t]).sum();
+                // dq_s += Σ_t ds[s,t]·k_t·scale ; dk_t += ds[s,t]·q_s·scale
+                let qrow: Vec<f32> = q.row(b * seq + s)[off..off + dh].to_vec();
+                let dqrow = &mut dq.row_mut(b * seq + s)[off..off + dh];
+                for t in 0..=s {
+                    let ds = prow[t] * (dp[t] - dot_pp) * scale;
+                    if ds != 0.0 {
+                        let krow = &k.row(b * seq + t)[off..off + dh];
+                        for x in 0..dh {
+                            dqrow[x] += ds * krow[x];
+                        }
+                    }
+                }
+                for t in 0..=s {
+                    let ds = prow[t] * (dp[t] - dot_pp) * scale;
+                    if ds != 0.0 {
+                        let dkrow = &mut dk.row_mut(b * seq + t)[off..off + dh];
+                        for x in 0..dh {
+                            dkrow[x] += ds * qrow[x];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+/// Softmax cross-entropy over logits `[N, vocab]` with integer targets.
+/// `ignore_index` positions contribute nothing. Returns `(mean_nll,
+/// dlogits)` where `dlogits` is already scaled by `1/n_valid`.
+pub fn cross_entropy(logits: &Tensor, targets: &[i64], ignore_index: i64) -> (f64, Tensor) {
+    let (n, v) = (logits.rows(), logits.cols());
+    assert_eq!(targets.len(), n);
+    let mut dlogits = Tensor::zeros(&[n, v]);
+    let mut loss = 0.0f64;
+    let n_valid = targets.iter().filter(|&&t| t != ignore_index).count().max(1);
+    let inv = 1.0 / n_valid as f32;
+    for i in 0..n {
+        if targets[i] == ignore_index {
+            continue;
+        }
+        let row = logits.row(i);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f64;
+        for &l in row {
+            z += ((l - maxv) as f64).exp();
+        }
+        let t = targets[i] as usize;
+        let logp = (row[t] - maxv) as f64 - z.ln();
+        loss -= logp;
+        let drow = dlogits.row_mut(i);
+        for j in 0..v {
+            let p = (((row[j] - maxv) as f64).exp() / z) as f32;
+            drow[j] = (p - if j == t { 1.0 } else { 0.0 }) * inv;
+        }
+    }
+    (loss / n_valid as f64, dlogits)
+}
+
+/// Per-position NLL values (no gradient) — the PPL protocol (Eq. 24) needs
+/// per-batch mean losses.
+pub fn nll_per_position(logits: &Tensor, targets: &[i64], ignore_index: i64) -> Vec<f64> {
+    let (n, _v) = (logits.rows(), logits.cols());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        if targets[i] == ignore_index {
+            out.push(f64::NAN);
+            continue;
+        }
+        let row = logits.row(i);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f64;
+        for &l in row {
+            z += ((l - maxv) as f64).exp();
+        }
+        let t = targets[i] as usize;
+        out.push(-((row[t] - maxv) as f64 - z.ln()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Activation;
+    use crate::rng::Pcg64;
+
+    /// Central finite difference of a scalar function of one tensor entry.
+    fn fd<F: FnMut(&Tensor) -> f64>(t: &Tensor, idx: usize, mut f: F) -> f64 {
+        let eps = 1e-3f32;
+        let mut tp = t.clone();
+        tp.data_mut()[idx] += eps;
+        let mut tm = t.clone();
+        tm.data_mut()[idx] -= eps;
+        (f(&tp) - f(&tm)) / (2.0 * eps as f64)
+    }
+
+    /// Scalar objective: weighted sum of outputs (fixed random weights) so
+    /// every output entry matters.
+    fn obj_weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn weighted_sum(y: &Tensor, w: &[f32]) -> f64 {
+        y.data().iter().zip(w).map(|(&a, &b)| (a * b) as f64).sum()
+    }
+
+    #[test]
+    fn linear_bwd_matches_fd() {
+        let mut rng = Pcg64::seeded(101);
+        let x = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[5, 4], 1.0, &mut rng);
+        let ow = obj_weights(15, 1);
+        let dy = Tensor::from_vec(&[3, 5], ow.clone());
+        let (dx, dw) = linear_bwd(&x, &w, &dy);
+        for idx in [0usize, 5, 11] {
+            let g = fd(&x, idx, |xp| weighted_sum(&linear_fwd(xp, &w), &ow));
+            assert!((dx.data()[idx] as f64 - g).abs() < 1e-2, "dx[{idx}]");
+        }
+        for idx in [0usize, 7, 19] {
+            let g = fd(&w, idx, |wp| weighted_sum(&linear_fwd(&x, wp), &ow));
+            assert!((dw.data()[idx] as f64 - g).abs() < 1e-2, "dw[{idx}]");
+        }
+    }
+
+    #[test]
+    fn layernorm_bwd_matches_fd() {
+        let mut rng = Pcg64::seeded(102);
+        let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let gamma = Tensor::randn(&[6], 0.5, &mut rng);
+        let beta = Tensor::randn(&[6], 0.5, &mut rng);
+        let ow = obj_weights(24, 2);
+        let dy = Tensor::from_vec(&[4, 6], ow.clone());
+        let (_, means, rstds) = layernorm_fwd(&x, &gamma, &beta);
+        let (dx, dgamma, dbeta) = layernorm_bwd(&x, &gamma, &means, &rstds, &dy);
+        let run = |xp: &Tensor, gp: &Tensor, bp: &Tensor| {
+            weighted_sum(&layernorm_fwd(xp, gp, bp).0, &ow)
+        };
+        for idx in [0usize, 9, 23] {
+            let g = fd(&x, idx, |xp| run(xp, &gamma, &beta));
+            assert!((dx.data()[idx] as f64 - g).abs() < 2e-2, "dx[{idx}]");
+        }
+        for idx in 0..6 {
+            let gg = fd(&gamma, idx, |gp| run(&x, gp, &beta));
+            assert!((dgamma.data()[idx] as f64 - gg).abs() < 2e-2, "dgamma[{idx}]");
+            let gb = fd(&beta, idx, |bp| run(&x, &gamma, bp));
+            assert!((dbeta.data()[idx] as f64 - gb).abs() < 2e-2, "dbeta[{idx}]");
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_fd() {
+        for v in [-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3;
+            let g = (gelu(v + eps) - gelu(v - eps)) / (2.0 * eps);
+            assert!((gelu_grad(v) - g).abs() < 1e-3, "v={v}");
+        }
+    }
+
+    #[test]
+    fn act_bwd_matches_fd_both_activations() {
+        let mut rng = Pcg64::seeded(103);
+        let x = Tensor::randn(&[2, 5], 1.0, &mut rng);
+        let ow = obj_weights(10, 3);
+        let dy = Tensor::from_vec(&[2, 5], ow.clone());
+        for act in [Activation::Gelu, Activation::Relu] {
+            let dx = act_bwd(&x, &dy, act);
+            for idx in [0usize, 4, 9] {
+                if act == Activation::Relu && x.data()[idx].abs() < 1e-2 {
+                    continue; // kink
+                }
+                let g = fd(&x, idx, |xp| weighted_sum(&act_fwd(xp, act), &ow));
+                assert!(
+                    (dx.data()[idx] as f64 - g).abs() < 1e-2,
+                    "{act:?} dx[{idx}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attention_respects_causality() {
+        let mut rng = Pcg64::seeded(104);
+        let (b, s, h, d) = (1usize, 4usize, 2usize, 8usize);
+        let q = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+        let k = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+        let v = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+        let (ctx, _) = attention_fwd(&q, &k, &v, b, s, h);
+        // Changing v at position 3 must not affect ctx at positions 0..2.
+        let mut v2 = v.clone();
+        for x in v2.row_mut(3) {
+            *x += 5.0;
+        }
+        let (ctx2, _) = attention_fwd(&q, &k, &v2, b, s, h);
+        for pos in 0..3 {
+            assert_eq!(ctx.row(pos), ctx2.row(pos), "pos {pos}");
+        }
+        assert_ne!(ctx.row(3), ctx2.row(3));
+    }
+
+    #[test]
+    fn attention_bwd_matches_fd() {
+        let mut rng = Pcg64::seeded(105);
+        let (b, s, h, d) = (2usize, 3usize, 2usize, 4usize);
+        let q = Tensor::randn(&[b * s, d], 0.7, &mut rng);
+        let k = Tensor::randn(&[b * s, d], 0.7, &mut rng);
+        let v = Tensor::randn(&[b * s, d], 0.7, &mut rng);
+        let ow = obj_weights(b * s * d, 4);
+        let dctx = Tensor::from_vec(&[b * s, d], ow.clone());
+        let (_, probs) = attention_fwd(&q, &k, &v, b, s, h);
+        let (dq, dk, dv) = attention_bwd(&q, &k, &v, &probs, &dctx, b, s, h);
+        let run = |qp: &Tensor, kp: &Tensor, vp: &Tensor| {
+            weighted_sum(&attention_fwd(qp, kp, vp, b, s, h).0, &ow)
+        };
+        for idx in [0usize, 7, 13, 23] {
+            let g = fd(&q, idx, |t| run(t, &k, &v));
+            assert!((dq.data()[idx] as f64 - g).abs() < 2e-2, "dq[{idx}]");
+            let g = fd(&k, idx, |t| run(&q, t, &v));
+            assert!((dk.data()[idx] as f64 - g).abs() < 2e-2, "dk[{idx}]");
+            let g = fd(&v, idx, |t| run(&q, &k, t));
+            assert!((dv.data()[idx] as f64 - g).abs() < 2e-2, "dv[{idx}]");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_grad_matches_fd() {
+        let mut rng = Pcg64::seeded(106);
+        let logits = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let targets = vec![2i64, 0, -100, 5];
+        let (_, dl) = cross_entropy(&logits, &targets, -100);
+        for idx in [0usize, 8, 17, 23] {
+            let g = fd(&logits, idx, |lp| cross_entropy(lp, &targets, -100).0);
+            assert!((dl.data()[idx] as f64 - g).abs() < 1e-3, "dlogits[{idx}]");
+        }
+        // ignored row has zero grad
+        assert!(dl.row(2).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn cross_entropy_of_uniform_is_log_v() {
+        let logits = Tensor::zeros(&[3, 8]);
+        let (loss, _) = cross_entropy(&logits, &[1, 2, 3], -100);
+        assert!((loss - (8f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nll_per_position_consistent_with_ce() {
+        let mut rng = Pcg64::seeded(107);
+        let logits = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let targets = vec![0i64, 3, 6, -100, 2];
+        let (ce, _) = cross_entropy(&logits, &targets, -100);
+        let per = nll_per_position(&logits, &targets, -100);
+        let mean: f64 = per.iter().filter(|x| !x.is_nan()).sum::<f64>() / 4.0;
+        assert!((ce - mean).abs() < 1e-9);
+    }
+}

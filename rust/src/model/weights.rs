@@ -1,0 +1,244 @@
+//! Weight containers and the canonical layer-name scheme used by the
+//! quantization pipeline, checkpoints, and the artifact manifest.
+//!
+//! Canonical linear names (these are what [`crate::quant::cmdq`] matches
+//! and what the coordinator's per-layer reports carry):
+//!
+//! * `lm.layer{i}.attn.{q,k,v,out}`
+//! * `lm.layer{i}.mlp.{up,down}`
+//! * `lm.head` (when untied)
+
+use super::config::ModelConfig;
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// One transformer block's parameters.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub w_up: Tensor,
+    pub w_down: Tensor,
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+}
+
+/// Full LM parameter set.
+#[derive(Clone, Debug)]
+pub struct LmWeights {
+    pub config: ModelConfig,
+    /// `[vocab, d_model]`
+    pub tok_emb: Tensor,
+    /// `[seq_len, d_model]`
+    pub pos_emb: Tensor,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_g: Tensor,
+    pub lnf_b: Tensor,
+    /// `[vocab, d_model]`; `None` when tied to `tok_emb`.
+    pub head: Option<Tensor>,
+}
+
+impl LmWeights {
+    /// GPT-2-style initialization.
+    pub fn init(config: &ModelConfig, rng: &mut Pcg64) -> Self {
+        let d = config.d_model;
+        let std = 0.02f32;
+        let resid_std = std / (2.0 * config.n_layers as f32).sqrt();
+        let layers = (0..config.n_layers)
+            .map(|_| LayerWeights {
+                wq: Tensor::randn(&[d, d], std, rng),
+                wk: Tensor::randn(&[d, d], std, rng),
+                wv: Tensor::randn(&[d, d], std, rng),
+                wo: Tensor::randn(&[d, d], resid_std, rng),
+                w_up: Tensor::randn(&[config.d_ff, d], std, rng),
+                w_down: Tensor::randn(&[d, config.d_ff], resid_std, rng),
+                ln1_g: Tensor::from_vec(&[d], vec![1.0; d]),
+                ln1_b: Tensor::zeros(&[d]),
+                ln2_g: Tensor::from_vec(&[d], vec![1.0; d]),
+                ln2_b: Tensor::zeros(&[d]),
+            })
+            .collect();
+        LmWeights {
+            tok_emb: Tensor::randn(&[config.vocab, d], std, rng),
+            pos_emb: Tensor::randn(&[config.seq_len, d], std, rng),
+            layers,
+            lnf_g: Tensor::from_vec(&[d], vec![1.0; d]),
+            lnf_b: Tensor::zeros(&[d]),
+            head: if config.tied_head {
+                None
+            } else {
+                Some(Tensor::randn(&[config.vocab, d], std, rng))
+            },
+            config: config.clone(),
+        }
+    }
+
+    /// The LM head matrix (tied or not).
+    pub fn head_matrix(&self) -> &Tensor {
+        self.head.as_ref().unwrap_or(&self.tok_emb)
+    }
+
+    /// All quantizable linear layers in forward order, with canonical
+    /// names. Embeddings and LayerNorms stay fp32 (standard PTQ practice
+    /// and what the paper does).
+    pub fn linears(&self) -> Vec<(String, &Tensor)> {
+        let mut v = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            v.push((format!("lm.layer{i}.attn.q"), &l.wq));
+            v.push((format!("lm.layer{i}.attn.k"), &l.wk));
+            v.push((format!("lm.layer{i}.attn.v"), &l.wv));
+            v.push((format!("lm.layer{i}.attn.out"), &l.wo));
+            v.push((format!("lm.layer{i}.mlp.up"), &l.w_up));
+            v.push((format!("lm.layer{i}.mlp.down"), &l.w_down));
+        }
+        if let Some(h) = &self.head {
+            v.push(("lm.head".into(), h));
+        }
+        v
+    }
+
+    /// Mutable access to a linear by canonical name.
+    pub fn linear_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        if name == "lm.head" {
+            return self.head.as_mut();
+        }
+        let rest = name.strip_prefix("lm.layer")?;
+        let (idx, field) = rest.split_once('.')?;
+        let l = self.layers.get_mut(idx.parse::<usize>().ok()?)?;
+        Some(match field {
+            "attn.q" => &mut l.wq,
+            "attn.k" => &mut l.wk,
+            "attn.v" => &mut l.wv,
+            "attn.out" => &mut l.wo,
+            "mlp.up" => &mut l.w_up,
+            "mlp.down" => &mut l.w_down,
+            _ => return None,
+        })
+    }
+
+    /// Shared access by canonical name.
+    pub fn linear(&self, name: &str) -> Option<&Tensor> {
+        if name == "lm.head" {
+            return self.head.as_ref();
+        }
+        let rest = name.strip_prefix("lm.layer")?;
+        let (idx, field) = rest.split_once('.')?;
+        let l = self.layers.get(idx.parse::<usize>().ok()?)?;
+        Some(match field {
+            "attn.q" => &l.wq,
+            "attn.k" => &l.wk,
+            "attn.v" => &l.wv,
+            "attn.out" => &l.wo,
+            "mlp.up" => &l.w_up,
+            "mlp.down" => &l.w_down,
+            _ => return None,
+        })
+    }
+
+    /// Every named tensor (for checkpointing / optimizer state), linears
+    /// and non-linears alike.
+    pub fn named_tensors(&self) -> Vec<(String, &Tensor)> {
+        let mut v = vec![
+            ("tok_emb".to_string(), &self.tok_emb),
+            ("pos_emb".to_string(), &self.pos_emb),
+        ];
+        for (i, l) in self.layers.iter().enumerate() {
+            v.push((format!("lm.layer{i}.attn.q"), &l.wq));
+            v.push((format!("lm.layer{i}.attn.k"), &l.wk));
+            v.push((format!("lm.layer{i}.attn.v"), &l.wv));
+            v.push((format!("lm.layer{i}.attn.out"), &l.wo));
+            v.push((format!("lm.layer{i}.mlp.up"), &l.w_up));
+            v.push((format!("lm.layer{i}.mlp.down"), &l.w_down));
+            v.push((format!("lm.layer{i}.ln1.g"), &l.ln1_g));
+            v.push((format!("lm.layer{i}.ln1.b"), &l.ln1_b));
+            v.push((format!("lm.layer{i}.ln2.g"), &l.ln2_g));
+            v.push((format!("lm.layer{i}.ln2.b"), &l.ln2_b));
+        }
+        v.push(("lnf.g".to_string(), &self.lnf_g));
+        v.push(("lnf.b".to_string(), &self.lnf_b));
+        if let Some(h) = &self.head {
+            v.push(("lm.head".to_string(), h));
+        }
+        v
+    }
+
+    /// Mutable named access covering every tensor in [`Self::named_tensors`].
+    pub fn named_tensor_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        match name {
+            "tok_emb" => return Some(&mut self.tok_emb),
+            "pos_emb" => return Some(&mut self.pos_emb),
+            "lnf.g" => return Some(&mut self.lnf_g),
+            "lnf.b" => return Some(&mut self.lnf_b),
+            _ => {}
+        }
+        if let Some(rest) = name.strip_prefix("lm.layer") {
+            let (idx, field) = rest.split_once('.')?;
+            if matches!(field, "ln1.g" | "ln1.b" | "ln2.g" | "ln2.b") {
+                let l = self.layers.get_mut(idx.parse::<usize>().ok()?)?;
+                return Some(match field {
+                    "ln1.g" => &mut l.ln1_g,
+                    "ln1.b" => &mut l.ln1_b,
+                    "ln2.g" => &mut l.ln2_g,
+                    _ => &mut l.ln2_b,
+                });
+            }
+        }
+        self.linear_mut(name)
+    }
+
+    /// Total parameters actually held.
+    pub fn n_params(&self) -> usize {
+        self.named_tensors().iter().map(|(_, t)| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_matches_config_count() {
+        let cfg = ModelConfig::test_tiny(64);
+        let mut rng = Pcg64::seeded(7);
+        let w = LmWeights::init(&cfg, &mut rng);
+        assert_eq!(w.n_params(), cfg.n_params());
+    }
+
+    #[test]
+    fn linears_enumerated_in_order() {
+        let cfg = ModelConfig::test_tiny(64);
+        let mut rng = Pcg64::seeded(8);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let names: Vec<String> = w.linears().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names[0], "lm.layer0.attn.q");
+        assert_eq!(names[5], "lm.layer0.mlp.down");
+        assert_eq!(names.len(), 12); // tied head → no lm.head
+    }
+
+    #[test]
+    fn untied_head_is_quantizable() {
+        let mut cfg = ModelConfig::test_tiny(64);
+        cfg.tied_head = false;
+        let mut rng = Pcg64::seeded(9);
+        let w = LmWeights::init(&cfg, &mut rng);
+        assert!(w.linears().iter().any(|(n, _)| n == "lm.head"));
+    }
+
+    #[test]
+    fn named_access_roundtrip() {
+        let cfg = ModelConfig::test_tiny(32);
+        let mut rng = Pcg64::seeded(10);
+        let mut w = LmWeights::init(&cfg, &mut rng);
+        let names: Vec<String> = w.named_tensors().iter().map(|(n, _)| n.clone()).collect();
+        for n in names {
+            assert!(w.named_tensor_mut(&n).is_some(), "{n}");
+        }
+        // mutate through the accessor, observe through the enumerator
+        w.linear_mut("lm.layer1.attn.k").unwrap().data_mut()[0] = 42.0;
+        assert_eq!(w.linear("lm.layer1.attn.k").unwrap().data()[0], 42.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Calibration-stage statistics: streaming Hessian accumulation and the
+//! single-instance store.
+//!
+//! Paper §3.2 (Algorithm 2): the first stage accumulates `H ≈ XᵀX` over
+//! every calibration batch, damps it (Eq. 10), and retains **only the last
+//! batch** `(X_orig, Y_orig)` for the second stage. The memory claim
+//! (Eq. 15–16) is that stage 2 needs `O(‖X‖)` instead of
+//! `O(‖[X⁽¹⁾…X⁽ᵏ⁾]‖)`; the [`MemoryLedger`] instrumentation here is what
+//! lets the Table 3 bench verify that claim on our substrate.
+
+use crate::linalg::apply_damping;
+use crate::metrics::MemoryLedger;
+use crate::tensor::{matmul_at_b_into, Tensor};
+
+/// Streaming `H += XᵀX` accumulator for one linear layer.
+pub struct HessianAccumulator {
+    h: Tensor,
+    /// Rows (samples·tokens) accumulated so far.
+    pub nsamples: usize,
+    ledger: MemoryLedger,
+}
+
+impl HessianAccumulator {
+    pub fn new(in_features: usize, ledger: MemoryLedger) -> Self {
+        let h = Tensor::zeros(&[in_features, in_features]);
+        ledger.alloc("hessian", h.nbytes());
+        HessianAccumulator { h, nsamples: 0, ledger }
+    }
+
+    /// Accumulate one calibration batch `x: [rows, in_features]`.
+    ///
+    /// Following GPTQ's reference implementation we keep a running *mean*
+    /// of `2·XᵀX` — the rescale keeps `percdamp` meaningful regardless of
+    /// how many batches stream through.
+    pub fn add_batch(&mut self, x: &Tensor) {
+        assert_eq!(x.cols(), self.h.rows(), "activation width mismatch");
+        let rows = x.rows();
+        if rows == 0 {
+            return;
+        }
+        let total = self.nsamples + rows;
+        // H <- H * n/(n+r)  then  H += 2/(n+r) · XᵀX
+        self.h.scale(self.nsamples as f32 / total as f32);
+        let mut xtx = Tensor::zeros(&[x.cols(), x.cols()]);
+        self.ledger.alloc("hessian_tmp", xtx.nbytes());
+        matmul_at_b_into(x, x, &mut xtx);
+        self.h.axpy(2.0 / total as f32, &xtx);
+        self.ledger.free("hessian_tmp", xtx.nbytes());
+        self.nsamples = total;
+    }
+
+    /// Finish: damp (Eq. 10) and hand out the Hessian. Returns `(H̃, λ)`.
+    pub fn finalize(mut self, percdamp: f32) -> (Tensor, f32) {
+        let lambda = apply_damping(&mut self.h, percdamp);
+        // Hand ownership (and its ledger accounting) to the caller; the
+        // Drop impl then frees the zero bytes of the empty placeholder.
+        let h = std::mem::replace(&mut self.h, Tensor::zeros(&[0]));
+        self.ledger.free("hessian", h.nbytes());
+        (h, lambda)
+    }
+
+    /// Borrow the running Hessian (tests / diagnostics).
+    pub fn hessian(&self) -> &Tensor {
+        &self.h
+    }
+}
+
+impl Drop for HessianAccumulator {
+    fn drop(&mut self) {
+        self.ledger.free("hessian", self.h.nbytes());
+    }
+}
+
+/// The single retained calibration instance for stage 2 (paper Eq. 11):
+/// the **last** batch's layer input and the full-precision layer output.
+#[derive(Clone)]
+pub struct SingleInstance {
+    /// `X_orig ∈ R^{N×Cin}` — last batch input to this layer.
+    pub x: Tensor,
+    /// `Y_orig ∈ R^{N×Cout}` — full-precision output `X·W_fpᵀ`.
+    pub y_orig: Tensor,
+}
+
+impl SingleInstance {
+    /// Capture from the last batch + fp weights (`Y_orig = X·Wᵀ`).
+    pub fn capture(x_last: Tensor, w_fp: &Tensor, ledger: &MemoryLedger) -> Self {
+        let y_orig = crate::tensor::matmul_a_bt(&x_last, w_fp);
+        ledger.alloc("single_instance", x_last.nbytes() + y_orig.nbytes());
+        SingleInstance { x: x_last, y_orig }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.x.nbytes() + self.y_orig.nbytes()
+    }
+
+    pub fn release(self, ledger: &MemoryLedger) {
+        ledger.free("single_instance", self.nbytes());
+    }
+}
+
+/// A rotating snapshot selector — the paper's *future work* ("automated
+/// dynamic snapshot selection … periodically rotate calibration data in
+/// memory without increasing peak memory"). We implement it so the
+/// ablation bench can compare `last-batch` vs `rotating` stage-2 anchors:
+/// it keeps exactly one batch resident (same peak memory) but swaps which
+/// batch every `period` accesses.
+pub struct SnapshotRotator {
+    snapshots: Vec<Tensor>,
+    period: usize,
+    accesses: usize,
+}
+
+impl SnapshotRotator {
+    /// `candidates` are *indices* the caller may re-stream on demand; we
+    /// model re-streaming by storing the batches but accounting only one
+    /// as resident (the rotation cost is time, not memory — matching the
+    /// paper's framing).
+    pub fn new(candidates: Vec<Tensor>, period: usize) -> Self {
+        assert!(!candidates.is_empty());
+        SnapshotRotator { snapshots: candidates, period: period.max(1), accesses: 0 }
+    }
+
+    /// Current resident snapshot; advances the rotation clock.
+    pub fn next(&mut self) -> &Tensor {
+        let idx = (self.accesses / self.period) % self.snapshots.len();
+        self.accesses += 1;
+        &self.snapshots[idx]
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.snapshots[0].nbytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::matmul_at_b;
+
+    #[test]
+    fn hessian_matches_direct_computation() {
+        let mut rng = Pcg64::seeded(51);
+        let ledger = MemoryLedger::new();
+        let x1 = Tensor::randn(&[10, 8], 1.0, &mut rng);
+        let x2 = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        let mut acc = HessianAccumulator::new(8, ledger);
+        acc.add_batch(&x1);
+        acc.add_batch(&x2);
+        // Expected: 2/(16) * (X1ᵀX1 + X2ᵀX2)
+        let mut expect = matmul_at_b(&x1, &x1);
+        expect.add_assign(&matmul_at_b(&x2, &x2));
+        expect.scale(2.0 / 16.0);
+        assert!(acc.hessian().max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn hessian_batch_order_invariance() {
+        let mut rng = Pcg64::seeded(52);
+        let ledger = MemoryLedger::new();
+        let a = Tensor::randn(&[5, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[9, 4], 1.0, &mut rng);
+        let mut acc1 = HessianAccumulator::new(4, ledger.clone());
+        acc1.add_batch(&a);
+        acc1.add_batch(&b);
+        let mut acc2 = HessianAccumulator::new(4, ledger);
+        acc2.add_batch(&b);
+        acc2.add_batch(&a);
+        assert!(acc1.hessian().max_abs_diff(acc2.hessian()) < 1e-4);
+    }
+
+    #[test]
+    fn finalize_damps_diagonal() {
+        let mut rng = Pcg64::seeded(53);
+        let ledger = MemoryLedger::new();
+        let x = Tensor::randn(&[20, 6], 1.0, &mut rng);
+        let mut acc = HessianAccumulator::new(6, ledger);
+        acc.add_batch(&x);
+        let before = acc.hessian().clone();
+        let (h, lambda) = acc.finalize(0.01);
+        assert!(lambda > 0.0);
+        for i in 0..6 {
+            assert!((h.at(i, i) - before.at(i, i) - lambda).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ledger_sees_single_instance_and_frees() {
+        let mut rng = Pcg64::seeded(54);
+        let ledger = MemoryLedger::new();
+        let x = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let w = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let inst = SingleInstance::capture(x, &w, &ledger);
+        assert_eq!(
+            ledger.live_bytes() as usize,
+            inst.nbytes()
+        );
+        assert_eq!(inst.y_orig.shape(), &[4, 3]);
+        inst.release(&ledger);
+        assert_eq!(ledger.live_bytes(), 0);
+    }
+
+    #[test]
+    fn y_orig_is_x_w_t() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let inst = SingleInstance::capture(x, &w, &MemoryLedger::new());
+        assert_eq!(inst.y_orig.data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn rotator_cycles_with_period() {
+        let mk = |v: f32| Tensor::from_vec(&[1, 1], vec![v]);
+        let mut rot = SnapshotRotator::new(vec![mk(1.0), mk(2.0), mk(3.0)], 2);
+        let seq: Vec<f32> = (0..8).map(|_| rot.next().data()[0]).collect();
+        assert_eq!(seq, vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,261 @@
+//! Stage 1: GPTQ — blockwise greedy quantization with second-order error
+//! feedback (Frantar et al., 2022). This is both the baseline the paper
+//! compares against and the initializer RPIQ refines.
+//!
+//! Algorithm (per linear layer, `W ∈ R^{Cout×Cin}`, damped `H̃`):
+//!
+//! 1. `U = chol(H̃⁻¹, upper)` — the error-propagation operator.
+//! 2. Walk columns left→right in lazy blocks of `block_size`:
+//!    a. entering a new *group*, fit (scale, zero) from the **current**
+//!       (already error-compensated) weights of that group;
+//!    b. quantize column `j`, compute `err_j = (w_j − q_j)/U[j,j]`;
+//!    c. propagate `w_k ← w_k − err_j·U[j,k]` for `k` in the rest of the
+//!       block (immediately) and for the trailing columns (batched per
+//!       block — the "lazy update" that makes GPTQ fast).
+//!
+//! The unidirectional, one-shot nature of this walk is exactly the
+//! inter-block error-accumulation problem the paper's stage 2 attacks.
+
+use super::grid::{QuantGrid, QuantizedLinear};
+use super::QuantConfig;
+use crate::linalg::{cholesky_inverse_upper, fix_dead_channels};
+use crate::metrics::MemoryLedger;
+use crate::tensor::Tensor;
+
+/// Output of stage-1 quantization.
+pub struct GptqOutput {
+    /// Deployment-format quantized weights.
+    pub q: QuantizedLinear,
+    /// Σ err² accumulated by the greedy walk (the GPTQ objective value).
+    pub greedy_loss: f64,
+    /// Input channels whose Hessian diagonal was zero (dead — weights
+    /// forced to 0, matching the reference implementation).
+    pub dead_channels: Vec<usize>,
+}
+
+/// Quantize one weight matrix with GPTQ.
+///
+/// * `w_fp` — `[out, in]` full-precision weights (not mutated).
+/// * `h` — damped Hessian `H̃ = XᵀX + λI`, `[in, in]`.
+pub fn gptq_quantize(
+    w_fp: &Tensor,
+    h: &Tensor,
+    cfg: QuantConfig,
+    ledger: &MemoryLedger,
+) -> anyhow::Result<GptqOutput> {
+    let cfg = cfg.fitted(w_fp.cols());
+    let (out_f, in_f) = (w_fp.rows(), w_fp.cols());
+    assert_eq!(h.rows(), in_f);
+    assert_eq!(h.cols(), in_f);
+    let grid = QuantGrid::new(cfg.bits, cfg.group_size);
+    let gs = cfg.group_size;
+
+    // Working copies: W is mutated by error feedback; H may need dead-column
+    // fixes before factorization.
+    let mut w = w_fp.clone();
+    let mut hh = h.clone();
+    ledger.alloc("gptq_work", w.nbytes() + hh.nbytes());
+    let dead_channels = fix_dead_channels(&mut hh, &mut w);
+
+    // U = chol(H⁻¹, upper); row j of U drives the feedback from column j.
+    let u = cholesky_inverse_upper(&hh)
+        .map_err(|e| anyhow::anyhow!("GPTQ Hessian factorization failed: {e}"))?;
+    ledger.alloc("gptq_hinv", in_f * in_f * 8);
+
+    let mut q = QuantizedLinear::empty(grid, out_f, in_f);
+    let ng = q.n_groups();
+    let mut greedy_loss = 0.0f64;
+
+    // Per-block error buffer for the lazy trailing update.
+    let bs = cfg.block_size;
+    let mut err_block = vec![0.0f32; out_f * bs];
+    ledger.alloc("gptq_errblock", err_block.len() * 4);
+
+    let mut c0 = 0;
+    while c0 < in_f {
+        let c1 = (c0 + bs).min(in_f);
+        let bw = c1 - c0;
+        err_block[..out_f * bw].fill(0.0);
+
+        for j in c0..c1 {
+            // (a) group entry: fit params on the *current* weights.
+            if j % gs == 0 {
+                let g = j / gs;
+                let gend = (j + gs).min(in_f);
+                for r in 0..out_f {
+                    let (scale, zero) = grid.find_params(&w.row(r)[j..gend]);
+                    q.scales[r * ng + g] = scale;
+                    q.zeros[r * ng + g] = zero;
+                }
+            }
+            let d = u[j * in_f + j] as f32;
+            // (b) quantize column j and compute the scaled error.
+            for r in 0..out_f {
+                let wv = w.at(r, j);
+                let qv = grid.quantize_val(wv, q.scale_at(r, j), q.zero_at(r, j));
+                q.qweight[r * in_f + j] = qv;
+                let dq = grid.dequantize_val(qv, q.scale_at(r, j), q.zero_at(r, j));
+                let err = (wv - dq) / d;
+                greedy_loss += (err as f64) * (err as f64);
+                err_block[r * bs + (j - c0)] = err;
+                // (c) immediate feedback within the block.
+                let urow = &u[j * in_f..(j + 1) * in_f];
+                let wrow = w.row_mut(r);
+                for k in j + 1..c1 {
+                    wrow[k] -= err * urow[k] as f32;
+                }
+            }
+        }
+
+        // (c') lazy trailing update: W[:, c1:] -= Err · U[c0:c1, c1:].
+        if c1 < in_f {
+            for r in 0..out_f {
+                let wrow = w.row_mut(r);
+                for (jj, j) in (c0..c1).enumerate() {
+                    let err = err_block[r * bs + jj];
+                    if err != 0.0 {
+                        let urow = &u[j * in_f..(j + 1) * in_f];
+                        for k in c1..in_f {
+                            wrow[k] -= err * urow[k] as f32;
+                        }
+                    }
+                }
+            }
+        }
+        c0 = c1;
+    }
+
+    ledger.free("gptq_errblock", err_block.len() * 4);
+    ledger.free("gptq_hinv", in_f * in_f * 8);
+    ledger.free("gptq_work", w.nbytes() + hh.nbytes());
+
+    Ok(GptqOutput { q, greedy_loss, dead_channels })
+}
+
+/// Reconstruction loss `‖X·Wᵀ − X·Ŵᵀ‖²` of a quantized matrix on given
+/// activations — the metric both stages optimize, used everywhere in the
+/// benches.
+pub fn reconstruction_loss(x: &Tensor, w_fp: &Tensor, q: &QuantizedLinear) -> f64 {
+    let y = crate::tensor::matmul_a_bt(x, w_fp);
+    let yq = crate::tensor::matmul_a_bt(x, &q.dequantize());
+    y.sub(&yq).frob_sq()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{prop_assert, Runner};
+    use crate::quant::calib::HessianAccumulator;
+    use crate::rng::Pcg64;
+
+    fn setup(
+        out_f: usize,
+        in_f: usize,
+        n: usize,
+        seed: u64,
+    ) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Tensor::randn(&[n, in_f], 1.0, &mut rng);
+        let w = Tensor::randn(&[out_f, in_f], 0.5, &mut rng);
+        let mut acc = HessianAccumulator::new(in_f, MemoryLedger::new());
+        acc.add_batch(&x);
+        let (h, _) = acc.finalize(0.01);
+        (x, w, h)
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_reconstruction() {
+        // The whole point of GPTQ: error feedback lowers XW reconstruction
+        // loss vs round-to-nearest at equal bit width.
+        let (x, w, h) = setup(16, 64, 128, 61);
+        let cfg = QuantConfig { bits: 4, group_size: 16, block_size: 16, percdamp: 0.01 };
+        let ledger = MemoryLedger::new();
+        let out = gptq_quantize(&w, &h, cfg, &ledger).unwrap();
+        let rtn = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 16));
+        let l_gptq = reconstruction_loss(&x, &w, &out.q);
+        let l_rtn = reconstruction_loss(&x, &w, &rtn);
+        assert!(
+            l_gptq < l_rtn,
+            "gptq {l_gptq} should beat rtn {l_rtn}"
+        );
+    }
+
+    #[test]
+    fn gptq_exact_when_grid_is_fine() {
+        // With 8 bits and tiny weights the quantization error is ~0 and the
+        // output must match the fp weights closely.
+        let (x, w, h) = setup(4, 16, 32, 62);
+        let cfg = QuantConfig { bits: 8, group_size: 16, block_size: 8, percdamp: 0.01 };
+        let out = gptq_quantize(&w, &h, cfg, &MemoryLedger::new()).unwrap();
+        let rel = reconstruction_loss(&x, &w, &out.q)
+            / crate::tensor::matmul_a_bt(&x, &w).frob_sq().max(1e-12);
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn dead_channels_are_zeroed() {
+        let mut rng = Pcg64::seeded(63);
+        let n = 32;
+        let in_f = 8;
+        let mut x = Tensor::randn(&[n, in_f], 1.0, &mut rng);
+        // kill channel 3
+        for r in 0..n {
+            x.row_mut(r)[3] = 0.0;
+        }
+        let w = Tensor::randn(&[4, in_f], 0.5, &mut rng);
+        let mut acc = HessianAccumulator::new(in_f, MemoryLedger::new());
+        acc.add_batch(&x);
+        // no damping on the dead channel: finalize would damp it, so build
+        // H manually without damping to exercise the fix path
+        let h = acc.hessian().clone();
+        let cfg = QuantConfig { bits: 4, group_size: 4, block_size: 4, percdamp: 0.01 };
+        let out = gptq_quantize(&w, &h, cfg, &MemoryLedger::new()).unwrap();
+        assert_eq!(out.dead_channels, vec![3]);
+        for r in 0..4 {
+            assert_eq!(out.q.deq_at(r, 3), 0.0, "row {r}");
+        }
+    }
+
+    #[test]
+    fn ledger_returns_to_zero() {
+        let (_, w, h) = setup(8, 32, 64, 64);
+        let ledger = MemoryLedger::new();
+        let _ = gptq_quantize(&w, &h, QuantConfig::default(), &ledger).unwrap();
+        assert_eq!(ledger.live_bytes(), 0);
+        assert!(ledger.peak_bytes() > 0);
+    }
+
+    #[test]
+    fn block_size_does_not_change_result_much_property() {
+        // The lazy block update is an exact algebraic regrouping; results
+        // across block sizes must agree to float tolerance.
+        Runner::new("gptq_blocksize_invariance", 10).run(|g| {
+            let in_f = 4 * g.usize_in(2..6);
+            let out_f = g.usize_in(2..6);
+            let n = in_f * 2;
+            let xd = g.matrix(n, in_f, 1.0);
+            let wd = g.matrix(out_f, in_f, 0.5);
+            let x = Tensor::from_vec(&[n, in_f], xd);
+            let w = Tensor::from_vec(&[out_f, in_f], wd);
+            let mut acc = HessianAccumulator::new(in_f, MemoryLedger::new());
+            acc.add_batch(&x);
+            let (h, _) = acc.finalize(0.01);
+            let led = MemoryLedger::new();
+            let cfg1 = QuantConfig { bits: 4, group_size: 4, block_size: 4, percdamp: 0.01 };
+            let cfg2 = QuantConfig { bits: 4, group_size: 4, block_size: in_f, percdamp: 0.01 };
+            let q1 = gptq_quantize(&w, &h, cfg1, &led).unwrap();
+            let q2 = gptq_quantize(&w, &h, cfg2, &led).unwrap();
+            let d = q1.q.dequantize().max_abs_diff(&q2.q.dequantize());
+            prop_assert(d < 2e-2, &format!("block regrouping exact-ish, d={d}"))
+        });
+    }
+
+    #[test]
+    fn group_params_written_for_every_group() {
+        let (_, w, h) = setup(4, 20, 40, 65);
+        let cfg = QuantConfig { bits: 4, group_size: 8, block_size: 8, percdamp: 0.01 };
+        let out = gptq_quantize(&w, &h, cfg, &MemoryLedger::new()).unwrap();
+        assert_eq!(out.q.n_groups(), 3); // ceil(20/8)
+        assert!(out.q.scales.iter().all(|&s| s > 0.0));
+    }
+}

@@ -1,0 +1,412 @@
+//! The quantization grid `Q(·)`: asymmetric, group-wise, low-bit integer
+//! representation of weight matrices, plus nibble packing for the 4-bit
+//! deployment format consumed by the Pallas `quant_matmul` kernel and the
+//! Rust fallback path.
+//!
+//! Layout conventions (shared with `python/compile/kernels/quant_matmul.py`
+//! — keep in sync, the pytest suite cross-checks via golden files):
+//!
+//! * weights are `[out_features, in_features]` (paper's `W ∈ R^{Cout×Cin}`);
+//! * groups run along the **input** axis: group `g` covers input channels
+//!   `[g·gs, (g+1)·gs)`;
+//! * `scales`/`zeros` are `[out_features, n_groups]`, with `zero` stored as
+//!   the *integer* zero point so `deq(q) = (q - zero) · scale`;
+//! * 4-bit packing puts channel `2k` in the low nibble and `2k+1` in the
+//!   high nibble of byte `k` of a row.
+
+use crate::tensor::Tensor;
+
+/// A (bits, group_size) grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantGrid {
+    pub bits: u32,
+    pub group_size: usize,
+}
+
+impl QuantGrid {
+    pub fn new(bits: u32, group_size: usize) -> Self {
+        assert!((2..=8).contains(&bits), "bits must be in 2..=8, got {bits}");
+        assert!(group_size >= 1);
+        QuantGrid { bits, group_size }
+    }
+
+    /// Maximum integer level (`2^bits - 1`).
+    #[inline]
+    pub fn maxq(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Asymmetric (scale, zero) for one group of weights.
+    ///
+    /// Matches GPTQ's `find_params`: the range always includes 0 so that
+    /// exact zeros stay exact; degenerate all-constant groups get scale 1.
+    pub fn find_params(&self, group: &[f32]) -> (f32, f32) {
+        let mut lo = 0.0f32;
+        let mut hi = 0.0f32;
+        for &v in group {
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        if lo == hi {
+            // all-zero (or constant-zero-range) group
+            return (1.0, 0.0);
+        }
+        let scale = (hi - lo) / self.maxq();
+        let zero = (-lo / scale).round();
+        (scale, zero)
+    }
+
+    /// Quantize one value to its integer level under (scale, zero).
+    #[inline]
+    pub fn quantize_val(&self, w: f32, scale: f32, zero: f32) -> u8 {
+        let q = (w / scale + zero).round();
+        q.clamp(0.0, self.maxq()) as u8
+    }
+
+    /// Dequantize an integer level.
+    #[inline]
+    pub fn dequantize_val(&self, q: u8, scale: f32, zero: f32) -> f32 {
+        (q as f32 - zero) * scale
+    }
+
+    /// Round-trip a value through the grid (the paper's `Q(·)` projection
+    /// for a *fixed* (scale, zero)).
+    #[inline]
+    pub fn project_val(&self, w: f32, scale: f32, zero: f32) -> f32 {
+        self.dequantize_val(self.quantize_val(w, scale, zero), scale, zero)
+    }
+
+    /// Number of groups covering `in_features` channels.
+    pub fn n_groups(&self, in_features: usize) -> usize {
+        in_features.div_ceil(self.group_size)
+    }
+}
+
+/// A quantized weight matrix in deployment format.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub grid: QuantGrid,
+    pub out_features: usize,
+    pub in_features: usize,
+    /// Integer levels, one byte per weight, `[out, in]` row-major.
+    /// (The packed nibble form is produced on demand by [`Self::pack`].)
+    pub qweight: Vec<u8>,
+    /// `[out, n_groups]` row-major.
+    pub scales: Vec<f32>,
+    /// `[out, n_groups]` row-major, integer zero points stored as f32.
+    pub zeros: Vec<f32>,
+}
+
+impl QuantizedLinear {
+    /// Allocate an all-zero quantized matrix with the given params.
+    pub fn empty(grid: QuantGrid, out_features: usize, in_features: usize) -> Self {
+        let ng = grid.n_groups(in_features);
+        QuantizedLinear {
+            grid,
+            out_features,
+            in_features,
+            qweight: vec![0; out_features * in_features],
+            scales: vec![1.0; out_features * ng],
+            zeros: vec![0.0; out_features * ng],
+        }
+    }
+
+    /// Round-to-nearest quantization of a full matrix (the non-GPTQ
+    /// baseline, also used to initialize per-group params).
+    pub fn quantize_rtn(w: &Tensor, grid: QuantGrid) -> Self {
+        let (out_f, in_f) = (w.rows(), w.cols());
+        let mut q = Self::empty(grid, out_f, in_f);
+        let ng = grid.n_groups(in_f);
+        for r in 0..out_f {
+            let row = w.row(r);
+            for g in 0..ng {
+                let c0 = g * grid.group_size;
+                let c1 = (c0 + grid.group_size).min(in_f);
+                let (scale, zero) = grid.find_params(&row[c0..c1]);
+                q.scales[r * ng + g] = scale;
+                q.zeros[r * ng + g] = zero;
+                for c in c0..c1 {
+                    q.qweight[r * in_f + c] = grid.quantize_val(row[c], scale, zero);
+                }
+            }
+        }
+        q
+    }
+
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.grid.n_groups(self.in_features)
+    }
+
+    #[inline]
+    pub fn scale_at(&self, r: usize, c: usize) -> f32 {
+        self.scales[r * self.n_groups() + c / self.grid.group_size]
+    }
+
+    #[inline]
+    pub fn zero_at(&self, r: usize, c: usize) -> f32 {
+        self.zeros[r * self.n_groups() + c / self.grid.group_size]
+    }
+
+    /// Set the integer level of element (r, c) by projecting `w`.
+    #[inline]
+    pub fn set_from_float(&mut self, r: usize, c: usize, w: f32) {
+        let q = self
+            .grid
+            .quantize_val(w, self.scale_at(r, c), self.zero_at(r, c));
+        self.qweight[r * self.in_features + c] = q;
+    }
+
+    /// Dequantized element.
+    #[inline]
+    pub fn deq_at(&self, r: usize, c: usize) -> f32 {
+        self.grid.dequantize_val(
+            self.qweight[r * self.in_features + c],
+            self.scale_at(r, c),
+            self.zero_at(r, c),
+        )
+    }
+
+    /// Full dequantized matrix `[out, in]`.
+    pub fn dequantize(&self) -> Tensor {
+        let ng = self.n_groups();
+        let mut out = Tensor::zeros(&[self.out_features, self.in_features]);
+        for r in 0..self.out_features {
+            let row = out.row_mut(r);
+            for c in 0..self.in_features {
+                let g = c / self.grid.group_size;
+                let scale = self.scales[r * ng + g];
+                let zero = self.zeros[r * ng + g];
+                row[c] = (self.qweight[r * self.in_features + c] as f32 - zero) * scale;
+            }
+        }
+        out
+    }
+
+    /// Project an arbitrary float matrix onto *this* grid (fixed params),
+    /// returning the dequantized projection. This is the paper's Eq. 7
+    /// `B̃ = Q(B*)` — stage-2 keeps stage-1's (scale, zero).
+    pub fn project(&self, w: &Tensor) -> Tensor {
+        assert_eq!(w.rows(), self.out_features);
+        assert_eq!(w.cols(), self.in_features);
+        let ng = self.n_groups();
+        let mut out = Tensor::zeros(&[self.out_features, self.in_features]);
+        for r in 0..self.out_features {
+            let src = w.row(r);
+            let dst = out.row_mut(r);
+            for c in 0..self.in_features {
+                let g = c / self.grid.group_size;
+                dst[c] = self
+                    .grid
+                    .project_val(src[c], self.scales[r * ng + g], self.zeros[r * ng + g]);
+            }
+        }
+        out
+    }
+
+    /// Overwrite integer levels for columns `[c0, c1)` from a float block
+    /// (projection with fixed params).
+    pub fn set_cols_from_float(&mut self, c0: usize, block: &Tensor) {
+        let bc = block.cols();
+        assert_eq!(block.rows(), self.out_features);
+        assert!(c0 + bc <= self.in_features);
+        for r in 0..self.out_features {
+            let src = block.row(r);
+            for (j, &v) in src.iter().enumerate() {
+                self.set_from_float(r, c0 + j, v);
+            }
+        }
+    }
+
+    /// Dequantized copy of columns `[c0, c1)`.
+    pub fn deq_cols(&self, c0: usize, c1: usize) -> Tensor {
+        let mut out = Tensor::zeros(&[self.out_features, c1 - c0]);
+        for r in 0..self.out_features {
+            let dst = out.row_mut(r);
+            for c in c0..c1 {
+                dst[c - c0] = self.deq_at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Pack integer levels into nibbles (4-bit) or keep bytes (else).
+    /// Returns the deployment byte buffer handed to the PJRT artifacts.
+    pub fn pack(&self) -> Vec<u8> {
+        if self.grid.bits == 4 {
+            let cols = self.in_features.div_ceil(2);
+            let mut out = vec![0u8; self.out_features * cols];
+            for r in 0..self.out_features {
+                for c in 0..self.in_features {
+                    let q = self.qweight[r * self.in_features + c] & 0x0F;
+                    let byte = &mut out[r * cols + c / 2];
+                    if c % 2 == 0 {
+                        *byte |= q;
+                    } else {
+                        *byte |= q << 4;
+                    }
+                }
+            }
+            out
+        } else {
+            self.qweight.clone()
+        }
+    }
+
+    /// Inverse of [`Self::pack`] for 4-bit buffers.
+    pub fn unpack4(
+        packed: &[u8],
+        grid: QuantGrid,
+        out_features: usize,
+        in_features: usize,
+        scales: Vec<f32>,
+        zeros: Vec<f32>,
+    ) -> Self {
+        assert_eq!(grid.bits, 4);
+        let cols = in_features.div_ceil(2);
+        assert_eq!(packed.len(), out_features * cols);
+        let mut qweight = vec![0u8; out_features * in_features];
+        for r in 0..out_features {
+            for c in 0..in_features {
+                let byte = packed[r * cols + c / 2];
+                qweight[r * in_features + c] = if c % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            }
+        }
+        QuantizedLinear { grid, out_features, in_features, qweight, scales, zeros }
+    }
+
+    /// Deployment size in bytes (packed levels + params), the quantity the
+    /// paper's "Mem (GB)" columns report per weight matrix.
+    pub fn nbytes(&self) -> usize {
+        let level_bytes = if self.grid.bits == 4 {
+            self.out_features * self.in_features.div_ceil(2)
+        } else {
+            self.out_features * self.in_features
+        };
+        level_bytes + (self.scales.len() + self.zeros.len()) * 4
+    }
+
+    /// Worst-case absolute reconstruction error of this grid's step.
+    pub fn max_step(&self) -> f32 {
+        self.scales.iter().cloned().fold(0.0, f32::max) * 0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{prop_assert, Runner};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn rtn_roundtrip_error_bounded() {
+        let mut rng = Pcg64::seeded(41);
+        let w = Tensor::randn(&[8, 32], 1.0, &mut rng);
+        let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 16));
+        let deq = q.dequantize();
+        // error bounded by half a step per group
+        for r in 0..8 {
+            for c in 0..32 {
+                let step = q.scale_at(r, c);
+                assert!(
+                    (deq.at(r, c) - w.at(r, c)).abs() <= 0.5 * step + 1e-6,
+                    "({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eight_bit_is_finer_than_four_bit() {
+        let mut rng = Pcg64::seeded(42);
+        let w = Tensor::randn(&[4, 64], 1.0, &mut rng);
+        let q4 = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 64));
+        let q8 = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(8, 64));
+        let e4 = q4.dequantize().sub(&w).frob_sq();
+        let e8 = q8.dequantize().sub(&w).frob_sq();
+        assert!(e8 < e4 / 4.0, "e8={e8} e4={e4}");
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Pcg64::seeded(43);
+        for in_f in [6usize, 7, 16, 33] {
+            let w = Tensor::randn(&[5, in_f], 1.0, &mut rng);
+            let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 8));
+            let packed = q.pack();
+            let q2 = QuantizedLinear::unpack4(
+                &packed,
+                q.grid,
+                q.out_features,
+                q.in_features,
+                q.scales.clone(),
+                q.zeros.clone(),
+            );
+            assert_eq!(q.qweight, q2.qweight, "in_f={in_f}");
+        }
+    }
+
+    #[test]
+    fn zero_stays_exact() {
+        // find_params includes 0 in the range, so an exact 0 weight must
+        // round-trip to exactly 0 — GPTQ relies on this for pruned weights.
+        let w = Tensor::from_vec(&[1, 4], vec![0.0, 0.5, 1.0, -0.25]);
+        let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 4));
+        assert_eq!(q.deq_at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn all_zero_group_safe() {
+        let w = Tensor::zeros(&[2, 8]);
+        let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 4));
+        let deq = q.dequantize();
+        assert_eq!(deq.data(), w.data());
+    }
+
+    #[test]
+    fn projection_is_idempotent_property() {
+        Runner::new("grid_projection_idempotent", 64).run(|g| {
+            let rows = g.usize_in(1..6);
+            let cols = g.usize_in(1..40);
+            let gs = g.usize_in(1..cols.max(2));
+            let data = g.matrix(rows, cols, 2.0);
+            let w = Tensor::from_vec(&[rows, cols], data);
+            let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, gs));
+            let p1 = q.project(&w);
+            let p2 = q.project(&p1);
+            prop_assert(p1.max_abs_diff(&p2) < 1e-6, "Q(Q(w)) == Q(w)")
+        });
+    }
+
+    #[test]
+    fn quantize_levels_in_range_property() {
+        Runner::new("grid_levels_in_range", 64).run(|g| {
+            let bits = g.usize_in(2..9) as u32;
+            let grid = QuantGrid::new(bits, 8);
+            let vals = g.vec_f32(1..64, -100.0..100.0);
+            let (scale, zero) = grid.find_params(&vals);
+            for &v in &vals {
+                let q = grid.quantize_val(v, scale, zero);
+                prop_assert(
+                    (q as f32) <= grid.maxq(),
+                    "level within maxq",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nbytes_reflects_4bit_compression() {
+        let mut rng = Pcg64::seeded(44);
+        let w = Tensor::randn(&[128, 256], 1.0, &mut rng);
+        let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 128));
+        let fp_bytes = 128 * 256 * 4;
+        // 4-bit + params should be well under 30% of fp32.
+        assert!((q.nbytes() as f64) < 0.30 * fp_bytes as f64);
+    }
+}

@@ -1,0 +1,66 @@
+//! The quantization core: the paper's contribution.
+//!
+//! * [`grid`]  — the 4-bit/8-bit asymmetric, group-wise quantization grid
+//!   (`Q(·)` in the paper), nibble packing, and round-to-nearest baseline.
+//! * [`calib`] — Hessian accumulation `H ≈ XᵀX` over the calibration
+//!   stream and the **single-instance store** (last batch `X_last`,
+//!   `Y_orig` retained in memory — paper §3.2).
+//! * [`gptq`]  — stage 1: GPTQ blockwise greedy quantization with Cholesky
+//!   error feedback (the baseline, and RPIQ's initializer).
+//! * [`rpiq`]  — stage 2: the residual-projected, multi-collaborative
+//!   closed-loop Gauss–Seidel block refinement (paper §3.1/§3.3).
+//! * [`cmdq`]  — the cross-modal differentiated quantization policy used
+//!   for the VLM experiments (paper §4.1, ref. [39]).
+
+pub mod calib;
+pub mod cmdq;
+pub mod grid;
+pub mod gptq;
+pub mod rpiq;
+
+pub use calib::{HessianAccumulator, SingleInstance};
+pub use cmdq::{CmdqPolicy, Modality};
+pub use grid::{QuantGrid, QuantizedLinear};
+pub use gptq::{gptq_quantize, GptqOutput};
+pub use rpiq::{rpiq_refine, RpiqOutput, RpiqParams};
+
+/// Static quantization configuration for one weight matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantConfig {
+    /// Bit width (2..=8 supported; the paper uses 4, CMDQ vision uses 8).
+    pub bits: u32,
+    /// Group size along the input-channel axis; one (scale, zero) pair per
+    /// group per output row. The paper uses 128.
+    pub group_size: usize,
+    /// GPTQ lazy-update block width (columns quantized before the trailing
+    /// weight update is flushed). 128 in the reference implementation.
+    pub block_size: usize,
+    /// Hessian damping fraction (paper Eq. 10), default 0.01.
+    pub percdamp: f32,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig { bits: 4, group_size: 128, block_size: 128, percdamp: 0.01 }
+    }
+}
+
+impl QuantConfig {
+    pub fn with_bits(mut self, bits: u32) -> Self {
+        self.bits = bits;
+        self
+    }
+
+    pub fn with_group_size(mut self, gs: usize) -> Self {
+        self.group_size = gs;
+        self
+    }
+
+    /// Clamp the group/block sizes to the actual number of input channels
+    /// (tiny test layers are narrower than the defaults).
+    pub fn fitted(mut self, in_features: usize) -> Self {
+        self.group_size = self.group_size.min(in_features).max(1);
+        self.block_size = self.block_size.min(in_features).max(1);
+        self
+    }
+}

@@ -1,0 +1,161 @@
+//! Report formatting: the benches print their results as the paper's
+//! tables; this module renders aligned ASCII tables, CSV series (for the
+//! figures), and JSON blobs for machine consumption.
+
+use crate::jsonx::Json;
+
+/// A simple aligned-text table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                line.push_str(&format!("{:width$}", cells[i], width = widths[i]));
+                if i + 1 < ncols {
+                    line.push_str("  ");
+                }
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push_str(&format!(
+            "{}\n",
+            "-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1))
+        ));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Machine-readable JSON form.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut obj = Json::obj();
+                for (h, c) in self.headers.iter().zip(r.iter()) {
+                    obj = obj.with(h, Json::Str(c.clone()));
+                }
+                obj
+            })
+            .collect();
+        Json::obj()
+            .with("title", Json::Str(self.title.clone()))
+            .with("rows", Json::Arr(rows))
+    }
+}
+
+/// CSV series writer (Fig 5-style convergence trajectories).
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = headers.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format helpers.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn mib(bytes: i64) -> String {
+    format!("{:.2} MiB", bytes as f64 / (1 << 20) as f64)
+}
+
+pub fn pct_delta(ours: f64, base: f64) -> String {
+    if base == 0.0 {
+        return "n/a".into();
+    }
+    format!("{:+.1}%", 100.0 * (ours - base) / base)
+}
+
+/// Write a report file under `reports/`, creating the directory.
+pub fn write_report(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["model", "acc"]);
+        t.row(vec!["sim-opt-6.7b".into(), "44.25".into()]);
+        t.row(vec!["q".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // all data lines same width alignment: "model" column padded
+        assert!(lines[1].starts_with("model"));
+        assert!(lines[3].starts_with("sim-opt-6.7b"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_and_json_shapes() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        let c = csv(&["x", "y"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(c, "x,y\n1,2\n");
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(pct_delta(110.0, 100.0), "+10.0%");
+        assert_eq!(mib(1 << 20), "1.00 MiB");
+    }
+}

@@ -1,0 +1,118 @@
+//! Argument marshalling for the `lm_logits_*` / `lm_qlogits_*` artifacts.
+//!
+//! The flat parameter ORDER here mirrors `python/compile/model.py`'s
+//! `param_order` / `qparam_order` exactly — that ordering is the contract
+//! between Layer 2 and Layer 3, and the integration tests verify numerics
+//! end to end through it.
+
+use super::Arg;
+use crate::model::weights::LmWeights;
+use crate::model::QuantizedLm;
+use crate::tensor::Tensor;
+
+/// Token argument (i32, `[S]`).
+pub fn tokens_arg(tokens: &[u32]) -> Arg {
+    Arg::I32(
+        tokens.iter().map(|&t| t as i32).collect(),
+        vec![tokens.len()],
+    )
+}
+
+/// fp-variant arguments: tokens followed by `param_order`.
+pub fn lm_fp_args(w: &LmWeights, tokens: &[u32]) -> Vec<Arg> {
+    let mut args = vec![tokens_arg(tokens)];
+    args.push(Arg::F32(w.tok_emb.clone()));
+    args.push(Arg::F32(w.pos_emb.clone()));
+    for l in &w.layers {
+        args.push(Arg::F32(l.ln1_g.clone()));
+        args.push(Arg::F32(l.ln1_b.clone()));
+        args.push(Arg::F32(l.wq.clone()));
+        args.push(Arg::F32(l.wk.clone()));
+        args.push(Arg::F32(l.wv.clone()));
+        args.push(Arg::F32(l.wo.clone()));
+        args.push(Arg::F32(l.ln2_g.clone()));
+        args.push(Arg::F32(l.ln2_b.clone()));
+        args.push(Arg::F32(l.w_up.clone()));
+        args.push(Arg::F32(l.w_down.clone()));
+    }
+    args.push(Arg::F32(w.lnf_g.clone()));
+    args.push(Arg::F32(w.lnf_b.clone()));
+    if let Some(h) = &w.head {
+        args.push(Arg::F32(h.clone()));
+    }
+    args
+}
+
+fn qlinear_args(q: &crate::quant::QuantizedLinear, args: &mut Vec<Arg>) {
+    let levels: Vec<i32> = q.qweight.iter().map(|&b| b as i32).collect();
+    args.push(Arg::I32(levels, vec![q.out_features, q.in_features]));
+    let ng = q.n_groups();
+    args.push(Arg::F32(Tensor::from_vec(
+        &[q.out_features, ng],
+        q.scales.clone(),
+    )));
+    args.push(Arg::F32(Tensor::from_vec(
+        &[q.out_features, ng],
+        q.zeros.clone(),
+    )));
+}
+
+/// quant-variant arguments: tokens followed by `qparam_order`.
+pub fn lm_q_args(qlm: &QuantizedLm, tokens: &[u32]) -> Vec<Arg> {
+    let w = &qlm.base;
+    let mut args = vec![tokens_arg(tokens)];
+    args.push(Arg::F32(w.tok_emb.clone()));
+    args.push(Arg::F32(w.pos_emb.clone()));
+    for (i, l) in w.layers.iter().enumerate() {
+        args.push(Arg::F32(l.ln1_g.clone()));
+        args.push(Arg::F32(l.ln1_b.clone()));
+        for field in ["attn.q", "attn.k", "attn.v", "attn.out"] {
+            qlinear_args(&qlm.qlinears[&format!("lm.layer{i}.{field}")], &mut args);
+        }
+        args.push(Arg::F32(l.ln2_g.clone()));
+        args.push(Arg::F32(l.ln2_b.clone()));
+        qlinear_args(&qlm.qlinears[&format!("lm.layer{i}.mlp.up")], &mut args);
+        qlinear_args(&qlm.qlinears[&format!("lm.layer{i}.mlp.down")], &mut args);
+    }
+    args.push(Arg::F32(w.lnf_g.clone()));
+    args.push(Arg::F32(w.lnf_b.clone()));
+    if w.head.is_some() {
+        qlinear_args(&qlm.qlinears["lm.head"], &mut args);
+    }
+    args
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::quant::{QuantGrid, QuantizedLinear};
+    use crate::rng::Pcg64;
+    use std::collections::HashMap;
+
+    #[test]
+    fn fp_arg_count_matches_param_order() {
+        // per-layer 10 params + tok/pos + lnf 2 (+ head if untied), +1 tokens
+        let mut cfg = ModelConfig::test_tiny(32);
+        cfg.tied_head = false;
+        let mut rng = Pcg64::seeded(1101);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let args = lm_fp_args(&w, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(args.len(), 1 + 2 + cfg.n_layers * 10 + 2 + 1);
+    }
+
+    #[test]
+    fn q_arg_count_triples_linears() {
+        let cfg = ModelConfig::test_tiny(32); // tied head
+        let mut rng = Pcg64::seeded(1102);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let mut ql = HashMap::new();
+        for (name, t) in w.linears() {
+            ql.insert(name, QuantizedLinear::quantize_rtn(t, QuantGrid::new(4, 8)));
+        }
+        let qlm = QuantizedLm::new(w, ql);
+        let args = lm_q_args(&qlm, &[0; 8]);
+        // 1 tokens + 2 emb + per layer (2 ln + 6 linears×3 + 2 ln) + 2 lnf
+        assert_eq!(args.len(), 1 + 2 + cfg.n_layers * (4 + 18) + 2);
+    }
+}

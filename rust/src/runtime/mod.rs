@@ -1,0 +1,274 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** + `manifest.json`) and executes them on the CPU PJRT
+//! client. This is the bridge between Layer 3 (this crate) and Layers 1–2
+//! (JAX + Pallas, build-time only).
+//!
+//! Wiring follows `/opt/xla-example/load_hlo`:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. Compiled
+//! executables are cached per entry name; inputs/outputs are validated
+//! against the manifest so a stale `artifacts/` directory fails loudly
+//! instead of mis-executing.
+
+pub mod lm_args;
+
+use crate::jsonx::Json;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Dtypes the artifact boundary supports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" | "float32" => Ok(Dtype::F32),
+            "i32" | "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}' in manifest"),
+        }
+    }
+}
+
+/// One artifact entry as declared by the manifest.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<(Vec<usize>, Dtype)>,
+    pub outputs: Vec<(Vec<usize>, Dtype)>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, Entry>,
+}
+
+impl ArtifactRegistry {
+    /// Load and validate the manifest.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
+        let json = Json::parse(&text).context("parse manifest.json")?;
+        let entries_json = json
+            .get("entries")
+            .and_then(|e| e.as_obj())
+            .context("manifest missing 'entries'")?;
+        let mut entries = HashMap::new();
+        for (name, spec) in entries_json {
+            let parse_sig = |key: &str| -> Result<Vec<(Vec<usize>, Dtype)>> {
+                spec.get(key)
+                    .and_then(|v| v.as_arr())
+                    .with_context(|| format!("entry {name} missing '{key}'"))?
+                    .iter()
+                    .map(|io| {
+                        let shape = io
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .context("shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim"))
+                            .collect::<Result<Vec<_>>>()?;
+                        let dtype =
+                            Dtype::parse(io.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32"))?;
+                        Ok((shape, dtype))
+                    })
+                    .collect()
+            };
+            let file = dir.join(
+                spec.get("file")
+                    .and_then(|f| f.as_str())
+                    .with_context(|| format!("entry {name} missing 'file'"))?,
+            );
+            if !file.exists() {
+                bail!("artifact file {} missing (re-run `make artifacts`)", file.display());
+            }
+            entries.insert(
+                name.clone(),
+                Entry { name: name.clone(), file, inputs: parse_sig("inputs")?, outputs: parse_sig("outputs")? },
+            );
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("no artifact entry '{name}'; have: {:?}", {
+                let mut k: Vec<&String> = self.entries.keys().collect();
+                k.sort();
+                k
+            }))
+    }
+}
+
+/// A runtime argument.
+pub enum Arg {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Arg {
+    fn shape(&self) -> &[usize] {
+        match self {
+            Arg::F32(t) => t.shape(),
+            Arg::I32(_, s) => s,
+        }
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            Arg::F32(_) => Dtype::F32,
+            Arg::I32(..) => Dtype::I32,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Arg::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+            Arg::I32(v, _) => xla::Literal::vec1(v).reshape(&dims)?,
+        })
+    }
+}
+
+/// Compiled-executable cache over a PJRT CPU client.
+pub struct Engine {
+    pub registry: ArtifactRegistry,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create an engine over `artifacts/`.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let registry = ArtifactRegistry::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine { registry, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an entry.
+    fn compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.registry.entry(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text for '{name}'"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile '{name}'"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry. Inputs are validated against the manifest; the
+    /// (tupled) outputs come back as f32 tensors.
+    pub fn run(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let entry = self.registry.entry(name)?.clone();
+        if args.len() != entry.inputs.len() {
+            bail!(
+                "'{name}' expects {} inputs, got {}",
+                entry.inputs.len(),
+                args.len()
+            );
+        }
+        for (i, (arg, (shape, dtype))) in args.iter().zip(entry.inputs.iter()).enumerate() {
+            if arg.shape() != shape.as_slice() || arg.dtype() != *dtype {
+                bail!(
+                    "'{name}' input {i}: expected {:?} {:?}, got {:?} {:?}",
+                    shape,
+                    dtype,
+                    arg.shape(),
+                    arg.dtype()
+                );
+            }
+        }
+        self.compiled(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "'{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, (shape, _)) in parts.into_iter().zip(entry.outputs.iter()) {
+            let v: Vec<f32> = lit.to_vec()?;
+            out.push(Tensor::from_vec(shape, v));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_rejects_missing_dir() {
+        let err = ArtifactRegistry::load(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn registry_parses_manifest_and_validates_files() {
+        let dir = std::env::temp_dir().join("rpiq_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("f.hlo.txt"), "HloModule fake").unwrap();
+        let manifest = r#"{
+            "entries": {
+                "f": {
+                    "file": "f.hlo.txt",
+                    "inputs": [{"shape": [2, 3], "dtype": "f32"}],
+                    "outputs": [{"shape": [2], "dtype": "f32"}]
+                }
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        let e = reg.entry("f").unwrap();
+        assert_eq!(e.inputs, vec![(vec![2, 3], Dtype::F32)]);
+        assert!(reg.entry("missing").is_err());
+        // missing file fails load
+        let manifest2 = r#"{"entries": {"g": {"file": "nope.hlo.txt", "inputs": [], "outputs": []}}}"#;
+        std::fs::write(dir.join("manifest.json"), manifest2).unwrap();
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn arg_shapes_and_dtypes() {
+        let a = Arg::F32(Tensor::zeros(&[2, 2]));
+        assert_eq!(a.shape(), &[2, 2]);
+        assert_eq!(a.dtype(), Dtype::F32);
+        let b = Arg::I32(vec![1, 2, 3], vec![3]);
+        assert_eq!(b.dtype(), Dtype::I32);
+        assert!(b.to_literal().is_ok());
+    }
+}

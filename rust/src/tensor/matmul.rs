@@ -1,0 +1,195 @@
+//! Blocked matrix multiplication kernels.
+//!
+//! Four layouts are provided because the quantization engines and the
+//! trainer each have a natural one:
+//!
+//! * [`matmul`]        — `C = A·B`        (A: m×k, B: k×n)
+//! * [`matmul_a_bt`]   — `C = A·Bᵀ`       (A: m×k, B: n×k) — linear layers,
+//!   where weights are stored `[out, in]` like the paper's `W ∈ R^{Cout×Cin}`.
+//! * [`matmul_at_b`]   — `C = Aᵀ·B`       (A: k×m, B: k×n) — Hessian
+//!   accumulation `XᵀX` and weight gradients.
+//!
+//! The kernels are cache-blocked over k and use the unrolled [`dot`] /
+//! [`axpy_slice`] primitives so LLVM emits SIMD; on the single-core CI
+//! machine this reaches a few GFLOP/s which is the practical roofline
+//! without hand-written intrinsics (EXPERIMENTS.md §Perf records the
+//! measured numbers and iteration log).
+
+use super::{axpy_slice, dot, Tensor};
+
+/// `C = A·Bᵀ` where A is m×k and B is n×k. This is the hot layout: every
+/// linear layer forward is `y = x·Wᵀ` with W stored `[out, in]`, and both
+/// operands walk rows contiguously.
+pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_a_bt: inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_a_bt_into(a, b, &mut c);
+    c
+}
+
+/// In-place variant of [`matmul_a_bt`] writing into a preallocated output.
+pub fn matmul_a_bt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.rows();
+    assert_eq!(b.cols(), k);
+    assert_eq!(c.rows(), m);
+    assert_eq!(c.cols(), n);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cd[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] = dot(arow, &bd[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// `C = A·B` with A m×k, B k×n. Implemented as rank-1 style row updates
+/// (`c_row += a_ik * b_row_k`) so B is traversed contiguously.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul: inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// In-place variant of [`matmul`]; `c` is overwritten.
+pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k);
+    assert_eq!(c.rows(), m);
+    assert_eq!(c.cols(), n);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    cd.fill(0.0);
+    for i in 0..m {
+        let crow = &mut cd[i * n..(i + 1) * n];
+        let arow = &ad[i * k..(i + 1) * k];
+        for (p, &aip) in arow.iter().enumerate() {
+            if aip != 0.0 {
+                axpy_slice(crow, aip, &bd[p * n..(p + 1) * n]);
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ·B` with A k×m, B k×n (result m×n). Used for `XᵀX` Hessian
+/// accumulation and for weight gradients `∂W = ∂yᵀ·x` in the trainer.
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k, "matmul_at_b: inner dims");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_at_b_into(a, b, &mut c);
+    c
+}
+
+/// In-place variant of [`matmul_at_b`]: `c += Aᵀ·B` (accumulating — callers
+/// like the Hessian builder rely on accumulation).
+pub fn matmul_at_b_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    let (k, m) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k);
+    assert_eq!(c.rows(), m);
+    assert_eq!(c.cols(), n);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for p in 0..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for (i, &aip) in arow.iter().enumerate() {
+            if aip != 0.0 {
+                axpy_slice(&mut cd[i * n..(i + 1) * n], aip, brow);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        let n = b.cols();
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for p in 0..k {
+                    s += (a.at(i, p) as f64) * (b.at(p, j) as f64);
+                }
+                c.set(i, j, s as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::seeded(21);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 4), (8, 16, 8), (13, 31, 17)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let cn = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&cn) < 1e-3, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn a_bt_matches_naive() {
+        let mut rng = Pcg64::seeded(22);
+        for (m, k, n) in [(2, 3, 2), (7, 9, 5), (16, 32, 16)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let c = matmul_a_bt(&a, &b);
+            let cn = naive_matmul(&a, &b.transpose());
+            assert!(c.max_abs_diff(&cn) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn at_b_matches_naive() {
+        let mut rng = Pcg64::seeded(23);
+        for (k, m, n) in [(4, 3, 5), (9, 9, 9), (32, 8, 24)] {
+            let a = Tensor::randn(&[k, m], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c = matmul_at_b(&a, &b);
+            let cn = naive_matmul(&a.transpose(), &b);
+            assert!(c.max_abs_diff(&cn) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn at_b_into_accumulates() {
+        let mut rng = Pcg64::seeded(24);
+        let a = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let mut acc = Tensor::zeros(&[4, 4]);
+        matmul_at_b_into(&a, &b, &mut acc);
+        matmul_at_b_into(&a, &b, &mut acc);
+        let once = matmul_at_b(&a, &b);
+        let mut twice = once.clone();
+        twice.add_assign(&once);
+        assert!(acc.max_abs_diff(&twice) < 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::seeded(25);
+        let a = Tensor::randn(&[5, 5], 1.0, &mut rng);
+        let c = matmul(&a, &Tensor::eye(5));
+        assert!(c.max_abs_diff(&a) < 1e-6);
+    }
+}

@@ -1,0 +1,371 @@
+//! Dense row-major f32 tensors and the blocked matmul kernels every other
+//! subsystem (quantization engines, the trainer, evaluation) is built on.
+//!
+//! Offline builds cannot pull `ndarray`/`nalgebra`, and the paper's
+//! algorithms only need a small, predictable surface: contiguous storage,
+//! 2-D matmul in the four transpose flavours, row slicing, and elementwise
+//! arithmetic. Keeping the type this small also makes the byte-accurate
+//! memory ledger (`crate::metrics`) trivial to wire in.
+
+mod matmul;
+
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into, matmul_a_bt_into, matmul_at_b_into};
+
+/// A dense, contiguous, row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Tensor from existing data (must match the shape volume).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with {} elements",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// Gaussian-filled tensor.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::rng::Pcg64) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows of a 2-D tensor.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() requires 2-D");
+        self.shape[0]
+    }
+
+    /// Number of columns of a 2-D tensor.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() requires 2-D");
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D element access.
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// 2-D element assignment.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        self.data[r * cols + c] = v;
+    }
+
+    /// Borrow row `r` of a 2-D tensor.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        let cols = self.shape[1];
+        &self.data[r * cols..(r + 1) * cols]
+    }
+
+    /// Mutable row of a 2-D tensor.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let cols = self.shape[1];
+        &mut self.data[r * cols..(r + 1) * cols]
+    }
+
+    /// Reshape in place (volume-preserving).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape to {:?} from {:?}",
+            shape,
+            self.shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Transpose of a 2-D tensor (materialized).
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Copy of columns `[c0, c1)` of a 2-D tensor.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert!(c0 <= c1 && c1 <= c);
+        let mut out = Tensor::zeros(&[r, c1 - c0]);
+        for i in 0..r {
+            out.data[i * (c1 - c0)..(i + 1) * (c1 - c0)]
+                .copy_from_slice(&self.data[i * c + c0..i * c + c1]);
+        }
+        out
+    }
+
+    /// Copy of rows `[r0, r1)` of a 2-D tensor.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        assert!(r0 <= r1 && r1 <= self.shape[0]);
+        Tensor::from_vec(&[r1 - r0, c], self.data[r0 * c..r1 * c].to_vec())
+    }
+
+    /// Write `block` into columns `[c0, c0+block.cols())`.
+    pub fn set_cols(&mut self, c0: usize, block: &Tensor) {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let bc = block.cols();
+        assert_eq!(block.rows(), r);
+        assert!(c0 + bc <= c);
+        for i in 0..r {
+            self.data[i * c + c0..i * c + c0 + bc]
+                .copy_from_slice(&block.data[i * bc..(i + 1) * bc]);
+        }
+    }
+
+    /// Elementwise in-place add.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise in-place subtract.
+    pub fn sub_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a -= b;
+        }
+    }
+
+    /// Elementwise difference `self - other` (new tensor).
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.sub_assign(other);
+        out
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// `self += s * other` (axpy).
+    pub fn axpy(&mut self, s: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Squared Frobenius norm.
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.frob_sq().sqrt()
+    }
+
+    /// Max |a - b| between two tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Byte footprint of the payload (used by the memory ledger).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Dot product of two equal-length slices, 4-way unrolled so LLVM
+/// auto-vectorizes it. This is the innermost loop of the entire repo.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 8;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+        s4 += a[j + 4] * b[j + 4];
+        s5 += a[j + 5] * b[j + 5];
+        s6 += a[j + 6] * b[j + 6];
+        s7 += a[j + 7] * b[j + 7];
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * 8..n {
+        tail += a[j] * b[j];
+    }
+    (s0 + s4) + (s1 + s5) + (s2 + s6) + (s3 + s7) + tail
+}
+
+/// `y += s * x` over raw slices.
+#[inline]
+pub fn axpy_slice(y: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += s * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn zeros_eye_shapes() {
+        let z = Tensor::zeros(&[3, 4]);
+        assert_eq!(z.shape(), &[3, 4]);
+        assert_eq!(z.len(), 12);
+        let i = Tensor::eye(3);
+        assert_eq!(i.at(0, 0), 1.0);
+        assert_eq!(i.at(0, 1), 0.0);
+        assert_eq!(i.at(2, 2), 1.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::seeded(9);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn slice_and_set_cols_roundtrip() {
+        let mut rng = Pcg64::seeded(10);
+        let a = Tensor::randn(&[4, 10], 1.0, &mut rng);
+        let block = a.slice_cols(3, 7);
+        assert_eq!(block.shape(), &[4, 4]);
+        let mut b = Tensor::zeros(&[4, 10]);
+        b.set_cols(3, &block);
+        for i in 0..4 {
+            for j in 3..7 {
+                assert_eq!(b.at(i, j), a.at(i, j));
+            }
+            assert_eq!(b.at(i, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn slice_rows_matches() {
+        let mut rng = Pcg64::seeded(11);
+        let a = Tensor::randn(&[6, 3], 1.0, &mut rng);
+        let r = a.slice_rows(2, 5);
+        assert_eq!(r.shape(), &[3, 3]);
+        assert_eq!(r.row(0), a.row(2));
+        assert_eq!(r.row(2), a.row(4));
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Pcg64::seeded(12);
+        for n in [0usize, 1, 7, 8, 9, 64, 100] {
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn frob_and_axpy() {
+        let a = Tensor::from_vec(&[2, 2], vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((a.frob() - 5.0).abs() < 1e-6);
+        let mut b = Tensor::zeros(&[2, 2]);
+        b.axpy(2.0, &a);
+        assert_eq!(b.at(0, 0), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,377 @@
+//! Training substrate: manual-gradient backprop through the transformer
+//! plus an Adam optimizer.
+//!
+//! Why this exists: the paper quantizes *pretrained* checkpoints. Offline,
+//! the only way to obtain a checkpoint whose PPL/accuracy degradation
+//! under quantization is meaningful is to train one — so the repo trains
+//! its subject models from scratch on the synthetic corpora
+//! (`rpiq pretrain`). The backward pass composes the finite-difference-
+//! verified primitives in [`crate::model::ops`]; an end-to-end gradient
+//! check lives in this module's tests.
+
+use crate::model::forward::{lm_forward_training, shift_targets, FwdRecord};
+use crate::model::ops::*;
+use crate::model::weights::LmWeights;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Gradients, keyed like [`LmWeights::named_tensors`].
+pub type Grads = HashMap<String, Tensor>;
+
+/// Backward pass: given the forward record and `dlogits`, produce all
+/// parameter gradients.
+pub fn lm_backward(w: &LmWeights, rec: &FwdRecord, dlogits: &Tensor) -> Grads {
+    let cfg = &w.config;
+    let mut grads: Grads = HashMap::new();
+    let (batch, seq) = (rec.batch, rec.seq);
+
+    // head: logits = lnf_out · Hᵀ
+    let (mut dx, dhead) = linear_bwd(&rec.lnf_out, w.head_matrix(), dlogits);
+    let head_key = if w.head.is_some() { "lm.head" } else { "tok_emb" };
+    grads.insert(head_key.to_string(), dhead);
+
+    // final layernorm
+    let (dxf, dg, db) = layernorm_bwd(&rec.x_final, &w.lnf_g, &rec.lnf_mean, &rec.lnf_rstd, &dx);
+    grads.insert("lnf.g".into(), dg);
+    grads.insert("lnf.b".into(), db);
+    dx = dxf;
+
+    // layers in reverse
+    for (li, (l, r)) in w.layers.iter().zip(rec.layers.iter()).enumerate().rev() {
+        let p = |s: &str| format!("lm.layer{li}.{s}");
+        // --- MLP branch: x = x_mid + down(act(up(ln2(x_mid)))) ---
+        // residual: dx flows both into the branch and straight through.
+        let (dup_act, dw_down) = linear_bwd(&r.up_act, &l.w_down, &dx);
+        grads.insert(p("mlp.down"), dw_down);
+        let dup_pre = act_bwd(&r.up_pre, &dup_act, cfg.activation);
+        let (dln2, dw_up) = linear_bwd(&r.ln2_out, &l.w_up, &dup_pre);
+        grads.insert(p("mlp.up"), dw_up);
+        let (dx_mid_branch, dg2, db2) =
+            layernorm_bwd(&r.x_mid, &l.ln2_g, &r.ln2_mean, &r.ln2_rstd, &dln2);
+        grads.insert(p("ln2.g"), dg2);
+        grads.insert(p("ln2.b"), db2);
+        dx.add_assign(&dx_mid_branch);
+
+        // --- attention branch: x_mid = x_in + wo(attn(q,k,v)) ---
+        let (dctx, dw_o) = linear_bwd(&r.ctx, &l.wo, &dx);
+        grads.insert(p("attn.out"), dw_o);
+        let (dq, dk, dv) =
+            attention_bwd(&r.q, &r.k, &r.v, &r.probs, &dctx, batch, seq, cfg.n_heads);
+        let (dln1_q, dw_q) = linear_bwd(&r.ln1_out, &l.wq, &dq);
+        let (dln1_k, dw_k) = linear_bwd(&r.ln1_out, &l.wk, &dk);
+        let (dln1_v, dw_v) = linear_bwd(&r.ln1_out, &l.wv, &dv);
+        grads.insert(p("attn.q"), dw_q);
+        grads.insert(p("attn.k"), dw_k);
+        grads.insert(p("attn.v"), dw_v);
+        let mut dln1 = dln1_q;
+        dln1.add_assign(&dln1_k);
+        dln1.add_assign(&dln1_v);
+        let (dx_in_branch, dg1, db1) =
+            layernorm_bwd(&r.x_in, &l.ln1_g, &r.ln1_mean, &r.ln1_rstd, &dln1);
+        grads.insert(p("ln1.g"), dg1);
+        grads.insert(p("ln1.b"), db1);
+        dx.add_assign(&dx_in_branch);
+    }
+
+    // embeddings: x0[i] = tok_emb[tokens[i]] + pos_emb[i % seq]
+    // handled by the caller via `accumulate_embedding_grads` (needs tokens).
+    grads.insert("__demb".into(), dx);
+    grads
+}
+
+/// Scatter the embedding gradient into tok_emb / pos_emb grads.
+pub fn accumulate_embedding_grads(
+    w: &LmWeights,
+    grads: &mut Grads,
+    tokens: &[u32],
+    batch: usize,
+    seq: usize,
+) {
+    let demb = grads.remove("__demb").expect("lm_backward ran");
+    let d = w.config.d_model;
+    let mut dtok = grads
+        .remove("tok_emb")
+        .unwrap_or_else(|| Tensor::zeros(&[w.config.vocab, d]));
+    let mut dpos = Tensor::zeros(&[w.config.seq_len, d]);
+    for i in 0..batch * seq {
+        let t = tokens[i] as usize;
+        let row = demb.row(i);
+        let trow = dtok.row_mut(t);
+        for j in 0..d {
+            trow[j] += row[j];
+        }
+        let prow = dpos.row_mut(i % seq);
+        for j in 0..d {
+            prow[j] += row[j];
+        }
+    }
+    grads.insert("tok_emb".into(), dtok);
+    grads.insert("pos_emb".into(), dpos);
+}
+
+/// One full loss + gradient evaluation.
+pub fn loss_and_grads(
+    w: &LmWeights,
+    tokens: &[u32],
+    batch: usize,
+    seq: usize,
+) -> (f64, Grads) {
+    let rec = lm_forward_training(w, tokens, batch, seq);
+    let targets = shift_targets(tokens, batch, seq);
+    let (loss, dlogits) = cross_entropy(&rec.logits, &targets, -100);
+    let mut grads = lm_backward(w, &rec, &dlogits);
+    accumulate_embedding_grads(w, &mut grads, tokens, batch, seq);
+    (loss, grads)
+}
+
+/// Adam optimizer with decoupled weight decay and linear warmup.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub warmup_steps: usize,
+    pub grad_clip: f32,
+    /// Cosine decay horizon (steps); `None` = constant lr after warmup.
+    cosine_total: Option<usize>,
+    step: usize,
+    m: HashMap<String, Vec<f32>>,
+    v: HashMap<String, Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            warmup_steps: 20,
+            grad_clip: 1.0,
+            cosine_total: None,
+            step: 0,
+            m: HashMap::new(),
+            v: HashMap::new(),
+        }
+    }
+
+    /// Set a cosine-decay horizon: after warmup, lr decays to 10% of peak
+    /// by `total_steps`.
+    pub fn with_cosine(mut self, total_steps: usize) -> Self {
+        self.cosine_total = Some(total_steps);
+        self
+    }
+
+    /// Apply one update.
+    pub fn update(&mut self, w: &mut LmWeights, grads: &Grads) {
+        self.step += 1;
+        let warm = ((self.step as f32) / (self.warmup_steps.max(1) as f32)).min(1.0);
+        let decay = match self.cosine_total {
+            Some(total) if total > 0 => {
+                let t = (self.step as f32 / total as f32).min(1.0);
+                0.1 + 0.45 * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+            _ => 1.0,
+        };
+        let lr = self.lr * warm * decay;
+        // global grad-norm clip
+        let mut norm_sq = 0.0f64;
+        for g in grads.values() {
+            norm_sq += g.frob_sq();
+        }
+        let norm = norm_sq.sqrt() as f32;
+        let clip_scale = if norm > self.grad_clip { self.grad_clip / norm } else { 1.0 };
+
+        let bc1 = 1.0 - self.beta1.powi(self.step as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.step as i32);
+        let names: Vec<String> = grads.keys().cloned().collect();
+        for name in names {
+            let g = &grads[&name];
+            let p = match w.named_tensor_mut(&name) {
+                Some(p) => p,
+                None => continue,
+            };
+            let n = p.len();
+            let m = self.m.entry(name.clone()).or_insert_with(|| vec![0.0; n]);
+            let v = self.v.entry(name.clone()).or_insert_with(|| vec![0.0; n]);
+            let decay = if name.contains("ln") || name.contains(".b") {
+                0.0 // no decay on norms/biases
+            } else {
+                self.weight_decay
+            };
+            let pd = p.data_mut();
+            let gd = g.data();
+            for i in 0..n {
+                let gi = gd[i] * clip_scale;
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                pd[i] -= lr * (mhat / (vhat.sqrt() + self.eps) + decay * pd[i]);
+            }
+        }
+    }
+
+    pub fn steps_taken(&self) -> usize {
+        self.step
+    }
+}
+
+/// Training loop driver. Batches are drawn by the provided sampler
+/// (`data::corpus` supplies them); returns the loss curve.
+pub struct Trainer {
+    pub adam: Adam,
+    pub batch: usize,
+    pub log_every: usize,
+}
+
+impl Trainer {
+    pub fn new(lr: f32, batch: usize) -> Self {
+        Trainer { adam: Adam::new(lr), batch, log_every: 20 }
+    }
+
+    /// Run `steps` optimizer steps. `sample` must fill `batch·seq` token
+    /// ids per call. Returns `(step, loss)` pairs.
+    pub fn train<F>(
+        &mut self,
+        w: &mut LmWeights,
+        steps: usize,
+        mut sample: F,
+        mut log: impl FnMut(usize, f64),
+    ) -> Vec<(usize, f64)>
+    where
+        F: FnMut() -> Vec<u32>,
+    {
+        let seq = w.config.seq_len;
+        let mut curve = Vec::new();
+        for step in 0..steps {
+            let tokens = sample();
+            assert_eq!(tokens.len(), self.batch * seq);
+            let (loss, grads) = loss_and_grads(w, &tokens, self.batch, seq);
+            self.adam.update(w, &grads);
+            curve.push((step, loss));
+            if step % self.log_every == 0 || step + 1 == steps {
+                log(step, loss);
+            }
+        }
+        curve
+    }
+}
+
+/// Helper used by trainer tests and the e2e example: verify the loss went
+/// down by a meaningful factor.
+pub fn loss_improved(curve: &[(usize, f64)], min_ratio: f64) -> bool {
+    if curve.len() < 4 {
+        return false;
+    }
+    let head: f64 =
+        curve.iter().take(3).map(|&(_, l)| l).sum::<f64>() / 3.0;
+    let tail: f64 =
+        curve.iter().rev().take(3).map(|&(_, l)| l).sum::<f64>() / 3.0;
+    tail < head * min_ratio
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn end_to_end_gradcheck() {
+        // Finite-difference check of the FULL model gradient wrt a sample
+        // of parameters in every tensor class.
+        let cfg = ModelConfig::test_tiny(24);
+        let mut rng = Pcg64::seeded(501);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let (batch, seq) = (2usize, 6usize);
+        let tokens: Vec<u32> = (0..batch * seq).map(|_| rng.next_below(24) as u32).collect();
+        let tokens2 = tokens.clone();
+        let loss_of = |wp: &LmWeights| {
+            let rec = lm_forward_training(wp, &tokens2, batch, seq);
+            let targets = shift_targets(&tokens2, batch, seq);
+            cross_entropy(&rec.logits, &targets, -100).0
+        };
+        let (_, grads) = loss_and_grads(&w, &tokens, batch, seq);
+        let check = [
+            ("lm.layer0.attn.q", 5usize),
+            ("lm.layer1.attn.out", 17),
+            ("lm.layer0.mlp.up", 33),
+            ("lm.layer1.mlp.down", 2),
+            ("lm.layer0.ln1.g", 3),
+            ("lm.layer1.ln2.b", 7),
+            ("lnf.g", 0),
+            ("tok_emb", 40),
+            ("pos_emb", 11),
+        ];
+        for (name, idx) in check {
+            let eps = 1e-2f32;
+            let mut wp = w.clone();
+            wp.named_tensor_mut(name).unwrap().data_mut()[idx] += eps;
+            let lp = loss_of(&wp);
+            let mut wm = w.clone();
+            wm.named_tensor_mut(name).unwrap().data_mut()[idx] -= eps;
+            let lm = loss_of(&wm);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = grads[name].data()[idx] as f64;
+            assert!(
+                (fd - an).abs() < 5e-3 + 0.05 * fd.abs().max(an.abs()),
+                "{name}[{idx}]: fd={fd:.6} analytic={an:.6}"
+            );
+        }
+    }
+
+    #[test]
+    fn short_training_reduces_loss() {
+        let cfg = ModelConfig::test_tiny(16);
+        let mut rng = Pcg64::seeded(502);
+        let mut w = LmWeights::init(&cfg, &mut rng);
+        // Learnable synthetic pattern: strictly cyclic token sequences.
+        let seq = cfg.seq_len;
+        let batch = 4;
+        let mut sampler_rng = Pcg64::seeded(503);
+        let mut trainer = Trainer::new(3e-3, batch);
+        let curve = trainer.train(
+            &mut w,
+            60,
+            || {
+                let mut t = Vec::with_capacity(batch * seq);
+                for _ in 0..batch {
+                    let start = sampler_rng.next_below(16) as u32;
+                    for s in 0..seq {
+                        t.push((start + s as u32) % 16);
+                    }
+                }
+                t
+            },
+            |_, _| {},
+        );
+        assert!(
+            loss_improved(&curve, 0.5),
+            "loss should halve on a cyclic pattern: first={:?} last={:?}",
+            &curve[..3],
+            &curve[curve.len() - 3..]
+        );
+    }
+
+    #[test]
+    fn adam_skips_unknown_and_clips() {
+        let cfg = ModelConfig::test_tiny(16);
+        let mut rng = Pcg64::seeded(504);
+        let mut w = LmWeights::init(&cfg, &mut rng);
+        let before = w.tok_emb.clone();
+        let mut grads: Grads = HashMap::new();
+        grads.insert("not_a_tensor".into(), Tensor::zeros(&[1]));
+        let mut huge = Tensor::zeros(&[cfg.vocab, cfg.d_model]);
+        huge.data_mut().fill(1e6);
+        grads.insert("tok_emb".into(), huge);
+        let mut adam = Adam::new(1e-3);
+        adam.update(&mut w, &grads);
+        // clipped: update magnitude stays bounded (no explosion)
+        let delta = w.tok_emb.max_abs_diff(&before);
+        assert!(delta < 1.0, "delta={delta}");
+        assert!(delta > 0.0);
+    }
+}

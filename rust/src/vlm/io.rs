@@ -1,0 +1,102 @@
+//! VLM checkpoint container (same binary layout as the LM one, different
+//! magic; vision/cross tensors plus the embedded LM tensor set).
+
+use super::{VlmConfig, VlmWeights};
+use crate::jsonx::Json;
+use crate::model::io::{lm_config_from_json, lm_config_to_json, read_container, write_container};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"RPIQVLM1";
+
+fn config_to_json(c: &VlmConfig) -> Json {
+    Json::obj()
+        .with("name", Json::Str(c.name.clone()))
+        .with("n_patches", Json::Num(c.n_patches as f64))
+        .with("patch_dim", Json::Num(c.patch_dim as f64))
+        .with("d_vision", Json::Num(c.d_vision as f64))
+        .with("n_vision_blocks", Json::Num(c.n_vision_blocks as f64))
+        .with("d_cross", Json::Num(c.d_cross as f64))
+        .with("lm", lm_config_to_json(&c.lm))
+}
+
+fn config_from_json(j: &Json) -> Result<VlmConfig> {
+    let get = |k: &str| j.get(k).with_context(|| format!("vlm config missing '{k}'"));
+    Ok(VlmConfig {
+        name: get("name")?.as_str().context("name")?.to_string(),
+        n_patches: get("n_patches")?.as_usize().context("n_patches")?,
+        patch_dim: get("patch_dim")?.as_usize().context("patch_dim")?,
+        d_vision: get("d_vision")?.as_usize().context("d_vision")?,
+        n_vision_blocks: get("n_vision_blocks")?.as_usize().context("n_vision_blocks")?,
+        d_cross: get("d_cross")?.as_usize().context("d_cross")?,
+        lm: lm_config_from_json(get("lm")?)?,
+    })
+}
+
+/// Full named tensor list (vision/cross + the LM's own names).
+fn named_tensors(w: &VlmWeights) -> Vec<(String, &Tensor)> {
+    let mut v: Vec<(String, &Tensor)> = vec![("vision.patch_proj".into(), &w.patch_proj)];
+    for (i, b) in w.vision_blocks.iter().enumerate() {
+        v.push((format!("vision.block{i}.fc1"), &b.fc1));
+        v.push((format!("vision.block{i}.fc2"), &b.fc2));
+    }
+    v.push(("cross.vision_mlp.up".into(), &w.cross_up));
+    v.push(("cross.vision_mlp.down".into(), &w.cross_down));
+    v.extend(w.lm.named_tensors());
+    v
+}
+
+/// Save a VLM checkpoint.
+pub fn save_vlm(w: &VlmWeights, path: &Path) -> Result<()> {
+    let cfg = config_to_json(&w.config).dump();
+    write_container(path, MAGIC, &cfg, &named_tensors(w))
+}
+
+/// Load a VLM checkpoint.
+pub fn load_vlm(path: &Path) -> Result<VlmWeights> {
+    let (cfg_json, tensors) = read_container(path, MAGIC)?;
+    let cfg = config_from_json(&cfg_json)?;
+    let mut rng = crate::rng::Pcg64::seeded(0);
+    let mut w = VlmWeights::init(&cfg, &mut rng);
+    for (name, shape, data) in tensors {
+        let dst = if let Some(t) = w.linear_mut(&name) {
+            t
+        } else if let Some(t) = w.lm.named_tensor_mut(&name) {
+            t
+        } else {
+            bail!("unknown tensor '{name}' in VLM checkpoint");
+        };
+        if dst.shape() != shape.as_slice() {
+            bail!("tensor '{name}' shape {shape:?} != expected {:?}", dst.shape());
+        }
+        dst.data_mut().copy_from_slice(&data);
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::vlm::VlmConfig;
+
+    #[test]
+    fn vlm_save_load_roundtrip() {
+        let cfg = VlmConfig::test_tiny(40);
+        let mut rng = Pcg64::seeded(1001);
+        let w = VlmWeights::init(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("rpiq_vlm_io");
+        let path = dir.join("v.ckpt");
+        save_vlm(&w, &path).unwrap();
+        let w2 = load_vlm(&path).unwrap();
+        assert_eq!(w2.config, w.config);
+        for ((n1, t1), (n2, t2)) in named_tensors(&w).iter().zip(named_tensors(&w2).iter()) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1.data(), t2.data(), "{n1}");
+        }
+        // an LM checkpoint must not load as a VLM
+        assert!(crate::model::io::load_lm(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

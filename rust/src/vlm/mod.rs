@@ -1,0 +1,574 @@
+//! Tiny vision-language model — the CogVLM2-19B stand-in (DESIGN.md §5).
+//!
+//! Three modality modules, mirroring what the paper's CMDQ framework (and
+//! its Table 5 rows "CogVLM2-Vision" / "CogVLM2-Cross") distinguishes:
+//!
+//! * **vision**: linear patch projection + residual MLP blocks over patch
+//!   features (`vision.block{i}.fc{1,2}` — ViT-without-attention, enough
+//!   to give the vision tower its own quantization-sensitive linears);
+//! * **cross-modal**: a per-patch adapter MLP (`cross.vision_mlp.{up,down}`)
+//!   mapping vision features into LM embedding space, one LM token per
+//!   patch;
+//! * **language**: the same decoder-only transformer as `crate::model`,
+//!   consuming `[image tokens ; question tokens]`.
+//!
+//! The VQA head is next-token prediction of a single answer token after
+//! the question — exact-match accuracy over answers is then Table 2's
+//! metric.
+
+use crate::model::config::ModelConfig;
+
+pub mod io;
+pub mod train;
+use crate::model::forward::ActivationTap;
+use crate::model::ops::*;
+use crate::model::weights::LmWeights;
+use crate::model::QuantizedLm;
+use crate::quant::QuantizedLinear;
+use crate::rng::Pcg64;
+use crate::tensor::{matmul_at_b, Tensor};
+use std::collections::HashMap;
+
+/// VLM configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VlmConfig {
+    pub name: String,
+    /// Patches per image (= image tokens fed to the LM).
+    pub n_patches: usize,
+    /// Raw feature dim of one patch ("pixels").
+    pub patch_dim: usize,
+    /// Vision tower width.
+    pub d_vision: usize,
+    /// Residual MLP blocks in the vision tower.
+    pub n_vision_blocks: usize,
+    /// Cross-modal adapter hidden width.
+    pub d_cross: usize,
+    /// Language decoder config. `seq_len` must cover
+    /// `n_patches + question + answer`.
+    pub lm: ModelConfig,
+}
+
+impl VlmConfig {
+    /// The CogVLM2 stand-in used by the Table 2/5 benches.
+    pub fn sim_cogvlm2(vocab: usize) -> Self {
+        VlmConfig {
+            name: "sim-cogvlm2-19b".into(),
+            n_patches: 8,
+            patch_dim: 24,
+            d_vision: 64,
+            n_vision_blocks: 2,
+            d_cross: 128,
+            lm: ModelConfig {
+                name: "sim-cogvlm2-19b.lm".into(),
+                vocab,
+                d_model: 128,
+                n_layers: 4,
+                n_heads: 4,
+                d_ff: 384,
+                seq_len: 32,
+                activation: crate::model::Activation::Gelu,
+                tied_head: false,
+            },
+        }
+    }
+
+    pub fn test_tiny(vocab: usize) -> Self {
+        VlmConfig {
+            name: "test-vlm".into(),
+            n_patches: 4,
+            patch_dim: 8,
+            d_vision: 12,
+            n_vision_blocks: 1,
+            d_cross: 16,
+            lm: ModelConfig {
+                name: "test-vlm.lm".into(),
+                vocab,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 32,
+                seq_len: 16,
+                activation: crate::model::Activation::Gelu,
+                tied_head: false,
+            },
+        }
+    }
+
+    /// Text positions available after the image prefix.
+    pub fn text_len(&self) -> usize {
+        self.lm.seq_len - self.n_patches
+    }
+}
+
+/// One residual vision MLP block.
+#[derive(Clone, Debug)]
+pub struct VisionBlock {
+    pub fc1: Tensor,
+    pub fc2: Tensor,
+}
+
+/// Full VLM parameter set.
+#[derive(Clone, Debug)]
+pub struct VlmWeights {
+    pub config: VlmConfig,
+    /// `[d_vision, patch_dim]`
+    pub patch_proj: Tensor,
+    pub vision_blocks: Vec<VisionBlock>,
+    /// `[d_cross, d_vision]`
+    pub cross_up: Tensor,
+    /// `[d_lm, d_cross]`
+    pub cross_down: Tensor,
+    pub lm: LmWeights,
+}
+
+impl VlmWeights {
+    pub fn init(config: &VlmConfig, rng: &mut Pcg64) -> Self {
+        let dv = config.d_vision;
+        let std = 0.05f32;
+        VlmWeights {
+            patch_proj: Tensor::randn(&[dv, config.patch_dim], std, rng),
+            vision_blocks: (0..config.n_vision_blocks)
+                .map(|_| VisionBlock {
+                    fc1: Tensor::randn(&[2 * dv, dv], std, rng),
+                    fc2: Tensor::randn(&[dv, 2 * dv], std / 2.0, rng),
+                })
+                .collect(),
+            cross_up: Tensor::randn(&[config.d_cross, dv], std, rng),
+            cross_down: Tensor::randn(&[config.lm.d_model, config.d_cross], std, rng),
+            lm: LmWeights::init(&config.lm, rng),
+            config: config.clone(),
+        }
+    }
+
+    /// All quantizable linears with canonical modality-prefixed names.
+    pub fn linears(&self) -> Vec<(String, &Tensor)> {
+        let mut v = vec![("vision.patch_proj".to_string(), &self.patch_proj)];
+        for (i, b) in self.vision_blocks.iter().enumerate() {
+            v.push((format!("vision.block{i}.fc1"), &b.fc1));
+            v.push((format!("vision.block{i}.fc2"), &b.fc2));
+        }
+        v.push(("cross.vision_mlp.up".to_string(), &self.cross_up));
+        v.push(("cross.vision_mlp.down".to_string(), &self.cross_down));
+        v.extend(self.lm.linears());
+        v
+    }
+
+    pub fn linear_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        match name {
+            "vision.patch_proj" => return Some(&mut self.patch_proj),
+            "cross.vision_mlp.up" => return Some(&mut self.cross_up),
+            "cross.vision_mlp.down" => return Some(&mut self.cross_down),
+            _ => {}
+        }
+        if let Some(rest) = name.strip_prefix("vision.block") {
+            let (idx, field) = rest.split_once('.')?;
+            let b = self.vision_blocks.get_mut(idx.parse::<usize>().ok()?)?;
+            return match field {
+                "fc1" => Some(&mut b.fc1),
+                "fc2" => Some(&mut b.fc2),
+                _ => None,
+            };
+        }
+        self.lm.linear_mut(name)
+    }
+
+    pub fn n_params(&self) -> usize {
+        let vis: usize = self.patch_proj.len()
+            + self
+                .vision_blocks
+                .iter()
+                .map(|b| b.fc1.len() + b.fc2.len())
+                .sum::<usize>()
+            + self.cross_up.len()
+            + self.cross_down.len();
+        vis + self.lm.n_params()
+    }
+}
+
+/// Saved intermediates of the vision + cross towers (training).
+pub struct VisionRecord {
+    pub patches: Tensor,
+    pub proj: Tensor,
+    pub block_in: Vec<Tensor>,
+    pub block_mid_pre: Vec<Tensor>,
+    pub block_mid_act: Vec<Tensor>,
+    pub feats: Tensor,
+    pub cross_pre: Tensor,
+    pub cross_act: Tensor,
+    pub img_tokens: Tensor,
+}
+
+/// Vision tower + cross adapter forward. `patches: [B·P, patch_dim]` →
+/// image tokens `[B·P, d_lm]`.
+pub fn vision_forward(
+    w: &VlmWeights,
+    patches: &Tensor,
+    mut tap: Option<&mut ActivationTap>,
+) -> VisionRecord {
+    let gelu_act = crate::model::Activation::Gelu;
+    if let Some(t) = tap.as_deref_mut() {
+        t.grab_pub("vision.patch_proj", patches);
+    }
+    let proj = linear_fwd(patches, &w.patch_proj);
+    let mut h = proj.clone();
+    let mut block_in = Vec::new();
+    let mut block_mid_pre = Vec::new();
+    let mut block_mid_act = Vec::new();
+    for (i, b) in w.vision_blocks.iter().enumerate() {
+        block_in.push(h.clone());
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab_pub(&format!("vision.block{i}.fc1"), &h);
+        }
+        let mid_pre = linear_fwd(&h, &b.fc1);
+        let mid_act = act_fwd(&mid_pre, gelu_act);
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab_pub(&format!("vision.block{i}.fc2"), &mid_act);
+        }
+        let out = linear_fwd(&mid_act, &b.fc2);
+        h.add_assign(&out);
+        block_mid_pre.push(mid_pre);
+        block_mid_act.push(mid_act);
+    }
+    let feats = h.clone();
+    if let Some(t) = tap.as_deref_mut() {
+        t.grab_pub("cross.vision_mlp.up", &feats);
+    }
+    let cross_pre = linear_fwd(&feats, &w.cross_up);
+    let cross_act = act_fwd(&cross_pre, gelu_act);
+    if let Some(t) = tap.as_deref_mut() {
+        t.grab_pub("cross.vision_mlp.down", &cross_act);
+    }
+    let img_tokens = linear_fwd(&cross_act, &w.cross_down);
+    VisionRecord {
+        patches: patches.clone(),
+        proj,
+        block_in,
+        block_mid_pre,
+        block_mid_act,
+        feats,
+        cross_pre,
+        cross_act,
+        img_tokens,
+    }
+}
+
+/// Backward through cross + vision towers given `d_img_tokens`.
+/// Returns gradients keyed by canonical names.
+pub fn vision_backward(
+    w: &VlmWeights,
+    rec: &VisionRecord,
+    d_img_tokens: &Tensor,
+) -> HashMap<String, Tensor> {
+    let gelu_act = crate::model::Activation::Gelu;
+    let mut grads = HashMap::new();
+    let (dcross_act, dw_cd) = linear_bwd(&rec.cross_act, &w.cross_down, d_img_tokens);
+    grads.insert("cross.vision_mlp.down".to_string(), dw_cd);
+    let dcross_pre = act_bwd(&rec.cross_pre, &dcross_act, gelu_act);
+    let (mut dh, dw_cu) = linear_bwd(&rec.feats, &w.cross_up, &dcross_pre);
+    grads.insert("cross.vision_mlp.up".to_string(), dw_cu);
+    for (i, b) in w.vision_blocks.iter().enumerate().rev() {
+        let (dmid_act, dw_fc2) = linear_bwd(&rec.block_mid_act[i], &b.fc2, &dh);
+        grads.insert(format!("vision.block{i}.fc2"), dw_fc2);
+        let dmid_pre = act_bwd(&rec.block_mid_pre[i], &dmid_act, gelu_act);
+        let (dblock_in, dw_fc1) = linear_bwd(&rec.block_in[i], &b.fc1, &dmid_pre);
+        grads.insert(format!("vision.block{i}.fc1"), dw_fc1);
+        dh.add_assign(&dblock_in); // residual
+    }
+    let dw_pp = matmul_at_b(&dh, &rec.patches);
+    grads.insert("vision.patch_proj".to_string(), dw_pp);
+    grads
+}
+
+/// Assemble the LM input embeddings: `[img_tokens ; tok_emb(text)+pos]`.
+/// `text: [B·T]`, img_tokens `[B·P, d]` → `[B·S, d]`, S = P + T.
+pub fn assemble_embeddings(
+    w: &VlmWeights,
+    img_tokens: &Tensor,
+    text: &[u32],
+    batch: usize,
+) -> Tensor {
+    let p = w.config.n_patches;
+    let t_len = text.len() / batch;
+    let s = p + t_len;
+    let d = w.config.lm.d_model;
+    assert!(s <= w.config.lm.seq_len);
+    let mut x = Tensor::zeros(&[batch * s, d]);
+    for b in 0..batch {
+        for i in 0..p {
+            let src = img_tokens.row(b * p + i);
+            let pos = w.lm.pos_emb.row(i);
+            let dst = x.row_mut(b * s + i);
+            for j in 0..d {
+                dst[j] = src[j] + pos[j];
+            }
+        }
+        for i in 0..t_len {
+            let tok = text[b * t_len + i] as usize;
+            let te = w.lm.tok_emb.row(tok);
+            let pe = w.lm.pos_emb.row(p + i);
+            let dst = x.row_mut(b * s + p + i);
+            for j in 0..d {
+                dst[j] = te[j] + pe[j];
+            }
+        }
+    }
+    x
+}
+
+/// Full VLM inference: patches + text → logits over the combined sequence.
+pub fn vlm_forward(
+    w: &VlmWeights,
+    patches: &Tensor,
+    text: &[u32],
+    batch: usize,
+    mut tap: Option<&mut ActivationTap>,
+) -> Tensor {
+    let vrec = vision_forward(w, patches, tap.as_deref_mut());
+    let x = assemble_embeddings(w, &vrec.img_tokens, text, batch);
+    let s = w.config.n_patches + text.len() / batch;
+    lm_body_forward(&w.lm, x, batch, s, tap)
+}
+
+/// The decoder body on pre-assembled embeddings (shared by fp and
+/// quantized paths).
+fn lm_body_forward(
+    lm: &LmWeights,
+    mut x: Tensor,
+    batch: usize,
+    seq: usize,
+    mut tap: Option<&mut ActivationTap>,
+) -> Tensor {
+    let cfg = &lm.config;
+    for (li, l) in lm.layers.iter().enumerate() {
+        let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab_pub(&format!("lm.layer{li}.attn.q"), &ln1);
+            t.grab_pub(&format!("lm.layer{li}.attn.k"), &ln1);
+            t.grab_pub(&format!("lm.layer{li}.attn.v"), &ln1);
+        }
+        let q = linear_fwd(&ln1, &l.wq);
+        let k = linear_fwd(&ln1, &l.wk);
+        let v = linear_fwd(&ln1, &l.wv);
+        let (ctx, _) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab_pub(&format!("lm.layer{li}.attn.out"), &ctx);
+        }
+        x.add_assign(&linear_fwd(&ctx, &l.wo));
+        let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab_pub(&format!("lm.layer{li}.mlp.up"), &ln2);
+        }
+        let up = act_fwd(&linear_fwd(&ln2, &l.w_up), cfg.activation);
+        if let Some(t) = tap.as_deref_mut() {
+            t.grab_pub(&format!("lm.layer{li}.mlp.down"), &up);
+        }
+        x.add_assign(&linear_fwd(&up, &l.w_down));
+    }
+    let (lnf, _, _) = layernorm_fwd(&x, &lm.lnf_g, &lm.lnf_b);
+    if let Some(t) = tap.as_deref_mut() {
+        if lm.head.is_some() {
+            t.grab_pub("lm.head", &lnf);
+        }
+    }
+    linear_fwd(&lnf, lm.head_matrix())
+}
+
+/// Quantized VLM: vision/cross/lm linears replaced per the CMDQ policy.
+pub struct QuantizedVlm {
+    pub base: VlmWeights,
+    pub qlinears: HashMap<String, QuantizedLinear>,
+}
+
+impl QuantizedVlm {
+    pub fn new(base: VlmWeights, qlinears: HashMap<String, QuantizedLinear>) -> Self {
+        for (name, _) in base.linears() {
+            assert!(qlinears.contains_key(&name), "missing quantized layer {name}");
+        }
+        QuantizedVlm { base, qlinears }
+    }
+
+    fn q(&self, name: &str) -> &QuantizedLinear {
+        &self.qlinears[name]
+    }
+
+    /// Deployment bytes (packed weights + params + fp32 residue).
+    pub fn deploy_bytes(&self) -> usize {
+        let qn: usize = self.qlinears.values().map(|q| q.nbytes()).sum();
+        // fp residue: embeddings + norms of the LM
+        let lm_fp: usize = self
+            .base
+            .lm
+            .named_tensors()
+            .iter()
+            .filter(|(n, _)| !self.qlinears.contains_key(n.as_str()))
+            .map(|(_, t)| t.nbytes())
+            .sum();
+        qn + lm_fp
+    }
+
+    /// Quantized forward (mirrors [`vlm_forward`]).
+    pub fn forward(&self, patches: &Tensor, text: &[u32], batch: usize) -> Tensor {
+        let w = &self.base;
+        let gelu_act = crate::model::Activation::Gelu;
+        let proj = QuantizedLm::qmatmul(patches, self.q("vision.patch_proj"));
+        let mut h = proj;
+        for i in 0..w.config.n_vision_blocks {
+            let mid = act_fwd(
+                &QuantizedLm::qmatmul(&h, self.q(&format!("vision.block{i}.fc1"))),
+                gelu_act,
+            );
+            let out = QuantizedLm::qmatmul(&mid, self.q(&format!("vision.block{i}.fc2")));
+            h.add_assign(&out);
+        }
+        let cross = act_fwd(
+            &QuantizedLm::qmatmul(&h, self.q("cross.vision_mlp.up")),
+            gelu_act,
+        );
+        let img_tokens = QuantizedLm::qmatmul(&cross, self.q("cross.vision_mlp.down"));
+        let x = assemble_embeddings(w, &img_tokens, text, batch);
+        let s = w.config.n_patches + text.len() / batch;
+        self.lm_body(x, batch, s)
+    }
+
+    fn lm_body(&self, mut x: Tensor, batch: usize, seq: usize) -> Tensor {
+        let lm = &self.base.lm;
+        let cfg = &lm.config;
+        for (li, l) in lm.layers.iter().enumerate() {
+            let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
+            let q = QuantizedLm::qmatmul(&ln1, self.q(&format!("lm.layer{li}.attn.q")));
+            let k = QuantizedLm::qmatmul(&ln1, self.q(&format!("lm.layer{li}.attn.k")));
+            let v = QuantizedLm::qmatmul(&ln1, self.q(&format!("lm.layer{li}.attn.v")));
+            let (ctx, _) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
+            x.add_assign(&QuantizedLm::qmatmul(&ctx, self.q(&format!("lm.layer{li}.attn.out"))));
+            let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
+            let up = act_fwd(
+                &QuantizedLm::qmatmul(&ln2, self.q(&format!("lm.layer{li}.mlp.up"))),
+                cfg.activation,
+            );
+            x.add_assign(&QuantizedLm::qmatmul(&up, self.q(&format!("lm.layer{li}.mlp.down"))));
+        }
+        let (lnf, _, _) = layernorm_fwd(&x, &lm.lnf_g, &lm.lnf_b);
+        if self.qlinears.contains_key("lm.head") {
+            QuantizedLm::qmatmul(&lnf, self.q("lm.head"))
+        } else {
+            linear_fwd(&lnf, lm.head_matrix())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantGrid;
+
+    fn tiny() -> (VlmWeights, Tensor, Vec<u32>, usize) {
+        let cfg = VlmConfig::test_tiny(24);
+        let mut rng = Pcg64::seeded(601);
+        let w = VlmWeights::init(&cfg, &mut rng);
+        let batch = 2;
+        let patches = Tensor::randn(&[batch * cfg.n_patches, cfg.patch_dim], 1.0, &mut rng);
+        let text: Vec<u32> = (0..batch * 6).map(|_| rng.next_below(24) as u32).collect();
+        (w, patches, text, batch)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let (w, patches, text, batch) = tiny();
+        let logits = vlm_forward(&w, &patches, &text, batch, None);
+        let s = w.config.n_patches + 6;
+        assert_eq!(logits.shape(), &[batch * s, 24]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn linears_have_all_modalities() {
+        let (w, _, _, _) = tiny();
+        let names: Vec<String> = w.linears().into_iter().map(|(n, _)| n).collect();
+        use crate::quant::Modality;
+        let count = |m: Modality| {
+            names.iter().filter(|n| Modality::of_layer(n) == m).count()
+        };
+        assert_eq!(count(Modality::Vision), 3); // patch_proj + 1 block ×2
+        assert_eq!(count(Modality::CrossModal), 2);
+        assert!(count(Modality::Language) >= 12);
+    }
+
+    #[test]
+    fn tap_captures_vision_and_cross() {
+        let (w, patches, text, batch) = tiny();
+        let mut tap = ActivationTap::new();
+        let _ = vlm_forward(&w, &patches, &text, batch, Some(&mut tap));
+        assert!(tap.inputs.contains_key("vision.block0.fc1"));
+        assert!(tap.inputs.contains_key("cross.vision_mlp.down"));
+        assert!(tap.inputs.contains_key("lm.layer1.mlp.up"));
+        // vision activations are [B·P, d_vision]
+        assert_eq!(tap.inputs["vision.block0.fc1"].shape(), &[8, 12]);
+    }
+
+    #[test]
+    fn vision_backward_matches_fd() {
+        let (w, patches, _, _) = tiny();
+        let mut rng = Pcg64::seeded(602);
+        let n_out = patches.rows() * w.config.lm.d_model;
+        let ow: Vec<f32> = (0..n_out).map(|_| rng.normal()).collect();
+        let obj = |wp: &VlmWeights| {
+            let rec = vision_forward(wp, &patches, None);
+            rec.img_tokens
+                .data()
+                .iter()
+                .zip(&ow)
+                .map(|(&a, &b)| (a * b) as f64)
+                .sum::<f64>()
+        };
+        let rec = vision_forward(&w, &patches, None);
+        let d_img = Tensor::from_vec(&[patches.rows(), w.config.lm.d_model], ow.clone());
+        let grads = vision_backward(&w, &rec, &d_img);
+        for (name, idx) in [
+            ("vision.patch_proj", 5usize),
+            ("vision.block0.fc1", 17),
+            ("vision.block0.fc2", 3),
+            ("cross.vision_mlp.up", 21),
+            ("cross.vision_mlp.down", 8),
+        ] {
+            let eps = 1e-2f32;
+            let mut wp = w.clone();
+            wp.linear_mut(name).unwrap().data_mut()[idx] += eps;
+            let lp = obj(&wp);
+            let mut wm = w.clone();
+            wm.linear_mut(name).unwrap().data_mut()[idx] -= eps;
+            let lm_ = obj(&wm);
+            let fd = (lp - lm_) / (2.0 * eps as f64);
+            let an = grads[name].data()[idx] as f64;
+            assert!(
+                (fd - an).abs() < 1e-3 + 0.05 * fd.abs().max(an.abs()),
+                "{name}[{idx}]: fd={fd} an={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_vlm_8bit_close_to_fp() {
+        let (w, patches, text, batch) = tiny();
+        let mut qlinears = HashMap::new();
+        for (name, t) in w.linears() {
+            qlinears.insert(name, QuantizedLinear::quantize_rtn(t, QuantGrid::new(8, 8)));
+        }
+        let qvlm = QuantizedVlm::new(w.clone(), qlinears);
+        let fp = vlm_forward(&w, &patches, &text, batch, None);
+        let qf = qvlm.forward(&patches, &text, batch);
+        let rel = qf.sub(&fp).frob() / fp.frob().max(1e-9);
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn deploy_bytes_compresses() {
+        let (w, _, _, _) = tiny();
+        let mut qlinears = HashMap::new();
+        for (name, t) in w.linears() {
+            qlinears.insert(name, QuantizedLinear::quantize_rtn(t, QuantGrid::new(4, 8)));
+        }
+        let fp_bytes = w.n_params() * 4;
+        let qvlm = QuantizedVlm::new(w, qlinears);
+        assert!(qvlm.deploy_bytes() < fp_bytes);
+    }
+}

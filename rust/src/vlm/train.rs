@@ -1,0 +1,271 @@
+//! VLM training: backprop through decoder + cross-modal adapter + vision
+//! tower, driven by the same Adam core as the LM trainer.
+//!
+//! The objective is VQA next-token prediction: the loss is applied only at
+//! the position that predicts the single-word answer (everything else is
+//! `ignore_index`), which teaches the model to *read the attributes out of
+//! the patches*.
+
+use super::{assemble_embeddings, vision_backward, vision_forward, VlmWeights};
+use crate::data::tokenizer::Tokenizer;
+use crate::data::vqa::VqaExample;
+use crate::model::forward::lm_body_forward_training;
+use crate::model::ops::cross_entropy;
+use crate::tensor::Tensor;
+use crate::train::{lm_backward, Grads};
+use std::collections::HashMap;
+
+/// Build the token sequence + target labels for one VQA example:
+/// text = question tokens ++ [answer token]; only the position *before*
+/// the answer carries a target.
+pub fn encode_example(
+    tok: &Tokenizer,
+    e: &VqaExample,
+    text_len: usize,
+) -> (Vec<u32>, Vec<i64>) {
+    let mut ids = tok.encode(&e.question);
+    let ans = tok.id(&e.answer);
+    ids.push(ans);
+    assert!(
+        ids.len() <= text_len,
+        "question+answer ({}) exceeds text window ({text_len})",
+        ids.len()
+    );
+    // right-pad with BOS (acts as a pad token the loss ignores)
+    let q_len = ids.len();
+    ids.resize(text_len, crate::data::tokenizer::BOS);
+    let mut targets = vec![-100i64; text_len];
+    // position q_len-2 predicts the answer at q_len-1
+    targets[q_len - 2] = ans as i64;
+    (ids, targets)
+}
+
+/// Loss + gradients for a batch of VQA examples.
+pub fn vlm_loss_and_grads(
+    w: &VlmWeights,
+    tok: &Tokenizer,
+    batch_examples: &[&VqaExample],
+) -> (f64, Grads) {
+    let cfg = &w.config;
+    let batch = batch_examples.len();
+    let p = cfg.n_patches;
+    let text_len = cfg.text_len();
+    let seq = p + text_len;
+    let d = cfg.lm.d_model;
+
+    // assemble patches + text + targets
+    let mut patches = Tensor::zeros(&[batch * p, cfg.patch_dim]);
+    let mut text = Vec::with_capacity(batch * text_len);
+    let mut targets = vec![-100i64; batch * seq];
+    for (b, e) in batch_examples.iter().enumerate() {
+        for i in 0..p {
+            patches
+                .row_mut(b * p + i)
+                .copy_from_slice(e.cover.patches.row(i));
+        }
+        let (ids, tg) = encode_example(tok, e, text_len);
+        text.extend_from_slice(&ids);
+        for (i, &t) in tg.iter().enumerate() {
+            targets[b * seq + p + i] = t;
+        }
+    }
+
+    // forward
+    let vrec = vision_forward(w, &patches, None);
+    let emb = assemble_embeddings(w, &vrec.img_tokens, &text, batch);
+    let rec = lm_body_forward_training(&w.lm, emb, batch, seq);
+    let (loss, dlogits) = cross_entropy(&rec.logits, &targets, -100);
+
+    // backward through the decoder
+    let mut grads = lm_backward(&w.lm, &rec, &dlogits);
+    let demb = grads.remove("__demb").expect("lm_backward ran");
+
+    // split the embedding gradient: image positions → vision towers (+pos),
+    // text positions → tok/pos embeddings.
+    let mut d_img = Tensor::zeros(&[batch * p, d]);
+    let mut dtok = grads
+        .remove("tok_emb")
+        .unwrap_or_else(|| Tensor::zeros(&[cfg.lm.vocab, d]));
+    let mut dpos = Tensor::zeros(&[cfg.lm.seq_len, d]);
+    for b in 0..batch {
+        for i in 0..p {
+            let src = demb.row(b * seq + i);
+            d_img.row_mut(b * p + i).copy_from_slice(src);
+            let prow = dpos.row_mut(i);
+            for j in 0..d {
+                prow[j] += src[j];
+            }
+        }
+        for i in 0..text_len {
+            let src = demb.row(b * seq + p + i);
+            let t = text[b * text_len + i] as usize;
+            let trow = dtok.row_mut(t);
+            for j in 0..d {
+                trow[j] += src[j];
+            }
+            let prow = dpos.row_mut(p + i);
+            for j in 0..d {
+                prow[j] += src[j];
+            }
+        }
+    }
+    grads.insert("tok_emb".into(), dtok);
+    grads.insert("pos_emb".into(), dpos);
+
+    // backward through cross + vision
+    let vgrads = vision_backward(w, &vrec, &d_img);
+    for (k, v) in vgrads {
+        grads.insert(k, v);
+    }
+    (loss, grads)
+}
+
+/// Adam over the full VLM (LM tensors via the LM Adam core; vision/cross
+/// tensors handled here with the same hyperparameters).
+pub struct VlmTrainer {
+    pub lm_adam: crate::train::Adam,
+    vm: HashMap<String, Vec<f32>>,
+    vv: HashMap<String, Vec<f32>>,
+    step: usize,
+    lr: f32,
+}
+
+impl VlmTrainer {
+    pub fn new(lr: f32) -> Self {
+        VlmTrainer {
+            lm_adam: crate::train::Adam::new(lr),
+            vm: HashMap::new(),
+            vv: HashMap::new(),
+            step: 0,
+            lr,
+        }
+    }
+
+    pub fn update(&mut self, w: &mut VlmWeights, grads: &Grads) {
+        // LM tensors
+        self.lm_adam.update(&mut w.lm, grads);
+        // vision/cross tensors
+        self.step += 1;
+        let warm = ((self.step as f32) / 20.0).min(1.0);
+        let lr = self.lr * warm;
+        let (b1, b2, eps) = (0.9f32, 0.95f32, 1e-8f32);
+        let bc1 = 1.0 - b1.powi(self.step as i32);
+        let bc2 = 1.0 - b2.powi(self.step as i32);
+        for (name, g) in grads {
+            if !(name.starts_with("vision.") || name.starts_with("cross.")) {
+                continue;
+            }
+            let p = match w.linear_mut(name) {
+                Some(p) => p,
+                None => continue,
+            };
+            let n = p.len();
+            let m = self.vm.entry(name.clone()).or_insert_with(|| vec![0.0; n]);
+            let v = self.vv.entry(name.clone()).or_insert_with(|| vec![0.0; n]);
+            let pd = p.data_mut();
+            let gd = g.data();
+            for i in 0..n {
+                m[i] = b1 * m[i] + (1.0 - b1) * gd[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * gd[i] * gd[i];
+                pd[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+            }
+        }
+    }
+
+    /// Train on a VQA set for `steps` steps of `batch` examples.
+    pub fn train(
+        &mut self,
+        w: &mut VlmWeights,
+        tok: &Tokenizer,
+        examples: &[VqaExample],
+        steps: usize,
+        batch: usize,
+        rng: &mut crate::rng::Pcg64,
+        mut log: impl FnMut(usize, f64),
+    ) -> Vec<(usize, f64)> {
+        let mut curve = Vec::new();
+        for step in 0..steps {
+            let picks: Vec<&VqaExample> = (0..batch)
+                .map(|_| &examples[rng.next_below(examples.len())])
+                .collect();
+            let (loss, grads) = vlm_loss_and_grads(w, tok, &picks);
+            self.update(w, &grads);
+            curve.push((step, loss));
+            if step % 20 == 0 || step + 1 == steps {
+                log(step, loss);
+            }
+        }
+        curve
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Lexicon;
+    use crate::data::vqa::VqaSet;
+    use crate::rng::Pcg64;
+    use crate::vlm::VlmConfig;
+
+    #[test]
+    fn encode_places_single_target() {
+        let tok = Lexicon::tokenizer();
+        let set = VqaSet::generate(11, 4, 24, 1, 1);
+        let (ids, tg) = encode_example(&tok, &set.train[0], 10);
+        assert_eq!(ids.len(), 10);
+        assert_eq!(tg.len(), 10);
+        assert_eq!(tg.iter().filter(|&&t| t != -100).count(), 1);
+        // the target is the answer token
+        let pos = tg.iter().position(|&t| t != -100).unwrap();
+        assert_eq!(tg[pos] as u32, ids[pos + 1]);
+    }
+
+    #[test]
+    fn vlm_gradcheck_spot() {
+        let cfg = VlmConfig::test_tiny(80);
+        let tok = Lexicon::tokenizer();
+        // Need vocab >= tokenizer size for ids to be valid — use the real
+        // vocab size.
+        let mut cfg = cfg;
+        cfg.lm.vocab = tok.vocab_size();
+        let mut rng = Pcg64::seeded(901);
+        let w = VlmWeights::init(&cfg, &mut rng);
+        let set = VqaSet::generate(12, cfg.n_patches, cfg.patch_dim, 4, 1);
+        let picks: Vec<&crate::data::vqa::VqaExample> = set.train.iter().collect();
+        let (_, grads) = vlm_loss_and_grads(&w, &tok, &picks);
+        for (name, idx) in [
+            ("vision.block0.fc1", 11usize),
+            ("cross.vision_mlp.up", 7),
+            ("lm.layer0.attn.v", 19),
+        ] {
+            let eps = 1e-2f32;
+            let mut wp = w.clone();
+            wp.linear_mut(name).unwrap().data_mut()[idx] += eps;
+            let lp = vlm_loss_and_grads(&wp, &tok, &picks).0;
+            let mut wm = w.clone();
+            wm.linear_mut(name).unwrap().data_mut()[idx] -= eps;
+            let lm_ = vlm_loss_and_grads(&wm, &tok, &picks).0;
+            let fd = (lp - lm_) / (2.0 * eps as f64);
+            let an = grads[name].data()[idx] as f64;
+            assert!(
+                (fd - an).abs() < 5e-3 + 0.06 * fd.abs().max(an.abs()),
+                "{name}[{idx}]: fd={fd} an={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn vlm_short_training_reduces_loss() {
+        let tok = Lexicon::tokenizer();
+        let mut cfg = VlmConfig::test_tiny(tok.vocab_size());
+        cfg.lm.vocab = tok.vocab_size();
+        let mut rng = Pcg64::seeded(902);
+        let mut w = VlmWeights::init(&cfg, &mut rng);
+        let set = VqaSet::generate(13, cfg.n_patches, cfg.patch_dim, 200, 1);
+        let mut trainer = VlmTrainer::new(3e-3);
+        let curve = trainer.train(&mut w, &tok, &set.train, 50, 8, &mut rng, |_, _| {});
+        let head = curve[..5].iter().map(|&(_, l)| l).sum::<f64>() / 5.0;
+        let tail = curve[curve.len() - 5..].iter().map(|&(_, l)| l).sum::<f64>() / 5.0;
+        assert!(tail < head * 0.9, "head={head} tail={tail}");
+    }
+}

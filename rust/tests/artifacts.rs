@@ -1,0 +1,145 @@
+//! Integration: the three-layer contract. Loads `artifacts/` (built by
+//! `make artifacts`), executes entries on the PJRT CPU client, and checks
+//! numerics against the Rust implementations.
+//!
+//! Skips (with a loud message) if artifacts have not been built — `make
+//! test` always builds them first.
+
+use rpiq::coordinator::experiments as exp;
+use rpiq::coordinator::{quantize_lm, Method};
+use rpiq::model::forward::lm_forward;
+use rpiq::model::weights::LmWeights;
+use rpiq::model::ModelConfig;
+use rpiq::quant::QuantConfig;
+use rpiq::rng::Pcg64;
+use rpiq::runtime::{lm_args, Arg, Engine};
+use rpiq::tensor::Tensor;
+use std::path::Path;
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(dir).expect("engine"))
+}
+
+#[test]
+fn selfcheck_add_runs() {
+    let Some(eng) = engine() else { return };
+    let x = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let out = eng.run("selfcheck_add", &[Arg::F32(x)]).unwrap();
+    assert_eq!(out[0].data(), &[2.0, 4.0, 6.0, 8.0]);
+}
+
+#[test]
+fn manifest_vocab_matches_rust_lexicon() {
+    let Some(eng) = engine() else { return };
+    let manifest = std::fs::read_to_string(eng.registry.dir.join("manifest.json")).unwrap();
+    let json = rpiq::jsonx::Json::parse(&manifest).unwrap();
+    let vocab = json.get("vocab").unwrap().as_usize().unwrap();
+    let tok = rpiq::data::corpus::Lexicon::tokenizer();
+    assert_eq!(
+        vocab,
+        tok.vocab_size(),
+        "python/compile/model.py VOCAB is out of sync with the Rust lexicon"
+    );
+}
+
+#[test]
+fn pallas_qmatmul_artifact_matches_rust_qmatmul() {
+    // L1 kernel (through PJRT) vs the Rust fused dequant-matmul.
+    let Some(eng) = engine() else { return };
+    let (m, k, n, gs) = (64usize, 128usize, 64usize, 64usize);
+    let mut rng = Pcg64::seeded(1201);
+    let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let w = Tensor::randn(&[n, k], 0.5, &mut rng);
+    let q = rpiq::quant::QuantizedLinear::quantize_rtn(&w, rpiq::quant::QuantGrid::new(4, gs));
+    let levels: Vec<i32> = q.qweight.iter().map(|&b| b as i32).collect();
+    let ng = q.n_groups();
+    let out = eng
+        .run(
+            "qmatmul_64x128x64_g64",
+            &[
+                Arg::F32(x.clone()),
+                Arg::I32(levels, vec![n, k]),
+                Arg::F32(Tensor::from_vec(&[n, ng], q.scales.clone())),
+                Arg::F32(Tensor::from_vec(&[n, ng], q.zeros.clone())),
+            ],
+        )
+        .unwrap();
+    let rust = rpiq::model::QuantizedLm::qmatmul(&x, &q);
+    let rel = out[0].sub(&rust).frob() / rust.frob().max(1e-9);
+    assert!(rel < 1e-4, "kernel vs rust rel err {rel}");
+}
+
+#[test]
+fn hessian_artifact_matches_rust() {
+    let Some(eng) = engine() else { return };
+    let (s, c) = (48usize, 128usize);
+    let mut rng = Pcg64::seeded(1202);
+    let h0 = Tensor::zeros(&[c, c]);
+    let x = Tensor::randn(&[s, c], 1.0, &mut rng);
+    let out = eng
+        .run("hessian_48x128", &[Arg::F32(h0), Arg::F32(x.clone())])
+        .unwrap();
+    let want = rpiq::tensor::matmul_at_b(&x, &x);
+    let rel = out[0].sub(&want).frob() / want.frob().max(1e-9);
+    assert!(rel < 1e-4, "hessian rel err {rel}");
+}
+
+#[test]
+fn fp_model_artifact_matches_rust_forward() {
+    // L2 graph vs the Rust forward, random weights, preset shapes.
+    let Some(eng) = engine() else { return };
+    let tok = rpiq::data::corpus::Lexicon::tokenizer();
+    let cfg = ModelConfig::preset("sim-opt-6.7b", tok.vocab_size()).unwrap();
+    let mut rng = Pcg64::seeded(1203);
+    let w = LmWeights::init(&cfg, &mut rng);
+    let tokens: Vec<u32> = (0..cfg.seq_len)
+        .map(|_| rng.next_below(cfg.vocab) as u32)
+        .collect();
+    let args = lm_args::lm_fp_args(&w, &tokens);
+    let out = eng.run("lm_logits_sim-opt-6.7b", &args).unwrap();
+    let rust = lm_forward(&w, &tokens, 1, cfg.seq_len, None);
+    let rel = out[0].sub(&rust).frob() / rust.frob().max(1e-9);
+    assert!(rel < 1e-3, "fp artifact vs rust rel err {rel}");
+}
+
+#[test]
+fn quantized_model_artifact_matches_rust_qforward() {
+    // The full three-layer story: GPTQ-quantized weights executed through
+    // the Pallas-kernel graph on PJRT vs the Rust quantized forward.
+    let Some(eng) = engine() else { return };
+    let tok = rpiq::data::corpus::Lexicon::tokenizer();
+    let cfg = ModelConfig::preset("sim-opt-6.7b", tok.vocab_size()).unwrap();
+    let mut rng = Pcg64::seeded(1204);
+    let w = LmWeights::init(&cfg, &mut rng);
+    let world = exp::World::build(1);
+    let windows = world.calib_windows(cfg.seq_len, 8);
+    let gs = exp::group_size_for("sim-opt-6.7b");
+    let qcfg = QuantConfig {
+        bits: 4,
+        group_size: gs,
+        block_size: gs,
+        percdamp: 0.01,
+    };
+    let out = quantize_lm(&w, &windows, qcfg, Method::Gptq).unwrap();
+    let tokens: Vec<u32> = (0..cfg.seq_len)
+        .map(|_| rng.next_below(cfg.vocab) as u32)
+        .collect();
+    let args = lm_args::lm_q_args(&out.model, &tokens);
+    let got = eng.run("lm_qlogits_sim-opt-6.7b", &args).unwrap();
+    let rust = out.model.forward(&tokens, 1, cfg.seq_len);
+    let rel = got[0].sub(&rust).frob() / rust.frob().max(1e-9);
+    assert!(rel < 1e-3, "quant artifact vs rust rel err {rel}");
+}
+
+#[test]
+fn engine_rejects_wrong_shapes() {
+    let Some(eng) = engine() else { return };
+    let bad = Tensor::zeros(&[3, 3]);
+    let err = eng.run("selfcheck_add", &[Arg::F32(bad)]).unwrap_err();
+    assert!(err.to_string().contains("expected"));
+}
