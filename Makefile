@@ -1,0 +1,25 @@
+# Convenience targets. `artifacts` runs the build-time Python layers
+# (JAX + Pallas AOT lowering) and is referenced throughout the crate docs;
+# it requires a Python environment with jax installed and is NOT needed for
+# `cargo build` / `cargo test` (the PJRT integration tests skip when
+# `artifacts/` is absent).
+
+.PHONY: artifacts build test bench fmt clippy
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy -- -D warnings

@@ -69,7 +69,8 @@ fn main() -> anyhow::Result<()> {
     println!("{:<8} {:>8.2} {:>8.3} {:>10.2}", "rpiq", er.acc_pct, er.ppl, mib(rpiq.model.deploy_bytes()));
 
     // ---- 4. three-layer cross-check via PJRT ----
-    if Path::new("artifacts/manifest.json").exists() {
+    // (needs a pjrt-enabled build; the default stub Engine cannot execute)
+    if cfg!(feature = "pjrt") && Path::new("artifacts/manifest.json").exists() {
         let eng = rpiq::runtime::Engine::new(Path::new("artifacts"))?;
         let tokens = &windows[0];
         let args = rpiq::runtime::lm_args::lm_q_args(&rpiq.model, tokens);

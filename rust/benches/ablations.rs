@@ -1,4 +1,4 @@
-//! Ablations over the stage-2 design choices DESIGN.md calls out:
+//! Ablations over the stage-2 design choices rust/DESIGN.md §Deviations calls out:
 //! step size α (incl. the paper's literal 0.01), iteration budget, block
 //! width, curvature source (instance vs rescaled-global-Hessian), and the
 //! snapshot-rotation future-work arm. Metric: mean per-layer Γ reduction

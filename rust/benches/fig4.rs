@@ -19,8 +19,29 @@ fn main() -> anyhow::Result<()> {
     let w = load_lm(&exp::ckpt_path(Path::new("checkpoints"), name))?;
     let windows = world.calib_windows(w.config.seq_len, exp::CALIB_SAMPLES);
     let qcfg = exp::quant_config_for(name);
+
+    // ---- threads sweep: end-to-end RPIQ quantization wall-clock ----
+    // (per-layer fan-out + row-sharded kernels; outputs are byte-identical
+    // across arms, so only the wall-clock moves and the last arm's model
+    // is reused for the qualitative gallery below)
+    println!("== Fig 4 (pre): quantization threads sweep [{name}] ==");
+    let mut base = 0.0f64;
+    let mut rpiq_out = None;
+    for threads in [1usize, 2, 4] {
+        rpiq::exec::set_threads(threads);
+        let t0 = std::time::Instant::now();
+        let out = quantize_lm(&w, &windows, qcfg, Method::Rpiq(RpiqParams::default()))?;
+        let secs = t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            base = secs;
+        }
+        println!("  {threads} threads: {secs:.2}s  ({:.2}x vs 1 thread)", base / secs);
+        rpiq_out = Some(out);
+    }
+    rpiq::exec::set_threads(rpiq::exec::default_threads());
+
     let gptq = quantize_lm(&w, &windows, qcfg, Method::Gptq)?.model;
-    let rpiq = quantize_lm(&w, &windows, qcfg, Method::Rpiq(RpiqParams::default()))?.model;
+    let rpiq = rpiq_out.expect("sweep ran at least one arm").model;
     let label_ids = rpiq::data::SentimentSet::label_token_ids(&tok);
 
     println!("== Fig 4 (a): sentiment qualitative cases [{name}] ==");

@@ -1,7 +1,7 @@
 //! Microbenchmarks: the hot paths of each layer — Rust blocked matmul,
 //! fused dequant-matmul, GPTQ/RPIQ per-layer cost, PJRT artifact execution
 //! vs pure-Rust forward, and serving throughput vs batch size. These are
-//! the §Perf numbers in EXPERIMENTS.md.
+//! the numbers behind rust/DESIGN.md §Perf notes.
 
 use rpiq::coordinator::experiments as exp;
 use rpiq::coordinator::{quantize_lm, Method, ServeConfig, Server};
@@ -36,6 +36,52 @@ fn main() -> anyhow::Result<()> {
         });
         let gflops = 2.0 * (m * k * n) as f64 / secs / 1e9;
         println!("  matmul_a_bt {m}x{k}x{n}: {:.3} ms  {:.2} GFLOP/s", secs * 1e3, gflops);
+    }
+
+    // --- threads sweep: row-sharded matmul scaling ---
+    // (the tentpole acceptance shape: 256x512x512 should show ≥2x at 4
+    // threads on a ≥4-core machine)
+    println!(
+        "== micro: threads sweep (pool workers = {}) ==",
+        rpiq::exec::global().size()
+    );
+    {
+        let (m, k, n) = (256usize, 512usize, 512usize);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let mut base = 0.0f64;
+        for threads in [1usize, 2, 4, 8] {
+            rpiq::exec::set_threads(threads);
+            let secs = time_n(10, || {
+                let _ = matmul_a_bt(&a, &b);
+            });
+            if threads == 1 {
+                base = secs;
+            }
+            println!(
+                "  matmul_a_bt {m}x{k}x{n} @ {threads} threads: {:.3} ms  {:.2} GFLOP/s  ({:.2}x vs 1 thread)",
+                secs * 1e3,
+                2.0 * (m * k * n) as f64 / secs / 1e9,
+                base / secs
+            );
+        }
+        // per-layer quantization cost under the same sweep
+        let xc = Tensor::randn(&[96, 512], 1.0, &mut rng);
+        let wl = Tensor::randn(&[512, 512], 0.5, &mut rng);
+        let mut acc =
+            rpiq::quant::HessianAccumulator::new(512, rpiq::metrics::MemoryLedger::new());
+        acc.add_batch(&xc);
+        let (h, _) = acc.finalize(0.01);
+        let qc = rpiq::quant::QuantConfig { bits: 4, group_size: 64, block_size: 64, percdamp: 0.01 };
+        let led = rpiq::metrics::MemoryLedger::new();
+        for threads in [1usize, 4] {
+            rpiq::exec::set_threads(threads);
+            let secs = time_n(3, || {
+                let _ = rpiq::quant::gptq_quantize(&wl, &h, qc, &led).unwrap();
+            });
+            println!("  gptq 512x512 layer @ {threads} threads: {:.1} ms", secs * 1e3);
+        }
+        rpiq::exec::set_threads(rpiq::exec::default_threads());
     }
 
     // --- fused dequant-matmul vs dequantize-then-matmul ---
@@ -77,7 +123,9 @@ fn main() -> anyhow::Result<()> {
     println!("  gptq layer: {:.1} ms   rpiq stage-2: {:.1} ms", gptq_secs * 1e3, rpiq_secs * 1e3);
 
     // --- PJRT artifact vs Rust forward ---
-    if Path::new("artifacts/manifest.json").exists() {
+    // (needs both the artifacts bundle and a pjrt-enabled build; the
+    // default build's stub Engine cannot execute entries)
+    if cfg!(feature = "pjrt") && Path::new("artifacts/manifest.json").exists() {
         println!("== micro: PJRT artifact vs rust forward (sim-opt-6.7b) ==");
         let eng = rpiq::runtime::Engine::new(Path::new("artifacts"))?;
         let tok = rpiq::data::corpus::Lexicon::tokenizer();

@@ -46,5 +46,5 @@ USAGE:
   rpiq artifacts [--dir artifacts]
 
 The pretrain command produces the subject checkpoints (4 LM presets + the
-VLM) that the table benches quantize; see DESIGN.md for the experiment map.
+VLM) that the table benches quantize; see rust/DESIGN.md for the experiment map.
 ";

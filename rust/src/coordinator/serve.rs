@@ -12,6 +12,13 @@
 //!   are delivered through per-request channels;
 //! * latency (queue + compute) is recorded per request into
 //!   [`LatencyStats`].
+//!
+//! Threading: the batcher is one dedicated *event-loop* thread (it blocks
+//! on the request queue, so parking it on a pool worker would starve the
+//! pool). All compute runs on the shared global pool (`crate::exec`):
+//! each batched forward's fused dequant-matmuls shard rows there, and when
+//! one pickup yields several equal-length groups the groups themselves
+//! fan out as scoped pool jobs.
 
 use crate::data::tokenizer::Tokenizer;
 use crate::data::SentimentSet;
@@ -186,6 +193,7 @@ fn batcher_loop(
         }
         // Group by sequence length so each group is one fused forward.
         batch.sort_by_key(|r| r.tokens.len());
+        let mut ranges = Vec::new();
         let mut i = 0;
         while i < batch.len() {
             let seq = batch[i].tokens.len();
@@ -193,7 +201,11 @@ fn batcher_loop(
             while j < batch.len() && batch[j].tokens.len() == seq {
                 j += 1;
             }
-            let group = &batch[i..j];
+            ranges.push((i, j));
+            i = j;
+        }
+        let run_group = |group: &[Request]| {
+            let seq = group[0].tokens.len();
             let mut tokens = Vec::with_capacity(group.len() * seq);
             for r in group {
                 tokens.extend_from_slice(&r.tokens);
@@ -213,14 +225,26 @@ fn batcher_loop(
                 stats.record(latency.as_secs_f64());
                 let _ = r.reply.send(Response { id: r.id, label, label_logits: ll, latency });
             }
-            i = j;
+        };
+        if ranges.len() <= 1 {
+            // single group: run inline (its matmuls still shard rows on
+            // the pool)
+            for &(i, j) in &ranges {
+                run_group(&batch[i..j]);
+            }
+        } else {
+            // several length groups in one pickup: fan the group forwards
+            // out across the shared pool
+            let batch_ref = &batch;
+            let run_ref = &run_group;
+            crate::exec::global().scope(|s| {
+                for &(i, j) in &ranges {
+                    s.spawn(move || run_ref(&batch_ref[i..j]));
+                }
+            });
         }
-        let _ = logits_guard(); // keep shape of loop explicit
     }
 }
-
-#[inline]
-fn logits_guard() {}
 
 /// Convenience for benches: replay a set of prompts through the server
 /// from `n_clients` producer threads; returns (throughput req/s, stats).

@@ -1,5 +1,5 @@
 //! Synthetic data substrate — the stand-ins for every dataset the paper
-//! uses but which cannot be downloaded offline (DESIGN.md §5):
+//! uses but which cannot be downloaded offline (rust/DESIGN.md §5 Substitution ledger):
 //!
 //! * [`tokenizer`] — deterministic word-level tokenizer over the shared
 //!   lexicon;

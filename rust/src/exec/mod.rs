@@ -1,12 +1,51 @@
-//! Execution substrate: a work-stealing-free but correct thread pool plus
-//! bounded MPMC channels, used by the serving coordinator (request router,
-//! dynamic batcher) in place of tokio, which is unavailable offline.
+//! Execution substrate: the process-global thread pool every hot path
+//! shares, a scoped fork-join API for sharding borrowed data, and bounded
+//! MPMC channels for the serving coordinator — all in place of
+//! tokio/rayon/crossbeam, which are unavailable offline.
 //!
-//! The design is deliberately simple: a shared `Mutex<VecDeque>` job queue
-//! with a condvar. On the 1-core CI machine contention is irrelevant; on
-//! larger machines the coordinator's batching amortizes queue traffic.
+//! # Threading model
+//!
+//! * **One pool per process.** [`global`] lazily creates the shared
+//!   [`ThreadPool`]; its worker count comes from the `RPIQ_THREADS`
+//!   environment variable, falling back to
+//!   `std::thread::available_parallelism()`, and is fixed for the life of
+//!   the process. The matmul kernels (`crate::tensor`), the fused
+//!   dequant-matmul (`crate::model`), the per-layer quantization fan-out
+//!   (`crate::coordinator::pipeline`), and the serving batcher's group
+//!   forwards all draw from this one pool — nothing else in the crate
+//!   spawns compute threads. (The serve batcher keeps one dedicated
+//!   *event-loop* thread, which blocks on a request queue and must not
+//!   occupy a pool worker; all of its compute is submitted here.)
+//! * **Shard count vs worker count.** [`num_threads`] is the *target
+//!   shard count* data-parallel helpers split work into. It defaults to
+//!   the worker count and can be changed at runtime with [`set_threads`]
+//!   (used by the bench thread-sweeps and the determinism tests); shards
+//!   beyond the worker count simply queue, so any setting is safe.
+//! * **Determinism guarantee.** Every parallel helper in this crate
+//!   shards work so that each worker owns a *disjoint* slice of the output
+//!   and performs the same floating-point operations in the same order as
+//!   the sequential code. Results are therefore **bit-identical** for any
+//!   thread count, including 1 — asserted by the matmul bit-equality tests
+//!   and the pipeline Γ-trace determinism test.
+//! * **Nested parallelism is deadlock-free.** [`ThreadPool::scope`] does
+//!   not idle-block while waiting for its jobs: the waiting thread *helps*,
+//!   popping queued jobs and running them inline. A pool worker that forks
+//!   a nested scope (e.g. a layer-quantization job calling a parallel
+//!   matmul) therefore always makes progress even when every worker is
+//!   blocked in a scope.
+//! * **Panics are contained.** A panicking job never kills a worker; the
+//!   pool counts it ([`ThreadPool::panicked_jobs`]) and keeps serving.
+//!   A panic inside a scoped job is re-raised on the thread that opened
+//!   the scope, after all sibling jobs finished (so borrowed shards are
+//!   never dangling).
+//!
+//! The queue is a shared `Mutex<VecDeque>` with condvars. On the 1-core CI
+//! machine contention is irrelevant; on larger machines the shard sizes
+//! chosen by the kernels (rows per worker) amortize queue traffic.
 
 use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -14,31 +53,45 @@ use std::time::{Duration, Instant};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// A queued job plus the identity of the scope that spawned it (0 = plain
+/// `submit`). The id lets a thread joining a scope distinguish *its own*
+/// shard work (genuine caller time) from jobs it merely helps with while
+/// waiting — the basis of the exclusive-time accounting in
+/// [`helped_secs`].
+struct Queued {
+    job: Job,
+    scope_id: usize,
+}
+
 struct PoolShared {
-    queue: Mutex<VecDeque<Job>>,
+    queue: Mutex<VecDeque<Queued>>,
     available: Condvar,
     shutdown: AtomicBool,
     in_flight: AtomicUsize,
     idle: Condvar,
+    panicked_jobs: AtomicUsize,
 }
 
 /// Fixed-size thread pool.
 pub struct ThreadPool {
     shared: Arc<PoolShared>,
     workers: Vec<JoinHandle<()>>,
+    size: usize,
 }
 
 impl ThreadPool {
     /// Spawn `n` workers (minimum 1).
     pub fn new(n: usize) -> Self {
+        let n = n.max(1);
         let shared = Arc::new(PoolShared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
             in_flight: AtomicUsize::new(0),
             idle: Condvar::new(),
+            panicked_jobs: AtomicUsize::new(0),
         });
-        let workers = (0..n.max(1))
+        let workers = (0..n)
             .map(|i| {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
@@ -47,14 +100,28 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { shared, workers }
+        ThreadPool { shared, workers, size: n }
     }
 
-    /// Submit a job.
-    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Jobs that panicked (and were contained) so far.
+    pub fn panicked_jobs(&self) -> usize {
+        self.shared.panicked_jobs.load(Ordering::SeqCst)
+    }
+
+    fn enqueue(&self, job: Job, scope_id: usize) {
         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.shared.queue.lock().unwrap().push_back(Box::new(f));
+        self.shared.queue.lock().unwrap().push_back(Queued { job, scope_id });
         self.shared.available.notify_one();
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.enqueue(Box::new(f), 0);
     }
 
     /// Block until every submitted job has finished.
@@ -70,31 +137,162 @@ impl ThreadPool {
         }
     }
 
-    /// Run a batch of closures and collect results in order. Convenience
-    /// used by the quantization pipeline to fan layer jobs out.
-    pub fn map<T: Send + 'static, F>(&self, jobs: Vec<F>) -> Vec<T>
+    /// Fork-join over borrowed data: run `f` with a [`Scope`] whose
+    /// [`Scope::spawn`] accepts non-`'static` closures, then wait for every
+    /// spawned job before returning. This is what lets the matmul kernels
+    /// hand disjoint `&mut` row chunks of one output buffer to the pool.
+    ///
+    /// The waiting thread does not sleep while jobs are pending — it pops
+    /// queued pool jobs and runs them inline ("help-first" join), which
+    /// makes nested scopes on a finite pool deadlock-free.
+    ///
+    /// If a scoped job panics, the panic is re-raised here after all
+    /// sibling jobs have completed.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
     where
-        F: FnOnce() -> T + Send + 'static,
+        F: FnOnce(&Scope<'_, 'env>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeState {
+                id: SCOPE_IDS.fetch_add(1, Ordering::Relaxed),
+                pending: Mutex::new(0),
+                done: Condvar::new(),
+                panic_payload: Mutex::new(None),
+            }),
+            _env: PhantomData,
+        };
+        // Wait on drop, so that even a panic inside `f` cannot let borrowed
+        // shard jobs outlive the data they reference.
+        struct WaitGuard<'a> {
+            pool: &'a ThreadPool,
+            state: Arc<ScopeState>,
+        }
+        impl Drop for WaitGuard<'_> {
+            fn drop(&mut self) {
+                self.pool.help_until_done(&self.state);
+            }
+        }
+        let guard = WaitGuard { pool: self, state: Arc::clone(&scope.state) };
+        let out = f(&scope);
+        drop(guard);
+        // Re-raise the first job panic with its original payload so the
+        // real message/location survives the pool hop.
+        let payload = scope.state.panic_payload.lock().unwrap().take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+        out
+    }
+
+    /// Run a batch of closures on the pool and collect their results in
+    /// order. Closures may borrow from the caller's stack (the pipeline
+    /// fans per-layer quantization jobs out with borrowed calibration
+    /// state). Panics in any job propagate after all jobs finish.
+    ///
+    /// Observable parallelism is the minimum of the global shard target
+    /// ([`num_threads`]) and this pool's worker count: that many runner
+    /// jobs pull from one work list, and an effective count of 1 runs
+    /// everything inline on the calling thread — which is what makes
+    /// `set_threads(1)` a true single-threaded baseline for the bench
+    /// sweeps and the pipeline determinism tests.
+    pub fn map<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
     {
         let n = jobs.len();
-        let results: Arc<Mutex<Vec<Option<T>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-        for (i, job) in jobs.into_iter().enumerate() {
-            let slot = Arc::clone(&results);
-            self.submit(move || {
-                let out = job();
-                slot.lock().unwrap()[i] = Some(out);
+        if n == 0 {
+            return Vec::new();
+        }
+        let runners = num_threads().min(self.size).min(n);
+        if runners <= 1 {
+            // Inline path keeps the parallel path's contract: every job
+            // runs (a panic doesn't skip the rest), panics are counted,
+            // and the first payload re-raises after the batch.
+            let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+            let mut out = Vec::with_capacity(n);
+            for job in jobs {
+                match catch_unwind(AssertUnwindSafe(job)) {
+                    Ok(v) => out.push(v),
+                    Err(p) => {
+                        self.shared.panicked_jobs.fetch_add(1, Ordering::SeqCst);
+                        if first_panic.is_none() {
+                            first_panic = Some(p);
+                        }
+                    }
+                }
+            }
+            if let Some(p) = first_panic {
+                std::panic::resume_unwind(p);
+            }
+            return out;
+        }
+        let work: Mutex<Vec<(usize, F)>> =
+            Mutex::new(jobs.into_iter().enumerate().rev().collect());
+        let mut out: Vec<Option<T>> = Vec::new();
+        out.resize_with(n, || None);
+        {
+            let results = Mutex::new(&mut out);
+            let work_ref = &work;
+            let results_ref = &results;
+            self.scope(|s| {
+                for _ in 0..runners {
+                    s.spawn(move || loop {
+                        let next = work_ref.lock().unwrap().pop();
+                        match next {
+                            Some((i, job)) => {
+                                let v = job();
+                                results_ref.lock().unwrap()[i] = Some(v);
+                            }
+                            None => break,
+                        }
+                    });
+                }
             });
         }
-        self.wait_idle();
-        Arc::try_unwrap(results)
-            .ok()
-            .expect("all workers done")
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|o| o.expect("job completed"))
-            .collect()
+        out.into_iter().map(|o| o.expect("scoped job ran")).collect()
+    }
+
+    /// Drive queued jobs until `state.pending` hits zero.
+    fn help_until_done(&self, state: &ScopeState) {
+        loop {
+            if *state.pending.lock().unwrap() == 0 {
+                return;
+            }
+            let queued = self.shared.queue.lock().unwrap().pop_front();
+            match queued {
+                Some(q) if q.scope_id == state.id => {
+                    // One of this scope's own shard jobs: running it inline
+                    // IS the caller's work — no helped accounting.
+                    run_one(&self.shared, q.job);
+                }
+                Some(q) => {
+                    // A foreign job stolen while waiting: attribute its wall
+                    // time to this thread's helped counter so timers stay
+                    // exclusive. Setting (not adding) `before + elapsed`
+                    // keeps nested help sites from double-counting — inner
+                    // increments are contained in this site's window.
+                    let before = HELPED_SECS.with(|c| c.get());
+                    let t0 = Instant::now();
+                    run_one(&self.shared, q.job);
+                    HELPED_SECS.with(|c| c.set(before + t0.elapsed().as_secs_f64()));
+                }
+                None => {
+                    // Our jobs are running on other threads; sleep until one
+                    // finishes (short timeout as belt-and-braces — new help
+                    // opportunities can appear in the queue meanwhile).
+                    let pending = state.pending.lock().unwrap();
+                    if *pending == 0 {
+                        return;
+                    }
+                    let _ = state
+                        .done
+                        .wait_timeout(pending, Duration::from_millis(1))
+                        .unwrap();
+                }
+            }
+        }
     }
 }
 
@@ -108,13 +306,22 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Run one queued job with panic containment and in-flight bookkeeping.
+fn run_one(shared: &PoolShared, job: Job) {
+    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+        shared.panicked_jobs.fetch_add(1, Ordering::SeqCst);
+    }
+    shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+    shared.idle.notify_all();
+}
+
 fn worker_loop(shared: Arc<PoolShared>) {
     loop {
-        let job = {
+        let queued = {
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if let Some(job) = q.pop_front() {
-                    break job;
+                if let Some(queued) = q.pop_front() {
+                    break queued;
                 }
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -122,10 +329,143 @@ fn worker_loop(shared: Arc<PoolShared>) {
                 q = shared.available.wait(q).unwrap();
             }
         };
-        job();
-        shared.in_flight.fetch_sub(1, Ordering::SeqCst);
-        shared.idle.notify_all();
+        run_one(&shared, queued.job);
     }
+}
+
+thread_local! {
+    /// Monotonic seconds this thread has spent inline-running *other*
+    /// jobs while waiting in a scope join (help-first work stealing).
+    static HELPED_SECS: std::cell::Cell<f64> = const { std::cell::Cell::new(0.0) };
+}
+
+/// Snapshot of this thread's helped-time counter (seconds). Only *foreign*
+/// jobs count — a thread inline-running its own scope's shard jobs is doing
+/// its own work, not helping. Subtract two snapshots to get the time a
+/// window spent on stolen jobs; the stage timers use this to report
+/// *exclusive* durations even when a waiting worker helps with an
+/// unrelated layer's job.
+pub fn helped_secs() -> f64 {
+    HELPED_SECS.with(|c| c.get())
+}
+
+/// Monotonically increasing scope identities (0 is reserved for plain
+/// `submit` jobs).
+static SCOPE_IDS: AtomicUsize = AtomicUsize::new(1);
+
+struct ScopeState {
+    /// Identity used to tag this scope's jobs in the queue (see [`Queued`]).
+    id: usize,
+    pending: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload from any job of this scope, re-raised at join.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Handle passed to the closure of [`ThreadPool::scope`]; invariant over
+/// `'env` so a scope cannot be smuggled into a longer-lived context.
+pub struct Scope<'pool, 'env> {
+    pool: &'pool ThreadPool,
+    state: Arc<ScopeState>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'pool, 'env> Scope<'pool, 'env> {
+    /// Spawn a job that may borrow data alive for `'env`.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        *self.state.pending.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        let shared = Arc::clone(&self.pool.shared);
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+                // counted here because the re-raise wrapper below means
+                // run_one's own catch never sees scoped-job panics
+                shared.panicked_jobs.fetch_add(1, Ordering::SeqCst);
+                let mut slot = state.panic_payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let mut pending = state.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                state.done.notify_all();
+            }
+        });
+        // SAFETY: `scope` does not return — even if its closure panics,
+        // via the wait-on-drop guard — until `pending` reaches zero, i.e.
+        // until this job has run to completion. Every borrow captured by
+        // `f` therefore outlives the job, so erasing `'env` to `'static`
+        // for the queue's benefit cannot be observed.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+        };
+        self.pool.enqueue(job, self.state.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global pool.
+// ---------------------------------------------------------------------------
+
+/// Worker count the global pool is created with: `RPIQ_THREADS` if set to a
+/// positive integer, else `available_parallelism`, else 1.
+pub fn default_threads() -> usize {
+    std::env::var("RPIQ_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+/// The process-global pool, created on first use. Worker count is fixed at
+/// creation (see [`default_threads`]); [`set_threads`] changes only the
+/// shard target used by the data-parallel helpers. Lock-free after
+/// initialization — this sits on every parallel kernel's dispatch path.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: std::sync::OnceLock<ThreadPool> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// Target shard count for data-parallel helpers; 0 = "not yet resolved".
+static TARGET_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Current target shard count for data-parallel helpers (matmul row
+/// sharding, per-layer fan-out). Defaults to [`default_threads`].
+pub fn num_threads() -> usize {
+    match TARGET_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let n = default_threads();
+            // if a concurrent set_threads won the race, honour its value
+            match TARGET_THREADS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => n,
+                Err(cur) => cur,
+            }
+        }
+        n => n,
+    }
+}
+
+/// Override the shard target (benches sweep this; tests pin it to prove
+/// bit-identical results across thread counts). Values above the pool's
+/// worker count are allowed — excess shards queue. Clamped to ≥ 1.
+pub fn set_threads(n: usize) {
+    TARGET_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Test support: serializes tests that mutate the global shard target so
+/// their exact-value assertions cannot race (results are bit-identical at
+/// any target, but `num_threads()` readbacks are not). Panic-poisoning is
+/// ignored deliberately.
+#[doc(hidden)]
+pub fn thread_target_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Bounded MPMC channel with blocking send/recv and timeout recv — the
@@ -295,6 +635,146 @@ mod tests {
         let jobs: Vec<_> = (0..20).map(|i| move || i * i).collect();
         let out = pool.map(jobs);
         assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_map_jobs_may_borrow() {
+        // The scope-based map accepts non-'static closures: jobs read a
+        // stack-local slice and return values derived from it.
+        let pool = ThreadPool::new(2);
+        let data: Vec<u64> = (0..32).collect();
+        let jobs: Vec<_> = data
+            .chunks(8)
+            .map(|chunk| move || chunk.iter().sum::<u64>())
+            .collect();
+        let sums = pool.map(jobs);
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("boom"));
+        pool.wait_idle();
+        assert_eq!(pool.panicked_jobs(), 1);
+        // workers are still alive and serving
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn drop_with_queued_work_drains_first() {
+        // Shutdown must not drop queued jobs on the floor: workers drain
+        // the queue before honouring the shutdown flag.
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(1);
+            let c0 = Arc::clone(&counter);
+            pool.submit(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                c0.fetch_add(1, Ordering::SeqCst);
+            });
+            for _ in 0..15 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // drop immediately: 1 running + 15 queued
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn scope_shards_borrowed_slice() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u32; 103]; // odd length: uneven final shard
+        pool.scope(|s| {
+            for (si, chunk) in data.chunks_mut(25).enumerate() {
+                s.spawn(move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = (si * 25 + i) as u32;
+                    }
+                });
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner boom")]
+    fn scope_propagates_job_panic_with_payload() {
+        let pool = ThreadPool::new(2);
+        pool.scope(|s| {
+            s.spawn(|| panic!("inner boom"));
+            s.spawn(|| {}); // sibling must still be joined before re-raise
+        });
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // More blocked scopes than workers: without help-while-waiting this
+        // deadlocks (every worker blocked joining its own sub-jobs).
+        let pool = ThreadPool::new(2);
+        let pool_ref = &pool;
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let c = Arc::clone(&counter);
+                s.spawn(move || {
+                    pool_ref.scope(|inner| {
+                        for _ in 0..4 {
+                            let c2 = Arc::clone(&c);
+                            inner.spawn(move || {
+                                c2.fetch_add(1, Ordering::SeqCst);
+                            });
+                        }
+                    });
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn scope_result_and_empty_scope() {
+        let pool = ThreadPool::new(1);
+        let out = pool.scope(|_| 41 + 1);
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn thread_target_knobs() {
+        let _guard = thread_target_test_lock();
+        assert!(default_threads() >= 1);
+        assert!(num_threads() >= 1);
+        let before = num_threads();
+        set_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_threads(0); // clamped
+        assert_eq!(num_threads(), 1);
+        set_threads(before);
+        assert_eq!(num_threads(), before);
+        // global pool exists and accepts work
+        let g = global();
+        assert!(g.size() >= 1);
+        let n = Arc::new(AtomicUsize::new(0));
+        let n2 = Arc::clone(&n);
+        g.scope(|s| {
+            s.spawn(move || {
+                n2.fetch_add(1, Ordering::SeqCst);
+            })
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -16,7 +16,18 @@
 //!   serving runtime that executes the AOT artifacts via PJRT.
 //!
 //! Python never runs on the request path: once `make artifacts` has been
-//! run, everything here is self-contained.
+//! run, everything here is self-contained. (PJRT execution of those
+//! artifacts needs the vendored `xla` bindings and is gated behind the
+//! `pjrt` cargo feature; the default build ships a validating stub — see
+//! [`runtime`].)
+//!
+//! Compute-heavy paths — the matmul kernels, the fused dequant-matmul,
+//! per-layer quantization, and the serve batcher's group forwards — share
+//! one process-global thread pool sized by `RPIQ_THREADS` (default:
+//! `available_parallelism`), with results bit-identical at any thread
+//! count. See [`exec`] for the threading model, and `rust/DESIGN.md` for
+//! the cross-module design notes (paper deviations, substitution ledger,
+//! perf log).
 
 pub mod tensor;
 pub mod linalg;

@@ -7,6 +7,15 @@
 //! [`MemoryLedger`] scope, which tracks live bytes and the high-water mark.
 //! Because both engines are instrumented identically, the relative overhead
 //! ΔM (Eq. 27) — the quantity the paper actually analyses — is preserved.
+//!
+//! Concurrency: [`MemoryLedger`], [`Timers`], and [`LatencyStats`] are
+//! cheap `Clone` handles over one `Arc<Mutex<…>>` state and are shared
+//! freely with pool workers (the parallel pipeline records alloc/free and
+//! stage timings from many layer jobs at once). Alloc/free pairing is
+//! exact under concurrency — live bytes always return to zero — while the
+//! *peak* is a property of the observed interleaving: more jobs in flight
+//! can legitimately raise it. Determinism-sensitive comparisons must pin
+//! `exec::set_threads` (see the pipeline tests).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -117,12 +126,29 @@ impl Timers {
     }
 
     /// Time `f` and accumulate under `name`.
+    ///
+    /// The duration is *exclusive* of help-first work stealing: when the
+    /// current thread inline-runs another scope's job while waiting in a
+    /// pool join (see `exec::helped_secs`), that stolen job's wall time is
+    /// subtracted here — it is timed once, by its own `time` call, instead
+    /// of inflating whichever window it happened to run inside. (A thread
+    /// running its own scope's shard jobs is doing its own work and is
+    /// *not* subtracted.)
     pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        self.time_secs(name, f).0
+    }
+
+    /// Like [`Self::time`], additionally returning the exclusive duration
+    /// that was accumulated (the pipeline records per-layer stage seconds
+    /// from this without double instrumentation).
+    pub fn time_secs<T>(&self, name: &str, f: impl FnOnce() -> T) -> (T, f64) {
         let t0 = Instant::now();
+        let h0 = crate::exec::helped_secs();
         let out = f();
-        let dt = t0.elapsed().as_secs_f64();
+        let helped = crate::exec::helped_secs() - h0;
+        let dt = (t0.elapsed().as_secs_f64() - helped).max(0.0);
         *self.inner.lock().unwrap().entry(name.to_string()).or_insert(0.0) += dt;
-        out
+        (out, dt)
     }
 
     /// Add an externally measured duration.
@@ -226,6 +252,39 @@ mod tests {
         assert_eq!(led.peak_for("hessian"), 40);
         assert_eq!(led.peak_for("weights"), 5);
         assert_eq!(led.breakdown()[0].0, "hessian");
+    }
+
+    #[test]
+    fn ledger_balances_under_concurrent_workers() {
+        // The parallel pipeline's accounting contract: arbitrary
+        // interleavings of alloc/free from pool workers keep live bytes
+        // exact and the peak at least the largest single allocation. Pin
+        // the shard target so map() actually runs the jobs concurrently.
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        crate::exec::set_threads(4);
+        let led = MemoryLedger::new();
+        let timers = Timers::new();
+        let pool = crate::exec::ThreadPool::new(4);
+        let jobs: Vec<_> = (0..32)
+            .map(|i| {
+                let led = led.clone();
+                let timers = timers.clone();
+                move || {
+                    timers.time("job", || {
+                        led.scoped("worker_tmp", 1000 + i, || {
+                            std::thread::yield_now();
+                        });
+                    });
+                }
+            })
+            .collect();
+        let _: Vec<()> = pool.map(jobs);
+        crate::exec::set_threads(before);
+        assert_eq!(led.live_bytes(), 0);
+        assert!(led.peak_bytes() >= 1031);
+        assert!(led.peak_for("worker_tmp") >= 1031);
+        assert!(timers.get("job") >= 0.0);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //!
 //! The paper quantizes OPT/Qwen/LLaMA checkpoints; those cannot be
 //! downloaded here, so we *train our own* small checkpoints on synthetic
-//! corpora (DESIGN.md §5 substitution ledger). The four LM presets differ
+//! corpora (rust/DESIGN.md §5 Substitution ledger). The four LM presets differ
 //! in depth/width/ff-ratio/activation so the "diverse architectures" axis
 //! of Table 1 is preserved.
 

@@ -45,11 +45,21 @@ impl QuantizedLm {
     }
 
     /// Fused dequant-matmul: `y = x · deq(W)ᵀ` with only `O(K)` transient
-    /// state (one dequantized weight row at a time, reused across every
-    /// activation row) — structurally the Pallas kernel's schedule with a
-    /// (1 × K) weight tile.
+    /// state per worker (one dequantized weight row at a time, reused
+    /// across every activation row of the shard) — structurally the Pallas
+    /// kernel's schedule with a (1 × K) weight tile.
     ///
-    /// Perf note (EXPERIMENTS.md §Perf #5): the original per-(i,o) group
+    /// Parallelism: activation rows are sharded across the global pool
+    /// (`crate::exec`), each worker owning a disjoint `&mut` row chunk of
+    /// `y` and running the identical inner kernel — results are
+    /// bit-identical to the sequential walk for any thread count. Each
+    /// shard re-dequantizes the weight rows; with `R` rows per shard the
+    /// extra conversion cost is `1/R` of the contraction work, negligible
+    /// for the batched shapes the pipeline and server feed in. Small
+    /// problems stay on the calling thread (same cutoff as the dense
+    /// matmul kernels).
+    ///
+    /// Perf note (rust/DESIGN.md §Perf notes): an earlier per-(i,o) group
     /// loop re-converted each u8 level `N` times and ran 0.81× the speed
     /// of materialize-then-matmul; hoisting the row dequantization out of
     /// the activation loop amortizes the conversion `N`-fold and removes
@@ -58,31 +68,14 @@ impl QuantizedLm {
         let (n, in_f) = (x.rows(), x.cols());
         assert_eq!(in_f, q.in_features);
         let out_f = q.out_features;
-        let gs = q.grid.group_size;
-        let ng = q.n_groups();
         let mut y = Tensor::zeros(&[n, out_f]);
         let xd = x.data();
-        let qw = &q.qweight;
-        let yd = y.data_mut();
-        let mut wbuf = vec![0.0f32; in_f];
-        for o in 0..out_f {
-            // dequantize row o once: w_c = (q_c − z_g)·s_g
-            let wrow = &qw[o * in_f..(o + 1) * in_f];
-            for g in 0..ng {
-                let c0 = g * gs;
-                let c1 = (c0 + gs).min(in_f);
-                let scale = q.scales[o * ng + g];
-                let zero = q.zeros[o * ng + g];
-                for c in c0..c1 {
-                    wbuf[c] = (wrow[c] as f32 - zero) * scale;
-                }
-            }
-            // contract against every activation row
-            for i in 0..n {
-                let xrow = &xd[i * in_f..(i + 1) * in_f];
-                yd[i * out_f + o] = crate::tensor::dot(xrow, &wbuf);
-            }
-        }
+        // Floor of 8 activation rows per shard: each shard re-dequantizes
+        // the whole weight matrix (O(out·in) setup), so thinner shards
+        // would spend a large fraction of their time on conversion.
+        crate::tensor::par_rows(y.data_mut(), n, out_f, 2 * n * in_f * out_f, 8, |chunk, i0| {
+            qmatmul_rows(xd, q, chunk, i0)
+        });
         y
     }
 
@@ -118,6 +111,39 @@ impl QuantizedLm {
     }
 }
 
+/// Activation rows `[i0, i0 + ychunk.len()/out_f)` of the fused
+/// dequant-matmul, written into `ychunk`. Shared by the sequential and
+/// sharded paths of [`QuantizedLm::qmatmul`] so both run identical f32
+/// operations per output element.
+fn qmatmul_rows(xd: &[f32], q: &QuantizedLinear, ychunk: &mut [f32], i0: usize) {
+    let in_f = q.in_features;
+    let out_f = q.out_features;
+    let gs = q.grid.group_size;
+    let ng = q.n_groups();
+    let rows = ychunk.len() / out_f;
+    let qw = &q.qweight;
+    let mut wbuf = vec![0.0f32; in_f];
+    for o in 0..out_f {
+        // dequantize row o once: w_c = (q_c − z_g)·s_g
+        let wrow = &qw[o * in_f..(o + 1) * in_f];
+        for g in 0..ng {
+            let c0 = g * gs;
+            let c1 = (c0 + gs).min(in_f);
+            let scale = q.scales[o * ng + g];
+            let zero = q.zeros[o * ng + g];
+            for c in c0..c1 {
+                wbuf[c] = (wrow[c] as f32 - zero) * scale;
+            }
+        }
+        // contract against every activation row of this shard
+        for r in 0..rows {
+            let i = i0 + r;
+            let xrow = &xd[i * in_f..(i + 1) * in_f];
+            ychunk[r * out_f + o] = crate::tensor::dot(xrow, &wbuf);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +165,25 @@ mod tests {
         }
         let tokens: Vec<u32> = (0..16).map(|_| rng.next_below(32) as u32).collect();
         (w.clone(), QuantizedLm::new(w, qlinears), tokens)
+    }
+
+    #[test]
+    fn qmatmul_parallel_bit_identical_across_thread_counts() {
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        let mut rng = Pcg64::seeded(305);
+        // 2·33·96·64 flops ≥ the parallel cutoff; 33 rows shard unevenly.
+        let w = Tensor::randn(&[64, 96], 0.5, &mut rng);
+        let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 16));
+        let x = Tensor::randn(&[33, 96], 1.0, &mut rng);
+        let mut reference = Tensor::zeros(&[33, 64]);
+        qmatmul_rows(x.data(), &q, reference.data_mut(), 0);
+        for threads in [1, 2, 4] {
+            crate::exec::set_threads(threads);
+            let y = QuantizedLm::qmatmul(&x, &q);
+            assert_eq!(y.data(), reference.data(), "threads={threads}");
+        }
+        crate::exec::set_threads(before);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use crate::linalg::apply_damping;
 use crate::metrics::MemoryLedger;
-use crate::tensor::{matmul_at_b_into, Tensor};
+use crate::tensor::{matmul_at_b_acc, Tensor};
 
 /// Streaming `H += XᵀX` accumulator for one linear layer.
 pub struct HessianAccumulator {
@@ -43,7 +43,7 @@ impl HessianAccumulator {
         self.h.scale(self.nsamples as f32 / total as f32);
         let mut xtx = Tensor::zeros(&[x.cols(), x.cols()]);
         self.ledger.alloc("hessian_tmp", xtx.nbytes());
-        matmul_at_b_into(x, x, &mut xtx);
+        matmul_at_b_acc(x, x, &mut xtx);
         self.h.axpy(2.0 / total as f32, &xtx);
         self.ledger.free("hessian_tmp", xtx.nbytes());
         self.nsamples = total;

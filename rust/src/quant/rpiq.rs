@@ -20,7 +20,7 @@
 //!   and return the best (lowest-Γ) projected iterate.
 //!
 //! Three deliberate implementation clarifications of the paper's text
-//! (documented in DESIGN.md §Deviations):
+//! (documented in rust/DESIGN.md §Deviations):
 //!
 //! 1. Eq. 8 yields off-grid weights for `α < 1`. We keep the continuous
 //!    iterate `B_i` as optimizer state but always *deploy and score* its

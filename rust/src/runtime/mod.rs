@@ -3,7 +3,16 @@
 //! client. This is the bridge between Layer 3 (this crate) and Layers 1–2
 //! (JAX + Pallas, build-time only).
 //!
-//! Wiring follows `/opt/xla-example/load_hlo`:
+//! The actual PJRT execution path needs the (vendored, not-on-crates.io)
+//! `xla` bindings and is therefore gated behind the `pjrt` cargo feature.
+//! The default build ships a **stub [`Engine`]** with the same API: it
+//! still loads and validates `manifest.json` (so `rpiq artifacts` can lint
+//! a bundle) but `run` fails with a clear error. Everything that consumes
+//! artifacts (`rust/tests/artifacts.rs`, the `micro` bench, the
+//! `e2e_assist` example) already skips when `artifacts/` is absent, so the
+//! stub never changes test outcomes on a clean checkout.
+//!
+//! With `--features pjrt`, wiring follows `/opt/xla-example/load_hlo`:
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
 //! `XlaComputation::from_proto` → `client.compile` → `execute`. Compiled
 //! executables are cached per entry name; inputs/outputs are validated
@@ -17,6 +26,7 @@ use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 /// Dtypes the artifact boundary supports.
@@ -132,6 +142,7 @@ impl Arg {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         Ok(match self {
@@ -141,13 +152,73 @@ impl Arg {
     }
 }
 
+/// Validate a call signature against a manifest entry (shared by the real
+/// and stub engines so misuse fails identically in both builds).
+fn check_inputs(entry: &Entry, args: &[Arg]) -> Result<()> {
+    if args.len() != entry.inputs.len() {
+        bail!(
+            "'{}' expects {} inputs, got {}",
+            entry.name,
+            entry.inputs.len(),
+            args.len()
+        );
+    }
+    for (i, (arg, (shape, dtype))) in args.iter().zip(entry.inputs.iter()).enumerate() {
+        if arg.shape() != shape.as_slice() || arg.dtype() != *dtype {
+            bail!(
+                "'{}' input {i}: expected {:?} {:?}, got {:?} {:?}",
+                entry.name,
+                shape,
+                dtype,
+                arg.shape(),
+                arg.dtype()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Stub engine used when the `pjrt` feature is off: manifest loading and
+/// validation work, execution does not.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    pub registry: ArtifactRegistry,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Create an engine over `artifacts/` (validates the manifest).
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let registry = ArtifactRegistry::load(artifacts_dir)?;
+        Ok(Engine { registry })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub (build with --features pjrt to execute artifacts)".to_string()
+    }
+
+    /// Validates the call against the manifest, then fails: execution
+    /// requires the `pjrt` feature.
+    pub fn run(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let entry = self.registry.entry(name)?;
+        check_inputs(entry, args)?;
+        bail!(
+            "cannot execute artifact '{name}': this build has no PJRT backend \
+             (rebuild with `--features pjrt` and a vendored `xla` crate)"
+        )
+    }
+}
+
 /// Compiled-executable cache over a PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     pub registry: ArtifactRegistry,
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create an engine over `artifacts/`.
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
@@ -185,24 +256,7 @@ impl Engine {
     /// (tupled) outputs come back as f32 tensors.
     pub fn run(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
         let entry = self.registry.entry(name)?.clone();
-        if args.len() != entry.inputs.len() {
-            bail!(
-                "'{name}' expects {} inputs, got {}",
-                entry.inputs.len(),
-                args.len()
-            );
-        }
-        for (i, (arg, (shape, dtype))) in args.iter().zip(entry.inputs.iter()).enumerate() {
-            if arg.shape() != shape.as_slice() || arg.dtype() != *dtype {
-                bail!(
-                    "'{name}' input {i}: expected {:?} {:?}, got {:?} {:?}",
-                    shape,
-                    dtype,
-                    arg.shape(),
-                    arg.dtype()
-                );
-            }
-        }
+        check_inputs(&entry, args)?;
         self.compiled(name)?;
         let cache = self.cache.lock().unwrap();
         let exe = cache.get(name).unwrap();
@@ -269,6 +323,35 @@ mod tests {
         assert_eq!(a.dtype(), Dtype::F32);
         let b = Arg::I32(vec![1, 2, 3], vec![3]);
         assert_eq!(b.dtype(), Dtype::I32);
+        #[cfg(feature = "pjrt")]
         assert!(b.to_literal().is_ok());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_validates_but_refuses_to_run() {
+        // unique per process: concurrent `cargo test` runs share TMPDIR
+        let dir = std::env::temp_dir().join(format!("rpiq_rt_stub_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("f.hlo.txt"), "HloModule fake").unwrap();
+        let manifest = r#"{
+            "entries": {
+                "f": {
+                    "file": "f.hlo.txt",
+                    "inputs": [{"shape": [2, 2], "dtype": "f32"}],
+                    "outputs": [{"shape": [2], "dtype": "f32"}]
+                }
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let eng = Engine::new(&dir).unwrap();
+        assert!(eng.platform().contains("stub"));
+        // wrong shape caught by the shared validator
+        let bad = eng.run("f", &[Arg::F32(Tensor::zeros(&[3, 3]))]).unwrap_err();
+        assert!(bad.to_string().contains("expected"));
+        // right shape fails with the feature hint, not a shape error
+        let err = eng.run("f", &[Arg::F32(Tensor::zeros(&[2, 2]))]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,4 +1,5 @@
-//! Blocked matrix multiplication kernels.
+//! Blocked matrix multiplication kernels, row-parallel over the shared
+//! global pool.
 //!
 //! Four layouts are provided because the quantization engines and the
 //! trainer each have a natural one:
@@ -9,13 +10,77 @@
 //! * [`matmul_at_b`]   — `C = Aᵀ·B`       (A: k×m, B: k×n) — Hessian
 //!   accumulation `XᵀX` and weight gradients.
 //!
+//! # Parallelism
+//!
+//! Every kernel shards the *output rows* across the global pool
+//! (`crate::exec`): each worker owns a disjoint `&mut` row chunk of `C`
+//! and runs the identical inner kernel the sequential path uses, so
+//! results are **bit-identical** for any thread count (f32 accumulation
+//! order within a row never changes; workers never share an output
+//! element). Problems below [`PAR_FLOP_CUTOFF`] flops stay on the calling
+//! thread — the fork-join overhead would exceed the work.
+//!
 //! The kernels are cache-blocked over k and use the unrolled [`dot`] /
-//! [`axpy_slice`] primitives so LLVM emits SIMD; on the single-core CI
-//! machine this reaches a few GFLOP/s which is the practical roofline
-//! without hand-written intrinsics (EXPERIMENTS.md §Perf records the
-//! measured numbers and iteration log).
+//! [`axpy_slice`] primitives so LLVM emits SIMD; per-core throughput and
+//! the measured scaling curves are recorded by the `micro` bench
+//! (threads-sweep arm) and summarized in `rust/DESIGN.md` §Perf notes.
 
 use super::{axpy_slice, dot, Tensor};
+use crate::exec;
+
+/// Flop count (2·m·k·n) below which the kernels run on the calling thread:
+/// at a few GFLOP/s a problem this size finishes in tens of microseconds,
+/// comparable to the cost of queueing jobs on the pool.
+pub(crate) const PAR_FLOP_CUTOFF: usize = 1 << 18;
+
+/// Number of row shards to split an `rows`-row output into for a problem
+/// of `flops` total flops: 1 (sequential) below the cutoff, else the
+/// current `exec::num_threads()` target capped by the row count.
+pub(crate) fn shard_count(rows: usize, flops: usize) -> usize {
+    if flops < PAR_FLOP_CUTOFF || rows < 2 {
+        1
+    } else {
+        exec::num_threads().clamp(1, rows)
+    }
+}
+
+/// Shared dispatch for every row-parallel kernel (the three dense layouts
+/// and the fused dequant-matmul): split the `rows`-row, `width`-column
+/// row-major buffer `out` into per-shard `&mut` chunks on the global pool
+/// and run `kernel(chunk, first_row)` on each; below the flop cutoff the
+/// kernel runs once on the calling thread over the whole buffer —
+/// identical code path, so results are bit-identical either way.
+///
+/// `min_rows_per_shard` caps the shard count for kernels with a fixed
+/// per-shard cost: the dense layouts pass 1 (no setup work), while the
+/// fused dequant-matmul re-dequantizes the whole weight matrix per shard
+/// and passes a floor that keeps that overhead a small fraction.
+pub(crate) fn par_rows<K>(
+    out: &mut [f32],
+    rows: usize,
+    width: usize,
+    flops: usize,
+    min_rows_per_shard: usize,
+    kernel: K,
+) where
+    K: Fn(&mut [f32], usize) + Send + Sync,
+{
+    if rows == 0 || width == 0 {
+        return;
+    }
+    let shards = shard_count(rows, flops).min((rows / min_rows_per_shard.max(1)).max(1));
+    if shards <= 1 {
+        kernel(out, 0);
+        return;
+    }
+    let rows_per = (rows + shards - 1) / shards;
+    let kernel_ref = &kernel;
+    exec::global().scope(|s| {
+        for (si, chunk) in out.chunks_mut(rows_per * width).enumerate() {
+            s.spawn(move || kernel_ref(chunk, si * rows_per));
+        }
+    });
+}
 
 /// `C = A·Bᵀ` where A is m×k and B is n×k. This is the hot layout: every
 /// linear layer forward is `y = x·Wᵀ` with W stored `[out, in]`, and both
@@ -29,7 +94,7 @@ pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// In-place variant of [`matmul_a_bt`] writing into a preallocated output.
+/// In-place variant of [`matmul_a_bt`]: `c` is **overwritten**.
 pub fn matmul_a_bt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     let (m, k) = (a.rows(), a.cols());
     let n = b.rows();
@@ -38,12 +103,19 @@ pub fn matmul_a_bt_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     assert_eq!(c.cols(), n);
     let ad = a.data();
     let bd = b.data();
-    let cd = c.data_mut();
-    for i in 0..m {
+    par_rows(c.data_mut(), m, n, 2 * m * k * n, 1, |chunk, i0| {
+        a_bt_rows(ad, bd, chunk, i0, k, n)
+    });
+}
+
+/// Rows `[i0, i0 + cchunk.len()/n)` of `C = A·Bᵀ`, written into `cchunk`.
+/// Shared by the sequential and parallel paths (bit-identity).
+fn a_bt_rows(ad: &[f32], bd: &[f32], cchunk: &mut [f32], i0: usize, k: usize, n: usize) {
+    for (r, crow) in cchunk.chunks_mut(n).enumerate() {
+        let i = i0 + r;
         let arow = &ad[i * k..(i + 1) * k];
-        let crow = &mut cd[i * n..(i + 1) * n];
-        for j in 0..n {
-            crow[j] = dot(arow, &bd[j * k..(j + 1) * k]);
+        for (j, cj) in crow.iter_mut().enumerate() {
+            *cj = dot(arow, &bd[j * k..(j + 1) * k]);
         }
     }
 }
@@ -59,7 +131,8 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// In-place variant of [`matmul`]; `c` is overwritten.
+/// In-place variant of [`matmul`]: `c` is **overwritten** (contrast with
+/// [`matmul_at_b_acc`], which accumulates).
 pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     let (m, k) = (a.rows(), a.cols());
     let n = b.cols();
@@ -68,10 +141,16 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     assert_eq!(c.cols(), n);
     let ad = a.data();
     let bd = b.data();
-    let cd = c.data_mut();
-    cd.fill(0.0);
-    for i in 0..m {
-        let crow = &mut cd[i * n..(i + 1) * n];
+    par_rows(c.data_mut(), m, n, 2 * m * k * n, 1, |chunk, i0| {
+        ab_rows(ad, bd, chunk, i0, k, n)
+    });
+}
+
+/// Rows `[i0, i0 + cchunk.len()/n)` of `C = A·B`, overwriting `cchunk`.
+fn ab_rows(ad: &[f32], bd: &[f32], cchunk: &mut [f32], i0: usize, k: usize, n: usize) {
+    for (r, crow) in cchunk.chunks_mut(n).enumerate() {
+        let i = i0 + r;
+        crow.fill(0.0);
         let arow = &ad[i * k..(i + 1) * k];
         for (p, &aip) in arow.iter().enumerate() {
             if aip != 0.0 {
@@ -88,13 +167,16 @@ pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
     let n = b.cols();
     assert_eq!(b.rows(), k, "matmul_at_b: inner dims");
     let mut c = Tensor::zeros(&[m, n]);
-    matmul_at_b_into(a, b, &mut c);
+    matmul_at_b_acc(a, b, &mut c);
     c
 }
 
-/// In-place variant of [`matmul_at_b`]: `c += Aᵀ·B` (accumulating — callers
-/// like the Hessian builder rely on accumulation).
-pub fn matmul_at_b_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+/// **Accumulating** variant of [`matmul_at_b`]: `c += Aᵀ·B`. Unlike
+/// [`matmul_into`] / [`matmul_a_bt_into`], the output is NOT cleared —
+/// the Hessian builder streams batches into one running `XᵀX` and relies
+/// on the accumulation; zero `c` first if you want a plain product.
+/// (Renamed from `matmul_at_b_into`, whose name hid the asymmetry.)
+pub fn matmul_at_b_acc(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     let (k, m) = (a.rows(), a.cols());
     let n = b.cols();
     assert_eq!(b.rows(), k);
@@ -102,13 +184,31 @@ pub fn matmul_at_b_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
     assert_eq!(c.cols(), n);
     let ad = a.data();
     let bd = b.data();
-    let cd = c.data_mut();
+    par_rows(c.data_mut(), m, n, 2 * m * k * n, 1, |chunk, i0| {
+        at_b_acc_rows(ad, bd, chunk, i0, k, m, n)
+    });
+}
+
+/// Rows `[i0, i0 + cchunk.len()/n)` of `C += Aᵀ·B`. The k-loop stays
+/// outermost exactly as in the sequential walk, so each output element
+/// accumulates its terms in the same order regardless of sharding.
+fn at_b_acc_rows(
+    ad: &[f32],
+    bd: &[f32],
+    cchunk: &mut [f32],
+    i0: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+) {
+    let rows = cchunk.len() / n;
     for p in 0..k {
         let arow = &ad[p * m..(p + 1) * m];
         let brow = &bd[p * n..(p + 1) * n];
-        for (i, &aip) in arow.iter().enumerate() {
+        for r in 0..rows {
+            let aip = arow[i0 + r];
             if aip != 0.0 {
-                axpy_slice(&mut cd[i * n..(i + 1) * n], aip, brow);
+                axpy_slice(&mut cchunk[r * n..(r + 1) * n], aip, brow);
             }
         }
     }
@@ -172,13 +272,13 @@ mod tests {
     }
 
     #[test]
-    fn at_b_into_accumulates() {
+    fn at_b_acc_accumulates() {
         let mut rng = Pcg64::seeded(24);
         let a = Tensor::randn(&[6, 4], 1.0, &mut rng);
         let b = Tensor::randn(&[6, 4], 1.0, &mut rng);
         let mut acc = Tensor::zeros(&[4, 4]);
-        matmul_at_b_into(&a, &b, &mut acc);
-        matmul_at_b_into(&a, &b, &mut acc);
+        matmul_at_b_acc(&a, &b, &mut acc);
+        matmul_at_b_acc(&a, &b, &mut acc);
         let once = matmul_at_b(&a, &b);
         let mut twice = once.clone();
         twice.add_assign(&once);
@@ -191,5 +291,87 @@ mod tests {
         let a = Tensor::randn(&[5, 5], 1.0, &mut rng);
         let c = matmul(&a, &Tensor::eye(5));
         assert!(c.max_abs_diff(&a) < 1e-6);
+    }
+
+    // ---- parallel-vs-sequential bit-equality -----------------------------
+    //
+    // Shapes are odd-sized and big enough (2·m·k·n ≥ PAR_FLOP_CUTOFF) that
+    // the public entry points take the sharded path; references are
+    // computed by calling the inner row kernels directly on the full row
+    // range (the exact code the sequential path runs).
+
+    /// Shapes above the parallel cutoff with deliberately awkward row
+    /// counts (fewer rows than shards, uneven final shard).
+    const BIG_ODD: [(usize, usize, usize); 3] = [(37, 129, 65), (5, 513, 127), (130, 67, 33)];
+
+    #[test]
+    fn a_bt_parallel_bit_identical_across_thread_counts() {
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        let mut rng = Pcg64::seeded(26);
+        for (m, k, n) in BIG_ODD {
+            assert!(2 * m * k * n >= PAR_FLOP_CUTOFF, "shape below cutoff");
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let mut reference = Tensor::zeros(&[m, n]);
+            a_bt_rows(a.data(), b.data(), reference.data_mut(), 0, k, n);
+            for threads in [1, 2, 4] {
+                crate::exec::set_threads(threads);
+                let c = matmul_a_bt(&a, &b);
+                assert_eq!(c.data(), reference.data(), "({m},{k},{n}) x{threads}");
+            }
+        }
+        crate::exec::set_threads(before);
+    }
+
+    #[test]
+    fn ab_parallel_bit_identical_across_thread_counts() {
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        let mut rng = Pcg64::seeded(27);
+        for (m, k, n) in BIG_ODD {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let mut reference = Tensor::zeros(&[m, n]);
+            ab_rows(a.data(), b.data(), reference.data_mut(), 0, k, n);
+            for threads in [1, 2, 4] {
+                crate::exec::set_threads(threads);
+                let c = matmul(&a, &b);
+                assert_eq!(c.data(), reference.data(), "({m},{k},{n}) x{threads}");
+            }
+        }
+        crate::exec::set_threads(before);
+    }
+
+    #[test]
+    fn at_b_parallel_bit_identical_across_thread_counts() {
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        let mut rng = Pcg64::seeded(28);
+        for (m, k, n) in BIG_ODD {
+            // here A is k×m: C rows = A cols
+            let a = Tensor::randn(&[k, m], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let mut reference = Tensor::zeros(&[m, n]);
+            at_b_acc_rows(a.data(), b.data(), reference.data_mut(), 0, k, m, n);
+            for threads in [1, 2, 4] {
+                crate::exec::set_threads(threads);
+                let c = matmul_at_b(&a, &b);
+                assert_eq!(c.data(), reference.data(), "({m},{k},{n}) x{threads}");
+            }
+        }
+        crate::exec::set_threads(before);
+    }
+
+    #[test]
+    fn shard_count_respects_cutoff_and_rows() {
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        crate::exec::set_threads(8);
+        assert_eq!(shard_count(64, PAR_FLOP_CUTOFF - 1), 1, "below cutoff");
+        assert_eq!(shard_count(1, usize::MAX), 1, "single row");
+        assert_eq!(shard_count(4, PAR_FLOP_CUTOFF), 4, "row-capped");
+        assert_eq!(shard_count(64, PAR_FLOP_CUTOFF), 8, "target");
+        crate::exec::set_threads(before);
     }
 }

@@ -9,7 +9,8 @@
 
 mod matmul;
 
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into, matmul_a_bt_into, matmul_at_b_into};
+pub use matmul::{matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_acc, matmul_into};
+pub(crate) use matmul::par_rows;
 
 /// A dense, contiguous, row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

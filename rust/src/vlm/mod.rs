@@ -1,4 +1,4 @@
-//! Tiny vision-language model — the CogVLM2-19B stand-in (DESIGN.md §5).
+//! Tiny vision-language model — the CogVLM2-19B stand-in (rust/DESIGN.md §5 Substitution ledger).
 //!
 //! Three modality modules, mirroring what the paper's CMDQ framework (and
 //! its Table 5 rows "CogVLM2-Vision" / "CogVLM2-Cross") distinguishes:

@@ -17,6 +17,10 @@ use rpiq::tensor::Tensor;
 use std::path::Path;
 
 fn engine() -> Option<Engine> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the `pjrt` feature (stub Engine cannot execute artifacts)");
+        return None;
+    }
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
