@@ -78,5 +78,26 @@ fn main() -> anyhow::Result<()> {
     for (c, a) in &rep.per_category {
         println!("  {c:12} {a:.2}%");
     }
+
+    // Serve the same model as a batched VQA lane: concurrent askers get
+    // dynamic batching through the multi-lane engine instead of one
+    // forward per question.
+    println!("\n-- served VQA replay (2 lanes, 4 clients) --");
+    let server = rpiq::coordinator::Server::start_vqa(
+        std::sync::Arc::new(out.model),
+        &tok,
+        rpiq::coordinator::ServeConfig { lanes: 2, ..Default::default() },
+    );
+    let tput = rpiq::coordinator::replay_mixed(&server, world.replay_items("vqa", 120), 4);
+    let stats = server.shutdown();
+    println!(
+        "served {} questions: {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p95 {:.2} ms",
+        stats.count(),
+        tput,
+        stats.mean_ms(),
+        stats.percentile_ms(50.0),
+        stats.percentile_ms(95.0)
+    );
+    println!("vlm_assist OK");
     Ok(())
 }

@@ -1,0 +1,145 @@
+//! Serving-engine sweep: lanes × clients on a mixed sentiment+VQA replay
+//! through the multi-lane sharded batcher, plus a wide-batch arm that
+//! exercises the explicit row-wise sharding of large equal-shape groups.
+//!
+//! Output is one JSON line per arm (machine-readable, like the table
+//! benches' report files) followed by a human summary. The headline
+//! comparison is p95 at `--lanes 4` vs `--lanes 1`: with one pickup loop
+//! the tail is bound by queue wait behind the single batcher; with four
+//! lanes over the sharded queue it is not.
+//!
+//! ```bash
+//! cargo bench --bench serve            # or: cargo bench --no-run (CI)
+//! RPIQ_THREADS=4 cargo bench --bench serve
+//! ```
+
+use rpiq::coordinator::experiments as exp;
+use rpiq::coordinator::{replay_mixed, ServeConfig, Server};
+use rpiq::jsonx::Json;
+use rpiq::model::{LmWeights, ModelConfig, QuantizedLm};
+use rpiq::quant::QuantGrid;
+use rpiq::rng::Pcg64;
+use rpiq::vlm::{QuantizedVlm, VlmConfig, VlmWeights};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serving latency depends on shapes, not checkpoint quality, so the
+/// bench RTN-quantizes freshly initialized weights instead of running the
+/// full pretrain + calibration pipeline.
+fn bench_models(vocab: usize) -> (Arc<QuantizedLm>, Arc<QuantizedVlm>) {
+    let mut rng = Pcg64::seeded(7001);
+    let lcfg = ModelConfig {
+        name: "serve-bench-lm".into(),
+        vocab,
+        d_model: 64,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 192,
+        seq_len: 48,
+        activation: rpiq::model::Activation::Gelu,
+        tied_head: false,
+    };
+    let lw = LmWeights::init(&lcfg, &mut rng);
+    let vcfg = VlmConfig::sim_cogvlm2(vocab);
+    let vw = VlmWeights::init(&vcfg, &mut rng);
+    (
+        Arc::new(QuantizedLm::quantize_rtn(lw, QuantGrid::new(4, 8))),
+        Arc::new(QuantizedVlm::quantize_rtn(vw, QuantGrid::new(4, 8))),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn arm(
+    lm: &Arc<QuantizedLm>,
+    vlm: &Arc<QuantizedVlm>,
+    world: &exp::World,
+    mode: &str,
+    lanes: usize,
+    clients: usize,
+    max_batch: usize,
+    n_requests: usize,
+    label: &str,
+) -> (f64, f64, f64) {
+    let tok = world.tokenizer().clone();
+    let server = Server::start_mixed(
+        Arc::clone(lm),
+        Arc::clone(vlm),
+        &tok,
+        ServeConfig {
+            lanes,
+            max_batch,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        },
+    );
+    let tput = replay_mixed(&server, world.replay_items(mode, n_requests), clients);
+    let stats = server.shutdown();
+    let (p50, p95) = (stats.percentile_ms(50.0), stats.percentile_ms(95.0));
+    let mut line = Json::obj()
+        .with("bench", Json::Str("serve".into()))
+        .with("arm", Json::Str(label.into()))
+        .with("mode", Json::Str(mode.into()))
+        .with("lanes", Json::Num(lanes as f64))
+        .with("clients", Json::Num(clients as f64))
+        .with("max_batch", Json::Num(max_batch as f64))
+        .with("requests", Json::Num(stats.count() as f64))
+        .with("tput_rps", Json::Num(tput))
+        .with("mean_ms", Json::Num(stats.mean_ms()))
+        .with("p50_ms", Json::Num(p50))
+        .with("p95_ms", Json::Num(p95));
+    for name in stats.lane_names() {
+        let l = stats.lane(&name).expect("named lane exists");
+        line = line
+            .with(&format!("{name}_count"), Json::Num(l.count() as f64))
+            .with(&format!("{name}_p95_ms"), Json::Num(l.percentile_ms(95.0)));
+    }
+    println!("{}", line.dump());
+    assert_eq!(stats.count(), n_requests, "replay lost requests");
+    (tput, p50, p95)
+}
+
+fn main() -> anyhow::Result<()> {
+    let world = exp::World::build(exp::WORLD_SEED);
+    let (lm, vlm) = bench_models(world.tokenizer().vocab_size());
+    let n_requests = 240;
+    println!(
+        "== serve bench: mixed replay, {} requests, pool workers = {} ==",
+        n_requests,
+        rpiq::exec::global().size()
+    );
+
+    // lanes × clients sweep
+    let mut p95_by_lanes_heavy = Vec::new();
+    for lanes in [1usize, 2, 4] {
+        for clients in [2usize, 8] {
+            let (_, _, p95) =
+                arm(&lm, &vlm, &world, "mixed", lanes, clients, 8, n_requests, "sweep");
+            if clients == 8 {
+                p95_by_lanes_heavy.push((lanes, p95));
+            }
+        }
+    }
+
+    // Wide-batch arm: replay is closed-loop (one in-flight request per
+    // client), so reaching equal-shape groups wider than WIDE_GROUP_ROWS
+    // needs many clients and a single-workload stream — 64 VQA clients
+    // over 3 question lengths yields ~21-wide groups, which the engine
+    // shards row-wise across the pool explicitly.
+    arm(&lm, &vlm, &world, "vqa", 2, 64, 64, n_requests, "wide-batch");
+
+    println!("\n-- summary (clients=8) --");
+    for (lanes, p95) in &p95_by_lanes_heavy {
+        println!("  lanes={lanes}: p95 {p95:.2} ms");
+    }
+    if let (Some((_, p1)), Some((_, p4))) = (
+        p95_by_lanes_heavy.first(),
+        p95_by_lanes_heavy.last(),
+    ) {
+        println!(
+            "  p95 lanes=4 vs lanes=1: {:.2}x ({})",
+            p1 / p4,
+            if p4 < p1 { "multi-lane wins" } else { "single-lane wins here" }
+        );
+    }
+    Ok(())
+}

@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::coordinator::experiments::{self as exp, World};
-use crate::coordinator::{quantize_lm, quantize_vlm, Method, ServeConfig, Server};
+use crate::coordinator::{quantize_lm, quantize_vlm, replay_mixed, Method, ServeConfig, Server};
 use crate::model::io::{load_lm, save_lm};
 use crate::model::ModelConfig;
 use crate::quant::{CmdqPolicy, QuantConfig, RpiqParams};
@@ -115,6 +115,18 @@ fn parse_method(args: &mut Args) -> Result<Method> {
     })
 }
 
+/// The CMDQ policy a VLM is quantized under for a given method (shared by
+/// `quantize` and `serve`).
+fn vlm_policy(method: Method) -> CmdqPolicy {
+    CmdqPolicy {
+        rpiq: match method {
+            Method::Rpiq(p) => p,
+            Method::Gptq => RpiqParams::default(),
+        },
+        ..Default::default()
+    }
+}
+
 fn quant_cfg(args: &mut Args) -> Result<QuantConfig> {
     Ok(QuantConfig {
         bits: args.usize_of("bits", 4)? as u32,
@@ -134,13 +146,7 @@ pub fn quantize(args: &mut Args) -> Result<()> {
     let w = world();
     if is_vlm(&ckpt) {
         let weights = load_vlm(&ckpt)?;
-        let policy = CmdqPolicy {
-            rpiq: match method {
-                Method::Rpiq(p) => p,
-                Method::Gptq => RpiqParams::default(),
-            },
-            ..Default::default()
-        };
+        let policy = vlm_policy(method);
         let samples = w.vlm_calib(exp::CALIB_SAMPLES_VLM);
         let out = quantize_vlm(&weights, &samples, &policy, method)?;
         print_reports(&out.reports, out.ledger.peak_mib(), out.timers.total());
@@ -226,49 +232,108 @@ fn parse_method_named(name: &str, args: &mut Args) -> Result<Method> {
     })
 }
 
-/// `rpiq serve` — quantize and serve a replay workload, print latency.
+/// `rpiq serve` — quantize checkpoint(s) and serve a replay workload
+/// through the multi-lane engine, printing overall + per-lane latency.
+///
+/// `--mode sentiment` (default) serves an LM checkpoint; `--mode vqa`
+/// serves a VLM checkpoint (`--ckpt` if it is a VLM file, or
+/// `--vlm-ckpt`); `--mode mixed` serves both lanes side by side
+/// (`--ckpt` LM + `--vlm-ckpt` VLM).
 pub fn serve(args: &mut Args) -> Result<()> {
-    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let mode = args.get("mode", "sentiment");
+    let ckpt = args.opt("ckpt").map(PathBuf::from);
+    let vlm_ckpt = args.opt("vlm-ckpt").map(PathBuf::from);
     let n_requests = args.usize_of("requests", 100)?;
     let n_clients = args.usize_of("clients", 4)?;
     let max_batch = args.usize_of("max-batch", 8)?;
+    let lanes = args.usize_of("lanes", 2)?;
     let method = parse_method(args)?;
     let cfg = quant_cfg(args)?;
     args.finish()?;
 
     let w = world();
-    let weights = load_lm(&ckpt)?;
-    let windows = w.calib_windows(weights.config.seq_len, exp::CALIB_SAMPLES);
-    let out = quantize_lm(&weights, &windows, cfg, method)?;
-    println!(
-        "deploy bytes: {:.2} MiB (fp32 {:.2} MiB)",
-        out.model.deploy_bytes() as f64 / (1 << 20) as f64,
-        weights.config.fp32_bytes() as f64 / (1 << 20) as f64
-    );
     let tok = w.tokenizer().clone();
-    let server = Server::start(
-        Arc::new(out.model),
-        &tok,
-        ServeConfig { max_batch, ..Default::default() },
-    );
-    let prompts: Vec<String> = w
-        .sentiment
-        .test
-        .iter()
-        .cycle()
-        .take(n_requests)
-        .map(|e| e.prompt())
-        .collect();
-    let tput = crate::coordinator::serve::replay(&server, &tok, &prompts, n_clients);
+    let scfg = ServeConfig { max_batch, lanes, ..Default::default() };
+
+    let want_lm = mode != "vqa";
+    let want_vlm = mode != "sentiment";
+    if !matches!(mode.as_str(), "sentiment" | "vqa" | "mixed") {
+        bail!("unknown mode '{mode}' (sentiment|vqa|mixed)");
+    }
+
+    let qlm = if want_lm {
+        let path = ckpt
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("--mode {mode} needs --ckpt (LM checkpoint)"))?;
+        if is_vlm(&path) {
+            bail!(
+                "--ckpt {} is a VLM checkpoint; pass the LM via --ckpt (or use --mode vqa)",
+                path.display()
+            );
+        }
+        let weights = load_lm(&path)?;
+        let windows = w.calib_windows(weights.config.seq_len, exp::CALIB_SAMPLES);
+        let out = quantize_lm(&weights, &windows, cfg, method)?;
+        println!(
+            "lm deploy bytes: {:.2} MiB (fp32 {:.2} MiB)",
+            out.model.deploy_bytes() as f64 / (1 << 20) as f64,
+            weights.config.fp32_bytes() as f64 / (1 << 20) as f64
+        );
+        Some(Arc::new(out.model))
+    } else {
+        None
+    };
+
+    let qvlm = if want_vlm {
+        // the VLM may arrive as --vlm-ckpt, or as --ckpt in pure vqa mode
+        let path = match (&vlm_ckpt, &ckpt) {
+            (Some(p), _) => p.clone(),
+            (None, Some(p)) if mode == "vqa" && is_vlm(p) => p.clone(),
+            _ => bail!("--mode {mode} needs --vlm-ckpt (VLM checkpoint)"),
+        };
+        let weights = load_vlm(&path)?;
+        let policy = vlm_policy(method);
+        let samples = w.vlm_calib(exp::CALIB_SAMPLES_VLM);
+        let out = quantize_vlm(&weights, &samples, &policy, method)?;
+        println!(
+            "vlm deploy bytes: {:.2} MiB (fp32 {:.2} MiB)",
+            out.model.deploy_bytes() as f64 / (1 << 20) as f64,
+            (weights.n_params() * 4) as f64 / (1 << 20) as f64
+        );
+        Some(Arc::new(out.model))
+    } else {
+        None
+    };
+
+    let server = match (qlm, qvlm) {
+        (Some(lm), Some(vlm)) => Server::start_mixed(lm, vlm, &tok, scfg),
+        (Some(lm), None) => Server::start(lm, &tok, scfg),
+        (None, Some(vlm)) => Server::start_vqa(vlm, &tok, scfg),
+        (None, None) => unreachable!("mode resolution left no model"),
+    };
+
+    // Replay workload: sentiment prompts and/or VQA pairs from the world's
+    // test sets, interleaved in mixed mode.
+    let tput = replay_mixed(&server, w.replay_items(&mode, n_requests), n_clients);
     let stats = server.shutdown();
     println!(
-        "served {} requests: {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p95 {:.2} ms",
+        "served {} requests over {} lane(s): {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p95 {:.2} ms",
         stats.count(),
+        lanes.max(1),
         tput,
         stats.mean_ms(),
         stats.percentile_ms(50.0),
         stats.percentile_ms(95.0)
     );
+    for name in stats.lane_names() {
+        let l = stats.lane(&name).expect("named lane exists");
+        println!(
+            "  lane {name:9} {:4} reqs  p50 {:.2} ms  p95 {:.2} ms",
+            l.count(),
+            l.percentile_ms(50.0),
+            l.percentile_ms(95.0)
+        );
+    }
     Ok(())
 }
 

@@ -5,7 +5,8 @@
 //! rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G]
 //!                [--iters T] [--alpha A]
 //! rpiq eval      --ckpt PATH [--method gptq|rpiq|fp] [--n-test N]
-//! rpiq serve     --ckpt PATH [--requests N] [--clients C] [--method ...]
+//! rpiq serve     --ckpt PATH [--mode sentiment|vqa|mixed] [--vlm-ckpt PATH]
+//!                [--lanes N] [--requests N] [--clients C] [--method ...]
 //! rpiq inspect   --ckpt PATH
 //! rpiq artifacts --dir artifacts   # validate + smoke-run the AOT bundle
 //! ```
@@ -41,7 +42,8 @@ USAGE:
   rpiq pretrain  --all | --preset NAME [--steps N] [--out-dir DIR] [--seed S]
   rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G] [--iters T] [--alpha A]
   rpiq eval      --ckpt PATH [--method fp|gptq|rpiq] [--n-test N]
-  rpiq serve     --ckpt PATH [--requests N] [--clients C] [--max-batch B]
+  rpiq serve     --ckpt PATH [--mode sentiment|vqa|mixed] [--vlm-ckpt PATH]
+                 [--lanes N] [--requests N] [--clients C] [--max-batch B]
   rpiq inspect   --ckpt PATH
   rpiq artifacts [--dir artifacts]
 

@@ -3,6 +3,7 @@
 //! examples, and every table bench — so all of them measure exactly the
 //! same thing.
 
+use crate::coordinator::serve::Payload;
 use crate::data::{SentimentSet, Tokenizer, VqaSet, WikiCorpus};
 use crate::eval::{perplexity, sentiment_accuracy, vqa_accuracy, VqaReport};
 use crate::model::forward::lm_forward;
@@ -105,6 +106,25 @@ impl World {
                 (e.cover.patches.clone(), ids)
             })
             .collect()
+    }
+
+    /// Replay payload stream for the serve CLI/bench/examples: sentiment
+    /// prompts (`"sentiment"`), VQA pairs (`"vqa"`), or both interleaved
+    /// (any other mode), cycled from the world's test sets to `n` items.
+    pub fn replay_items(&self, mode: &str, n: usize) -> Vec<Payload> {
+        let tok = self.tokenizer();
+        let sent = self.sentiment.test.iter().cycle().map(|e| Payload::Sentiment {
+            tokens: tok.encode(&e.prompt()),
+        });
+        let vqa = self.vqa.test.iter().cycle().map(|e| Payload::Vqa {
+            patches: e.cover.patches.clone(),
+            question: tok.encode(&e.question),
+        });
+        match mode {
+            "sentiment" => sent.take(n).collect(),
+            "vqa" => vqa.take(n).collect(),
+            _ => sent.zip(vqa).flat_map(|(s, v)| [s, v]).take(n).collect(),
+        }
     }
 }
 

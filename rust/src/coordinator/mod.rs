@@ -1,6 +1,7 @@
 //! Layer-3 coordination: the quantization pipeline (calibrate → GPTQ →
-//! RPIQ refine, layer by layer, with byte/time accounting) and the serving
-//! runtime (router + dynamic batcher) used by the latency experiments.
+//! RPIQ refine, layer by layer, with byte/time accounting) and the
+//! multi-lane serving engine (sharded router + per-workload dynamic
+//! batcher lanes) used by the latency experiments.
 
 pub mod experiments;
 pub mod pipeline;
@@ -10,4 +11,7 @@ pub mod suite;
 pub use pipeline::{
     quantize_lm, quantize_vlm, LayerReport, Method, PipelineOutput, PipelineVlmOutput,
 };
-pub use serve::{Request, Response, ServeConfig, Server};
+pub use serve::{
+    replay, replay_mixed, Answer, LaneEngine, Payload, Request, Response, SentimentLane,
+    ServeConfig, Server, SubmitError, VqaLane, LANE_SENTIMENT, LANE_VQA,
+};

@@ -1,62 +1,362 @@
-//! Serving runtime: request router + dynamic batcher over a quantized
-//! model — the deployment story the paper motivates (an assistive device
-//! answering sentiment/VQA-style queries under a memory budget).
+//! Multi-lane serving engine: a workload-generic router + dynamic batcher
+//! over quantized models — the deployment story the paper motivates (an
+//! assistive device answering sentiment *and* VQA-style queries under a
+//! memory budget, at heavy mixed traffic).
 //!
 //! Architecture (vLLM-router-like, scaled to this repo):
 //!
-//! * producers call [`Server::submit`] (bounded channel ⇒ natural
-//!   backpressure);
-//! * the batcher thread drains up to `max_batch` requests, padding the
-//!   window by waiting at most `max_wait`;
-//! * equal-length prompts are executed as one batched forward; responses
-//!   are delivered through per-request channels;
-//! * latency (queue + compute) is recorded per request into
-//!   [`LatencyStats`].
+//! * workloads are [`Payload`] variants answered by [`LaneEngine`]s — the
+//!   built-ins are [`SentimentLane`] (token prompts through a
+//!   [`QuantizedLm`]) and [`VqaLane`] ((patches, question) pairs through a
+//!   [`QuantizedVlm`]'s batched forward); custom engines plug in via
+//!   [`Server::start_engines`];
+//! * producers call [`Server::submit`] (global-capacity
+//!   [`ShardedQueue`] ⇒ natural backpressure at `queue_cap`; submission
+//!   round-robins across shards);
+//! * **N batcher lanes** (`ServeConfig::lanes` event-loop threads) each
+//!   drain their own shard — and *steal from sibling shards when idle* —
+//!   so p95 is no longer bound by one pickup loop; each lane fills a
+//!   batch within `max_wait`, partitions it by (engine, shape key), and
+//!   runs the groups — several groups in one pickup fan out as scoped
+//!   pool jobs, each delivering its replies as soon as it finishes;
+//! * inside an engine, equal-shape requests fuse into one batched forward,
+//!   and very large equal-shape groups are sharded row-wise across the
+//!   global pool explicitly (`WIDE_GROUP_ROWS` in `crate::model`);
+//! * latency (queue + compute) is recorded per request into per-lane
+//!   [`LaneStats`].
 //!
-//! Threading: the batcher is one dedicated *event-loop* thread (it blocks
-//! on the request queue, so parking it on a pool worker would starve the
-//! pool). All compute runs on the shared global pool (`crate::exec`):
-//! each batched forward's fused dequant-matmuls shard rows there, and when
-//! one pickup yields several equal-length groups the groups themselves
-//! fan out as scoped pool jobs.
+//! Threading: lanes are dedicated event-loop threads (they block on the
+//! request queue, so parking them on pool workers would starve the pool).
+//! All compute runs on the shared global pool (`crate::exec`): each fused
+//! forward's dequant-matmuls shard rows there, wide groups chunk there,
+//! and multi-engine pickups fan out there.
 
 use crate::data::tokenizer::Tokenizer;
 use crate::data::SentimentSet;
-use crate::exec::Channel;
-use crate::metrics::LatencyStats;
+use crate::exec::{Channel, ShardedQueue};
+use crate::metrics::LaneStats;
 use crate::model::QuantizedLm;
 use crate::tensor::Tensor;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::vlm::QuantizedVlm;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A scoring request: classify the sentiment of a prompt.
+/// Name of the sentiment lane in [`LaneStats`].
+pub const LANE_SENTIMENT: &str = "sentiment";
+/// Name of the VQA lane in [`LaneStats`].
+pub const LANE_VQA: &str = "vqa";
+
+/// One unit of work a lane can batch.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Classify the sentiment of a tokenized prompt.
+    Sentiment { tokens: Vec<u32> },
+    /// Answer a question about an image (`patches: [n_patches, patch_dim]`).
+    Vqa { patches: Tensor, question: Vec<u32> },
+}
+
+/// A lane's answer to one payload.
+#[derive(Clone, Debug)]
+pub enum Answer {
+    /// Predicted label index + logits of the three label tokens.
+    Sentiment { label: usize, label_logits: [f32; 3] },
+    /// Argmax answer token over the full vocabulary, decoded.
+    Vqa { answer_id: u32, answer: String },
+}
+
+/// Response delivered on the per-request reply channel.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub answer: Answer,
+    pub latency: Duration,
+}
+
+impl Response {
+    /// Sentiment label, if this was a sentiment request.
+    pub fn label(&self) -> Option<usize> {
+        match &self.answer {
+            Answer::Sentiment { label, .. } => Some(*label),
+            _ => None,
+        }
+    }
+
+    /// Decoded VQA answer word, if this was a VQA request.
+    pub fn vqa_answer(&self) -> Option<&str> {
+        match &self.answer {
+            Answer::Vqa { answer, .. } => Some(answer.as_str()),
+            _ => None,
+        }
+    }
+}
+
+/// A queued request: payload + routing + reply channel (capacity 1).
 pub struct Request {
     pub id: u64,
-    pub tokens: Vec<u32>,
-    /// Reply channel (capacity 1).
+    pub payload: Payload,
+    /// Index into the server's engine list, resolved at submit.
+    engine: usize,
     pub reply: Channel<Response>,
     pub enqueued: Instant,
 }
 
-/// Response: predicted label index + logits of the three label tokens.
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub id: u64,
-    pub label: usize,
-    pub label_logits: [f32; 3],
-    pub latency: Duration,
+impl Drop for Request {
+    fn drop(&mut self) {
+        // Close the reply channel so a client blocked in `recv` observes a
+        // dropped request (`None` ⇒ `SubmitError::Closed`) instead of
+        // hanging forever — e.g. when an engine panics and its group is
+        // discarded. After a successful delivery the close is harmless:
+        // `Channel` lets the receiver drain a closed channel.
+        self.reply.close();
+    }
+}
+
+/// Why a submission was rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The server is shutting down (queue closed) or dropped the request.
+    Closed,
+    /// No registered lane accepts this payload kind.
+    Unsupported,
+    /// The payload is malformed for its lane (e.g. patch-shape mismatch).
+    Invalid(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed => write!(f, "server closed"),
+            SubmitError::Unsupported => write!(f, "no lane accepts this payload"),
+            SubmitError::Invalid(why) => write!(f, "invalid payload: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A batchable workload: one of these per modality the server offers.
+/// Engines are pure batch functions — delivery, latency accounting, and
+/// wide-group fan-out are handled generically by the lane loop.
+pub trait LaneEngine: Send + Sync {
+    /// Lane name used for per-lane stats (e.g. [`LANE_SENTIMENT`]).
+    fn name(&self) -> &'static str;
+
+    /// Whether this lane answers `payload`.
+    fn accepts(&self, payload: &Payload) -> bool;
+
+    /// Normalize/validate a payload at submit time (before it is queued);
+    /// e.g. left-truncate over-long prompts to the model context.
+    fn prepare(&self, _payload: &mut Payload) -> Result<(), SubmitError> {
+        Ok(())
+    }
+
+    /// Shape key for fusion: payloads of one pickup with equal keys are
+    /// answered by one `run_batch` call (one fused forward) and delivered
+    /// together; distinct keys run — and deliver — independently, so a
+    /// short request never waits on a long group's compute.
+    fn shape_key(&self, _payload: &Payload) -> usize {
+        0
+    }
+
+    /// Answer a drained group of payloads (all accepted by this lane,
+    /// all sharing one shape key), one answer per item, in order.
+    fn run_batch(&self, group: &[&Payload]) -> Vec<Answer>;
+}
+
+/// Sentiment lane: fuses equal-length token prompts into batched
+/// quantized forwards (same chunk/fan-out skeleton as
+/// [`QuantizedLm::forward_batch`], reading answer rows in place).
+pub struct SentimentLane {
+    model: Arc<QuantizedLm>,
+    label_ids: [u32; 3],
+    max_seq: usize,
+}
+
+impl SentimentLane {
+    pub fn new(model: Arc<QuantizedLm>, tok: &Tokenizer) -> Self {
+        let label_ids = SentimentSet::label_token_ids(tok);
+        let max_seq = model.base.config.seq_len;
+        SentimentLane { model, label_ids, max_seq }
+    }
+}
+
+impl LaneEngine for SentimentLane {
+    fn name(&self) -> &'static str {
+        LANE_SENTIMENT
+    }
+
+    fn accepts(&self, payload: &Payload) -> bool {
+        matches!(payload, Payload::Sentiment { .. })
+    }
+
+    fn prepare(&self, payload: &mut Payload) -> Result<(), SubmitError> {
+        let Payload::Sentiment { tokens } = payload else {
+            return Err(SubmitError::Unsupported);
+        };
+        if tokens.is_empty() {
+            return Err(SubmitError::Invalid("empty prompt".into()));
+        }
+        // left-truncate, keeping the answer scaffold at the end
+        if tokens.len() > self.max_seq {
+            *tokens = tokens[tokens.len() - self.max_seq..].to_vec();
+        }
+        Ok(())
+    }
+
+    fn shape_key(&self, payload: &Payload) -> usize {
+        match payload {
+            Payload::Sentiment { tokens } => tokens.len(),
+            _ => 0,
+        }
+    }
+
+    fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
+        let seqs: Vec<&[u32]> = group
+            .iter()
+            .map(|p| match p {
+                Payload::Sentiment { tokens } => tokens.as_slice(),
+                other => panic!("sentiment lane got {other:?}"),
+            })
+            .collect();
+        // The lane loop groups by shape key, so all sequences here share
+        // one length: fuse each chunk into one forward and read the
+        // answer rows in place — no per-request logits copies (unlike the
+        // general [`QuantizedLm::forward_batch`], which returns owned
+        // full-sequence logits).
+        let seq = seqs[0].len();
+        debug_assert!(seqs.iter().all(|s| s.len() == seq), "mixed shapes in one group");
+        crate::model::quantized::run_equal_shape_groups(seqs.len(), |_| 0, |chunk| {
+            let mut tokens = Vec::with_capacity(chunk.len() * seq);
+            for &i in chunk {
+                tokens.extend_from_slice(seqs[i]);
+            }
+            let logits = self.model.forward(&tokens, chunk.len(), seq);
+            (0..chunk.len())
+                .map(|gi| {
+                    let last = logits.row(gi * seq + seq - 1);
+                    let ll = [
+                        last[self.label_ids[0] as usize],
+                        last[self.label_ids[1] as usize],
+                        last[self.label_ids[2] as usize],
+                    ];
+                    let label = (0..3)
+                        .max_by(|&a, &b| ll[a].partial_cmp(&ll[b]).unwrap())
+                        .unwrap();
+                    Answer::Sentiment { label, label_logits: ll }
+                })
+                .collect()
+        })
+    }
+}
+
+/// VQA lane: fuses equal-length (patches, question) pairs into batched
+/// quantized forwards (same chunk/fan-out skeleton as
+/// [`QuantizedVlm::forward_batch`], reading answer rows in place) — the
+/// paper's assistive workload as a first-class batched lane.
+pub struct VqaLane {
+    model: Arc<QuantizedVlm>,
+    tok: Tokenizer,
+}
+
+impl VqaLane {
+    pub fn new(model: Arc<QuantizedVlm>, tok: &Tokenizer) -> Self {
+        VqaLane { model, tok: tok.clone() }
+    }
+}
+
+impl LaneEngine for VqaLane {
+    fn name(&self) -> &'static str {
+        LANE_VQA
+    }
+
+    fn accepts(&self, payload: &Payload) -> bool {
+        matches!(payload, Payload::Vqa { .. })
+    }
+
+    fn prepare(&self, payload: &mut Payload) -> Result<(), SubmitError> {
+        let Payload::Vqa { patches, question } = payload else {
+            return Err(SubmitError::Unsupported);
+        };
+        let cfg = &self.model.base.config;
+        if patches.rows() != cfg.n_patches || patches.cols() != cfg.patch_dim {
+            return Err(SubmitError::Invalid(format!(
+                "patches {:?}, model expects [{}, {}]",
+                patches.shape(),
+                cfg.n_patches,
+                cfg.patch_dim
+            )));
+        }
+        if question.is_empty() {
+            return Err(SubmitError::Invalid("empty question".into()));
+        }
+        // left-truncate over-long questions, keeping the answer scaffold
+        let text_len = cfg.text_len();
+        if question.len() > text_len {
+            *question = question[question.len() - text_len..].to_vec();
+        }
+        Ok(())
+    }
+
+    fn shape_key(&self, payload: &Payload) -> usize {
+        match payload {
+            Payload::Vqa { question, .. } => question.len(),
+            _ => 0,
+        }
+    }
+
+    fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
+        let pairs: Vec<(&Tensor, &[u32])> = group
+            .iter()
+            .map(|p| match p {
+                Payload::Vqa { patches, question } => (patches, question.as_slice()),
+                other => panic!("vqa lane got {other:?}"),
+            })
+            .collect();
+        // Equal shape key ⇒ equal question length: stack each chunk into
+        // one fused forward and read the answer rows in place (the
+        // general [`QuantizedVlm::forward_batch`] instead returns owned
+        // full-sequence logits per pair).
+        let n_patches = self.model.base.config.n_patches;
+        let tlen = pairs[0].1.len();
+        debug_assert!(pairs.iter().all(|(_, q)| q.len() == tlen), "mixed shapes in one group");
+        let s = n_patches + tlen;
+        crate::model::quantized::run_equal_shape_groups(pairs.len(), |_| 0, |chunk| {
+            let b = chunk.len();
+            let pd = pairs[chunk[0]].0.cols();
+            let mut pdata = Vec::with_capacity(b * n_patches * pd);
+            let mut text = Vec::with_capacity(b * tlen);
+            for &i in chunk {
+                let (p, q) = &pairs[i];
+                pdata.extend_from_slice(p.data());
+                text.extend_from_slice(q);
+            }
+            let patches = Tensor::from_vec(&[b * n_patches, pd], pdata);
+            let logits = self.model.forward(&patches, &text, b);
+            (0..b)
+                .map(|gi| {
+                    let last = logits.row(gi * s + s - 1);
+                    let pred = (0..last.len())
+                        .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+                        .unwrap() as u32;
+                    Answer::Vqa { answer_id: pred, answer: self.tok.word(pred).to_string() }
+                })
+                .collect()
+        })
+    }
 }
 
 /// Server tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
-    /// Queue capacity (backpressure bound).
+    /// Global queue capacity (backpressure bound across all shards).
     pub queue_cap: usize,
-    /// Max requests fused into one forward.
+    /// Max requests one lane fuses into one pickup.
     pub max_batch: usize,
-    /// Max time the batcher waits to fill a batch.
+    /// Max time a lane waits to fill a batch.
     pub max_wait: Duration,
+    /// Number of batcher lanes (event-loop threads / queue shards).
+    pub lanes: usize,
 }
 
 impl Default for ServeConfig {
@@ -65,85 +365,145 @@ impl Default for ServeConfig {
             queue_cap: 256,
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            lanes: 2,
         }
     }
 }
 
-/// The serving coordinator.
+/// The serving coordinator: submit side + N batcher lanes over a sharded
+/// queue of [`Request`]s, answered by registered [`LaneEngine`]s.
 pub struct Server {
-    queue: Channel<Request>,
+    queue: ShardedQueue<Request>,
+    engines: Arc<Vec<Box<dyn LaneEngine>>>,
     next_id: AtomicU64,
-    pub stats: LatencyStats,
-    shutdown: Arc<AtomicBool>,
-    worker: Option<std::thread::JoinHandle<()>>,
-    /// Model context length; longer prompts are left-truncated at submit.
-    max_seq: usize,
+    pub stats: LaneStats,
+    lanes: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start a server over a quantized LM. `label_ids` are the three
-    /// sentiment answer tokens.
+    /// Start a server from an explicit engine list — the generic core the
+    /// typed constructors (and the serve tests' synthetic engines) use.
+    pub fn start_engines(engines: Vec<Box<dyn LaneEngine>>, cfg: ServeConfig) -> Self {
+        assert!(!engines.is_empty(), "server needs at least one lane engine");
+        let n_lanes = cfg.lanes.max(1);
+        let queue: ShardedQueue<Request> = ShardedQueue::new(n_lanes, cfg.queue_cap);
+        let stats = LaneStats::new();
+        let engines = Arc::new(engines);
+        let lanes = (0..n_lanes)
+            .map(|i| {
+                let queue = queue.clone();
+                let stats = stats.clone();
+                let engines = Arc::clone(&engines);
+                std::thread::Builder::new()
+                    .name(format!("rpiq-lane-{i}"))
+                    .spawn(move || lane_loop(i, engines, queue, stats, cfg))
+                    .expect("spawn lane")
+            })
+            .collect();
+        Server { queue, engines, next_id: AtomicU64::new(0), stats, lanes }
+    }
+
+    /// Sentiment-only server over a quantized LM.
     pub fn start(model: Arc<QuantizedLm>, tok: &Tokenizer, cfg: ServeConfig) -> Self {
-        let queue: Channel<Request> = Channel::bounded(cfg.queue_cap);
-        let stats = LatencyStats::new();
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let label_ids = SentimentSet::label_token_ids(tok);
-        let max_seq = model.base.config.seq_len;
-        let worker = {
-            let queue = queue.clone();
-            let stats = stats.clone();
-            let shutdown = Arc::clone(&shutdown);
-            std::thread::Builder::new()
-                .name("rpiq-batcher".into())
-                .spawn(move || {
-                    batcher_loop(model, queue, stats, shutdown, cfg, label_ids)
-                })
-                .expect("spawn batcher")
-        };
-        Server {
-            queue,
-            next_id: AtomicU64::new(0),
-            stats,
-            shutdown,
-            worker: Some(worker),
-            max_seq,
-        }
+        Self::start_engines(vec![Box::new(SentimentLane::new(model, tok))], cfg)
     }
 
-    /// Submit a request; blocks when the queue is full (backpressure).
-    /// Returns the reply channel. Prompts longer than the model context
-    /// are left-truncated (keeping the answer scaffold at the end).
-    pub fn submit(&self, mut tokens: Vec<u32>) -> Channel<Response> {
-        let max = self.max_seq;
-        if tokens.len() > max {
-            tokens = tokens[tokens.len() - max..].to_vec();
-        }
+    /// VQA-only server over a quantized VLM.
+    pub fn start_vqa(model: Arc<QuantizedVlm>, tok: &Tokenizer, cfg: ServeConfig) -> Self {
+        Self::start_engines(vec![Box::new(VqaLane::new(model, tok))], cfg)
+    }
+
+    /// Mixed-traffic server: sentiment and VQA lanes side by side.
+    pub fn start_mixed(
+        lm: Arc<QuantizedLm>,
+        vlm: Arc<QuantizedVlm>,
+        tok: &Tokenizer,
+        cfg: ServeConfig,
+    ) -> Self {
+        Self::start_engines(
+            vec![
+                Box::new(SentimentLane::new(lm, tok)),
+                Box::new(VqaLane::new(vlm, tok)),
+            ],
+            cfg,
+        )
+    }
+
+    fn make_request(&self, mut payload: Payload) -> Result<Request, SubmitError> {
+        let engine = self
+            .engines
+            .iter()
+            .position(|e| e.accepts(&payload))
+            .ok_or(SubmitError::Unsupported)?;
+        self.engines[engine].prepare(&mut payload)?;
         let reply = Channel::bounded(1);
-        let req = Request {
+        Ok(Request {
             id: self.next_id.fetch_add(1, Ordering::SeqCst),
-            tokens,
-            reply: reply.clone(),
+            payload,
+            engine,
+            reply,
             enqueued: Instant::now(),
-        };
-        self.queue.send(req).expect("server queue closed");
-        reply
+        })
     }
 
-    /// Submit and wait.
-    pub fn classify(&self, tokens: Vec<u32>) -> Response {
-        self.submit(tokens).recv().expect("server dropped request")
+    /// Submit a payload; blocks while the queue holds `queue_cap` requests
+    /// (backpressure). Returns the reply channel, or an error when the
+    /// server is closed / the payload has no lane.
+    pub fn submit(&self, payload: Payload) -> Result<Channel<Response>, SubmitError> {
+        let req = self.make_request(payload)?;
+        let reply = req.reply.clone();
+        self.queue.push(req).map_err(|_| SubmitError::Closed)?;
+        Ok(reply)
+    }
+
+    /// Non-blocking submit attempt: `Ok(None)` when the queue is full.
+    pub fn try_submit(&self, payload: Payload) -> Result<Option<Channel<Response>>, SubmitError> {
+        let req = self.make_request(payload)?;
+        let reply = req.reply.clone();
+        match self.queue.try_push(req) {
+            Ok(true) => Ok(Some(reply)),
+            Ok(false) => Ok(None),
+            Err(_) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Submit a sentiment prompt (compat shim for token-based callers).
+    pub fn submit_tokens(&self, tokens: Vec<u32>) -> Result<Channel<Response>, SubmitError> {
+        self.submit(Payload::Sentiment { tokens })
+    }
+
+    /// Submit a sentiment prompt and wait for the answer.
+    pub fn classify(&self, tokens: Vec<u32>) -> Result<Response, SubmitError> {
+        self.submit_tokens(tokens)?.recv().ok_or(SubmitError::Closed)
+    }
+
+    /// Submit a VQA pair and wait for the answer.
+    pub fn ask(&self, patches: Tensor, question: Vec<u32>) -> Result<Response, SubmitError> {
+        self.submit(Payload::Vqa { patches, question })?
+            .recv()
+            .ok_or(SubmitError::Closed)
     }
 
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
     }
 
-    /// Stop the batcher after draining.
-    pub fn shutdown(mut self) -> LatencyStats {
-        self.shutdown.store(true, Ordering::SeqCst);
+    /// Number of batcher lanes.
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Stop accepting new requests; lanes drain what is already queued.
+    /// Subsequent submits fail with [`SubmitError::Closed`].
+    pub fn close(&self) {
         self.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+    }
+
+    /// Close, drain every pending request across every lane, and join.
+    pub fn shutdown(mut self) -> LaneStats {
+        self.queue.close();
+        for l in self.lanes.drain(..) {
+            let _ = l.join();
         }
         self.stats.clone()
     }
@@ -151,129 +511,132 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
         self.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        for l in self.lanes.drain(..) {
+            let _ = l.join();
         }
     }
 }
 
-fn batcher_loop(
-    model: Arc<QuantizedLm>,
-    queue: Channel<Request>,
-    stats: LatencyStats,
-    shutdown: Arc<AtomicBool>,
+/// One batcher lane: drain shard `lane` (stealing when idle), fill a batch
+/// within the wait window, partition by engine, run the groups, deliver.
+fn lane_loop(
+    lane: usize,
+    engines: Arc<Vec<Box<dyn LaneEngine>>>,
+    queue: ShardedQueue<Request>,
+    stats: LaneStats,
     cfg: ServeConfig,
-    label_ids: [u32; 3],
 ) {
     loop {
-        // Block for the first request (with timeout so shutdown is seen).
-        let first = match queue.recv_timeout(Duration::from_millis(20)) {
+        // Block for the first request. Shutdown wakes the pop directly
+        // (`close` notifies every shard condvar), so this timeout is only
+        // a belt-and-braces re-check and can be long — an idle lane wakes
+        // a handful of times per second, not hundreds.
+        let first = match queue.pop(lane, Duration::from_millis(200)) {
             Some(r) => r,
             None => {
-                if shutdown.load(Ordering::SeqCst) && queue.is_empty() {
+                if queue.is_closed() && queue.is_empty() {
                     return;
                 }
                 continue;
             }
         };
         let mut batch = vec![first];
-        // Fill the batch within the wait window.
         let deadline = Instant::now() + cfg.max_wait;
         while batch.len() < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            match queue.recv_timeout(deadline - now) {
+            match queue.pop(lane, deadline - now) {
                 Some(r) => batch.push(r),
                 None => break,
             }
         }
-        // Group by sequence length so each group is one fused forward.
-        batch.sort_by_key(|r| r.tokens.len());
-        let mut ranges = Vec::new();
-        let mut i = 0;
-        while i < batch.len() {
-            let seq = batch[i].tokens.len();
-            let mut j = i + 1;
-            while j < batch.len() && batch[j].tokens.len() == seq {
-                j += 1;
+        // Partition the pickup by (engine, shape key); order within a
+        // group preserved. Each group is one fused forward delivered as
+        // soon as it finishes — a short prompt in the same pickup as a
+        // long group does not wait for it.
+        let mut groups: Vec<((usize, usize), Vec<Request>)> = Vec::new();
+        for r in batch {
+            let key = (r.engine, engines[r.engine].shape_key(&r.payload));
+            match groups.iter().position(|(k, _)| *k == key) {
+                Some(i) => groups[i].1.push(r),
+                None => groups.push((key, vec![r])),
             }
-            ranges.push((i, j));
-            i = j;
         }
-        let run_group = |group: &[Request]| {
-            let seq = group[0].tokens.len();
-            let mut tokens = Vec::with_capacity(group.len() * seq);
-            for r in group {
-                tokens.extend_from_slice(&r.tokens);
-            }
-            let logits = model.forward(&tokens, group.len(), seq);
-            for (gi, r) in group.iter().enumerate() {
-                let last = logits.row(gi * seq + seq - 1);
-                let ll = [
-                    last[label_ids[0] as usize],
-                    last[label_ids[1] as usize],
-                    last[label_ids[2] as usize],
-                ];
-                let label = (0..3)
-                    .max_by(|&a, &b| ll[a].partial_cmp(&ll[b]).unwrap())
-                    .unwrap();
+        let run_group = |ei: usize, group: &[Request]| {
+            let engine = &engines[ei];
+            let payloads: Vec<&Payload> = group.iter().map(|r| &r.payload).collect();
+            // Contain engine bugs: on a panic (or a miscounted answer
+            // vector) the group is discarded and each Request's Drop
+            // closes its reply channel, so clients observe `Closed`
+            // instead of hanging and the lane keeps serving.
+            let answers = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                engine.run_batch(&payloads)
+            })) {
+                Ok(a) if a.len() == group.len() => a,
+                Ok(_) | Err(_) => return,
+            };
+            for (r, a) in group.iter().zip(answers) {
                 let latency = r.enqueued.elapsed();
-                stats.record(latency.as_secs_f64());
-                let _ = r.reply.send(Response { id: r.id, label, label_logits: ll, latency });
+                stats.record(engine.name(), latency.as_secs_f64());
+                let _ = r.reply.send(Response { id: r.id, answer: a, latency });
             }
         };
-        if ranges.len() <= 1 {
-            // single group: run inline (its matmuls still shard rows on
-            // the pool)
-            for &(i, j) in &ranges {
-                run_group(&batch[i..j]);
-            }
+        if groups.len() == 1 {
+            // single group: run inline (its fused matmuls still shard rows
+            // on the pool)
+            let ((ei, _), g) = &groups[0];
+            run_group(*ei, g);
         } else {
-            // several length groups in one pickup: fan the group forwards
-            // out across the shared pool
-            let batch_ref = &batch;
+            // several (engine, shape) groups in one pickup: fan them out
+            // across the shared pool, each delivering independently
             let run_ref = &run_group;
             crate::exec::global().scope(|s| {
-                for &(i, j) in &ranges {
-                    s.spawn(move || run_ref(&batch_ref[i..j]));
+                for ((ei, _), g) in &groups {
+                    s.spawn(move || run_ref(*ei, g));
                 }
             });
         }
     }
 }
 
-/// Convenience for benches: replay a set of prompts through the server
-/// from `n_clients` producer threads; returns (throughput req/s, stats).
-pub fn replay(
-    server: &Server,
-    tok: &Tokenizer,
-    prompts: &[String],
-    n_clients: usize,
-) -> f64 {
+/// Convenience for benches: replay sentiment prompts through the server
+/// from `n_clients` producer threads; returns throughput (req/s).
+pub fn replay(server: &Server, tok: &Tokenizer, prompts: &[String], n_clients: usize) -> f64 {
+    let items: Vec<Payload> = prompts
+        .iter()
+        .map(|p| Payload::Sentiment { tokens: tok.encode(p) })
+        .collect();
+    replay_mixed(server, items, n_clients)
+}
+
+/// Replay arbitrary payloads (mixed sentiment + VQA traffic) from
+/// `n_clients` producer threads, waiting for every answer; returns
+/// throughput (req/s). Panics if the server rejects or drops a request —
+/// replay is only meaningful on a live server.
+pub fn replay_mixed(server: &Server, items: Vec<Payload>, n_clients: usize) -> f64 {
+    let n = items.len();
+    let n_clients = n_clients.max(1);
+    let mut per_client: Vec<Vec<Payload>> = (0..n_clients).map(|_| Vec::new()).collect();
+    for (i, it) in items.into_iter().enumerate() {
+        per_client[i % n_clients].push(it);
+    }
     let t0 = Instant::now();
     std::thread::scope(|scope| {
-        for c in 0..n_clients {
+        for chunk in per_client {
             let server = &*server;
-            let prompts = &*prompts;
-            let tok = &*tok;
             scope.spawn(move || {
-                for p in prompts.iter().skip(c).step_by(n_clients) {
-                    let _ = server.classify(tok.encode(p));
+                for p in chunk {
+                    let reply = server.submit(p).expect("replay submit");
+                    let _ = reply.recv().expect("replay answer");
                 }
             });
         }
     });
-    prompts.len() as f64 / t0.elapsed().as_secs_f64()
+    n as f64 / t0.elapsed().as_secs_f64()
 }
-
-/// `Tensor` is not used directly here but the signature parity with the
-/// VQA path keeps the two serving flavours aligned.
-#[allow(dead_code)]
-fn _t(_: &Tensor) {}
 
 #[cfg(test)]
 mod tests {
@@ -281,28 +644,38 @@ mod tests {
     use crate::data::corpus::Lexicon;
     use crate::model::config::ModelConfig;
     use crate::model::weights::LmWeights;
-    use crate::quant::{QuantGrid, QuantizedLinear};
+    use crate::quant::QuantGrid;
     use crate::rng::Pcg64;
-    use std::collections::HashMap;
+    use crate::vlm::{VlmConfig, VlmWeights};
 
-    fn test_server(cfg: ServeConfig) -> (Server, Tokenizer) {
+    fn test_qlm() -> Arc<QuantizedLm> {
         let tok = Lexicon::tokenizer();
         let mcfg = ModelConfig::test_tiny(tok.vocab_size());
         let mut rng = Pcg64::seeded(801);
         let w = LmWeights::init(&mcfg, &mut rng);
-        let mut qlinears = HashMap::new();
-        for (name, t) in w.linears() {
-            qlinears.insert(name, QuantizedLinear::quantize_rtn(t, QuantGrid::new(4, 8)));
-        }
-        let qlm = Arc::new(QuantizedLm::new(w, qlinears));
-        (Server::start(qlm, &tok, cfg), tok)
+        Arc::new(QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8)))
+    }
+
+    fn test_qvlm() -> Arc<QuantizedVlm> {
+        let tok = Lexicon::tokenizer();
+        let vcfg = VlmConfig::test_tiny(tok.vocab_size());
+        let mut rng = Pcg64::seeded(802);
+        let w = VlmWeights::init(&vcfg, &mut rng);
+        Arc::new(QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)))
+    }
+
+    fn test_server(cfg: ServeConfig) -> (Server, Tokenizer) {
+        let tok = Lexicon::tokenizer();
+        (Server::start(test_qlm(), &tok, cfg), tok)
     }
 
     #[test]
     fn serves_single_request() {
         let (server, tok) = test_server(ServeConfig::default());
-        let resp = server.classify(tok.encode("sentiment of text : i loved this movie answer :"));
-        assert!(resp.label < 3);
+        let resp = server
+            .classify(tok.encode("sentiment of text : i loved this movie answer :"))
+            .unwrap();
+        assert!(resp.label().unwrap() < 3);
         assert!(resp.latency.as_secs_f64() < 5.0);
     }
 
@@ -312,6 +685,7 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_millis(10),
             queue_cap: 64,
+            lanes: 2,
         });
         let prompts: Vec<String> = (0..24)
             .map(|i| {
@@ -326,6 +700,7 @@ mod tests {
         assert!(tput > 0.0);
         let stats = server.shutdown();
         assert_eq!(stats.count(), 24);
+        assert_eq!(stats.lane(LANE_SENTIMENT).unwrap().count(), 24);
     }
 
     #[test]
@@ -335,6 +710,7 @@ mod tests {
             .map(|_| {
                 server
                     .classify(tok.encode("sentiment of text : it was fine answer :"))
+                    .unwrap()
                     .id
             })
             .collect();
@@ -342,5 +718,111 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), 10);
+    }
+
+    #[test]
+    fn submit_after_close_returns_err_not_panic() {
+        let (server, tok) = test_server(ServeConfig::default());
+        let tokens = tok.encode("sentiment of text : it was fine answer :");
+        assert!(server.submit_tokens(tokens.clone()).is_ok());
+        server.close();
+        // regression: this used to be `expect("server queue closed")`
+        assert_eq!(server.submit_tokens(tokens.clone()).unwrap_err(), SubmitError::Closed);
+        assert_eq!(server.classify(tokens).unwrap_err(), SubmitError::Closed);
+        // the request accepted before close is still answered on shutdown
+        let stats = server.shutdown();
+        assert_eq!(stats.count(), 1);
+    }
+
+    #[test]
+    fn unsupported_payload_rejected() {
+        let (server, _tok) = test_server(ServeConfig::default());
+        let patches = Tensor::zeros(&[4, 8]);
+        assert_eq!(
+            server.submit(Payload::Vqa { patches, question: vec![1, 2] }).unwrap_err(),
+            SubmitError::Unsupported
+        );
+    }
+
+    #[test]
+    fn vqa_lane_answers_questions() {
+        let tok = Lexicon::tokenizer();
+        let qvlm = test_qvlm();
+        let vcfg = qvlm.base.config.clone();
+        let server = Server::start_vqa(Arc::clone(&qvlm), &tok, ServeConfig::default());
+        let mut rng = Pcg64::seeded(803);
+        let patches = Tensor::randn(&[vcfg.n_patches, vcfg.patch_dim], 1.0, &mut rng);
+        let question = tok.encode("what genre this book ? answer :");
+        let resp = server.ask(patches.clone(), question.clone()).unwrap();
+        // answer must match the unbatched forward's argmax exactly
+        let logits = qvlm.forward(&patches, &question, 1);
+        let last = logits.row(vcfg.n_patches + question.len() - 1);
+        let pred = (0..last.len())
+            .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+            .unwrap() as u32;
+        match resp.answer {
+            Answer::Vqa { answer_id, ref answer } => {
+                assert_eq!(answer_id, pred);
+                assert_eq!(answer, tok.word(pred));
+            }
+            ref other => panic!("expected vqa answer, got {other:?}"),
+        }
+        // malformed patches are rejected at submit
+        let bad = Tensor::zeros(&[vcfg.n_patches + 1, vcfg.patch_dim]);
+        assert!(matches!(
+            server.submit(Payload::Vqa { patches: bad, question }).unwrap_err(),
+            SubmitError::Invalid(_)
+        ));
+    }
+
+    #[test]
+    fn mixed_server_routes_to_both_lanes() {
+        let tok = Lexicon::tokenizer();
+        let qvlm = test_qvlm();
+        let vcfg = qvlm.base.config.clone();
+        let server = Server::start_mixed(
+            test_qlm(),
+            qvlm,
+            &tok,
+            ServeConfig { lanes: 2, ..Default::default() },
+        );
+        let mut rng = Pcg64::seeded(804);
+        let mut items = Vec::new();
+        for i in 0..12 {
+            if i % 3 == 0 {
+                let patches = Tensor::randn(&[vcfg.n_patches, vcfg.patch_dim], 1.0, &mut rng);
+                items.push(Payload::Vqa {
+                    patches,
+                    question: tok.encode("who wrote this book ? answer :"),
+                });
+            } else {
+                items.push(Payload::Sentiment {
+                    tokens: tok.encode("sentiment of text : it was fine answer :"),
+                });
+            }
+        }
+        let tput = replay_mixed(&server, items, 3);
+        assert!(tput > 0.0);
+        let stats = server.shutdown();
+        assert_eq!(stats.count(), 12);
+        assert_eq!(stats.lane(LANE_VQA).unwrap().count(), 4);
+        assert_eq!(stats.lane(LANE_SENTIMENT).unwrap().count(), 8);
+    }
+
+    #[test]
+    fn four_lane_server_answers_everything() {
+        let (server, tok) = test_server(ServeConfig {
+            lanes: 4,
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 32,
+        });
+        assert_eq!(server.n_lanes(), 4);
+        let prompts: Vec<String> = (0..40)
+            .map(|i| format!("sentiment of text : case {} answer :", i % 7))
+            .collect();
+        let _ = replay(&server, &tok, &prompts, 8);
+        let stats = server.shutdown();
+        assert_eq!(stats.count(), 40);
     }
 }

@@ -215,6 +215,68 @@ impl LatencyStats {
     }
 }
 
+/// Latency stats for the multi-lane server: one aggregate collector plus
+/// one per named workload lane ("sentiment", "vqa", …). Cheap `Clone`
+/// handle over shared state, like [`LatencyStats`]. The aggregate methods
+/// (`count`/`mean_ms`/`percentile_ms`) delegate to the overall collector
+/// so single-lane callers can treat a `LaneStats` like a `LatencyStats`.
+#[derive(Clone, Default)]
+pub struct LaneStats {
+    overall: LatencyStats,
+    lanes: Arc<Mutex<Vec<(String, LatencyStats)>>>,
+}
+
+impl LaneStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request latency under `lane` (and in the aggregate).
+    pub fn record(&self, lane: &str, secs: f64) {
+        self.overall.record(secs);
+        let mut lanes = self.lanes.lock().unwrap();
+        if let Some(idx) = lanes.iter().position(|(n, _)| n == lane) {
+            lanes[idx].1.record(secs);
+        } else {
+            let s = LatencyStats::new();
+            s.record(secs);
+            lanes.push((lane.to_string(), s));
+        }
+    }
+
+    /// The all-lanes aggregate.
+    pub fn overall(&self) -> &LatencyStats {
+        &self.overall
+    }
+
+    /// Collector for one lane (shared handle), if it has recorded anything.
+    pub fn lane(&self, name: &str) -> Option<LatencyStats> {
+        self.lanes
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.clone())
+    }
+
+    /// Lane names in first-recorded order.
+    pub fn lane_names(&self) -> Vec<String> {
+        self.lanes.lock().unwrap().iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    pub fn count(&self) -> usize {
+        self.overall.count()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.overall.mean_ms()
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.overall.percentile_ms(p)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +358,36 @@ mod tests {
         assert!((t.get("x") - 0.75).abs() < 1e-9);
         assert!((t.total() - 1.75).abs() < 1e-9);
         assert_eq!(t.snapshot()[0].0, "y");
+    }
+
+    #[test]
+    fn lane_stats_split_and_aggregate() {
+        let s = LaneStats::new();
+        for i in 1..=10 {
+            s.record("sentiment", i as f64 / 1000.0);
+        }
+        s.record("vqa", 0.5);
+        assert_eq!(s.count(), 11);
+        assert_eq!(s.lane("sentiment").unwrap().count(), 10);
+        assert_eq!(s.lane("vqa").unwrap().count(), 1);
+        assert!(s.lane("nope").is_none());
+        assert_eq!(s.lane_names(), vec!["sentiment".to_string(), "vqa".to_string()]);
+        // aggregate p95 dominated by the slow vqa sample
+        assert!(s.percentile_ms(99.0) >= 499.0);
+        assert!(s.lane("sentiment").unwrap().percentile_ms(99.0) <= 11.0);
+        // concurrent recording from worker threads is safe
+        let s2 = s.clone();
+        std::thread::scope(|sc| {
+            for _ in 0..4 {
+                let s3 = s2.clone();
+                sc.spawn(move || {
+                    for _ in 0..25 {
+                        s3.record("sentiment", 0.001);
+                    }
+                });
+            }
+        });
+        assert_eq!(s.lane("sentiment").unwrap().count(), 110);
     }
 
     #[test]

@@ -10,6 +10,56 @@ use crate::quant::QuantizedLinear;
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
+/// Equal-shape groups wider than this many sequences are sharded into
+/// chunked fused forwards that fan out across the global pool (see
+/// [`QuantizedLm::forward_batch`] and the VLM batched path). Within one
+/// chunk the inner dequant-matmuls still shard *activation rows*, so this
+/// is the coarse, inter-sequence level of the two-level row sharding.
+pub const WIDE_GROUP_ROWS: usize = 16;
+
+/// Shared skeleton of the batched forwards ([`QuantizedLm::forward_batch`],
+/// the VLM pair batching, and the serve lanes' in-place answer
+/// extraction): group item indices `0..n` by a shape key, split each
+/// group into chunks of at most [`WIDE_GROUP_ROWS`] items, run `run` per
+/// chunk, and scatter the per-item results back into input order. All
+/// chunks — several distinct-shape groups as well as the row-wise splits
+/// of one very wide group — fan out across the global pool together; a
+/// lone chunk runs inline on the calling thread. `run` receives the
+/// original item indices of one equal-shape chunk and must return one
+/// result per index, in order.
+pub(crate) fn run_equal_shape_groups<R, F>(
+    n: usize,
+    key_of: impl Fn(usize) -> usize,
+    run: F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(&[usize]) -> Vec<R> + Sync,
+{
+    let mut by_key: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for i in 0..n {
+        by_key.entry(key_of(i)).or_default().push(i);
+    }
+    let chunks: Vec<&[usize]> = by_key
+        .values()
+        .flat_map(|members| members.chunks(WIDE_GROUP_ROWS))
+        .collect();
+    let results: Vec<Vec<R>> = if chunks.len() <= 1 {
+        chunks.iter().map(|&c| run(c)).collect()
+    } else {
+        let run_ref = &run;
+        crate::exec::global().map(chunks.iter().map(|&c| move || run_ref(c)).collect())
+    };
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (chunk, res) in chunks.iter().zip(results) {
+        for (&i, l) in chunk.iter().zip(res) {
+            out[i] = Some(l);
+        }
+    }
+    out.into_iter().map(|o| o.expect("item answered")).collect()
+}
+
 /// A model whose linears are quantized; everything else (embeddings,
 /// LayerNorm) stays fp32, matching standard PTQ deployments.
 pub struct QuantizedLm {
@@ -27,6 +77,17 @@ impl QuantizedLm {
             assert!(qlinears.contains_key(&name), "missing quantized layer {name}");
         }
         QuantizedLm { base, qlinears }
+    }
+
+    /// Round-to-nearest quantize every linear of `w` onto `grid` — the
+    /// calibration-free baseline, and the scaffolding the serve tests and
+    /// benches build their models with.
+    pub fn quantize_rtn(w: LmWeights, grid: crate::quant::QuantGrid) -> Self {
+        let mut qlinears = HashMap::new();
+        for (name, t) in w.linears() {
+            qlinears.insert(name, QuantizedLinear::quantize_rtn(t, grid));
+        }
+        Self::new(w, qlinears)
     }
 
     /// Deployment weight bytes (packed levels + group params + fp32
@@ -77,6 +138,36 @@ impl QuantizedLm {
             qmatmul_rows(xd, q, chunk, i0)
         });
         y
+    }
+
+    /// Batched forward over independent sequences of possibly different
+    /// lengths — the sentiment lane's entry point. Sequences are grouped
+    /// by length (each group is one fused forward) and, when a group is
+    /// wider than [`WIDE_GROUP_ROWS`] sequences, the group is sharded
+    /// row-wise into chunked fused forwards that fan out across the global
+    /// pool explicitly.
+    ///
+    /// Every op in [`Self::forward`] is per-row / per-sequence (embedding
+    /// and LayerNorm are row-wise, attention loops sequences, and the
+    /// fused dequant-matmul computes each output row independently in a
+    /// fixed f32 order), so the returned per-sequence logits `[S_i, V]`
+    /// are **bit-identical** to `forward(seq_i, 1, S_i)` — asserted by the
+    /// batch-parity test.
+    pub fn forward_batch(&self, seqs: &[&[u32]]) -> Vec<Tensor> {
+        for s in seqs {
+            assert!(!s.is_empty(), "empty sequence in batch");
+        }
+        run_equal_shape_groups(seqs.len(), |i| seqs[i].len(), |chunk| {
+            let seq = seqs[chunk[0]].len();
+            let mut tokens = Vec::with_capacity(chunk.len() * seq);
+            for &i in chunk {
+                tokens.extend_from_slice(seqs[i]);
+            }
+            let logits = self.forward(&tokens, chunk.len(), seq);
+            (0..chunk.len())
+                .map(|gi| logits.slice_rows(gi * seq, (gi + 1) * seq))
+                .collect()
+        })
     }
 
     /// Forward pass: tokens → logits, all linears via [`Self::qmatmul`].
@@ -156,15 +247,9 @@ mod tests {
         let cfg = ModelConfig::test_tiny(32);
         let mut rng = Pcg64::seeded(301);
         let w = LmWeights::init(&cfg, &mut rng);
-        let mut qlinears = HashMap::new();
-        for (name, t) in w.linears() {
-            qlinears.insert(
-                name,
-                QuantizedLinear::quantize_rtn(t, QuantGrid::new(bits, 8)),
-            );
-        }
+        let qlm = QuantizedLm::quantize_rtn(w.clone(), QuantGrid::new(bits, 8));
         let tokens: Vec<u32> = (0..16).map(|_| rng.next_below(32) as u32).collect();
-        (w.clone(), QuantizedLm::new(w, qlinears), tokens)
+        (w, qlm, tokens)
     }
 
     #[test]
@@ -195,6 +280,29 @@ mod tests {
         let fused = QuantizedLm::qmatmul(&x, &q);
         let reference = crate::tensor::matmul_a_bt(&x, &q.dequantize());
         assert!(fused.max_abs_diff(&reference) < 1e-4);
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_to_looped_forward() {
+        let (_, qlm, _) = build_rtn_qlm(4);
+        let mut rng = Pcg64::seeded(307);
+        // mixed lengths, with 20 sequences of one length so the wide-group
+        // row-wise pool sharding path (> WIDE_GROUP_ROWS) is exercised
+        let mut seqs: Vec<Vec<u32>> = Vec::new();
+        for len in [4usize, 8, 4, 6] {
+            seqs.push((0..len).map(|_| rng.next_below(32) as u32).collect());
+        }
+        for _ in 0..super::WIDE_GROUP_ROWS + 4 {
+            seqs.push((0..8).map(|_| rng.next_below(32) as u32).collect());
+        }
+        let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let batched = qlm.forward_batch(&refs);
+        assert_eq!(batched.len(), seqs.len());
+        for (s, b) in seqs.iter().zip(&batched) {
+            let single = qlm.forward(s, 1, s.len());
+            assert_eq!(b.shape(), single.shape());
+            assert_eq!(b.data(), single.data(), "len={}", s.len());
+        }
     }
 
     #[test]

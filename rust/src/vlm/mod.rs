@@ -373,6 +373,61 @@ fn lm_body_forward(
     linear_fwd(&lnf, lm.head_matrix())
 }
 
+/// Shared-shape fused execution over `(patches, question)` pairs, the
+/// engine under both [`vlm_forward_batch`] and
+/// [`QuantizedVlm::forward_batch`]. Pairs are grouped by question length
+/// (the patch grid is fixed by the config, so equal question length ⇒
+/// equal combined shape); each group is stacked into one batched forward
+/// through the vision tower and text stack. Groups wider than
+/// [`crate::model::WIDE_GROUP_ROWS`] pairs are sharded row-wise into
+/// chunked fused forwards that fan out across the global pool explicitly.
+///
+/// All VLM ops are per-row / per-sequence, so each returned `[S_i, V]`
+/// logits tensor is **bit-identical** to running its pair alone — the
+/// property the serve lane's correctness rests on, asserted by the
+/// batch-parity tests.
+fn forward_pairs_with(
+    pairs: &[(&Tensor, &[u32])],
+    n_patches: usize,
+    f: &(dyn Fn(&Tensor, &[u32], usize) -> Tensor + Sync),
+) -> Vec<Tensor> {
+    for (i, (p, q)) in pairs.iter().enumerate() {
+        assert_eq!(p.rows(), n_patches, "pair {i}: patch grid mismatch");
+        assert!(!q.is_empty(), "pair {i}: empty question");
+    }
+    crate::model::quantized::run_equal_shape_groups(
+        pairs.len(),
+        |i| pairs[i].1.len(),
+        |chunk| {
+            let b = chunk.len();
+            let tlen = pairs[chunk[0]].1.len();
+            let pd = pairs[chunk[0]].0.cols();
+            let mut pdata = Vec::with_capacity(b * n_patches * pd);
+            let mut text = Vec::with_capacity(b * tlen);
+            for &i in chunk {
+                let (p, q) = &pairs[i];
+                assert_eq!(p.cols(), pd, "pair {i}: patch dim mismatch");
+                pdata.extend_from_slice(p.data());
+                text.extend_from_slice(q);
+            }
+            let patches = Tensor::from_vec(&[b * n_patches, pd], pdata);
+            let logits = f(&patches, &text, b);
+            let s = n_patches + tlen;
+            (0..b).map(|gi| logits.slice_rows(gi * s, (gi + 1) * s)).collect()
+        },
+    )
+}
+
+/// Batched full-precision VLM inference over `(patches, question)` pairs
+/// of possibly different question lengths; returns per-pair logits
+/// `[n_patches + |question_i|, vocab]`, bit-identical per pair to
+/// [`vlm_forward`] on that pair alone. See [`forward_pairs_with`] for the
+/// fusion/sharding policy.
+pub fn vlm_forward_batch(w: &VlmWeights, pairs: &[(&Tensor, &[u32])]) -> Vec<Tensor> {
+    let f = |p: &Tensor, t: &[u32], b: usize| vlm_forward(w, p, t, b, None);
+    forward_pairs_with(pairs, w.config.n_patches, &f)
+}
+
 /// Quantized VLM: vision/cross/lm linears replaced per the CMDQ policy.
 pub struct QuantizedVlm {
     pub base: VlmWeights,
@@ -385,6 +440,17 @@ impl QuantizedVlm {
             assert!(qlinears.contains_key(&name), "missing quantized layer {name}");
         }
         QuantizedVlm { base, qlinears }
+    }
+
+    /// Round-to-nearest quantize every linear of `w` onto `grid` — the
+    /// calibration-free baseline, and the scaffolding the serve tests and
+    /// benches build their models with.
+    pub fn quantize_rtn(w: VlmWeights, grid: crate::quant::QuantGrid) -> Self {
+        let mut qlinears = HashMap::new();
+        for (name, t) in w.linears() {
+            qlinears.insert(name, QuantizedLinear::quantize_rtn(t, grid));
+        }
+        Self::new(w, qlinears)
     }
 
     fn q(&self, name: &str) -> &QuantizedLinear {
@@ -428,6 +494,14 @@ impl QuantizedVlm {
         let x = assemble_embeddings(w, &img_tokens, text, batch);
         let s = w.config.n_patches + text.len() / batch;
         self.lm_body(x, batch, s)
+    }
+
+    /// Batched quantized inference over `(patches, question)` pairs — the
+    /// VQA serve lane's entry point. Bit-identical per pair to
+    /// [`Self::forward`] on that pair alone; see [`forward_pairs_with`].
+    pub fn forward_batch(&self, pairs: &[(&Tensor, &[u32])]) -> Vec<Tensor> {
+        let f = |p: &Tensor, t: &[u32], b: usize| self.forward(p, t, b);
+        forward_pairs_with(pairs, self.base.config.n_patches, &f)
     }
 
     fn lm_body(&self, mut x: Tensor, batch: usize, seq: usize) -> Tensor {
@@ -546,14 +620,61 @@ mod tests {
         }
     }
 
+    /// Mixed-length pair set: several question lengths, one of them wide
+    /// enough (> WIDE_GROUP_ROWS pairs) to force the explicit row-wise
+    /// pool sharding of large equal-shape groups.
+    fn mixed_pairs(
+        cfg: &VlmConfig,
+        rng: &mut Pcg64,
+    ) -> Vec<(Tensor, Vec<u32>)> {
+        let mut pairs = Vec::new();
+        let widths: Vec<usize> = [3usize, 6, 3, 5]
+            .into_iter()
+            .chain(std::iter::repeat_n(6, crate::model::WIDE_GROUP_ROWS + 4))
+            .collect();
+        for t_len in widths {
+            let patches = Tensor::randn(&[cfg.n_patches, cfg.patch_dim], 1.0, rng);
+            let q: Vec<u32> = (0..t_len).map(|_| rng.next_below(24) as u32).collect();
+            pairs.push((patches, q));
+        }
+        pairs
+    }
+
+    #[test]
+    fn vlm_forward_batch_bit_identical_to_looped_single() {
+        let (w, _, _, _) = tiny();
+        let mut rng = Pcg64::seeded(611);
+        let owned = mixed_pairs(&w.config, &mut rng);
+        let pairs: Vec<(&Tensor, &[u32])> =
+            owned.iter().map(|(p, q)| (p, q.as_slice())).collect();
+        let batched = vlm_forward_batch(&w, &pairs);
+        assert_eq!(batched.len(), pairs.len());
+        for ((p, q), b) in pairs.iter().zip(&batched) {
+            let single = vlm_forward(&w, p, q, 1, None);
+            assert_eq!(b.shape(), single.shape());
+            assert_eq!(b.data(), single.data(), "t_len={}", q.len());
+        }
+    }
+
+    #[test]
+    fn quantized_vlm_forward_batch_bit_identical_to_looped_single() {
+        let (w, _, _, _) = tiny();
+        let qvlm = QuantizedVlm::quantize_rtn(w.clone(), QuantGrid::new(4, 8));
+        let mut rng = Pcg64::seeded(612);
+        let owned = mixed_pairs(&w.config, &mut rng);
+        let pairs: Vec<(&Tensor, &[u32])> =
+            owned.iter().map(|(p, q)| (p, q.as_slice())).collect();
+        let batched = qvlm.forward_batch(&pairs);
+        for ((p, q), b) in pairs.iter().zip(&batched) {
+            let single = qvlm.forward(p, q, 1);
+            assert_eq!(b.data(), single.data(), "t_len={}", q.len());
+        }
+    }
+
     #[test]
     fn quantized_vlm_8bit_close_to_fp() {
         let (w, patches, text, batch) = tiny();
-        let mut qlinears = HashMap::new();
-        for (name, t) in w.linears() {
-            qlinears.insert(name, QuantizedLinear::quantize_rtn(t, QuantGrid::new(8, 8)));
-        }
-        let qvlm = QuantizedVlm::new(w.clone(), qlinears);
+        let qvlm = QuantizedVlm::quantize_rtn(w.clone(), QuantGrid::new(8, 8));
         let fp = vlm_forward(&w, &patches, &text, batch, None);
         let qf = qvlm.forward(&patches, &text, batch);
         let rel = qf.sub(&fp).frob() / fp.frob().max(1e-9);
@@ -563,12 +684,8 @@ mod tests {
     #[test]
     fn deploy_bytes_compresses() {
         let (w, _, _, _) = tiny();
-        let mut qlinears = HashMap::new();
-        for (name, t) in w.linears() {
-            qlinears.insert(name, QuantizedLinear::quantize_rtn(t, QuantGrid::new(4, 8)));
-        }
         let fp_bytes = w.n_params() * 4;
-        let qvlm = QuantizedVlm::new(w, qlinears);
+        let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8));
         assert!(qvlm.deploy_bytes() < fp_bytes);
     }
 }

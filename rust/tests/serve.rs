@@ -1,0 +1,195 @@
+//! Serving-semantics integration tests for the multi-lane engine:
+//! backpressure engages exactly at `queue_cap`, shutdown drains every
+//! pending request across every lane, and a mixed-length + mixed-mode
+//! replay answers every id exactly once. These are the smoke tests CI
+//! runs with `RPIQ_THREADS=2` so the lane/steal paths are exercised on
+//! small runners.
+
+use rpiq::coordinator::{
+    Answer, LaneEngine, Payload, Response, ServeConfig, Server, LANE_SENTIMENT, LANE_VQA,
+};
+use rpiq::data::corpus::Lexicon;
+use rpiq::data::Tokenizer;
+use rpiq::exec::Channel;
+use rpiq::model::{LmWeights, ModelConfig, QuantizedLm};
+use rpiq::quant::QuantGrid;
+use rpiq::rng::Pcg64;
+use rpiq::tensor::Tensor;
+use rpiq::vlm::{QuantizedVlm, VlmConfig, VlmWeights};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tiny_qlm(tok: &Tokenizer) -> Arc<QuantizedLm> {
+    let mcfg = ModelConfig::test_tiny(tok.vocab_size());
+    let mut rng = Pcg64::seeded(901);
+    let w = LmWeights::init(&mcfg, &mut rng);
+    Arc::new(QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8)))
+}
+
+fn tiny_qvlm(tok: &Tokenizer) -> Arc<QuantizedVlm> {
+    let vcfg = VlmConfig::test_tiny(tok.vocab_size());
+    let mut rng = Pcg64::seeded(902);
+    let w = VlmWeights::init(&vcfg, &mut rng);
+    Arc::new(QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)))
+}
+
+/// A lane whose compute blocks until the test feeds the gate — makes
+/// queue occupancy deterministic so backpressure is testable.
+struct GatedLane {
+    gate: Channel<()>,
+}
+
+impl LaneEngine for GatedLane {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn accepts(&self, payload: &Payload) -> bool {
+        matches!(payload, Payload::Sentiment { .. })
+    }
+
+    fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
+        // one gate token per pickup
+        let _ = self.gate.recv();
+        group
+            .iter()
+            .map(|_| Answer::Sentiment { label: 0, label_logits: [0.0; 3] })
+            .collect()
+    }
+}
+
+#[test]
+fn backpressure_engages_at_queue_cap() {
+    let queue_cap = 4;
+    let gate: Channel<()> = Channel::bounded(64);
+    let server = Server::start_engines(
+        vec![Box::new(GatedLane { gate: gate.clone() })],
+        ServeConfig {
+            queue_cap,
+            max_batch: 1,
+            max_wait: Duration::from_millis(0),
+            lanes: 1,
+        },
+    );
+    // First request: the lane picks it up and parks in run_batch.
+    let mut pending = vec![server.submit(Payload::Sentiment { tokens: vec![1] }).unwrap()];
+    let t0 = Instant::now();
+    while server.queue_depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "lane never picked up");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // With the lane parked, exactly queue_cap more requests fit.
+    for i in 0..queue_cap {
+        pending.push(
+            server
+                .submit(Payload::Sentiment { tokens: vec![i as u32 + 2] })
+                .unwrap(),
+        );
+    }
+    assert_eq!(server.queue_depth(), queue_cap);
+    // The queue is at capacity: a non-blocking submit reports full.
+    match server.try_submit(Payload::Sentiment { tokens: vec![99] }) {
+        Ok(None) => {}
+        other => panic!("expected backpressure, got {:?}", other.map(|o| o.is_some())),
+    }
+    // Release the gate; everything accepted must drain.
+    for _ in 0..pending.len() {
+        gate.send(()).unwrap();
+    }
+    for ch in &pending {
+        assert!(ch.recv().is_some(), "request dropped");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.count(), queue_cap + 1);
+    assert_eq!(stats.lane("gated").unwrap().count(), queue_cap + 1);
+}
+
+#[test]
+fn shutdown_drains_all_pending_across_every_lane() {
+    let tok = Lexicon::tokenizer();
+    let server = Server::start(
+        tiny_qlm(&tok),
+        &tok,
+        ServeConfig {
+            lanes: 4,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+        },
+    );
+    let n = 40;
+    let pending: Vec<Channel<Response>> = (0..n)
+        .map(|i| {
+            server
+                .submit_tokens(tok.encode(&format!(
+                    "sentiment of text : case {} answer :",
+                    i % 5
+                )))
+                .unwrap()
+        })
+        .collect();
+    // Shut down immediately: lanes must drain the whole backlog (spread
+    // round-robin across all 4 shards) before exiting.
+    let stats = server.shutdown();
+    for ch in &pending {
+        assert!(ch.recv().is_some(), "request dropped at shutdown");
+    }
+    assert_eq!(stats.count(), n);
+}
+
+#[test]
+fn mixed_replay_answers_every_id_exactly_once() {
+    let tok = Lexicon::tokenizer();
+    let qvlm = tiny_qvlm(&tok);
+    let vcfg = qvlm.base.config.clone();
+    let server = Server::start_mixed(
+        tiny_qlm(&tok),
+        qvlm,
+        &tok,
+        ServeConfig {
+            lanes: 4,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 128,
+        },
+    );
+    // Mixed modes AND mixed lengths: several sentiment prompt widths plus
+    // all three VQA question templates (two distinct lengths).
+    let sentiments = [
+        "sentiment of text : fine answer :",
+        "sentiment of text : it was fine answer :",
+        "sentiment of text : i loved this movie a lot answer :",
+    ];
+    let questions = [
+        "what genre this book ? answer :",
+        "who wrote this book ? answer :",
+        "what year was this published ? answer :",
+    ];
+    let mut rng = Pcg64::seeded(903);
+    let n = 60;
+    let items: Vec<Payload> = (0..n)
+        .map(|i| {
+            if i % 2 == 0 {
+                Payload::Sentiment { tokens: tok.encode(sentiments[i % 3]) }
+            } else {
+                Payload::Vqa {
+                    patches: Tensor::randn(&[vcfg.n_patches, vcfg.patch_dim], 1.0, &mut rng),
+                    question: tok.encode(questions[i % 3]),
+                }
+            }
+        })
+        .collect();
+    let channels: Vec<Channel<Response>> =
+        items.into_iter().map(|p| server.submit(p).unwrap()).collect();
+    let mut ids: Vec<u64> = channels
+        .iter()
+        .map(|c| c.recv().expect("answer missing").id)
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "every id answered exactly once");
+    let stats = server.shutdown();
+    assert_eq!(stats.count(), n);
+    assert_eq!(stats.lane(LANE_SENTIMENT).unwrap().count(), n / 2);
+    assert_eq!(stats.lane(LANE_VQA).unwrap().count(), n / 2);
+}
