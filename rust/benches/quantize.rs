@@ -1,0 +1,131 @@
+//! Quantization-pipeline threads sweep: model sizes × shard targets, with
+//! calibration, stage 1 (GPTQ), and stage 2 (RPIQ refine) timed
+//! separately — the scaling evidence for the parallel pipeline (ROADMAP
+//! items "Parallel calibration sweep" and "Pool-aware GPTQ inner loops").
+//!
+//! Output is one JSON line per arm (like `benches/serve.rs`), followed by
+//! a human summary of per-phase speedups at the widest shard target vs 1.
+//! The sweep moves `exec::set_threads` (the shard target); observable
+//! parallelism is capped by the pool's worker count, so run with
+//! `RPIQ_THREADS >= 8` for the full curve:
+//!
+//! ```bash
+//! RPIQ_THREADS=8 cargo bench --bench quantize   # or --no-run (CI)
+//! ```
+//!
+//! Every arm also cross-checks the bit-identity guarantee: Γ traces at
+//! each shard target must equal the target-1 run bit for bit.
+
+use rpiq::coordinator::{quantize_lm, Method};
+use rpiq::data::WikiCorpus;
+use rpiq::exec;
+use rpiq::jsonx::Json;
+use rpiq::model::{Activation, LmWeights, ModelConfig};
+use rpiq::quant::{QuantConfig, RpiqParams};
+use rpiq::rng::Pcg64;
+
+struct Arm {
+    label: &'static str,
+    d_model: usize,
+    n_layers: usize,
+    d_ff: usize,
+    seq: usize,
+    windows: usize,
+}
+
+const ARMS: &[Arm] = &[
+    Arm { label: "lm-small", d_model: 64, n_layers: 2, d_ff: 192, seq: 48, windows: 8 },
+    Arm { label: "lm-wide", d_model: 128, n_layers: 4, d_ff: 384, seq: 64, windows: 16 },
+];
+
+const THREADS: &[usize] = &[1, 2, 4, 8];
+
+fn main() -> anyhow::Result<()> {
+    let corpus = WikiCorpus::generate(41, 12_000, 800);
+    let vocab = corpus.tokenizer.vocab_size();
+    println!(
+        "== quantize bench: {} sizes x {:?} shard targets, pool workers = {} ==",
+        ARMS.len(),
+        THREADS,
+        exec::global().size()
+    );
+
+    for arm in ARMS {
+        let cfg = ModelConfig {
+            name: format!("quant-bench-{}", arm.label),
+            vocab,
+            d_model: arm.d_model,
+            n_layers: arm.n_layers,
+            n_heads: 4,
+            d_ff: arm.d_ff,
+            seq_len: arm.seq,
+            activation: Activation::Gelu,
+            tied_head: false,
+        };
+        let mut rng = Pcg64::seeded(8001);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let windows = corpus.calibration(5, arm.windows, arm.seq);
+        let qcfg = QuantConfig { bits: 4, group_size: 32, block_size: 32, percdamp: 0.01 };
+
+        for method in [Method::Gptq, Method::Rpiq(RpiqParams::default())] {
+            // Per-phase totals at each shard target, plus the target-1 Γ
+            // traces for the bit-identity cross-check.
+            let mut base_trace: Vec<Vec<u64>> = Vec::new();
+            let mut by_threads: Vec<(usize, f64, f64, f64)> = Vec::new();
+            for &t in THREADS {
+                exec::set_threads(t);
+                let out = quantize_lm(&w, &windows, qcfg, method)?;
+                let calib = out.timers.get("calibration");
+                let s1 = out.timers.get("stage1");
+                let s2 = out.timers.get("stage2");
+                let trace: Vec<Vec<u64>> = out
+                    .reports
+                    .iter()
+                    .map(|r| r.loss_trace.iter().map(|x| x.to_bits()).collect())
+                    .collect();
+                if t == THREADS[0] {
+                    base_trace = trace;
+                } else {
+                    assert_eq!(
+                        base_trace, trace,
+                        "Γ traces diverged at {t} shards ({}, {})",
+                        arm.label,
+                        method.label()
+                    );
+                }
+                println!(
+                    "{}",
+                    Json::obj()
+                        .with("bench", Json::Str("quantize".into()))
+                        .with("arm", Json::Str(arm.label.into()))
+                        .with("method", Json::Str(method.label().into()))
+                        .with("threads", Json::Num(t as f64))
+                        .with("layers", Json::Num(out.reports.len() as f64))
+                        .with("windows", Json::Num(windows.len() as f64))
+                        .with("calib_secs", Json::Num(calib))
+                        .with("stage1_secs", Json::Num(s1))
+                        .with("stage2_secs", Json::Num(s2))
+                        .with("total_secs", Json::Num(calib + s1 + s2))
+                        .with("peak_mib", Json::Num(out.ledger.peak_mib()))
+                        .dump()
+                );
+                by_threads.push((t, calib, s1, s2));
+            }
+            let (t0, c0, s10, s20) = by_threads[0];
+            let (tn, cn, s1n, s2n) = *by_threads.last().unwrap();
+            let ratio = |a: f64, b: f64| if b > 0.0 { a / b } else { f64::NAN };
+            println!(
+                "-- {} [{}]: {}→{} shards: calibrate {:.2}x, stage1 {:.2}x, stage2 {:.2}x",
+                arm.label,
+                method.label(),
+                t0,
+                tn,
+                ratio(c0, cn),
+                ratio(s10, s1n),
+                ratio(s20, s2n),
+            );
+        }
+    }
+    exec::set_threads(exec::default_threads());
+    Ok(())
+}

@@ -14,24 +14,37 @@
 //! reproduces Table 3's ΔM on our substrate; wall-clock is split into
 //! calibration/stage1/stage2 timers for Table 4.
 //!
-//! # Parallel per-layer quantization
+//! # Parallel quantization (end to end)
 //!
-//! Within a window, each linear layer's stage 1 (+ stage 2) depends only
-//! on its own calibration state (`H`, retained instance) — layers are
-//! independent, so the pipeline fans them out across the global pool
-//! (`crate::exec`) and joins before assembling reports. Per-layer numerics
-//! are untouched (each job runs the exact sequential code), so Γ traces
-//! and `qweight`s are **byte-identical** to a single-threaded run for any
-//! `RPIQ_THREADS` — asserted by `gamma_traces_deterministic_across_thread_counts`.
-//! Only ledger *peaks* and timer totals may vary with scheduling (more
-//! layers in flight ⇒ more concurrent transients); live-byte accounting
-//! still balances to zero.
+//! Every stage of the pipeline draws from the global pool (`crate::exec`):
+//!
+//! * **Calibration** fans independent windows out in waves; each window
+//!   job accumulates private per-layer `XᵀX` partials that are replay-
+//!   merged in window-index order (see [`calibrate`]), so damped Hessians
+//!   are byte-identical at any thread count.
+//! * **Per-layer fan-out**: each linear layer's stage 1 (+ stage 2)
+//!   depends only on its own calibration state (`H`, retained instance) —
+//!   layers are independent, so the pipeline fans them out and joins
+//!   before assembling reports.
+//! * **Within a layer**, GPTQ's column walk and RPIQ's grid projector
+//!   shard *output rows* (rows are independent given the shared Cholesky
+//!   factor), with a flop cutoff mirroring the matmul one — see
+//!   `quant::gptq` / `quant::rpiq`.
+//!
+//! Per-row/per-window numerics are untouched (each unit runs the exact
+//! sequential float-op sequence), so Γ traces, `qweight`s, and Hessians
+//! are **byte-identical** to a single-threaded run for any `RPIQ_THREADS`
+//! — asserted by `gamma_traces_deterministic_across_thread_counts` and
+//! `calibration_deterministic_across_thread_counts`, and enforced in CI by
+//! the determinism matrix job at `RPIQ_THREADS=1/2/8`. Only ledger *peaks*
+//! and timer totals may vary with scheduling (more work in flight ⇒ more
+//! concurrent transients); live-byte accounting still balances to zero.
 
 use crate::metrics::{MemoryLedger, Timers};
 use crate::model::forward::{lm_forward, ActivationTap};
 use crate::model::weights::LmWeights;
 use crate::model::QuantizedLm;
-use crate::quant::calib::{HessianAccumulator, SingleInstance};
+use crate::quant::calib::{HessianAccumulator, HessianPartial, SingleInstance};
 use crate::quant::{
     gptq_quantize, rpiq_refine, CmdqPolicy, QuantConfig, QuantizedLinear, RpiqParams,
 };
@@ -111,38 +124,77 @@ struct LayerCalib {
 /// Stream calibration windows through a tap-instrumented forward,
 /// returning per-layer damped Hessians (and, when `retain_last`, the
 /// last-batch inputs).
+///
+/// # Parallel fan-out
+///
+/// Windows are independent given per-layer accumulators, so they fan out
+/// across the global pool in **waves** of `exec::num_threads()` windows:
+/// each window job runs its own tap-instrumented forward and accumulates
+/// the per-layer `XᵀX` into a private [`HessianPartial`]; after each wave
+/// the partials are replay-merged into the per-layer accumulators in
+/// window-index order ([`HessianAccumulator::merge`]). The merge replays
+/// the *sequential* float-op sequence, so damped Hessians (and the
+/// retained last batch) are byte-identical at any thread count — asserted
+/// by `calibration_deterministic_across_thread_counts`. Waves bound the
+/// transient partial memory to `threads × layers × in²` instead of
+/// `windows × layers × in²`, keeping Table 3's ΔM calibration-independent;
+/// every partial byte is ledger-accounted (`hessian_partial`).
 fn calibrate<F>(
     layer_names: &[String],
     windows: &[Vec<u32>],
     percdamp: f32,
     retain_last: bool,
     ledger: &MemoryLedger,
-    mut fwd: F,
+    fwd: F,
 ) -> HashMap<String, LayerCalib>
 where
-    F: FnMut(&[u32], &mut ActivationTap),
+    F: Fn(&[u32], &mut ActivationTap) + Sync,
 {
+    let nw = windows.len();
+    let wave = crate::exec::num_threads().clamp(1, nw.max(1));
     let mut accs: HashMap<String, HessianAccumulator> = HashMap::new();
     let mut last_x: HashMap<String, Tensor> = HashMap::new();
-    for (wi, w) in windows.iter().enumerate() {
-        let mut tap = ActivationTap::new();
-        fwd(w, &mut tap);
-        let is_last = wi + 1 == windows.len();
-        for name in layer_names {
-            let x = tap
-                .inputs
-                .remove(name)
-                .unwrap_or_else(|| panic!("tap missed layer {name}"));
-            let acc = accs.entry(name.clone()).or_insert_with(|| {
-                HessianAccumulator::new(x.cols(), ledger.clone())
-            });
-            acc.add_batch(&x);
-            if is_last && retain_last {
-                // the single instance (paper Eq. 11): only the LAST batch
-                // is retained beyond the sweep.
-                ledger.alloc("calib_last_batch", x.nbytes());
-                last_x.insert(name.clone(), x);
+    let fwd = &fwd;
+    for (ci, chunk) in windows.chunks(wave).enumerate() {
+        let jobs: Vec<_> = chunk
+            .iter()
+            .enumerate()
+            .map(|(k, w)| {
+                let wi = ci * wave + k;
+                move || {
+                    let mut tap = ActivationTap::new();
+                    fwd(w, &mut tap);
+                    let mut partials: HashMap<String, HessianPartial> = HashMap::new();
+                    let mut last: HashMap<String, Tensor> = HashMap::new();
+                    for name in layer_names {
+                        let x = tap
+                            .take(name)
+                            .unwrap_or_else(|| panic!("tap missed layer {name}"));
+                        let mut p = HessianPartial::new(x.cols(), ledger.clone());
+                        p.add_window(wi, &x);
+                        partials.insert(name.clone(), p);
+                        if retain_last && wi + 1 == nw {
+                            // the single instance (paper Eq. 11): only the
+                            // LAST batch is retained beyond the sweep.
+                            ledger.alloc("calib_last_batch", x.nbytes());
+                            last.insert(name.clone(), x);
+                        }
+                    }
+                    (partials, last)
+                }
+            })
+            .collect();
+        // map() joins in window order; at an effective parallelism of 1 the
+        // jobs run inline in that same order.
+        for (mut partials, last) in crate::exec::global().map(jobs) {
+            for name in layer_names {
+                let p = partials.remove(name).expect("partial for every layer");
+                let acc = accs.entry(name.clone()).or_insert_with(|| {
+                    HessianAccumulator::new(p.in_features(), ledger.clone())
+                });
+                acc.merge(vec![p]);
             }
+            last_x.extend(last);
         }
     }
     let mut out = HashMap::new();
@@ -209,7 +261,7 @@ fn gamma0_rescore<'w>(
         let mut tap = ActivationTap::only(names);
         forward(&mut tap);
         for rep in chunk.iter_mut() {
-            if let (Some(x), Some(w_fp)) = (tap.inputs.remove(&rep.name), fp_of(&rep.name)) {
+            if let (Some(x), Some(w_fp)) = (tap.take(&rep.name), fp_of(&rep.name)) {
                 let y_orig = crate::tensor::matmul_a_bt(&x, w_fp);
                 let y_q = crate::tensor::matmul_a_bt(&x, &qlinears[&rep.name].dequantize());
                 rep.loss_trace[0] = y_orig.sub(&y_q).frob_sq();
@@ -485,6 +537,59 @@ mod tests {
         // and strictly better somewhere
         let total_red: f64 = rpiq.reports.iter().map(|r| r.reduction_pct()).sum();
         assert!(total_red > 1.0, "no layer improved at all: {total_red}");
+    }
+
+    #[test]
+    fn calibration_deterministic_across_thread_counts() {
+        // The calibration fan-out's own contract (narrower than the full
+        // pipeline test below): damped Hessians and the retained last
+        // batch are byte-identical at any thread count, and the ledger
+        // balances once the calibration state is released.
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        let (w, windows) = setup_lm();
+        let names: Vec<String> = w.linears().into_iter().map(|(n, _)| n).collect();
+        let seq_len = windows[0].len();
+        let run = |threads: usize| {
+            crate::exec::set_threads(threads);
+            let ledger = MemoryLedger::new();
+            let calib = calibrate(&names, &windows, 0.01, true, &ledger, |win, tap| {
+                let _ = lm_forward(&w, win, 1, seq_len, Some(tap));
+            });
+            (calib, ledger)
+        };
+        let release = |calib: HashMap<String, LayerCalib>, ledger: &MemoryLedger| {
+            for (_name, c) in calib {
+                ledger.free("hessian_final", c.h.nbytes());
+                if let Some(x) = &c.last_x {
+                    ledger.free("calib_last_batch", x.nbytes());
+                }
+            }
+        };
+        let bits = |t: &Tensor| t.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let (c_seq, l_seq) = run(1);
+        for threads in [2usize, 8] {
+            let (c_par, l_par) = run(threads);
+            for name in &names {
+                let (a, b) = (&c_seq[name], &c_par[name]);
+                assert_eq!(
+                    bits(&a.h),
+                    bits(&b.h),
+                    "damped Hessian diverged for {name} @ {threads} threads"
+                );
+                let (ax, bx) = (a.last_x.as_ref().unwrap(), b.last_x.as_ref().unwrap());
+                assert_eq!(
+                    bits(ax),
+                    bits(bx),
+                    "retained instance diverged for {name} @ {threads} threads"
+                );
+            }
+            release(c_par, &l_par);
+            assert_eq!(l_par.live_bytes(), 0, "ledger balances @ {threads} threads");
+        }
+        release(c_seq, &l_seq);
+        assert_eq!(l_seq.live_bytes(), 0);
+        crate::exec::set_threads(before);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!   environment variable, falling back to
 //!   `std::thread::available_parallelism()`, and is fixed for the life of
 //!   the process. The matmul kernels (`crate::tensor`), the fused
-//!   dequant-matmul (`crate::model`), the per-layer quantization fan-out
-//!   (`crate::coordinator::pipeline`), and the serving batcher's group
+//!   dequant-matmul (`crate::model`), the quantization pipeline — the
+//!   calibration window fan-out and per-layer fan-out
+//!   (`crate::coordinator::pipeline`) plus the GPTQ/RPIQ row-sharded
+//!   inner loops (`crate::quant`) — and the serving batcher's group
 //!   forwards all draw from this one pool — nothing else in the crate
 //!   spawns compute threads. (The serve engine keeps `lanes` dedicated
 //!   *event-loop* threads, which block on the sharded request queue and

@@ -22,12 +22,14 @@
 //! [`runtime`].)
 //!
 //! Compute-heavy paths — the matmul kernels, the fused dequant-matmul,
-//! per-layer quantization, and the serve batcher's group forwards — share
+//! the calibration window sweep, per-layer quantization with row-sharded
+//! GPTQ/RPIQ inner loops, and the serve batcher's group forwards — share
 //! one process-global thread pool sized by `RPIQ_THREADS` (default:
 //! `available_parallelism`), with results bit-identical at any thread
-//! count. See [`exec`] for the threading model, and `rust/DESIGN.md` for
-//! the cross-module design notes (paper deviations, substitution ledger,
-//! perf log).
+//! count (enforced by the CI determinism matrix at `RPIQ_THREADS=1/2/8`).
+//! See [`exec`] for the threading model, and `rust/DESIGN.md` for the
+//! cross-module design notes (paper deviations, substitution ledger,
+//! parallel-quantization design, perf log).
 
 pub mod tensor;
 pub mod linalg;

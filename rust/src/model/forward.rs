@@ -17,6 +17,12 @@ use std::collections::HashMap;
 
 /// Captures the input activations of named linear layers during a forward
 /// pass (the calibration hook).
+///
+/// A tap is single-forward state, not shared state: the parallel
+/// calibration sweep creates one tap per window job on a pool worker, runs
+/// the forward against it, and [`Self::take`]s the captured tensors into
+/// that worker's private Hessian partials — taps never cross threads while
+/// a forward is writing into them.
 #[derive(Default)]
 pub struct ActivationTap {
     /// layer name → captured `[N, in_features]` input.
@@ -32,6 +38,12 @@ impl ActivationTap {
 
     pub fn only(names: Vec<String>) -> Self {
         ActivationTap { inputs: HashMap::new(), filter: Some(names) }
+    }
+
+    /// Move a captured input out of the tap (calibration consumes each
+    /// layer's activation exactly once).
+    pub fn take(&mut self, name: &str) -> Option<Tensor> {
+        self.inputs.remove(name)
     }
 
     /// Capture (if the filter allows) the input activation of a layer.

@@ -7,6 +7,19 @@
 //! (Eq. 15–16) is that stage 2 needs `O(‖X‖)` instead of
 //! `O(‖[X⁽¹⁾…X⁽ᵏ⁾]‖)`; the [`MemoryLedger`] instrumentation here is what
 //! lets the Table 3 bench verify that claim on our substrate.
+//!
+//! # Parallel sweep support
+//!
+//! The pipeline's calibration sweep fans windows out across the global
+//! pool; each worker computes its windows' `XᵀX` products into a private
+//! [`HessianPartial`], and [`HessianAccumulator::merge`] then *replays*
+//! those per-window products in **global window-index order** through the
+//! exact running-mean update [`HessianAccumulator::add_batch`] uses. The
+//! float-op sequence applied to `H` is therefore identical to streaming
+//! the batches sequentially — byte-identical Hessians for any partition of
+//! windows into partials and any thread count. (Summing partial `XᵀX`
+//! folds per worker and adding the subtotals would NOT be: f32 addition is
+//! non-associative, so the grouping must never depend on the partition.)
 
 use crate::linalg::apply_damping;
 use crate::metrics::MemoryLedger;
@@ -17,6 +30,9 @@ pub struct HessianAccumulator {
     h: Tensor,
     /// Rows (samples·tokens) accumulated so far.
     pub nsamples: usize,
+    /// Highest window index replayed by [`Self::merge`] so far — guards the
+    /// cross-call ordering contract (merges must arrive in window order).
+    last_merged: Option<usize>,
     ledger: MemoryLedger,
 }
 
@@ -24,7 +40,7 @@ impl HessianAccumulator {
     pub fn new(in_features: usize, ledger: MemoryLedger) -> Self {
         let h = Tensor::zeros(&[in_features, in_features]);
         ledger.alloc("hessian", h.nbytes());
-        HessianAccumulator { h, nsamples: 0, ledger }
+        HessianAccumulator { h, nsamples: 0, last_merged: None, ledger }
     }
 
     /// Accumulate one calibration batch `x: [rows, in_features]`.
@@ -34,19 +50,64 @@ impl HessianAccumulator {
     /// how many batches stream through.
     pub fn add_batch(&mut self, x: &Tensor) {
         assert_eq!(x.cols(), self.h.rows(), "activation width mismatch");
-        let rows = x.rows();
+        if x.rows() == 0 {
+            return;
+        }
+        let mut xtx = Tensor::zeros(&[x.cols(), x.cols()]);
+        self.ledger.alloc("hessian_tmp", xtx.nbytes());
+        matmul_at_b_acc(x, x, &mut xtx);
+        self.add_precomputed(&xtx, x.rows());
+        self.ledger.free("hessian_tmp", xtx.nbytes());
+    }
+
+    /// The running-mean update given a precomputed `xtx = XᵀX` over `rows`
+    /// samples — the float-op core shared by [`Self::add_batch`] and
+    /// [`Self::merge`] (which is what makes the parallel sweep's merged
+    /// Hessian byte-identical to the sequential stream).
+    pub fn add_precomputed(&mut self, xtx: &Tensor, rows: usize) {
+        assert_eq!(xtx.rows(), self.h.rows(), "XᵀX width mismatch");
         if rows == 0 {
             return;
         }
         let total = self.nsamples + rows;
         // H <- H * n/(n+r)  then  H += 2/(n+r) · XᵀX
         self.h.scale(self.nsamples as f32 / total as f32);
-        let mut xtx = Tensor::zeros(&[x.cols(), x.cols()]);
-        self.ledger.alloc("hessian_tmp", xtx.nbytes());
-        matmul_at_b_acc(x, x, &mut xtx);
-        self.h.axpy(2.0 / total as f32, &xtx);
-        self.ledger.free("hessian_tmp", xtx.nbytes());
+        self.h.axpy(2.0 / total as f32, xtx);
         self.nsamples = total;
+    }
+
+    /// Merge window-indexed partial accumulators by replaying their
+    /// per-window `XᵀX` products through [`Self::add_precomputed`] in
+    /// ascending window-index order. Any partition of the windows into
+    /// partials yields a Hessian byte-identical to streaming the windows
+    /// through [`Self::add_batch`] sequentially (asserted by the
+    /// `merge_partition_*` property test).
+    ///
+    /// Successive `merge` calls must present strictly increasing window
+    /// ranges (the pipeline merges wave by wave); duplicate or
+    /// out-of-order indices panic. Each window's `hessian_partial` bytes
+    /// are freed on the ledger of the partial that charged them (the
+    /// pipeline clones one ledger everywhere, but the accounting stays
+    /// exact even for a caller mixing ledgers).
+    pub fn merge(&mut self, partials: Vec<HessianPartial>) {
+        let mut entries: Vec<(PartialEntry, MemoryLedger)> = Vec::new();
+        for mut p in partials {
+            assert_eq!(p.in_features, self.h.rows(), "partial width mismatch");
+            let led = p.ledger.clone();
+            entries.extend(p.entries.drain(..).map(|e| (e, led.clone())));
+        }
+        entries.sort_by_key(|(e, _)| e.window);
+        for pair in entries.windows(2) {
+            assert!(pair[0].0.window < pair[1].0.window, "duplicate window index");
+        }
+        for (e, led) in entries {
+            if let Some(last) = self.last_merged {
+                assert!(e.window > last, "merge calls must be window-ordered");
+            }
+            self.last_merged = Some(e.window);
+            self.add_precomputed(&e.xtx, e.rows);
+            led.free("hessian_partial", e.xtx.nbytes());
+        }
     }
 
     /// Finish: damp (Eq. 10) and hand out the Hessian. Returns `(H̃, λ)`.
@@ -68,6 +129,73 @@ impl HessianAccumulator {
 impl Drop for HessianAccumulator {
     fn drop(&mut self) {
         self.ledger.free("hessian", self.h.nbytes());
+    }
+}
+
+/// One window's contribution held by a partial accumulator.
+struct PartialEntry {
+    /// Global calibration-window index (the merge replay key).
+    window: usize,
+    /// Precomputed `XᵀX` for that window.
+    xtx: Tensor,
+    /// Sample rows in the window.
+    rows: usize,
+}
+
+/// Worker-private partial accumulator for the parallel calibration sweep.
+///
+/// A partial does the *expensive* part of [`HessianAccumulator::add_batch`]
+/// — the `XᵀX` product — on the worker thread, but defers the cheap
+/// running-mean fold to [`HessianAccumulator::merge`], which replays the
+/// products in window-index order. Deliberately NOT a running sum: folding
+/// within a partial would make the float grouping depend on how windows
+/// were partitioned across workers, breaking the bit-identity guarantee.
+///
+/// Every stored product is ledger-accounted under `hessian_partial`;
+/// merging (or dropping an unmerged partial) releases it.
+pub struct HessianPartial {
+    entries: Vec<PartialEntry>,
+    in_features: usize,
+    ledger: MemoryLedger,
+}
+
+impl HessianPartial {
+    pub fn new(in_features: usize, ledger: MemoryLedger) -> Self {
+        HessianPartial { entries: Vec::new(), in_features, ledger }
+    }
+
+    /// Record calibration window `index` (`x: [rows, in_features]`),
+    /// computing its `XᵀX` immediately (this is the worker-side compute).
+    pub fn add_window(&mut self, index: usize, x: &Tensor) {
+        assert_eq!(x.cols(), self.in_features, "activation width mismatch");
+        if x.rows() == 0 {
+            return; // matches add_batch: empty batches contribute nothing
+        }
+        let mut xtx = Tensor::zeros(&[self.in_features, self.in_features]);
+        self.ledger.alloc("hessian_partial", xtx.nbytes());
+        matmul_at_b_acc(x, x, &mut xtx);
+        self.entries.push(PartialEntry { window: index, xtx, rows: x.rows() });
+    }
+
+    pub fn in_features(&self) -> usize {
+        self.in_features
+    }
+
+    /// Number of windows recorded (not yet merged).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Drop for HessianPartial {
+    fn drop(&mut self) {
+        for e in &self.entries {
+            self.ledger.free("hessian_partial", e.xtx.nbytes());
+        }
     }
 }
 
@@ -135,8 +263,148 @@ impl SnapshotRotator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::proptest::{prop_assert, Runner};
     use crate::rng::Pcg64;
     use crate::tensor::matmul_at_b;
+
+    fn h_bits(acc: &HessianAccumulator) -> Vec<u32> {
+        acc.hessian().data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn merge_single_partial_bitwise_matches_streaming_deterministic() {
+        let mut rng = Pcg64::seeded(55);
+        let windows: Vec<Tensor> =
+            (0..5).map(|_| Tensor::randn(&[7, 6], 1.0, &mut rng)).collect();
+        let mut seq = HessianAccumulator::new(6, MemoryLedger::new());
+        for x in &windows {
+            seq.add_batch(x);
+        }
+        let ledger = MemoryLedger::new();
+        let mut p = HessianPartial::new(6, ledger.clone());
+        for (wi, x) in windows.iter().enumerate() {
+            p.add_window(wi, x);
+        }
+        assert_eq!(p.len(), 5);
+        let mut merged = HessianAccumulator::new(6, ledger.clone());
+        merged.merge(vec![p]);
+        assert_eq!(h_bits(&seq), h_bits(&merged), "H must be byte-identical");
+        assert_eq!(merged.nsamples, seq.nsamples);
+        drop(merged);
+        assert_eq!(ledger.live_bytes(), 0, "partial bytes released by merge");
+    }
+
+    #[test]
+    fn merge_partition_matches_single_accumulator_deterministic() {
+        // The parallel-sweep contract (property form): ANY partition of the
+        // windows into partial accumulators, merged in window-index order,
+        // reproduces the sequential stream exactly — bitwise — and the
+        // ledger balances to zero once the accumulators drop.
+        Runner::new("hessian_merge_partition", 16).run(|g| {
+            let in_f = 2 * g.usize_in(1..5);
+            let nw = g.usize_in(1..7);
+            let k = g.usize_in(1..4).min(nw);
+            let windows: Vec<Tensor> = (0..nw)
+                .map(|_| {
+                    let rows = g.usize_in(1..6);
+                    Tensor::from_vec(&[rows, in_f], g.matrix(rows, in_f, 1.0))
+                })
+                .collect();
+            let led_seq = MemoryLedger::new();
+            let mut seq = HessianAccumulator::new(in_f, led_seq.clone());
+            for x in &windows {
+                seq.add_batch(x);
+            }
+            let led_par = MemoryLedger::new();
+            let mut parts: Vec<HessianPartial> =
+                (0..k).map(|_| HessianPartial::new(in_f, led_par.clone())).collect();
+            for (wi, x) in windows.iter().enumerate() {
+                let owner = g.usize_in(0..k);
+                parts[owner].add_window(wi, x);
+            }
+            let mut merged = HessianAccumulator::new(in_f, led_par.clone());
+            merged.merge(parts);
+            prop_assert(h_bits(&seq) == h_bits(&merged), "H bitwise equal")?;
+            prop_assert(merged.nsamples == seq.nsamples, "nsamples equal")?;
+            prop_assert(led_par.peak_bytes() > 0, "partials were accounted")?;
+            drop(seq);
+            drop(merged);
+            prop_assert(
+                led_seq.live_bytes() == 0 && led_par.live_bytes() == 0,
+                "ledgers balance to zero after drop",
+            )
+        });
+    }
+
+    #[test]
+    fn merge_across_waves_stays_ordered_and_exact() {
+        // The pipeline merges wave by wave: successive merge calls with
+        // ascending window ranges must chain into the same running mean.
+        let mut rng = Pcg64::seeded(56);
+        let windows: Vec<Tensor> =
+            (0..6).map(|_| Tensor::randn(&[4, 4], 1.0, &mut rng)).collect();
+        let mut seq = HessianAccumulator::new(4, MemoryLedger::new());
+        for x in &windows {
+            seq.add_batch(x);
+        }
+        let ledger = MemoryLedger::new();
+        let mut merged = HessianAccumulator::new(4, ledger.clone());
+        for (ci, chunk) in windows.chunks(2).enumerate() {
+            let mut p = HessianPartial::new(4, ledger.clone());
+            for (k, x) in chunk.iter().enumerate() {
+                p.add_window(ci * 2 + k, x);
+            }
+            merged.merge(vec![p]);
+        }
+        assert_eq!(h_bits(&seq), h_bits(&merged));
+    }
+
+    #[test]
+    #[should_panic(expected = "window-ordered")]
+    fn merge_rejects_out_of_order_waves() {
+        let mut rng = Pcg64::seeded(57);
+        let x = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let ledger = MemoryLedger::new();
+        let mut acc = HessianAccumulator::new(4, ledger.clone());
+        let mut p1 = HessianPartial::new(4, ledger.clone());
+        p1.add_window(3, &x);
+        acc.merge(vec![p1]);
+        let mut p0 = HessianPartial::new(4, ledger);
+        p0.add_window(1, &x); // earlier window after a later one: refuse
+        acc.merge(vec![p0]);
+    }
+
+    #[test]
+    fn merge_frees_partial_bytes_on_their_own_ledger() {
+        // A caller may (unusually) charge partials to a different ledger
+        // than the accumulator's; the bytes must be freed where charged.
+        let mut rng = Pcg64::seeded(59);
+        let x = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        let led_a = MemoryLedger::new();
+        let led_b = MemoryLedger::new();
+        let mut p = HessianPartial::new(4, led_a.clone());
+        p.add_window(0, &x);
+        assert_eq!(led_a.live_bytes() as usize, 4 * 4 * 4);
+        let mut acc = HessianAccumulator::new(4, led_b.clone());
+        acc.merge(vec![p]);
+        assert_eq!(led_a.live_bytes(), 0, "partial bytes freed where charged");
+        drop(acc);
+        assert_eq!(led_b.live_bytes(), 0, "accumulator ledger untouched by partials");
+    }
+
+    #[test]
+    fn unmerged_partial_drop_releases_ledger() {
+        let mut rng = Pcg64::seeded(58);
+        let ledger = MemoryLedger::new();
+        let mut p = HessianPartial::new(8, ledger.clone());
+        p.add_window(0, &Tensor::randn(&[5, 8], 1.0, &mut rng));
+        p.add_window(1, &Tensor::randn(&[5, 8], 1.0, &mut rng));
+        assert!(!p.is_empty());
+        assert_eq!(ledger.live_bytes() as usize, 2 * 8 * 8 * 4);
+        drop(p);
+        assert_eq!(ledger.live_bytes(), 0);
+        assert_eq!(ledger.peak_for("hessian_partial") as usize, 2 * 8 * 8 * 4);
+    }
 
     #[test]
     fn hessian_matches_direct_computation() {

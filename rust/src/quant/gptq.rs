@@ -15,6 +15,21 @@
 //!
 //! The unidirectional, one-shot nature of this walk is exactly the
 //! inter-block error-accumulation problem the paper's stage 2 attacks.
+//!
+//! # Row-sharded inner loops
+//!
+//! The column walk is sequential *per row* by construction, but rows never
+//! interact: row `r`'s group fits, rounding, and error feedback read and
+//! write only row `r` of `W`/`qweight`/`scales`/`zeros` (the Cholesky
+//! factor `U` is shared read-only). The walk therefore shards **output
+//! rows** across the global pool — each worker runs the complete
+//! multi-block walk over its own disjoint row chunk via the same
+//! [`gptq_walk_rows`] kernel the sequential path uses, so results are
+//! bit-identical at any thread count. Problems under the matmul flop
+//! cutoff (`tensor::shard_count`, with `flops ≈ out·in²` for the feedback
+//! updates) stay on the calling thread. `greedy_loss` is accumulated per
+//! row and folded in ascending row order after the join, making it
+//! thread-count-invariant too.
 
 use super::grid::{QuantGrid, QuantizedLinear};
 use super::QuantConfig;
@@ -48,7 +63,6 @@ pub fn gptq_quantize(
     assert_eq!(h.rows(), in_f);
     assert_eq!(h.cols(), in_f);
     let grid = QuantGrid::new(cfg.bits, cfg.group_size);
-    let gs = cfg.group_size;
 
     // Working copies: W is mutated by error feedback; H may need dead-column
     // fixes before factorization.
@@ -64,55 +78,128 @@ pub fn gptq_quantize(
 
     let mut q = QuantizedLinear::empty(grid, out_f, in_f);
     let ng = q.n_groups();
-    let mut greedy_loss = 0.0f64;
-
-    // Per-block error buffer for the lazy trailing update.
     let bs = cfg.block_size;
-    let mut err_block = vec![0.0f32; out_f * bs];
-    ledger.alloc("gptq_errblock", err_block.len() * 4);
 
-    let mut c0 = 0;
-    while c0 < in_f {
-        let c1 = (c0 + bs).min(in_f);
-        let bw = c1 - c0;
-        err_block[..out_f * bw].fill(0.0);
+    // Rows are independent (see module docs): shard the complete walk
+    // across output rows on the pool, with the matmul flop heuristic
+    // deciding when forking is worth it (feedback work ≈ out·in² MACs).
+    let shards = crate::tensor::shard_count(out_f, out_f * in_f * in_f);
+    // Per-shard error buffer for the lazy trailing update.
+    ledger.alloc("gptq_errblock", shards * bs * 4);
+    // Per-row Σ err² subtotals, folded in row order after the join so the
+    // greedy objective is identical at any shard count.
+    let mut row_loss = vec![0.0f64; out_f];
+    ledger.alloc("gptq_rowloss", out_f * 8);
 
-        for j in c0..c1 {
-            // (a) group entry: fit params on the *current* weights.
-            if j % gs == 0 {
-                let g = j / gs;
-                let gend = (j + gs).min(in_f);
-                for r in 0..out_f {
-                    let (scale, zero) = grid.find_params(&w.row(r)[j..gend]);
-                    q.scales[r * ng + g] = scale;
-                    q.zeros[r * ng + g] = zero;
-                }
+    if shards <= 1 {
+        gptq_walk_rows(
+            w.data_mut(),
+            &mut q.qweight,
+            &mut q.scales,
+            &mut q.zeros,
+            &mut row_loss,
+            &u,
+            grid,
+            bs,
+        );
+    } else {
+        let rows_per = out_f.div_ceil(shards);
+        let u_ref = &u[..];
+        let w_chunks = w.data_mut().chunks_mut(rows_per * in_f);
+        let q_chunks = q.qweight.chunks_mut(rows_per * in_f);
+        let s_chunks = q.scales.chunks_mut(rows_per * ng);
+        let z_chunks = q.zeros.chunks_mut(rows_per * ng);
+        let l_chunks = row_loss.chunks_mut(rows_per);
+        crate::exec::global().scope(|s| {
+            for ((((wc, qc), sc), zc), lc) in
+                w_chunks.zip(q_chunks).zip(s_chunks).zip(z_chunks).zip(l_chunks)
+            {
+                s.spawn(move || gptq_walk_rows(wc, qc, sc, zc, lc, u_ref, grid, bs));
             }
-            let d = u[j * in_f + j] as f32;
-            // (b) quantize column j and compute the scaled error.
-            for r in 0..out_f {
-                let wv = w.at(r, j);
-                let qv = grid.quantize_val(wv, q.scale_at(r, j), q.zero_at(r, j));
-                q.qweight[r * in_f + j] = qv;
-                let dq = grid.dequantize_val(qv, q.scale_at(r, j), q.zero_at(r, j));
+        });
+    }
+    let greedy_loss: f64 = row_loss.iter().sum();
+
+    ledger.free("gptq_rowloss", out_f * 8);
+    ledger.free("gptq_errblock", shards * bs * 4);
+    ledger.free("gptq_hinv", in_f * in_f * 8);
+    ledger.free("gptq_work", w.nbytes() + hh.nbytes());
+
+    Ok(GptqOutput { q, greedy_loss, dead_channels })
+}
+
+/// The complete GPTQ walk over a contiguous chunk of output rows — the
+/// one kernel both the sequential and the row-sharded dispatch run, so
+/// shard boundaries cannot change a single float operation:
+///
+/// * `w` — `rows×in_f` working weights (mutated by error feedback);
+/// * `qw`/`scales`/`zeros` — this chunk's slices of the output linear;
+/// * `row_loss` — per-row `Σ err²` subtotals (`rows` entries);
+/// * `u` — the full upper Cholesky factor of `H⁻¹` (shared, read-only);
+/// * `bs` — the lazy-update block width (`in_f`, `ng`, and the group size
+///   are derived from the chunk shape and `grid`).
+#[allow(clippy::too_many_arguments)]
+fn gptq_walk_rows(
+    w: &mut [f32],
+    qw: &mut [u8],
+    scales: &mut [f32],
+    zeros: &mut [f32],
+    row_loss: &mut [f64],
+    u: &[f64],
+    grid: QuantGrid,
+    bs: usize,
+) {
+    let rows = row_loss.len();
+    if rows == 0 {
+        return; // zero-row chunk (e.g. an empty weight matrix): nothing to walk
+    }
+    let in_f = w.len() / rows;
+    let ng = grid.n_groups(in_f);
+    let gs = grid.group_size;
+    debug_assert_eq!(w.len(), rows * in_f);
+    debug_assert_eq!(qw.len(), rows * in_f);
+    debug_assert_eq!(scales.len(), rows * ng);
+    let mut err_block = vec![0.0f32; bs];
+    for r in 0..rows {
+        let wrow = &mut w[r * in_f..(r + 1) * in_f];
+        let qrow = &mut qw[r * in_f..(r + 1) * in_f];
+        let mut loss = 0.0f64;
+        let mut c0 = 0;
+        while c0 < in_f {
+            let c1 = (c0 + bs).min(in_f);
+            err_block[..c1 - c0].fill(0.0);
+
+            for j in c0..c1 {
+                // (a) group entry: fit params on the *current* weights.
+                if j % gs == 0 {
+                    let g = j / gs;
+                    let gend = (j + gs).min(in_f);
+                    let (scale, zero) = grid.find_params(&wrow[j..gend]);
+                    scales[r * ng + g] = scale;
+                    zeros[r * ng + g] = zero;
+                }
+                let d = u[j * in_f + j] as f32;
+                let scale = scales[r * ng + j / gs];
+                let zero = zeros[r * ng + j / gs];
+                // (b) quantize column j and compute the scaled error.
+                let wv = wrow[j];
+                let qv = grid.quantize_val(wv, scale, zero);
+                qrow[j] = qv;
+                let dq = grid.dequantize_val(qv, scale, zero);
                 let err = (wv - dq) / d;
-                greedy_loss += (err as f64) * (err as f64);
-                err_block[r * bs + (j - c0)] = err;
+                loss += (err as f64) * (err as f64);
+                err_block[j - c0] = err;
                 // (c) immediate feedback within the block.
                 let urow = &u[j * in_f..(j + 1) * in_f];
-                let wrow = w.row_mut(r);
                 for k in j + 1..c1 {
                     wrow[k] -= err * urow[k] as f32;
                 }
             }
-        }
 
-        // (c') lazy trailing update: W[:, c1:] -= Err · U[c0:c1, c1:].
-        if c1 < in_f {
-            for r in 0..out_f {
-                let wrow = w.row_mut(r);
+            // (c') lazy trailing update: W[r, c1:] -= err · U[c0:c1, c1:].
+            if c1 < in_f {
                 for (jj, j) in (c0..c1).enumerate() {
-                    let err = err_block[r * bs + jj];
+                    let err = err_block[jj];
                     if err != 0.0 {
                         let urow = &u[j * in_f..(j + 1) * in_f];
                         for k in c1..in_f {
@@ -121,15 +208,10 @@ pub fn gptq_quantize(
                     }
                 }
             }
+            c0 = c1;
         }
-        c0 = c1;
+        row_loss[r] = loss;
     }
-
-    ledger.free("gptq_errblock", err_block.len() * 4);
-    ledger.free("gptq_hinv", in_f * in_f * 8);
-    ledger.free("gptq_work", w.nbytes() + hh.nbytes());
-
-    Ok(GptqOutput { q, greedy_loss, dead_channels })
 }
 
 /// Reconstruction loss `‖X·Wᵀ − X·Ŵᵀ‖²` of a quantized matrix on given
@@ -214,6 +296,34 @@ mod tests {
         for r in 0..4 {
             assert_eq!(out.q.deq_at(r, 3), 0.0, "row {r}");
         }
+    }
+
+    #[test]
+    fn row_shards_deterministic_across_thread_counts() {
+        // out·in² = 16·128² = 2¹⁸ sits exactly at the flop cutoff, so the
+        // sharded dispatch genuinely forks; every output (and the greedy
+        // objective) must match the pinned single-thread walk bit for bit.
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        let (_, w, h) = setup(16, 128, 160, 66);
+        let cfg = QuantConfig { bits: 4, group_size: 16, block_size: 16, percdamp: 0.01 };
+        crate::exec::set_threads(1);
+        let seq = gptq_quantize(&w, &h, cfg, &MemoryLedger::new()).unwrap();
+        for threads in [2usize, 4, 8] {
+            crate::exec::set_threads(threads);
+            let ledger = MemoryLedger::new();
+            let par = gptq_quantize(&w, &h, cfg, &ledger).unwrap();
+            assert_eq!(seq.q.qweight, par.q.qweight, "qweight @ {threads} threads");
+            assert_eq!(seq.q.scales, par.q.scales, "scales @ {threads} threads");
+            assert_eq!(seq.q.zeros, par.q.zeros, "zeros @ {threads} threads");
+            assert_eq!(
+                seq.greedy_loss.to_bits(),
+                par.greedy_loss.to_bits(),
+                "greedy loss @ {threads} threads"
+            );
+            assert_eq!(ledger.live_bytes(), 0);
+        }
+        crate::exec::set_threads(before);
     }
 
     #[test]

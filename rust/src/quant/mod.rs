@@ -18,7 +18,7 @@ pub mod grid;
 pub mod gptq;
 pub mod rpiq;
 
-pub use calib::{HessianAccumulator, SingleInstance};
+pub use calib::{HessianAccumulator, HessianPartial, SingleInstance};
 pub use cmdq::{CmdqPolicy, Modality};
 pub use grid::{QuantGrid, QuantizedLinear};
 pub use gptq::{gptq_quantize, GptqOutput};

@@ -36,9 +36,20 @@
 //!    instance (`X_iᵀX_i + λI`), which is the scale-consistent reading of
 //!    the equation; the "extract from global H̃" reading is kept as the
 //!    [`Curvature::GlobalHessian`] ablation arm.
+//!
+//! # Pool-aware refinement
+//!
+//! The Gauss–Seidel sweep itself is sequential over blocks (block `i+1`
+//! must see block `i`'s refreshed contribution), but everything inside a
+//! block parallelizes on the global pool: the per-block curvature
+//! precompute fans out across blocks before the sweep starts, the
+//! least-squares matmuls row-shard like every other matmul, and the grid
+//! projector shards *output rows* (rows are independent within an
+//! iteration — see [`project_block_feedback`]). All of it is bit-identical
+//! at any thread count (`refine_deterministic_across_thread_counts`).
 
 use super::calib::SingleInstance;
-use super::grid::QuantizedLinear;
+use super::grid::{QuantGrid, QuantizedLinear};
 use crate::linalg::spd_inverse;
 use crate::metrics::MemoryLedger;
 use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Tensor};
@@ -149,30 +160,43 @@ pub fn rpiq_refine(
     let m = blocks.len();
 
     // ---- Precompute per-block slices and inverse curvature (Eq. 12-13) ----
+    // Blocks are independent here, so the slice + damp + invert work fans
+    // out across the pool; map() joins in block order, so the precomputed
+    // state (and any inversion error) is identical at any thread count.
     let n_inst = inst.x.rows();
+    let jobs: Vec<_> = blocks
+        .iter()
+        .map(|&(c0, c1)| {
+            move || -> anyhow::Result<(Tensor, Tensor, Vec<f64>)> {
+                let xi = inst.x.slice_cols(c0, c1);
+                let mut hi = match params.curvature {
+                    // Eq. 13: block curvature from the instance itself.
+                    Curvature::Instance => matmul_at_b(&xi, &xi),
+                    // Global Hessian block, rescaled into instance units:
+                    // the accumulator stores the running mean (2/n)·ΣXᵀX,
+                    // and under a stationary calibration distribution
+                    // ΣXᵀX ≈ (n/n_inst)·X_iᵀX_i, so (n_inst/2)·H_block ≈
+                    // X_iᵀX_i.
+                    Curvature::GlobalHessian => {
+                        let mut hb = slice_square(h, c0, c1);
+                        hb.scale(n_inst as f32 / 2.0);
+                        hb
+                    }
+                };
+                crate::linalg::apply_damping(&mut hi, params.percdamp);
+                // Upper Cholesky factor of the block's H_i⁻¹ drives the
+                // error-feedback projector (clarification 2, module docs).
+                let (hinv, u) = invert_with_retry(hi)?;
+                Ok((xi, hinv, u))
+            }
+        })
+        .collect();
     let mut x_blocks: Vec<Tensor> = Vec::with_capacity(m);
     let mut hinv_blocks: Vec<Tensor> = Vec::with_capacity(m);
-    // Upper Cholesky factors of each block's H_i⁻¹, driving the
-    // error-feedback projector (clarification 2 in the module docs).
     let mut u_blocks: Vec<Vec<f64>> = Vec::with_capacity(m);
     let mut precomp_bytes = 0usize;
-    for &(c0, c1) in &blocks {
-        let xi = inst.x.slice_cols(c0, c1);
-        let mut hi = match params.curvature {
-            // Eq. 13: block curvature from the instance itself.
-            Curvature::Instance => matmul_at_b(&xi, &xi),
-            // Global Hessian block, rescaled into instance units: the
-            // accumulator stores the running mean (2/n)·ΣXᵀX, and under a
-            // stationary calibration distribution ΣXᵀX ≈ (n/n_inst)·X_iᵀX_i,
-            // so (n_inst/2)·H_block ≈ X_iᵀX_i.
-            Curvature::GlobalHessian => {
-                let mut hb = slice_square(h, c0, c1);
-                hb.scale(n_inst as f32 / 2.0);
-                hb
-            }
-        };
-        crate::linalg::apply_damping(&mut hi, params.percdamp);
-        let (hinv, u) = invert_with_retry(hi)?;
+    for res in crate::exec::global().map(jobs) {
+        let (xi, hinv, u) = res?;
         precomp_bytes += xi.nbytes() + hinv.nbytes() + u.len() * 8;
         x_blocks.push(xi);
         hinv_blocks.push(hinv);
@@ -222,7 +246,7 @@ pub fn rpiq_refine(
             for (dst, new) in bc_i.data_mut().iter_mut().zip(bstar.data().iter()) {
                 *dst += params.alpha * (*new - *dst);
             }
-            project_block_feedback(&mut q_cur, c0, c1, bc_i, &u_blocks[i]);
+            project_block_feedback(&mut q_cur, c0, c1, bc_i, &u_blocks[i], ledger);
             // Update Y_q incrementally (Eq. 21-22) so block i+1 sees the
             // refreshed contribution within this sweep (Gauss-Seidel).
             let b_new_proj = q_cur.deq_cols(c0, c1);
@@ -267,30 +291,95 @@ pub fn rpiq_refine(
 /// block is not mutated; an idempotence property holds: projecting an
 /// already-on-grid block is the identity (zero rounding error ⇒ zero
 /// feedback).
+///
+/// Rows are independent within the Gauss–Seidel residual-feedback sweep
+/// (each row's walk reads only its own work row and (scale, zero)), so the
+/// projector shards output rows across the pool — the same
+/// [`project_rows`] kernel either way, behind the matmul flop cutoff — and
+/// scatters the rounded levels into `q` after the join. Bit-identical at
+/// any thread count.
 fn project_block_feedback(
     q: &mut QuantizedLinear,
     c0: usize,
     c1: usize,
     block: &Tensor,
     u: &[f64],
+    ledger: &MemoryLedger,
 ) {
     let bc = c1 - c0;
     debug_assert_eq!(block.cols(), bc);
     debug_assert_eq!(u.len(), bc * bc);
     let out_f = block.rows();
+    let grid = q.grid;
     let mut work = block.clone();
-    for j in 0..bc {
-        let d = u[j * bc + j] as f32;
-        for r in 0..out_f {
-            let c = c0 + j;
-            let wv = work.at(r, j);
-            let qv = q.grid.quantize_val(wv, q.scale_at(r, c), q.zero_at(r, c));
-            q.qweight[r * q.in_features + c] = qv;
-            let dq = q.grid.dequantize_val(qv, q.scale_at(r, c), q.zero_at(r, c));
+    let mut levels = vec![0u8; out_f * bc];
+    // Projector working set: the mutable copy of the block plus the level
+    // buffer the kernels write (scattered into `q` after the join).
+    let scratch_bytes = work.nbytes() + levels.len();
+    ledger.alloc("rpiq_project", scratch_bytes);
+    // Feedback work ≈ out·bc² MACs; small blocks stay on the caller.
+    let shards = crate::tensor::shard_count(out_f, out_f * bc * bc);
+    if shards <= 1 {
+        let params = (&q.scales[..], &q.zeros[..], q.n_groups());
+        project_rows(work.data_mut(), &mut levels, 0, c0, bc, u, grid, params);
+    } else {
+        let rows_per = out_f.div_ceil(shards);
+        let params = (&q.scales[..], &q.zeros[..], q.n_groups());
+        let w_chunks = work.data_mut().chunks_mut(rows_per * bc);
+        let l_chunks = levels.chunks_mut(rows_per * bc);
+        crate::exec::global().scope(|s| {
+            for (si, (wc, lc)) in w_chunks.zip(l_chunks).enumerate() {
+                let r0 = si * rows_per;
+                s.spawn(move || project_rows(wc, lc, r0, c0, bc, u, grid, params));
+            }
+        });
+    }
+    // Scatter the rounded levels into the deployment matrix (columns are a
+    // strided window of each qweight row, so the kernels write a compact
+    // per-block buffer instead).
+    for r in 0..out_f {
+        let base = r * q.in_features;
+        q.qweight[base + c0..base + c1].copy_from_slice(&levels[r * bc..(r + 1) * bc]);
+    }
+    ledger.free("rpiq_project", scratch_bytes);
+}
+
+/// The projector walk over a contiguous chunk of output rows (rows
+/// `[r0, r0 + chunk)` of the block): round each column with the stage-1
+/// (scale, zero), feed the scaled rounding error forward through `U`, and
+/// record the integer levels. One kernel for both the sequential and the
+/// sharded dispatch — shard boundaries cannot change a float operation.
+/// `params` bundles the full (scales, zeros, n_groups) of the linear being
+/// projected (indexed with the absolute row `r0 + r`).
+#[allow(clippy::too_many_arguments)]
+fn project_rows(
+    work: &mut [f32],
+    levels: &mut [u8],
+    r0: usize,
+    c0: usize,
+    bc: usize,
+    u: &[f64],
+    grid: QuantGrid,
+    params: (&[f32], &[f32], usize),
+) {
+    let (scales, zeros, ng) = params;
+    let gs = grid.group_size;
+    let rows = levels.len() / bc;
+    for r in 0..rows {
+        let wrow = &mut work[r * bc..(r + 1) * bc];
+        let lrow = &mut levels[r * bc..(r + 1) * bc];
+        for j in 0..bc {
+            let g = (c0 + j) / gs;
+            let scale = scales[(r0 + r) * ng + g];
+            let zero = zeros[(r0 + r) * ng + g];
+            let d = u[j * bc + j] as f32;
+            let wv = wrow[j];
+            let qv = grid.quantize_val(wv, scale, zero);
+            lrow[j] = qv;
+            let dq = grid.dequantize_val(qv, scale, zero);
             let err = (wv - dq) / d;
             if err != 0.0 {
                 let urow = &u[j * bc..(j + 1) * bc];
-                let wrow = work.row_mut(r);
                 for k in j + 1..bc {
                     wrow[k] -= err * urow[k] as f32;
                 }
@@ -504,6 +593,35 @@ mod tests {
         // does not refit scales)
         assert_eq!(out.q.scales, f.q1.scales);
         assert_eq!(out.q.zeros, f.q1.zeros);
+    }
+
+    #[test]
+    fn refine_deterministic_across_thread_counts() {
+        // out·bc² = 64·64² = 2¹⁸ reaches the flop cutoff, so the projector
+        // genuinely row-shards; the refined weights, Γ trace, and stopping
+        // behaviour must match the pinned single-thread run bit for bit.
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        let f = fixture(64, 128, 160, 64, 97);
+        crate::exec::set_threads(1);
+        let seq = rpiq_refine(&f.q1, &f.inst, &f.h, RpiqParams::default(), &MemoryLedger::new())
+            .unwrap();
+        let bits = |t: &[f64]| t.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for threads in [2usize, 4, 8] {
+            crate::exec::set_threads(threads);
+            let ledger = MemoryLedger::new();
+            let par = rpiq_refine(&f.q1, &f.inst, &f.h, RpiqParams::default(), &ledger).unwrap();
+            assert_eq!(seq.q.qweight, par.q.qweight, "qweight @ {threads} threads");
+            assert_eq!(
+                bits(&seq.loss_trace),
+                bits(&par.loss_trace),
+                "Γ trace @ {threads} threads"
+            );
+            assert_eq!(seq.iters_run, par.iters_run);
+            assert_eq!(seq.early_stopped, par.early_stopped);
+            assert_eq!(ledger.live_bytes(), 0);
+        }
+        crate::exec::set_threads(before);
     }
 
     #[test]

@@ -3,14 +3,18 @@
 //! client. This is the bridge between Layer 3 (this crate) and Layers 1–2
 //! (JAX + Pallas, build-time only).
 //!
-//! The actual PJRT execution path needs the (vendored, not-on-crates.io)
-//! `xla` bindings and is therefore gated behind the `pjrt` cargo feature.
-//! The default build ships a **stub [`Engine`]** with the same API: it
-//! still loads and validates `manifest.json` (so `rpiq artifacts` can lint
-//! a bundle) but `run` fails with a clear error. Everything that consumes
-//! artifacts (`rust/tests/artifacts.rs`, the `micro` bench, the
-//! `e2e_assist` example) already skips when `artifacts/` is absent, so the
-//! stub never changes test outcomes on a clean checkout.
+//! The actual PJRT execution path needs the (not-on-crates.io) `xla`
+//! bindings and is therefore gated behind the `pjrt` cargo feature, which
+//! builds against the vendored `rust/vendor/xla` crate — a **stub** of the
+//! real bindings with the same API surface, so `--features pjrt` compiles
+//! and lints in CI (the `pjrt-stub` job) and fails loudly at `execute`
+//! until the real bindings replace it. The default (featureless) build
+//! ships a **stub [`Engine`]** with the same API: it still loads and
+//! validates `manifest.json` (so `rpiq artifacts` can lint a bundle) but
+//! `run` fails with a clear error. Everything that consumes artifacts
+//! (`rust/tests/artifacts.rs`, the `micro` bench, the `e2e_assist`
+//! example) already skips when `artifacts/` is absent, so neither stub
+//! changes test outcomes on a clean checkout.
 //!
 //! With `--features pjrt`, wiring follows `/opt/xla-example/load_hlo`:
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →

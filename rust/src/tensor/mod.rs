@@ -11,6 +11,10 @@ mod matmul;
 
 pub use matmul::{matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_acc, matmul_into};
 pub(crate) use matmul::par_rows;
+// The quantization engines reuse the matmul dispatch heuristic (flop
+// cutoff + row cap) to decide when their row-sharded inner loops are
+// worth forking onto the pool.
+pub(crate) use matmul::shard_count;
 
 /// A dense, contiguous, row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,301 @@
+//! Stub PJRT/XLA bindings.
+//!
+//! This crate mirrors the API surface of the vendored `xla` bindings that
+//! `rpiq`'s `runtime` module uses with `--features pjrt`:
+//!
+//! * [`PjRtClient::cpu`] / [`PjRtClient::compile`] / `platform_name`
+//! * [`HloModuleProto::from_text_file`] / [`XlaComputation::from_proto`]
+//! * [`Literal::vec1`] / `reshape` / `to_vec` / `to_tuple`
+//! * [`PjRtLoadedExecutable::execute`] / [`PjRtBuffer::to_literal_sync`]
+//!
+//! Everything up to execution is implemented honestly: literals carry
+//! typed, shaped data and validate element counts; `from_text_file`
+//! requires a readable HLO *text* module. [`PjRtLoadedExecutable::execute`]
+//! returns an error — executing artifacts needs the real PJRT runtime.
+//! The point of the stub is that the `pjrt` feature *compiles, lints, and
+//! fails loudly at the right moment* instead of being unbuildable.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (std-compatible so `anyhow::Context` applies).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the stub literal supports (the artifact boundary only
+/// uses f32/i32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Sealed-by-convention conversion trait for literal element types.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_f64(self) -> f64;
+    fn from_f64(v: f64) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as i32
+    }
+}
+
+/// A typed, shaped host literal. Tuples are modelled as a vector of
+/// element literals (matching how the runtime unpacks tupled outputs).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    /// Element storage, widened to f64 (exact for f32 and i32).
+    data: Vec<f64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            ty: T::TY,
+            dims: vec![v.len() as i64],
+            data: v.iter().map(|x| x.to_f64()).collect(),
+            tuple: None,
+        }
+    }
+
+    /// Reshape to `dims`; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape to {:?} ({} elements) from {} elements",
+                dims,
+                n,
+                self.data.len()
+            )));
+        }
+        let mut out = self.clone();
+        out.dims = dims.to_vec();
+        Ok(out)
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a typed vector; the element type must match.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::new(format!(
+                "to_vec element type mismatch: literal is {:?}",
+                self.ty
+            )));
+        }
+        Ok(self.data.iter().map(|&v| T::from_f64(v)).collect())
+    }
+
+    /// Unpack a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.tuple {
+            Some(parts) => Ok(parts),
+            None => Ok(vec![self]),
+        }
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// A parsed HLO module (text form). The stub validates that the file is
+/// readable and looks like HLO text; it does not build a real graph.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    name: String,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO **text** file (the artifact format `python/compile`
+    /// emits). Fails on unreadable files or non-HLO content.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(Path::new(path))
+            .map_err(|e| Error::new(format!("read {path}: {e}")))?;
+        let first = text.lines().find(|l| !l.trim().is_empty()).unwrap_or("");
+        if !first.trim_start().starts_with("HloModule") {
+            return Err(Error::new(format!(
+                "{path} does not look like HLO text (expected leading 'HloModule')"
+            )));
+        }
+        let name = first
+            .trim_start()
+            .trim_start_matches("HloModule")
+            .trim()
+            .split([',', ' '])
+            .next()
+            .unwrap_or("unnamed")
+            .to_string();
+        Ok(HloModuleProto { name })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+
+    pub fn name(&self) -> &str {
+        self.module.name()
+    }
+}
+
+/// Stub PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: String,
+}
+
+impl PjRtClient {
+    /// The CPU client (always constructible in the stub).
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "stub-cpu (vendored xla stub; cannot execute)".to_string() })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.clone()
+    }
+
+    /// "Compile" a computation. The stub accepts any parsed module so the
+    /// caller's compile-and-cache path is exercised; execution is where
+    /// the stub draws the line.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { name: comp.name().to_string() })
+    }
+}
+
+/// A device buffer handle returned by `execute` (never actually produced
+/// by the stub — `execute` fails first).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A loaded executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    name: String,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execution requires the real PJRT runtime; the stub fails loudly.
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(format!(
+            "cannot execute '{}': this is the vendored stub of the xla \
+             bindings (replace rust/vendor/xla with the real PJRT bindings \
+             to run artifacts)",
+            self.name
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_type(), ElementType::F32);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        let i = Literal::vec1(&[1i32, 2, 3]);
+        assert_eq!(i.element_type(), ElementType::S32);
+        assert!(i.to_vec::<f32>().is_err(), "type mismatch caught");
+    }
+
+    #[test]
+    fn hlo_text_parsing_validates() {
+        let dir = std::env::temp_dir().join(format!("xla_stub_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.hlo.txt");
+        std::fs::write(&good, "HloModule add_fn\nENTRY main { ... }\n").unwrap();
+        let m = HloModuleProto::from_text_file(good.to_str().unwrap()).unwrap();
+        assert_eq!(m.name(), "add_fn");
+        let bad = dir.join("bad.hlo.txt");
+        std::fs::write(&bad, "not hlo at all").unwrap();
+        assert!(HloModuleProto::from_text_file(bad.to_str().unwrap()).is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compile_succeeds_execute_fails_loudly() {
+        let dir = std::env::temp_dir().join(format!("xla_stub_exec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("f.hlo.txt");
+        std::fs::write(&f, "HloModule f\n").unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let proto = HloModuleProto::from_text_file(f.to_str().unwrap()).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).unwrap();
+        let err = exe.execute(&[Literal::vec1(&[1.0f32])]).unwrap_err();
+        assert!(err.to_string().contains("vendored stub"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
