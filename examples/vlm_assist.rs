@@ -9,7 +9,7 @@
 use rpiq::coordinator::experiments as exp;
 use rpiq::coordinator::{quantize_vlm, Method};
 use rpiq::quant::CmdqPolicy;
-use rpiq::vlm::io::{load_vlm, save_vlm};
+use rpiq::vlm::io::{load_qvlm, load_vlm, save_qvlm, save_vlm};
 use rpiq::vlm::VlmConfig;
 use std::path::Path;
 
@@ -45,20 +45,47 @@ fn main() -> anyhow::Result<()> {
         policy.language.bits, policy.language.group_size
     );
     let out = quantize_vlm(&w, &samples, &policy, Method::Rpiq(policy.rpiq))?;
+    let mib = |b: usize| b as f64 / (1 << 20) as f64;
     println!(
-        "deployed {:.2} MiB (fp32 {:.2} MiB); quantization peak {:.2} MiB, {:.1}s",
-        out.model.deploy_bytes() as f64 / (1 << 20) as f64,
-        (w.n_params() * 4) as f64 / (1 << 20) as f64,
+        "quantization peak {:.2} MiB, {:.1}s",
         out.ledger.peak_mib(),
         out.timers.total()
     );
+
+    // The paper's memory claim, end to end: write the nibble-packed
+    // deployment container and cold-start from it — the `rpiq serve
+    // --qckpt` path — so nothing fp32-linear is ever resident again.
+    let qckpt = ckpt.with_extension("rpiq");
+    save_qvlm(&out.model, &qckpt)?;
+    let model = load_qvlm(&qckpt)?;
+    println!(
+        "deployed resident {:.2} MiB vs fp32 {:.2} MiB ({:.1}%), cold-started from {}",
+        mib(model.deploy_bytes()),
+        mib(w.config.fp32_bytes()),
+        100.0 * model.deploy_bytes() as f64 / w.config.fp32_bytes() as f64,
+        qckpt.display()
+    );
+    {
+        // loaded model must answer bit-identically to the freshly
+        // quantized one
+        let (p0, q0) = &samples[0];
+        let a = out.model.forward(p0, q0, 1);
+        let b = model.forward(p0, q0, 1);
+        assert_eq!(a.data(), b.data(), "qckpt round-trip must be bit-identical");
+    }
+    drop(out); // the freshly quantized copy is no longer needed
+    // ... and neither are the fp32 weights: from here on the process holds
+    // only the cold-started nibble-resident model (the claim the example
+    // demonstrates). Keep just the config for the baseline prints.
+    let fp_cfg = w.config.clone();
+    drop(w);
 
     // Interactive-style session over a few covers.
     println!("\n-- assistive session --");
     for e in world.vqa.test.iter().step_by(31).take(6) {
         let q_ids = tok.encode(&e.question);
-        let logits = out.model.forward(&e.cover.patches, &q_ids, 1);
-        let last = logits.row(w.config.n_patches + q_ids.len() - 1);
+        let logits = model.forward(&e.cover.patches, &q_ids, 1);
+        let last = logits.row(fp_cfg.n_patches + q_ids.len() - 1);
         let pred = (0..last.len())
             .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
             .unwrap() as u32;
@@ -73,21 +100,25 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Overall quality.
-    let rep = exp::eval_vlm_q(&out.model, &world);
+    let rep = exp::eval_vlm_q(&model, &world);
     println!("\nOCR-VQA exact match: overall {:.2}%", rep.overall_pct);
     for (c, a) in &rep.per_category {
         println!("  {c:12} {a:.2}%");
     }
 
-    // Serve the same model as a batched VQA lane: concurrent askers get
-    // dynamic batching through the multi-lane engine instead of one
-    // forward per question.
+    // Serve the cold-started model as a batched VQA lane: concurrent
+    // askers get dynamic batching through the multi-lane engine instead
+    // of one forward per question, with the model's resident bytes and
+    // the lane's transient activations tracked on the server ledger.
     println!("\n-- served VQA replay (2 lanes, 4 clients) --");
+    let model = std::sync::Arc::new(model);
     let server = rpiq::coordinator::Server::start_vqa(
-        std::sync::Arc::new(out.model),
+        std::sync::Arc::clone(&model),
         &tok,
         rpiq::coordinator::ServeConfig { lanes: 2, ..Default::default() },
     );
+    model.register_resident(server.ledger());
+    let ledger = server.ledger().clone();
     let tput = rpiq::coordinator::replay_mixed(&server, world.replay_items("vqa", 120), 4);
     let stats = server.shutdown();
     println!(
@@ -97,6 +128,13 @@ fn main() -> anyhow::Result<()> {
         stats.mean_ms(),
         stats.percentile_ms(50.0),
         stats.percentile_ms(95.0)
+    );
+    println!(
+        "serving peak {:.2} MiB (model resident {:.2} MiB, vqa activation peak {:.2} MiB) vs fp32 {:.2} MiB",
+        ledger.peak_mib(),
+        ledger.peak_for(rpiq::model::RESIDENT_TAG) as f64 / (1 << 20) as f64,
+        ledger.peak_for("activations.vqa") as f64 / (1 << 20) as f64,
+        mib(fp_cfg.fp32_bytes())
     );
     println!("vlm_assist OK");
     Ok(())

@@ -1,0 +1,110 @@
+//! Deployment-footprint gate: quantize the bench-scale LM, run an eval
+//! with the deployed model registered on a ledger, and FAIL (non-zero
+//! exit) if the resident bytes exceed 45% of the fp32 baseline — the
+//! enforcement arm of the paper's 60–75% peak-memory-reduction claim
+//! (Tables 3–4), run by the CI `footprint` job.
+//!
+//! Output is one JSON line per arm (uploaded as a CI artifact beside the
+//! serve/quantize sweeps), followed by a human summary:
+//!
+//! ```bash
+//! cargo bench --bench footprint
+//! ```
+
+use rpiq::coordinator::{quantize_lm, Method};
+use rpiq::data::WikiCorpus;
+use rpiq::eval::perplexity;
+use rpiq::jsonx::Json;
+use rpiq::metrics::MemoryLedger;
+use rpiq::model::{Activation, LmWeights, ModelConfig, RESIDENT_TAG};
+use rpiq::quant::{QuantConfig, RpiqParams};
+use rpiq::rng::Pcg64;
+
+/// The acceptance bar: resident bytes of the deployed model must be at
+/// most this fraction of the fp32 weights.
+const MAX_RESIDENT_FRAC: f64 = 0.45;
+
+fn main() -> anyhow::Result<()> {
+    let corpus = WikiCorpus::generate(41, 12_000, 800);
+    let vocab = corpus.tokenizer.vocab_size();
+    // The same bench-scale shapes the quantize sweep uses — the
+    // linear-dominated class the paper's memory tables live in.
+    let arms: &[(&str, usize, usize, usize, usize)] = &[
+        ("lm-small", 64, 2, 192, 48),
+        ("lm-wide", 128, 4, 384, 64),
+    ];
+    let mut failures = Vec::new();
+    for &(label, d_model, n_layers, d_ff, seq) in arms {
+        let cfg = ModelConfig {
+            name: format!("footprint-{label}"),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads: 4,
+            d_ff,
+            seq_len: seq,
+            activation: Activation::Gelu,
+            tied_head: false,
+        };
+        let mut rng = Pcg64::seeded(8101);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let fp_bytes: usize = w.named_tensors().iter().map(|(_, t)| t.nbytes()).sum();
+        let windows = corpus.calibration(5, 8, seq);
+        let qcfg = QuantConfig { bits: 4, group_size: 32, block_size: 32, percdamp: 0.01 };
+        let out = quantize_lm(&w, &windows, qcfg, Method::Rpiq(RpiqParams::default()))?;
+        assert_eq!(out.ledger.live_bytes(), 0, "quantization ledger must balance");
+
+        // Serve-shaped accounting: register the deployed model, then run
+        // the eval with its transient logits booked per window.
+        let ledger = MemoryLedger::new();
+        out.model.register_resident(&ledger);
+        let eval_windows: Vec<Vec<u32>> =
+            corpus.eval_windows(seq).into_iter().take(6).collect();
+        let model = &out.model;
+        let ppl = perplexity(
+            &|t: &[u32], b: usize, s: usize| {
+                ledger.scoped("activations.eval", b * s * vocab * 4, || {
+                    model.forward(t, b, s)
+                })
+            },
+            &eval_windows,
+        );
+        let resident = ledger.peak_for(RESIDENT_TAG) as usize;
+        assert_eq!(resident, out.model.deploy_bytes(), "ledger vs deploy_bytes");
+        let frac = resident as f64 / fp_bytes as f64;
+        let peak_frac = ledger.peak_bytes() as f64 / fp_bytes as f64;
+        println!(
+            "{}",
+            Json::obj()
+                .with("bench", Json::Str("footprint".into()))
+                .with("arm", Json::Str(label.into()))
+                .with("fp32_bytes", Json::Num(fp_bytes as f64))
+                .with("resident_bytes", Json::Num(resident as f64))
+                .with("resident_frac", Json::Num(frac))
+                .with("eval_peak_frac", Json::Num(peak_frac))
+                .with("max_resident_frac", Json::Num(MAX_RESIDENT_FRAC))
+                .with("quant_peak_mib", Json::Num(out.ledger.peak_mib()))
+                .with("ppl", Json::Num(ppl))
+                .dump()
+        );
+        println!(
+            "-- {label}: resident {:.2} MiB = {:.1}% of fp32 {:.2} MiB (eval peak {:.1}%), ppl {ppl:.3}",
+            resident as f64 / (1 << 20) as f64,
+            100.0 * frac,
+            fp_bytes as f64 / (1 << 20) as f64,
+            100.0 * peak_frac,
+        );
+        if frac > MAX_RESIDENT_FRAC {
+            failures.push(format!(
+                "{label}: resident fraction {frac:.3} exceeds the {MAX_RESIDENT_FRAC} gate"
+            ));
+        }
+        out.model.release_resident(&ledger);
+        assert_eq!(ledger.live_bytes(), 0, "eval ledger must balance");
+    }
+    if !failures.is_empty() {
+        anyhow::bail!("footprint gate failed:\n  {}", failures.join("\n  "));
+    }
+    println!("footprint gate OK (resident <= {MAX_RESIDENT_FRAC} x fp32)");
+    Ok(())
+}

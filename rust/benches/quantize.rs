@@ -20,9 +20,11 @@ use rpiq::coordinator::{quantize_lm, Method};
 use rpiq::data::WikiCorpus;
 use rpiq::exec;
 use rpiq::jsonx::Json;
-use rpiq::model::{Activation, LmWeights, ModelConfig};
-use rpiq::quant::{QuantConfig, RpiqParams};
+use rpiq::model::{Activation, LmWeights, ModelConfig, QuantizedLm};
+use rpiq::quant::{QuantConfig, QuantGrid, QuantizedLinear, RpiqParams};
 use rpiq::rng::Pcg64;
+use rpiq::tensor::Tensor;
+use std::time::Instant;
 
 struct Arm {
     label: &'static str,
@@ -123,6 +125,62 @@ fn main() -> anyhow::Result<()> {
                 ratio(c0, cn),
                 ratio(s10, s1n),
                 ratio(s20, s2n),
+            );
+        }
+    }
+    // ---- qmatmul: packed fused dequant-matmul, threads x sizes ----
+    // The nibble-resident kernel's scaling/regression arm: every shape is
+    // past the parallel flop cutoff, every shard target is cross-checked
+    // bit-identical to target 1, and the fused kernel is timed against the
+    // materialize(dequantize)-then-matmul two-step as a live ratio.
+    println!("== qmatmul sweep: packed fused dequant-matmul ==");
+    for &(m, k, n) in &[(64usize, 256usize, 256usize), (256, 512, 512)] {
+        let mut rng = Pcg64::seeded(8002);
+        let wt = Tensor::randn(&[n, k], 0.5, &mut rng);
+        let q = QuantizedLinear::quantize_rtn(&wt, QuantGrid::new(4, 64));
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let time_n = |reps: usize, f: &dyn Fn() -> Tensor| {
+            let _ = f(); // warmup
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                let _ = f();
+            }
+            t0.elapsed().as_secs_f64() / reps as f64
+        };
+        let mut base: Option<(f64, Vec<u32>)> = None;
+        for &t in THREADS {
+            exec::set_threads(t);
+            let y = QuantizedLm::qmatmul(&x, &q);
+            let bits: Vec<u32> = y.data().iter().map(|v| v.to_bits()).collect();
+            let fused = time_n(10, &|| QuantizedLm::qmatmul(&x, &q));
+            let two_step = time_n(10, &|| {
+                let deq = q.dequantize();
+                rpiq::tensor::matmul_a_bt(&x, &deq)
+            });
+            let gflops = 2.0 * (m * k * n) as f64 / fused / 1e9;
+            match &base {
+                None => base = Some((fused, bits)),
+                Some((t1, b1)) => {
+                    assert_eq!(b1, &bits, "qmatmul diverged at {t} shards ({m}x{k}x{n})");
+                    println!(
+                        "-- qmatmul {m}x{k}x{n} @ {t} shards: {:.2}x vs 1",
+                        t1 / fused
+                    );
+                }
+            }
+            println!(
+                "{}",
+                Json::obj()
+                    .with("bench", Json::Str("qmatmul".into()))
+                    .with("m", Json::Num(m as f64))
+                    .with("k", Json::Num(k as f64))
+                    .with("n", Json::Num(n as f64))
+                    .with("threads", Json::Num(t as f64))
+                    .with("fused_secs", Json::Num(fused))
+                    .with("two_step_secs", Json::Num(two_step))
+                    .with("fused_vs_two_step", Json::Num(two_step / fused))
+                    .with("gflops", Json::Num(gflops))
+                    .dump()
             );
         }
     }

@@ -3,13 +3,13 @@
 use super::args::Args;
 use crate::coordinator::experiments::{self as exp, World};
 use crate::coordinator::{quantize_lm, quantize_vlm, replay_mixed, Method, ServeConfig, Server};
-use crate::model::io::{load_lm, save_lm};
-use crate::model::ModelConfig;
+use crate::model::io::{load_lm, load_qlm, save_lm, save_qlm};
+use crate::model::{ModelConfig, QuantizedLm};
 use crate::quant::{CmdqPolicy, QuantConfig, RpiqParams};
 use crate::report::Table;
 
-use crate::vlm::io::{load_vlm, save_vlm};
-use crate::vlm::VlmConfig;
+use crate::vlm::io::{load_qvlm, load_vlm, save_qvlm, save_vlm};
+use crate::vlm::{QuantizedVlm, VlmConfig};
 use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -136,9 +136,12 @@ fn quant_cfg(args: &mut Args) -> Result<QuantConfig> {
     })
 }
 
-/// `rpiq quantize` — quantize a checkpoint, print the per-layer report.
+/// `rpiq quantize` — quantize a checkpoint, print the per-layer report,
+/// and (with `--out model.rpiq`) write the quantized deployment container
+/// so `rpiq serve --qckpt` can cold-start without the fp32 checkpoint.
 pub fn quantize(args: &mut Args) -> Result<()> {
     let ckpt = PathBuf::from(args.require("ckpt")?);
+    let out_path = args.opt("out").map(PathBuf::from);
     let method = parse_method(args)?;
     let cfg = quant_cfg(args)?;
     args.finish()?;
@@ -150,11 +153,29 @@ pub fn quantize(args: &mut Args) -> Result<()> {
         let samples = w.vlm_calib(exp::CALIB_SAMPLES_VLM);
         let out = quantize_vlm(&weights, &samples, &policy, method)?;
         print_reports(&out.reports, out.ledger.peak_mib(), out.timers.total());
+        if let Some(p) = &out_path {
+            save_qvlm(&out.model, p)?;
+            println!(
+                "saved quantized checkpoint {} ({:.2} MiB resident vs {:.2} MiB fp32)",
+                p.display(),
+                out.model.deploy_bytes() as f64 / (1 << 20) as f64,
+                weights.config.fp32_bytes() as f64 / (1 << 20) as f64
+            );
+        }
     } else {
         let weights = load_lm(&ckpt)?;
         let windows = w.calib_windows(weights.config.seq_len, exp::CALIB_SAMPLES);
         let out = quantize_lm(&weights, &windows, cfg, method)?;
         print_reports(&out.reports, out.ledger.peak_mib(), out.timers.total());
+        if let Some(p) = &out_path {
+            save_qlm(&out.model, p)?;
+            println!(
+                "saved quantized checkpoint {} ({:.2} MiB resident vs {:.2} MiB fp32)",
+                p.display(),
+                out.model.deploy_bytes() as f64 / (1 << 20) as f64,
+                weights.config.fp32_bytes() as f64 / (1 << 20) as f64
+            );
+        }
     }
     Ok(())
 }
@@ -232,21 +253,41 @@ fn parse_method_named(name: &str, args: &mut Args) -> Result<Method> {
     })
 }
 
-/// `rpiq serve` — quantize checkpoint(s) and serve a replay workload
-/// through the multi-lane engine, printing overall + per-lane latency.
+/// `rpiq serve` — serve a replay workload through the multi-lane engine,
+/// printing overall + per-lane latency and the ledger-measured memory
+/// peaks (model-resident vs per-lane transient activations).
 ///
-/// `--mode sentiment` (default) serves an LM checkpoint; `--mode vqa`
-/// serves a VLM checkpoint (`--ckpt` if it is a VLM file, or
-/// `--vlm-ckpt`); `--mode mixed` serves both lanes side by side
-/// (`--ckpt` LM + `--vlm-ckpt` VLM).
+/// Model sources, per lane:
+/// * `--qckpt model.rpiq` — cold-start from a quantized container
+///   (written by `rpiq quantize --out`); no fp32 linear is ever
+///   materialized and no re-quantization happens. LM or VLM is sniffed
+///   from the magic.
+/// * `--ckpt PATH` — fp32 checkpoint, quantized at startup (the old
+///   path).
+///
+/// `--mode sentiment` (default) serves the LM lane; `--mode vqa` the VLM
+/// lane (`--qckpt`/`--ckpt` if the file is a VLM, or
+/// `--vlm-qckpt`/`--vlm-ckpt`); `--mode mixed` serves both side by side.
 pub fn serve(args: &mut Args) -> Result<()> {
     let mode = args.get("mode", "sentiment");
     let ckpt = args.opt("ckpt").map(PathBuf::from);
     let vlm_ckpt = args.opt("vlm-ckpt").map(PathBuf::from);
+    let qckpt = args.opt("qckpt").map(PathBuf::from);
+    let vlm_qckpt = args.opt("vlm-qckpt").map(PathBuf::from);
     let n_requests = args.usize_of("requests", 100)?;
     let n_clients = args.usize_of("clients", 4)?;
     let max_batch = args.usize_of("max-batch", 8)?;
     let lanes = args.usize_of("lanes", 2)?;
+    // Quantization flags apply only to fp32 startup quantization; record
+    // which were explicitly passed so a --qckpt-only invocation can
+    // reject them instead of silently serving the container's baked-in
+    // grid while the user believes their settings applied.
+    let quant_flags: Vec<String> =
+        ["method", "bits", "group-size", "block-size", "percdamp", "iters", "alpha"]
+            .iter()
+            .filter(|k| args.opt(k).is_some())
+            .map(|k| format!("--{k}"))
+            .collect();
     let method = parse_method(args)?;
     let cfg = quant_cfg(args)?;
     args.finish()?;
@@ -261,56 +302,132 @@ pub fn serve(args: &mut Args) -> Result<()> {
         bail!("unknown mode '{mode}' (sentiment|vqa|mixed)");
     }
 
-    let qlm = if want_lm {
-        let path = ckpt
-            .clone()
-            .ok_or_else(|| anyhow::anyhow!("--mode {mode} needs --ckpt (LM checkpoint)"))?;
-        if is_vlm(&path) {
-            bail!(
-                "--ckpt {} is a VLM checkpoint; pass the LM via --ckpt (or use --mode vqa)",
-                path.display()
+    let mib = |b: usize| b as f64 / (1 << 20) as f64;
+    let mut lm_cold = false;
+    let mut vlm_cold = false;
+    let qlm: Option<Arc<QuantizedLm>> = if want_lm {
+        // --qckpt is authoritative when given: a missing or wrong-magic
+        // file fails loudly via load_qlm instead of silently falling back
+        // to the fp32 re-quantization path the user opted out of.
+        let model = if let Some(p) = qckpt.as_ref() {
+            if ckpt.is_some() {
+                bail!("both --ckpt and --qckpt given for the LM lane; pass exactly one");
+            }
+            lm_cold = true;
+            let model = load_qlm(p)?;
+            println!(
+                "lm cold-start from {}: {:.2} MiB resident (fp32 {:.2} MiB, never materialized)",
+                p.display(),
+                mib(model.deploy_bytes()),
+                mib(model.config().fp32_bytes())
             );
-        }
-        let weights = load_lm(&path)?;
-        let windows = w.calib_windows(weights.config.seq_len, exp::CALIB_SAMPLES);
-        let out = quantize_lm(&weights, &windows, cfg, method)?;
-        println!(
-            "lm deploy bytes: {:.2} MiB (fp32 {:.2} MiB)",
-            out.model.deploy_bytes() as f64 / (1 << 20) as f64,
-            weights.config.fp32_bytes() as f64 / (1 << 20) as f64
-        );
-        Some(Arc::new(out.model))
-    } else {
-        None
-    };
-
-    let qvlm = if want_vlm {
-        // the VLM may arrive as --vlm-ckpt, or as --ckpt in pure vqa mode
-        let path = match (&vlm_ckpt, &ckpt) {
-            (Some(p), _) => p.clone(),
-            (None, Some(p)) if mode == "vqa" && is_vlm(p) => p.clone(),
-            _ => bail!("--mode {mode} needs --vlm-ckpt (VLM checkpoint)"),
+            model
+        } else {
+            let path = ckpt.clone().ok_or_else(|| {
+                anyhow::anyhow!("--mode {mode} needs --ckpt (LM checkpoint) or --qckpt (.rpiq)")
+            })?;
+            if is_vlm(&path) {
+                bail!(
+                    "--ckpt {} is a VLM checkpoint; pass the LM via --ckpt (or use --mode vqa)",
+                    path.display()
+                );
+            }
+            let weights = load_lm(&path)?;
+            let windows = w.calib_windows(weights.config.seq_len, exp::CALIB_SAMPLES);
+            let out = quantize_lm(&weights, &windows, cfg, method)?;
+            println!(
+                "lm deploy bytes: {:.2} MiB (fp32 {:.2} MiB)",
+                mib(out.model.deploy_bytes()),
+                mib(weights.config.fp32_bytes())
+            );
+            out.model
         };
-        let weights = load_vlm(&path)?;
-        let policy = vlm_policy(method);
-        let samples = w.vlm_calib(exp::CALIB_SAMPLES_VLM);
-        let out = quantize_vlm(&weights, &samples, &policy, method)?;
-        println!(
-            "vlm deploy bytes: {:.2} MiB (fp32 {:.2} MiB)",
-            out.model.deploy_bytes() as f64 / (1 << 20) as f64,
-            (weights.n_params() * 4) as f64 / (1 << 20) as f64
-        );
-        Some(Arc::new(out.model))
+        Some(Arc::new(model))
     } else {
         None
     };
 
-    let server = match (qlm, qvlm) {
-        (Some(lm), Some(vlm)) => Server::start_mixed(lm, vlm, &tok, scfg),
-        (Some(lm), None) => Server::start(lm, &tok, scfg),
-        (None, Some(vlm)) => Server::start_vqa(vlm, &tok, scfg),
+    let qvlm: Option<Arc<QuantizedVlm>> = if want_vlm {
+        // quantized cold-start: --vlm-qckpt, or --qckpt in pure vqa mode
+        // (authoritative when given — a bad file errors via load_qvlm
+        // rather than silently falling back to fp32 re-quantization)
+        let qpath = match (&vlm_qckpt, &qckpt) {
+            (Some(p), _) => Some(p.clone()),
+            (None, Some(p)) if mode == "vqa" => Some(p.clone()),
+            _ => None,
+        };
+        let model = if let Some(p) = qpath {
+            if vlm_qckpt.is_some() && vlm_ckpt.is_some() {
+                bail!("both --vlm-ckpt and --vlm-qckpt given; pass exactly one");
+            }
+            if vlm_qckpt.is_some() && mode == "vqa" && qckpt.is_some() {
+                bail!("both --qckpt and --vlm-qckpt given for the VQA lane; pass exactly one");
+            }
+            if vlm_qckpt.is_none() && ckpt.is_some() {
+                bail!("both --ckpt and --qckpt given for the VQA lane; pass exactly one");
+            }
+            vlm_cold = true;
+            let model = load_qvlm(&p)?;
+            println!(
+                "vlm cold-start from {}: {:.2} MiB resident (fp32 {:.2} MiB, never materialized)",
+                p.display(),
+                mib(model.deploy_bytes()),
+                mib(model.config().fp32_bytes())
+            );
+            model
+        } else {
+            // the VLM may arrive as --vlm-ckpt, or as --ckpt in vqa mode
+            let path = match (&vlm_ckpt, &ckpt) {
+                (Some(p), _) => p.clone(),
+                (None, Some(p)) if mode == "vqa" && is_vlm(p) => p.clone(),
+                _ => bail!(
+                    "--mode {mode} needs --vlm-ckpt (VLM checkpoint) or --vlm-qckpt (.rpiq)"
+                ),
+            };
+            let weights = load_vlm(&path)?;
+            let policy = vlm_policy(method);
+            let samples = w.vlm_calib(exp::CALIB_SAMPLES_VLM);
+            let out = quantize_vlm(&weights, &samples, &policy, method)?;
+            println!(
+                "vlm deploy bytes: {:.2} MiB (fp32 {:.2} MiB)",
+                mib(out.model.deploy_bytes()),
+                mib(weights.config.fp32_bytes())
+            );
+            out.model
+        };
+        Some(Arc::new(model))
+    } else {
+        None
+    };
+
+    // With every served lane cold-starting from a container, the grid is
+    // baked in and the quantization flags would be silently ignored.
+    let fp_lane_exists = (want_lm && !lm_cold) || (want_vlm && !vlm_cold);
+    if !fp_lane_exists && !quant_flags.is_empty() {
+        bail!(
+            "{} have no effect with --qckpt: the grid is baked into the container \
+             (re-run `rpiq quantize --out` to change it)",
+            quant_flags.join("/")
+        );
+    }
+
+    let server = match (&qlm, &qvlm) {
+        (Some(lm), Some(vlm)) => {
+            Server::start_mixed(Arc::clone(lm), Arc::clone(vlm), &tok, scfg)
+        }
+        (Some(lm), None) => Server::start(Arc::clone(lm), &tok, scfg),
+        (None, Some(vlm)) => Server::start_vqa(Arc::clone(vlm), &tok, scfg),
         (None, None) => unreachable!("mode resolution left no model"),
     };
+    // Book the deployed models on the server's ledger so its peak reads
+    // model-resident + concurrent lane activations.
+    if let Some(m) = &qlm {
+        m.register_resident(server.ledger());
+    }
+    if let Some(m) = &qvlm {
+        m.register_resident(server.ledger());
+    }
+    let ledger = server.ledger().clone();
 
     // Replay workload: sentiment prompts and/or VQA pairs from the world's
     // test sets, interleaved in mixed mode.
@@ -328,20 +445,42 @@ pub fn serve(args: &mut Args) -> Result<()> {
     for name in stats.lane_names() {
         let l = stats.lane(&name).expect("named lane exists");
         println!(
-            "  lane {name:9} {:4} reqs  p50 {:.2} ms  p95 {:.2} ms",
+            "  lane {name:9} {:4} reqs  p50 {:.2} ms  p95 {:.2} ms  activation peak {:.2} MiB",
             l.count(),
             l.percentile_ms(50.0),
-            l.percentile_ms(95.0)
+            l.percentile_ms(95.0),
+            ledger.peak_for(&format!("activations.{name}")) as f64 / (1 << 20) as f64
         );
     }
+    println!(
+        "serving peak {:.2} MiB (model resident {:.2} MiB)",
+        ledger.peak_mib(),
+        ledger.peak_for(crate::model::RESIDENT_TAG) as f64 / (1 << 20) as f64
+    );
     Ok(())
 }
 
-/// `rpiq inspect` — describe a checkpoint.
+/// `rpiq inspect` — describe a checkpoint (fp32 or quantized `.rpiq`).
 pub fn inspect(args: &mut Args) -> Result<()> {
     let ckpt = PathBuf::from(args.require("ckpt")?);
     args.finish()?;
-    if is_vlm(&ckpt) {
+    if is_qlm(&ckpt) {
+        let m = load_qlm(&ckpt)?;
+        let c = m.config();
+        println!("quantized LM {} (nibble-resident .rpiq)", c.name);
+        println!(
+            "  d_model={} layers={} heads={} d_ff={} vocab={} seq={} tied={}",
+            c.d_model, c.n_layers, c.n_heads, c.d_ff, c.vocab, c.seq_len, c.tied_head
+        );
+        print_qlinear_summary(&m.qlinears, m.deploy_bytes(), c.fp32_bytes());
+    } else if is_qvlm(&ckpt) {
+        let m = load_qvlm(&ckpt)?;
+        let c = m.config().clone();
+        println!("quantized VLM {} (nibble-resident .rpiq)", c.name);
+        println!("  patches {} x dim {}", c.n_patches, c.patch_dim);
+        println!("  vision d={} blocks={}", c.d_vision, c.n_vision_blocks);
+        print_qlinear_summary(&m.qlinears, m.deploy_bytes(), c.fp32_bytes());
+    } else if is_vlm(&ckpt) {
         let w = load_vlm(&ckpt)?;
         println!("VLM {}", w.config.name);
         println!("  patches {} x dim {}", w.config.n_patches, w.config.patch_dim);
@@ -358,6 +497,30 @@ pub fn inspect(args: &mut Args) -> Result<()> {
         println!("  params={} ({:.2} MiB fp32)", c.n_params(), c.fp32_bytes() as f64 / (1 << 20) as f64);
     }
     Ok(())
+}
+
+fn print_qlinear_summary(
+    qlinears: &std::collections::HashMap<String, crate::quant::QuantizedLinear>,
+    deploy_bytes: usize,
+    fp_bytes: usize,
+) {
+    let mut bit_counts: Vec<(u32, usize)> = Vec::new();
+    for q in qlinears.values() {
+        match bit_counts.iter_mut().find(|(b, _)| *b == q.grid.bits) {
+            Some((_, n)) => *n += 1,
+            None => bit_counts.push((q.grid.bits, 1)),
+        }
+    }
+    bit_counts.sort_unstable();
+    let grids: Vec<String> =
+        bit_counts.iter().map(|(b, n)| format!("{n}x{b}-bit")).collect();
+    println!("  linears: {} ({})", qlinears.len(), grids.join(", "));
+    println!(
+        "  resident {:.2} MiB = {:.1}% of fp32 {:.2} MiB",
+        deploy_bytes as f64 / (1 << 20) as f64,
+        100.0 * deploy_bytes as f64 / fp_bytes as f64,
+        fp_bytes as f64 / (1 << 20) as f64
+    );
 }
 
 /// `rpiq artifacts` — validate the AOT bundle and smoke-run an entry.
@@ -382,14 +545,22 @@ pub fn artifacts(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+fn sniff_magic(path: &Path) -> Option<[u8; 8]> {
+    let mut f = std::fs::File::open(path).ok()?;
+    use std::io::Read;
+    let mut m = [0u8; 8];
+    f.read_exact(&mut m).ok()?;
+    Some(m)
+}
+
 fn is_vlm(path: &Path) -> bool {
-    // sniff the magic
-    if let Ok(mut f) = std::fs::File::open(path) {
-        use std::io::Read;
-        let mut m = [0u8; 8];
-        if f.read_exact(&mut m).is_ok() {
-            return &m == b"RPIQVLM1";
-        }
-    }
-    false
+    sniff_magic(path).as_ref() == Some(b"RPIQVLM1")
+}
+
+fn is_qlm(path: &Path) -> bool {
+    sniff_magic(path).as_ref() == Some(crate::model::io::QLM_MAGIC)
+}
+
+fn is_qvlm(path: &Path) -> bool {
+    sniff_magic(path).as_ref() == Some(crate::vlm::io::QVLM_MAGIC)
 }

@@ -3,11 +3,12 @@
 //! ```text
 //! rpiq pretrain  --all | --preset NAME   [--steps N] [--out-dir DIR]
 //! rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G]
-//!                [--iters T] [--alpha A]
+//!                [--iters T] [--alpha A] [--out model.rpiq]
 //! rpiq eval      --ckpt PATH [--method gptq|rpiq|fp] [--n-test N]
-//! rpiq serve     --ckpt PATH [--mode sentiment|vqa|mixed] [--vlm-ckpt PATH]
+//! rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed]
+//!                [--vlm-ckpt PATH | --vlm-qckpt model.rpiq]
 //!                [--lanes N] [--requests N] [--clients C] [--method ...]
-//! rpiq inspect   --ckpt PATH
+//! rpiq inspect   --ckpt PATH               # fp32 or quantized .rpiq
 //! rpiq artifacts --dir artifacts   # validate + smoke-run the AOT bundle
 //! ```
 
@@ -41,12 +42,17 @@ rpiq — Residual-Projected Multi-Collaboration Closed-Loop and Single Instance 
 USAGE:
   rpiq pretrain  --all | --preset NAME [--steps N] [--out-dir DIR] [--seed S]
   rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G] [--iters T] [--alpha A]
+                 [--out model.rpiq]
   rpiq eval      --ckpt PATH [--method fp|gptq|rpiq] [--n-test N]
-  rpiq serve     --ckpt PATH [--mode sentiment|vqa|mixed] [--vlm-ckpt PATH]
+  rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed]
+                 [--vlm-ckpt PATH | --vlm-qckpt model.rpiq]
                  [--lanes N] [--requests N] [--clients C] [--max-batch B]
-  rpiq inspect   --ckpt PATH
+  rpiq inspect   --ckpt PATH               (fp32 checkpoint or quantized .rpiq)
   rpiq artifacts [--dir artifacts]
 
 The pretrain command produces the subject checkpoints (4 LM presets + the
-VLM) that the table benches quantize; see rust/DESIGN.md for the experiment map.
+VLM) that the table benches quantize. `quantize --out` writes the
+nibble-packed deployment container; `serve --qckpt` cold-starts from it
+without ever materializing fp32 linears. See rust/DESIGN.md for the
+experiment map and §Deployment memory for the container format.
 ";

@@ -32,7 +32,7 @@
 //!   `quant::gptq` / `quant::rpiq`.
 //!
 //! Per-row/per-window numerics are untouched (each unit runs the exact
-//! sequential float-op sequence), so Γ traces, `qweight`s, and Hessians
+//! sequential float-op sequence), so Γ traces, packed levels, and Hessians
 //! are **byte-identical** to a single-threaded run for any `RPIQ_THREADS`
 //! — asserted by `gamma_traces_deterministic_across_thread_counts` and
 //! `calibration_deterministic_across_thread_counts`, and enforced in CI by
@@ -393,7 +393,10 @@ pub fn quantize_lm(
     ledger.free("model_weights", model_bytes);
 
     Ok(PipelineOutput {
-        model: QuantizedLm::new(w.clone(), qlinears),
+        // The deployed model carries only the skeleton (embeddings, norms)
+        // + packed linears — the caller's fp32 `w` is NOT cloned into it,
+        // so the post-quantization resident footprint is deploy_bytes().
+        model: QuantizedLm::new(crate::model::LmSkeleton::from_weights(w), qlinears),
         reports,
         ledger,
         timers,
@@ -471,7 +474,8 @@ pub fn quantize_vlm(
     ledger.free("model_weights", model_bytes);
 
     Ok(PipelineVlmOutput {
-        model: QuantizedVlm::new(w.clone(), qlinears),
+        // Skeleton-only, like the LM pipeline: no fp32 linear survives.
+        model: QuantizedVlm::new(crate::vlm::VlmSkeleton::from_weights(w), qlinears),
         reports,
         ledger,
         timers,
@@ -595,8 +599,8 @@ mod tests {
     #[test]
     fn gamma_traces_deterministic_across_thread_counts() {
         // The acceptance bar of the parallel pipeline: fanning layers out
-        // across the pool must leave every Γ trace and every qweight
-        // byte-identical to the single-threaded run.
+        // across the pool must leave every Γ trace and every packed level
+        // buffer byte-identical to the single-threaded run.
         let _guard = crate::exec::thread_target_test_lock();
         let before = crate::exec::num_threads();
         let (w, windows) = setup_lm();
@@ -621,7 +625,7 @@ mod tests {
             }
             for (name, qs) in &seq.model.qlinears {
                 let qp = &par.model.qlinears[name];
-                assert_eq!(qs.qweight, qp.qweight, "qweight diverged for {name}");
+                assert_eq!(qs.packed, qp.packed, "packed levels diverged for {name}");
                 assert_eq!(qs.scales, qp.scales, "scales diverged for {name}");
                 assert_eq!(qs.zeros, qp.zeros, "zeros diverged for {name}");
             }

@@ -23,7 +23,14 @@
 //!   and very large equal-shape groups are sharded row-wise across the
 //!   global pool explicitly (`WIDE_GROUP_ROWS` in `crate::model`);
 //! * latency (queue + compute) is recorded per request into per-lane
-//!   [`LaneStats`].
+//!   [`LaneStats`];
+//! * memory is accounted on a server-owned [`MemoryLedger`]: callers
+//!   register the deployed models' resident bytes
+//!   (`QuantizedLm::register_resident`, tag `model_resident`) and each
+//!   lane books its dominant transient — the fused forward's logits —
+//!   under `activations.<lane>` for the duration of the batch, so the
+//!   ledger's peak is `resident + max concurrent activations` and per-lane
+//!   activation peaks print beside the latency stats at shutdown.
 //!
 //! Threading: lanes are dedicated event-loop threads (they block on the
 //! request queue, so parking them on pool workers would starve the pool).
@@ -34,7 +41,7 @@
 use crate::data::tokenizer::Tokenizer;
 use crate::data::SentimentSet;
 use crate::exec::{Channel, ShardedQueue};
-use crate::metrics::LaneStats;
+use crate::metrics::{LaneStats, MemoryLedger};
 use crate::model::QuantizedLm;
 use crate::tensor::Tensor;
 use crate::vlm::QuantizedVlm;
@@ -162,6 +169,14 @@ pub trait LaneEngine: Send + Sync {
     /// Answer a drained group of payloads (all accepted by this lane,
     /// all sharing one shape key), one answer per item, in order.
     fn run_batch(&self, group: &[&Payload]) -> Vec<Answer>;
+
+    /// Dominant transient-activation bytes of answering `group` in one
+    /// fused forward (the logits tensor at these model scales). The lane
+    /// loop books this on the server ledger under `activations.<name>`
+    /// for the duration of the batch; return 0 to opt out of accounting.
+    fn transient_bytes(&self, _group: &[&Payload]) -> usize {
+        0
+    }
 }
 
 /// Sentiment lane: fuses equal-length token prompts into batched
@@ -176,7 +191,7 @@ pub struct SentimentLane {
 impl SentimentLane {
     pub fn new(model: Arc<QuantizedLm>, tok: &Tokenizer) -> Self {
         let label_ids = SentimentSet::label_token_ids(tok);
-        let max_seq = model.base.config.seq_len;
+        let max_seq = model.config().seq_len;
         SentimentLane { model, label_ids, max_seq }
     }
 }
@@ -209,6 +224,18 @@ impl LaneEngine for SentimentLane {
             Payload::Sentiment { tokens } => tokens.len(),
             _ => 0,
         }
+    }
+
+    fn transient_bytes(&self, group: &[&Payload]) -> usize {
+        // fused forward's logits: [Σ seq_i, vocab] f32
+        let toks: usize = group
+            .iter()
+            .map(|p| match p {
+                Payload::Sentiment { tokens } => tokens.len(),
+                _ => 0,
+            })
+            .sum();
+        toks * self.model.config().vocab * 4
     }
 
     fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
@@ -278,7 +305,7 @@ impl LaneEngine for VqaLane {
         let Payload::Vqa { patches, question } = payload else {
             return Err(SubmitError::Unsupported);
         };
-        let cfg = &self.model.base.config;
+        let cfg = self.model.config();
         if patches.rows() != cfg.n_patches || patches.cols() != cfg.patch_dim {
             return Err(SubmitError::Invalid(format!(
                 "patches {:?}, model expects [{}, {}]",
@@ -305,6 +332,19 @@ impl LaneEngine for VqaLane {
         }
     }
 
+    fn transient_bytes(&self, group: &[&Payload]) -> usize {
+        // fused forward's logits: [B·(P + T), vocab] f32
+        let cfg = self.model.config();
+        let toks: usize = group
+            .iter()
+            .map(|p| match p {
+                Payload::Vqa { question, .. } => cfg.n_patches + question.len(),
+                _ => 0,
+            })
+            .sum();
+        toks * cfg.lm.vocab * 4
+    }
+
     fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
         let pairs: Vec<(&Tensor, &[u32])> = group
             .iter()
@@ -317,7 +357,7 @@ impl LaneEngine for VqaLane {
         // one fused forward and read the answer rows in place (the
         // general [`QuantizedVlm::forward_batch`] instead returns owned
         // full-sequence logits per pair).
-        let n_patches = self.model.base.config.n_patches;
+        let n_patches = self.model.config().n_patches;
         let tlen = pairs[0].1.len();
         debug_assert!(pairs.iter().all(|(_, q)| q.len() == tlen), "mixed shapes in one group");
         let s = n_patches + tlen;
@@ -377,6 +417,10 @@ pub struct Server {
     engines: Arc<Vec<Box<dyn LaneEngine>>>,
     next_id: AtomicU64,
     pub stats: LaneStats,
+    /// Memory accounting for the serving process: model-resident bytes
+    /// (registered by the caller) + per-lane transient activations
+    /// (booked by the lane loop around each fused batch).
+    ledger: MemoryLedger,
     lanes: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -388,19 +432,30 @@ impl Server {
         let n_lanes = cfg.lanes.max(1);
         let queue: ShardedQueue<Request> = ShardedQueue::new(n_lanes, cfg.queue_cap);
         let stats = LaneStats::new();
+        let ledger = MemoryLedger::new();
         let engines = Arc::new(engines);
         let lanes = (0..n_lanes)
             .map(|i| {
                 let queue = queue.clone();
                 let stats = stats.clone();
+                let ledger = ledger.clone();
                 let engines = Arc::clone(&engines);
                 std::thread::Builder::new()
                     .name(format!("rpiq-lane-{i}"))
-                    .spawn(move || lane_loop(i, engines, queue, stats, cfg))
+                    .spawn(move || lane_loop(i, engines, queue, stats, ledger, cfg))
                     .expect("spawn lane")
             })
             .collect();
-        Server { queue, engines, next_id: AtomicU64::new(0), stats, lanes }
+        Server { queue, engines, next_id: AtomicU64::new(0), stats, ledger, lanes }
+    }
+
+    /// The server's memory ledger. Register deployed models' resident
+    /// bytes here (`register_resident`) before replaying traffic; the
+    /// lanes add their transient activations, so `peak_bytes()` reads as
+    /// the serving process's high-water mark and
+    /// `peak_for("activations.<lane>")` as one lane's transient peak.
+    pub fn ledger(&self) -> &MemoryLedger {
+        &self.ledger
     }
 
     /// Sentiment-only server over a quantized LM.
@@ -525,8 +580,15 @@ fn lane_loop(
     engines: Arc<Vec<Box<dyn LaneEngine>>>,
     queue: ShardedQueue<Request>,
     stats: LaneStats,
+    ledger: MemoryLedger,
     cfg: ServeConfig,
 ) {
+    // Per-engine ledger tags, precomputed once — the lane loop is the
+    // serving hot path and engines are fixed for the server's lifetime.
+    let activation_tags: Vec<String> = engines
+        .iter()
+        .map(|e| format!("activations.{}", e.name()))
+        .collect();
     loop {
         // Block for the first request. Shutdown wakes the pop directly
         // (`close` notifies every shard condvar), so this timeout is only
@@ -568,13 +630,23 @@ fn lane_loop(
         let run_group = |ei: usize, group: &[Request]| {
             let engine = &engines[ei];
             let payloads: Vec<&Payload> = group.iter().map(|r| &r.payload).collect();
+            // Book the batch's dominant transient (the fused logits) for
+            // the duration of the forward, per lane, so the ledger's peak
+            // reflects resident + concurrent activations.
+            let transient = engine.transient_bytes(&payloads);
+            let tag = &activation_tags[ei];
             // Contain engine bugs: on a panic (or a miscounted answer
             // vector) the group is discarded and each Request's Drop
             // closes its reply channel, so clients observe `Closed`
-            // instead of hanging and the lane keeps serving.
-            let answers = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // instead of hanging and the lane keeps serving. The transient
+            // is freed outside catch_unwind so a panicking engine cannot
+            // leak ledger bytes.
+            ledger.alloc(tag, transient);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 engine.run_batch(&payloads)
-            })) {
+            }));
+            ledger.free(tag, transient);
+            let answers = match result {
                 Ok(a) if a.len() == group.len() => a,
                 Ok(_) | Err(_) => return,
             };
@@ -748,7 +820,7 @@ mod tests {
     fn vqa_lane_answers_questions() {
         let tok = Lexicon::tokenizer();
         let qvlm = test_qvlm();
-        let vcfg = qvlm.base.config.clone();
+        let vcfg = qvlm.config().clone();
         let server = Server::start_vqa(Arc::clone(&qvlm), &tok, ServeConfig::default());
         let mut rng = Pcg64::seeded(803);
         let patches = Tensor::randn(&[vcfg.n_patches, vcfg.patch_dim], 1.0, &mut rng);
@@ -779,7 +851,7 @@ mod tests {
     fn mixed_server_routes_to_both_lanes() {
         let tok = Lexicon::tokenizer();
         let qvlm = test_qvlm();
-        let vcfg = qvlm.base.config.clone();
+        let vcfg = qvlm.config().clone();
         let server = Server::start_mixed(
             test_qlm(),
             qvlm,

@@ -97,18 +97,31 @@ pub struct FwdRecord {
 
 /// Embed tokens: `[B·S, d]` from ids `[B·S]` (row-major batch-major).
 pub fn embed(w: &LmWeights, tokens: &[u32], batch: usize, seq: usize) -> Tensor {
-    let d = w.config.d_model;
+    embed_rows(&w.tok_emb, &w.pos_emb, w.config.seq_len, tokens, batch, seq)
+}
+
+/// The embedding kernel on bare tensors — shared by the fp path
+/// ([`embed`]) and the deployment skeleton's quantized forward, which
+/// holds no [`LmWeights`].
+pub fn embed_rows(
+    tok_emb: &Tensor,
+    pos_emb: &Tensor,
+    seq_cap: usize,
+    tokens: &[u32],
+    batch: usize,
+    seq: usize,
+) -> Tensor {
+    let d = tok_emb.cols();
     assert_eq!(tokens.len(), batch * seq);
     assert!(
-        seq <= w.config.seq_len,
-        "sequence length {seq} exceeds model context {}",
-        w.config.seq_len
+        seq <= seq_cap,
+        "sequence length {seq} exceeds model context {seq_cap}"
     );
     let mut x = Tensor::zeros(&[batch * seq, d]);
     for (i, &tok) in tokens.iter().enumerate() {
         let pos = i % seq;
-        let te = w.tok_emb.row(tok as usize);
-        let pe = w.pos_emb.row(pos);
+        let te = tok_emb.row(tok as usize);
+        let pe = pos_emb.row(pos);
         let row = x.row_mut(i);
         for j in 0..d {
             row[j] = te[j] + pe[j];

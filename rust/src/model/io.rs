@@ -1,19 +1,34 @@
-//! Checkpoint format: a tiny self-describing binary container.
+//! Checkpoint formats: tiny self-describing binary containers.
 //!
-//! Layout: magic `RPIQCKPT`, u32 version, u32 json-length, config JSON,
-//! then for each tensor: u32 name-length, name, u32 ndim, dims (u64 each),
-//! f32 LE payload. Everything little-endian. No external deps, stable
-//! across runs, and diff-friendly enough via `rpiq inspect`.
+//! **fp32 container** (magic `RPIQCKPT` / `RPIQVLM1`): magic, u32
+//! version, u32 json-length, config JSON, then for each tensor: u32
+//! name-length, name, u32 ndim, dims (u64 each), f32 LE payload.
+//!
+//! **typed container** (magic `RPIQQLM1` / `RPIQQVL1`): same frame, but
+//! each entry carries a dtype byte (0 = f32, 1 = u8) before its dims —
+//! the quantized checkpoint format, whose u8 entries hold nibble-packed
+//! weight levels verbatim. `save_qlm`/`load_qlm` round-trip a
+//! [`QuantizedLm`] bit-exactly (packed levels byte-for-byte, group params
+//! and skeleton f32-bit-for-bit), so a served model cold-starts from
+//! `.rpiq` without ever materializing an fp32 linear.
+//!
+//! Everything little-endian. No external deps, stable across runs, and
+//! diff-friendly enough via `rpiq inspect`.
 
 use super::config::{Activation, ModelConfig};
-use super::weights::LmWeights;
+use super::quantized::QuantizedLm;
+use super::weights::{LmSkeleton, LmWeights};
 use crate::jsonx::Json;
+use crate::quant::{QuantGrid, QuantizedLinear};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"RPIQCKPT";
+/// Magic of the quantized-LM container.
+pub const QLM_MAGIC: &[u8; 8] = b"RPIQQLM1";
 const VERSION: u32 = 1;
 
 fn config_to_json(c: &ModelConfig) -> Json {
@@ -169,6 +184,467 @@ pub fn lm_config_from_json(j: &Json) -> Result<ModelConfig> {
     config_from_json(j)
 }
 
+// ---------------------------------------------------------------------
+// Typed (dtype-tagged) container: the quantized checkpoint format.
+// ---------------------------------------------------------------------
+
+/// Element type of one typed-container entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U8,
+}
+
+impl DType {
+    fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::U8 => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        match t {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::U8),
+            other => bail!("unknown dtype tag {other}"),
+        }
+    }
+
+    fn elem_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// One entry of a typed container as read back (payload as raw LE bytes).
+pub struct TypedEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub bytes: Vec<u8>,
+}
+
+impl TypedEntry {
+    fn into_f32(self) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            self.dtype == DType::F32 && self.bytes.len() % 4 == 0,
+            "entry '{}' is not an f32 plane",
+            self.name
+        );
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// A borrowed payload for the write path — the writer streams straight
+/// from the model's own buffers, so saving never copies the packed levels
+/// or group params (no transient doubling of the resident bytes).
+pub enum PayloadRef<'a> {
+    F32(&'a [f32]),
+    U8(&'a [u8]),
+}
+
+impl PayloadRef<'_> {
+    fn dtype(&self) -> DType {
+        match self {
+            PayloadRef::F32(_) => DType::F32,
+            PayloadRef::U8(_) => DType::U8,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            PayloadRef::F32(d) => d.len(),
+            PayloadRef::U8(d) => d.len(),
+        }
+    }
+}
+
+/// One entry of a typed container on the write path (payload borrowed).
+pub struct EntryRef<'a> {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub payload: PayloadRef<'a>,
+}
+
+/// Write a typed container (see module docs for the frame layout).
+pub fn write_container_typed(
+    path: &Path,
+    magic: &[u8; 8],
+    config_json: &str,
+    entries: &[EntryRef],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(magic)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(config_json.len() as u32).to_le_bytes())?;
+    f.write_all(config_json.as_bytes())?;
+    f.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for e in entries {
+        let n: usize = e.shape.iter().product();
+        anyhow::ensure!(
+            e.payload.len() == n,
+            "entry '{}': {} payload elements for shape {:?} ({:?})",
+            e.name,
+            e.payload.len(),
+            e.shape,
+            e.payload.dtype()
+        );
+        f.write_all(&(e.name.len() as u32).to_le_bytes())?;
+        f.write_all(e.name.as_bytes())?;
+        f.write_all(&[e.payload.dtype().tag()])?;
+        f.write_all(&(e.shape.len() as u32).to_le_bytes())?;
+        for &d in &e.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        match e.payload {
+            PayloadRef::U8(bytes) => f.write_all(bytes)?,
+            PayloadRef::F32(data) => {
+                for &v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a typed container: config JSON + raw entries. Declared sizes are
+/// untrusted: every per-entry payload length is computed with checked
+/// arithmetic and bounded by the file's actual length before any buffer
+/// is allocated, so a corrupt header errors instead of aborting on a
+/// huge allocation.
+pub fn read_container_typed(path: &Path, magic: &[u8; 8]) -> Result<(Json, Vec<TypedEntry>)> {
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut got = [0u8; 8];
+    f.read_exact(&mut got)?;
+    if &got != magic {
+        bail!("{} is not the expected rpiq quantized container", path.display());
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let cfg_len = read_u32(&mut f)? as usize;
+    anyhow::ensure!(
+        (cfg_len as u64) <= file_len,
+        "config JSON length {cfg_len} exceeds file size"
+    );
+    let mut cfg_buf = vec![0u8; cfg_len];
+    f.read_exact(&mut cfg_buf)?;
+    let cfg = Json::parse(std::str::from_utf8(&cfg_buf)?)?;
+    let n_entries = read_u32(&mut f)? as usize;
+    // capacity grows as entries are actually read — n_entries is untrusted
+    let mut entries = Vec::new();
+    for _ in 0..n_entries {
+        let name_len = read_u32(&mut f)? as usize;
+        anyhow::ensure!(
+            (name_len as u64) <= file_len,
+            "entry name length {name_len} exceeds file size"
+        );
+        let mut name_buf = vec![0u8; name_len];
+        f.read_exact(&mut name_buf)?;
+        let name = String::from_utf8(name_buf)?;
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        let dtype = DType::from_tag(tag[0]).with_context(|| format!("entry '{name}'"))?;
+        let ndim = read_u32(&mut f)? as usize;
+        anyhow::ensure!((ndim as u64) <= file_len, "entry '{name}' declares {ndim} dims");
+        let mut dims = Vec::with_capacity(ndim.min(8));
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            dims.push(u64::from_le_bytes(b));
+        }
+        let n = dims
+            .iter()
+            .try_fold(1u64, |a, &d| a.checked_mul(d))
+            .with_context(|| format!("entry '{name}': shape {dims:?} overflows"))?;
+        let payload_bytes = n
+            .checked_mul(dtype.elem_bytes() as u64)
+            .filter(|&b| b <= file_len)
+            .with_context(|| {
+                format!("entry '{name}' declares more payload than the {file_len}-byte file holds")
+            })?;
+        let shape: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let mut bytes = vec![0u8; payload_bytes as usize];
+        f.read_exact(&mut bytes)
+            .with_context(|| format!("truncated payload for entry '{name}'"))?;
+        entries.push(TypedEntry { name, shape, dtype, bytes });
+    }
+    Ok((cfg, entries))
+}
+
+/// JSON descriptor of one quantized linear (grid + shape — everything
+/// `from_packed` needs besides the payload planes). Shared with the VLM
+/// container writer so both headers stay schema-identical for
+/// [`qlinears_from_entries`].
+pub(crate) fn qlinear_to_json(q: &QuantizedLinear) -> Json {
+    Json::obj()
+        .with("bits", Json::Num(q.grid.bits as f64))
+        .with("group_size", Json::Num(q.grid.group_size as f64))
+        .with("out", Json::Num(q.out_features as f64))
+        .with("in", Json::Num(q.in_features as f64))
+}
+
+fn qlinear_meta_from_json(j: &Json) -> Result<(QuantGrid, usize, usize)> {
+    let get = |k: &str| -> Result<usize> {
+        j.get(k)
+            .and_then(|x| x.as_usize())
+            .with_context(|| format!("linear meta missing '{k}'"))
+    };
+    let grid = QuantGrid::new(get("bits")? as u32, get("group_size")?);
+    Ok((grid, get("out")?, get("in")?))
+}
+
+/// The three payload entries of one quantized linear (borrowed — the
+/// writer streams them, no copies).
+fn push_qlinear_entries<'a>(name: &str, q: &'a QuantizedLinear, out: &mut Vec<EntryRef<'a>>) {
+    out.push(EntryRef {
+        name: format!("{name}.packed"),
+        shape: vec![q.out_features, q.packed_cols()],
+        payload: PayloadRef::U8(&q.packed),
+    });
+    let ng = q.n_groups();
+    out.push(EntryRef {
+        name: format!("{name}.scales"),
+        shape: vec![q.out_features, ng],
+        payload: PayloadRef::F32(&q.scales),
+    });
+    out.push(EntryRef {
+        name: format!("{name}.zeros"),
+        shape: vec![q.out_features, ng],
+        payload: PayloadRef::F32(&q.zeros),
+    });
+}
+
+/// Rebuild the quantized linears described by `linears_json` from an
+/// entry map (shared by the LM and VLM loaders).
+pub(crate) fn qlinears_from_entries(
+    linears_json: &Json,
+    entries: &mut HashMap<String, TypedEntry>,
+) -> Result<HashMap<String, QuantizedLinear>> {
+    let obj = linears_json
+        .as_obj()
+        .context("quantized container: 'linears' is not an object")?;
+    let mut qlinears = HashMap::new();
+    for (name, meta) in obj {
+        let (grid, out_f, in_f) = qlinear_meta_from_json(meta)
+            .with_context(|| format!("linear '{name}'"))?;
+        let packed = entries
+            .remove(&format!("{name}.packed"))
+            .with_context(|| format!("missing packed levels for '{name}'"))?;
+        anyhow::ensure!(
+            packed.dtype == DType::U8,
+            "'{name}.packed' must be a u8 plane"
+        );
+        let scales = entries
+            .remove(&format!("{name}.scales"))
+            .with_context(|| format!("missing scales for '{name}'"))?
+            .into_f32()?;
+        let zeros = entries
+            .remove(&format!("{name}.zeros"))
+            .with_context(|| format!("missing zeros for '{name}'"))?
+            .into_f32()?;
+        let q = QuantizedLinear::from_packed(packed.bytes, grid, out_f, in_f, scales, zeros)
+            .with_context(|| format!("linear '{name}'"))?;
+        qlinears.insert(name.clone(), q);
+    }
+    Ok(qlinears)
+}
+
+/// Fill a skeleton's named tensor from an f32 entry.
+fn fill_skeleton_tensor(dst: &mut Tensor, name: &str, entry: TypedEntry) -> Result<()> {
+    anyhow::ensure!(
+        dst.shape() == entry.shape.as_slice(),
+        "tensor '{name}' shape {:?} != expected {:?}",
+        entry.shape,
+        dst.shape()
+    );
+    let data = entry.into_f32()?;
+    dst.data_mut().copy_from_slice(&data);
+    Ok(())
+}
+
+/// The shared tail of the quantized-container loaders ([`load_qlm`] and
+/// `vlm::io::load_qvlm`): fill every skeleton tensor from the leftover
+/// entries, validate the linears against the config, and reject stray
+/// entries — one body, so a validation fix cannot land in only one
+/// container flavour.
+pub(crate) fn fill_and_validate(
+    mut by_name: HashMap<String, TypedEntry>,
+    skeleton_tensors: Vec<(String, &mut Tensor)>,
+    qlinears: &HashMap<String, QuantizedLinear>,
+    linear_names: &[String],
+    dims_of: impl Fn(&str) -> Option<(usize, usize)>,
+) -> Result<()> {
+    for (name, dst) in skeleton_tensors {
+        let entry = by_name
+            .remove(&name)
+            .with_context(|| format!("missing skeleton tensor '{name}'"))?;
+        fill_skeleton_tensor(dst, &name, entry)?;
+    }
+    check_linears_against_config(qlinears, linear_names, dims_of)?;
+    if let Some(stray) = by_name.keys().next() {
+        bail!("unexpected entry '{stray}' in quantized container");
+    }
+    Ok(())
+}
+
+/// Write one quantized-model container: `{kind, config, linears}` JSON
+/// header + skeleton f32 entries + per-linear payload planes. The one
+/// writer body behind [`save_qlm`] and `vlm::io::save_qvlm`, so the two
+/// container flavours cannot drift.
+pub(crate) fn write_qcontainer(
+    path: &Path,
+    magic: &[u8; 8],
+    kind: &str,
+    config_json: Json,
+    skeleton_tensors: &[(String, &Tensor)],
+    qlinears: &HashMap<String, QuantizedLinear>,
+) -> Result<()> {
+    let mut linears_json = Json::obj();
+    let mut names: Vec<&String> = qlinears.keys().collect();
+    names.sort();
+    for name in &names {
+        linears_json = linears_json.with(name, qlinear_to_json(&qlinears[*name]));
+    }
+    let header = Json::obj()
+        .with("kind", Json::Str(kind.into()))
+        .with("config", config_json)
+        .with("linears", linears_json);
+    let mut entries: Vec<EntryRef> = Vec::new();
+    for (name, t) in skeleton_tensors {
+        entries.push(EntryRef {
+            name: name.clone(),
+            shape: t.shape().to_vec(),
+            payload: PayloadRef::F32(t.data()),
+        });
+    }
+    for name in names {
+        push_qlinear_entries(name, &qlinears[name], &mut entries);
+    }
+    write_container_typed(path, magic, &header.dump(), &entries)
+}
+
+/// Read one quantized-model container back: the config JSON, the rebuilt
+/// linears, and the remaining (skeleton) entries keyed by name. The one
+/// reader body behind [`load_qlm`] and `vlm::io::load_qvlm`.
+pub(crate) fn read_qcontainer(
+    path: &Path,
+    magic: &[u8; 8],
+) -> Result<(Json, HashMap<String, QuantizedLinear>, HashMap<String, TypedEntry>)> {
+    let (header, entries) = read_container_typed(path, magic)?;
+    let cfg = header
+        .get("config")
+        .context("header missing 'config'")?
+        .clone();
+    let mut by_name: HashMap<String, TypedEntry> = HashMap::new();
+    for e in entries {
+        // last-wins collapsing would let a corrupt container shadow a
+        // real payload silently — duplicates are an error
+        anyhow::ensure!(
+            !by_name.contains_key(&e.name),
+            "duplicate entry '{}' in quantized container",
+            e.name
+        );
+        by_name.insert(e.name.clone(), e);
+    }
+    let qlinears = qlinears_from_entries(
+        header.get("linears").context("header missing 'linears'")?,
+        &mut by_name,
+    )?;
+    Ok((cfg, qlinears, by_name))
+}
+
+/// Validate the rebuilt linears against what the config implies — every
+/// declared linear must exist with exactly the dims `dims_of` derives
+/// from the config, and the container must declare *nothing beyond* the
+/// config's linear set (an undeclared extra like a bogus `lm.head` on a
+/// tied-head model would silently reroute the forward path). A header
+/// that is self-consistent but wrong for the model therefore errors at
+/// load time instead of panicking — or silently misbehaving — at the
+/// first forward.
+pub(crate) fn check_linears_against_config(
+    qlinears: &HashMap<String, QuantizedLinear>,
+    linear_names: &[String],
+    dims_of: impl Fn(&str) -> Option<(usize, usize)>,
+) -> Result<()> {
+    for name in linear_names {
+        let q = qlinears
+            .get(name)
+            .with_context(|| format!("missing quantized layer '{name}'"))?;
+        let (out_f, in_f) = dims_of(name)
+            .with_context(|| format!("config derives no dims for linear '{name}'"))?;
+        anyhow::ensure!(
+            (q.out_features, q.in_features) == (out_f, in_f),
+            "linear '{name}' is {}x{} in the container but the config implies {}x{}",
+            q.out_features,
+            q.in_features,
+            out_f,
+            in_f
+        );
+    }
+    if qlinears.len() != linear_names.len() {
+        let extra = qlinears
+            .keys()
+            .find(|k| !linear_names.contains(k))
+            .map(String::as_str)
+            .unwrap_or("?");
+        bail!(
+            "container declares {} linears but the config expects {} (e.g. extra '{extra}')",
+            qlinears.len(),
+            linear_names.len()
+        );
+    }
+    Ok(())
+}
+
+/// Save a quantized LM as a `.rpiq` container: nibble-packed levels + group
+/// params per linear, fp32 skeleton, config + per-linear grid metadata in
+/// the JSON header.
+pub fn save_qlm(qlm: &QuantizedLm, path: &Path) -> Result<()> {
+    write_qcontainer(
+        path,
+        QLM_MAGIC,
+        "qlm",
+        config_to_json(&qlm.skeleton.config),
+        &qlm.skeleton.named_tensors(),
+        &qlm.qlinears,
+    )
+}
+
+/// Load a quantized LM from a `.rpiq` container. No fp32 linear is ever
+/// materialized; the loaded model's forward is bit-identical to the model
+/// that was saved.
+pub fn load_qlm(path: &Path) -> Result<QuantizedLm> {
+    let (cfg_json, qlinears, by_name) = read_qcontainer(path, QLM_MAGIC)?;
+    let cfg = config_from_json(&cfg_json)?;
+    let mut skeleton = LmSkeleton::zeros(&cfg);
+    fill_and_validate(
+        by_name,
+        skeleton.named_tensors_mut(),
+        &qlinears,
+        &LmWeights::linear_names(&cfg),
+        |name| LmWeights::linear_dims(&cfg, name),
+    )?;
+    Ok(QuantizedLm::new(skeleton, qlinears))
+}
+
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
@@ -204,6 +680,83 @@ mod tests {
         let path = dir.join("junk.ckpt");
         std::fs::write(&path, b"definitely not a checkpoint").unwrap();
         assert!(load_lm(&path).is_err());
+        assert!(load_qlm(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn qlm_roundtrip_is_bit_identical() {
+        // The quantized container's contract: packed levels byte-for-byte,
+        // group params and skeleton f32 bit-for-bit, forward logits
+        // bit-identical to the saved model's.
+        let mut cfg = ModelConfig::test_tiny(40);
+        cfg.tied_head = false; // exercise the quantized lm.head path
+        let mut rng = Pcg64::seeded(402);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let qlm = crate::model::QuantizedLm::quantize_rtn(
+            w,
+            crate::quant::QuantGrid::new(4, 8),
+        );
+        let dir = std::env::temp_dir().join("rpiq_qio_test");
+        let path = dir.join("tiny.rpiq");
+        save_qlm(&qlm, &path).unwrap();
+        let loaded = load_qlm(&path).unwrap();
+        assert_eq!(loaded.skeleton.config, qlm.skeleton.config);
+        assert_eq!(loaded.qlinears.len(), qlm.qlinears.len());
+        for (name, q) in &qlm.qlinears {
+            let l = &loaded.qlinears[name];
+            assert_eq!(q.packed, l.packed, "{name} packed");
+            assert_eq!(q.scales, l.scales, "{name} scales");
+            assert_eq!(q.zeros, l.zeros, "{name} zeros");
+            assert_eq!(q.grid, l.grid, "{name} grid");
+        }
+        assert_eq!(loaded.deploy_bytes(), qlm.deploy_bytes());
+        let tokens: Vec<u32> = (0..16).map(|i| (i * 7) % 40).collect();
+        let a = qlm.forward(&tokens, 2, 8);
+        let b = loaded.forward(&tokens, 2, 8);
+        assert_eq!(a.data(), b.data(), "loaded forward must be bit-identical");
+        // an fp checkpoint must not load as a quantized one (and vice versa)
+        assert!(load_lm(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loader_rejects_dim_mismatched_linears() {
+        // A container that is self-consistent but disagrees with the
+        // config must error at load time, not panic at the first forward.
+        let grid = crate::quant::QuantGrid::new(4, 8);
+        let mut qlinears = HashMap::new();
+        qlinears.insert(
+            "lm.layer0.attn.q".to_string(),
+            crate::quant::QuantizedLinear::empty(grid, 8, 8),
+        );
+        let names = vec!["lm.layer0.attn.q".to_string()];
+        assert!(check_linears_against_config(&qlinears, &names, |_| Some((8, 8))).is_ok());
+        let err = check_linears_against_config(&qlinears, &names, |_| Some((8, 16)))
+            .unwrap_err();
+        assert!(err.to_string().contains("implies"), "{err}");
+        let missing = vec!["lm.layer1.attn.q".to_string()];
+        let err = check_linears_against_config(&qlinears, &missing, |_| Some((8, 8)))
+            .unwrap_err();
+        assert!(err.to_string().contains("missing quantized layer"), "{err:#}");
+    }
+
+    #[test]
+    fn qlm_truncated_payload_rejected() {
+        let cfg = ModelConfig::test_tiny(24);
+        let mut rng = Pcg64::seeded(403);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let qlm = crate::model::QuantizedLm::quantize_rtn(
+            w,
+            crate::quant::QuantGrid::new(4, 8),
+        );
+        let dir = std::env::temp_dir().join("rpiq_qio_trunc");
+        let path = dir.join("t.rpiq");
+        save_qlm(&qlm, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        let err = load_qlm(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

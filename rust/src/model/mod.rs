@@ -17,5 +17,5 @@ pub mod weights;
 
 pub use config::{Activation, ModelConfig};
 pub use forward::{lm_forward, lm_loss, ActivationTap, FwdRecord};
-pub use quantized::{QuantizedLm, WIDE_GROUP_ROWS};
-pub use weights::LmWeights;
+pub use quantized::{QuantizedLm, RESIDENT_TAG, WIDE_GROUP_ROWS};
+pub use weights::{LayerNorms, LmSkeleton, LmWeights};

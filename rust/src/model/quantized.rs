@@ -1,14 +1,23 @@
 //! Quantized LM: the deployment form where every linear layer is a
-//! [`QuantizedLinear`] and the forward path runs fused dequant-matmul —
-//! the Rust mirror of the Pallas `quant_matmul` kernel (numerics are
-//! cross-checked against the PJRT artifacts in the integration tests).
+//! nibble-resident [`QuantizedLinear`] and everything else lives in a
+//! [`LmSkeleton`] — no fp32 linear survives quantization, so the resident
+//! footprint *is* the paper's "Mem" claim rather than an accounting of it.
+//! The forward path runs fused unpack→dequant→matmul — the Rust mirror of
+//! the Pallas `quant_matmul` kernel (numerics are cross-checked against
+//! the PJRT artifacts in the integration tests).
 
-use super::forward::embed;
+use super::forward::embed_rows;
 use super::ops::{act_fwd, attention_fwd, layernorm_fwd, linear_fwd};
-use super::weights::LmWeights;
+use super::weights::{LmSkeleton, LmWeights};
+use crate::metrics::MemoryLedger;
 use crate::quant::QuantizedLinear;
 use crate::tensor::Tensor;
 use std::collections::HashMap;
+
+/// Ledger tag under which a deployed model's resident bytes (packed
+/// levels + group params + skeleton) are registered — the counterpart of
+/// the transient per-lane activation tags the serve loop uses.
+pub const RESIDENT_TAG: &str = "model_resident";
 
 /// Equal-shape groups wider than this many sequences are sharded into
 /// chunked fused forwards that fan out across the global pool (see
@@ -60,55 +69,80 @@ where
     out.into_iter().map(|o| o.expect("item answered")).collect()
 }
 
-/// A model whose linears are quantized; everything else (embeddings,
-/// LayerNorm) stays fp32, matching standard PTQ deployments.
+/// A model whose linears are quantized (nibble-packed); everything else
+/// (embeddings, LayerNorm) stays fp32 in the [`LmSkeleton`], matching
+/// standard PTQ deployments — but unlike the pre-refactor code, no unused
+/// fp32 linear is kept alive.
 pub struct QuantizedLm {
-    /// fp32 skeleton (embeddings, norms, config; linears unused).
-    pub base: LmWeights,
+    /// fp32 residue: embeddings, norms, config — no linears.
+    pub skeleton: LmSkeleton,
     /// canonical layer name → quantized weights.
     pub qlinears: HashMap<String, QuantizedLinear>,
 }
 
 impl QuantizedLm {
-    /// Assemble from a skeleton and per-layer quantized matrices. Every
-    /// linear of the model must be present.
-    pub fn new(base: LmWeights, qlinears: HashMap<String, QuantizedLinear>) -> Self {
-        for (name, _) in base.linears() {
+    /// Assemble from a deployment skeleton and per-layer quantized
+    /// matrices. Every linear the config declares must be present.
+    pub fn new(skeleton: LmSkeleton, qlinears: HashMap<String, QuantizedLinear>) -> Self {
+        for name in skeleton.linear_names() {
             assert!(qlinears.contains_key(&name), "missing quantized layer {name}");
         }
-        QuantizedLm { base, qlinears }
+        QuantizedLm { skeleton, qlinears }
+    }
+
+    /// Assemble from full training weights: extracts the skeleton and
+    /// *drops* the fp32 linears (the caller hands over ownership — this is
+    /// the release point of the 60–75% resident reduction).
+    pub fn from_weights(w: LmWeights, qlinears: HashMap<String, QuantizedLinear>) -> Self {
+        Self::new(LmSkeleton::from_weights(&w), qlinears)
+    }
+
+    /// The model config (lives in the skeleton).
+    pub fn config(&self) -> &super::config::ModelConfig {
+        &self.skeleton.config
     }
 
     /// Round-to-nearest quantize every linear of `w` onto `grid` — the
     /// calibration-free baseline, and the scaffolding the serve tests and
-    /// benches build their models with.
+    /// benches build their models with. Consumes `w`; the fp32 linears die
+    /// here.
     pub fn quantize_rtn(w: LmWeights, grid: crate::quant::QuantGrid) -> Self {
         let mut qlinears = HashMap::new();
         for (name, t) in w.linears() {
             qlinears.insert(name, QuantizedLinear::quantize_rtn(t, grid));
         }
-        Self::new(w, qlinears)
+        Self::from_weights(w, qlinears)
     }
 
-    /// Deployment weight bytes (packed levels + group params + fp32
-    /// residue: embeddings and norms) — the "Mem (GB)" quantity of
-    /// Tables 1–2 at our scale.
+    /// Actual resident deployment bytes: packed levels + group params of
+    /// every quantized linear, plus the fp32 skeleton (embeddings, norms)
+    /// — the "Mem (GB)" quantity of Tables 1–2 at our scale, and exactly
+    /// what [`Self::register_resident`] books into a ledger.
     pub fn deploy_bytes(&self) -> usize {
         let q: usize = self.qlinears.values().map(|q| q.nbytes()).sum();
-        let fp_resident: usize = self
-            .base
-            .named_tensors()
-            .iter()
-            .filter(|(n, _)| !self.qlinears.contains_key(n.as_str()))
-            .map(|(_, t)| t.nbytes())
-            .sum();
-        q + fp_resident
+        q + self.skeleton.nbytes()
+    }
+
+    /// Book this model's resident bytes into `ledger` under
+    /// [`RESIDENT_TAG`], component by component (each packed linear, then
+    /// the skeleton), so ledger-observed live bytes equal
+    /// [`Self::deploy_bytes`] exactly.
+    pub fn register_resident(&self, ledger: &MemoryLedger) {
+        account_resident(ledger, &self.qlinears, self.skeleton.nbytes(), true);
+    }
+
+    /// Release the bytes booked by [`Self::register_resident`].
+    pub fn release_resident(&self, ledger: &MemoryLedger) {
+        account_resident(ledger, &self.qlinears, self.skeleton.nbytes(), false);
     }
 
     /// Fused dequant-matmul: `y = x · deq(W)ᵀ` with only `O(K)` transient
     /// state per worker (one dequantized weight row at a time, reused
     /// across every activation row of the shard) — structurally the Pallas
-    /// kernel's schedule with a (1 × K) weight tile.
+    /// kernel's schedule with a (1 × K) weight tile. The weight row is
+    /// unpacked from nibbles *inside* the same pass that dequantizes it
+    /// ([`QuantizedLinear::deq_row_into`]); no byte-per-level copy of the
+    /// matrix ever exists.
     ///
     /// Parallelism: activation rows are sharded across the global pool
     /// (`crate::exec`), each worker owning a disjoint `&mut` row chunk of
@@ -124,7 +158,9 @@ impl QuantizedLm {
     /// loop re-converted each u8 level `N` times and ran 0.81× the speed
     /// of materialize-then-matmul; hoisting the row dequantization out of
     /// the activation loop amortizes the conversion `N`-fold and removes
-    /// the `O(N·K)` materialization of the naive two-step path.
+    /// the `O(N·K)` materialization of the naive two-step path. The nibble
+    /// unpack rides in that same amortized pass (see the `qmatmul` arm of
+    /// `benches/quantize.rs` for the threads × sizes evidence).
     pub fn qmatmul(x: &Tensor, q: &QuantizedLinear) -> Tensor {
         let (n, in_f) = (x.rows(), x.cols());
         assert_eq!(in_f, q.in_features);
@@ -172,11 +208,11 @@ impl QuantizedLm {
 
     /// Forward pass: tokens → logits, all linears via [`Self::qmatmul`].
     pub fn forward(&self, tokens: &[u32], batch: usize, seq: usize) -> Tensor {
-        let w = &self.base;
-        let cfg = &w.config;
+        let s = &self.skeleton;
+        let cfg = &s.config;
         let ql = |name: String| &self.qlinears[&name];
-        let mut x = embed(w, tokens, batch, seq);
-        for (li, l) in w.layers.iter().enumerate() {
+        let mut x = embed_rows(&s.tok_emb, &s.pos_emb, cfg.seq_len, tokens, batch, seq);
+        for (li, l) in s.layers.iter().enumerate() {
             let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
             let q = Self::qmatmul(&ln1, ql(format!("lm.layer{li}.attn.q")));
             let k = Self::qmatmul(&ln1, ql(format!("lm.layer{li}.attn.k")));
@@ -192,40 +228,58 @@ impl QuantizedLm {
             let down = Self::qmatmul(&up, ql(format!("lm.layer{li}.mlp.down")));
             x.add_assign(&down);
         }
-        let (lnf, _, _) = layernorm_fwd(&x, &w.lnf_g, &w.lnf_b);
+        let (lnf, _, _) = layernorm_fwd(&x, &s.lnf_g, &s.lnf_b);
         if self.qlinears.contains_key("lm.head") {
             Self::qmatmul(&lnf, &self.qlinears["lm.head"])
         } else {
             // tied head stays fp32 (it is the embedding)
-            linear_fwd(&lnf, w.head_matrix())
+            linear_fwd(&lnf, &s.tok_emb)
         }
     }
+}
+
+/// The one resident-accounting body behind
+/// [`QuantizedLm::register_resident`]/[`QuantizedLm::release_resident`]
+/// and the `QuantizedVlm` pair: book (or release) each packed linear's
+/// bytes and the skeleton's bytes under [`RESIDENT_TAG`]. Keeping
+/// alloc/free mirror-images of one loop is what the ledger-balance
+/// assertions in the serve and footprint suites rely on.
+pub(crate) fn account_resident(
+    ledger: &MemoryLedger,
+    qlinears: &HashMap<String, QuantizedLinear>,
+    skeleton_bytes: usize,
+    alloc: bool,
+) {
+    let mut book = |bytes: usize| {
+        if alloc {
+            ledger.alloc(RESIDENT_TAG, bytes);
+        } else {
+            ledger.free(RESIDENT_TAG, bytes);
+        }
+    };
+    for q in qlinears.values() {
+        book(q.nbytes());
+    }
+    book(skeleton_bytes);
 }
 
 /// Activation rows `[i0, i0 + ychunk.len()/out_f)` of the fused
 /// dequant-matmul, written into `ychunk`. Shared by the sequential and
 /// sharded paths of [`QuantizedLm::qmatmul`] so both run identical f32
-/// operations per output element.
-fn qmatmul_rows(xd: &[f32], q: &QuantizedLinear, ychunk: &mut [f32], i0: usize) {
+/// operations per output element. Each weight row is unpacked-and-
+/// dequantized straight out of the packed buffer into `wbuf` once, then
+/// contracted against every activation row of the shard — per element this
+/// is the same `(q − zero)·scale` + `dot` float sequence the old
+/// byte-per-level kernel ran, so outputs are bit-identical to it (the
+/// unpacked oracle in the tests pins this).
+pub(crate) fn qmatmul_rows(xd: &[f32], q: &QuantizedLinear, ychunk: &mut [f32], i0: usize) {
     let in_f = q.in_features;
     let out_f = q.out_features;
-    let gs = q.grid.group_size;
-    let ng = q.n_groups();
     let rows = ychunk.len() / out_f;
-    let qw = &q.qweight;
     let mut wbuf = vec![0.0f32; in_f];
     for o in 0..out_f {
-        // dequantize row o once: w_c = (q_c − z_g)·s_g
-        let wrow = &qw[o * in_f..(o + 1) * in_f];
-        for g in 0..ng {
-            let c0 = g * gs;
-            let c1 = (c0 + gs).min(in_f);
-            let scale = q.scales[o * ng + g];
-            let zero = q.zeros[o * ng + g];
-            for c in c0..c1 {
-                wbuf[c] = (wrow[c] as f32 - zero) * scale;
-            }
-        }
+        // unpack + dequantize row o once: w_c = (q_c − z_g)·s_g
+        q.deq_row_into(o, &mut wbuf);
         // contract against every activation row of this shard
         for r in 0..rows {
             let i = i0 + r;
@@ -252,6 +306,59 @@ mod tests {
         (w, qlm, tokens)
     }
 
+    /// The pre-refactor byte-per-level kernel, kept as the bit-identity
+    /// oracle for the packed kernel: same group-hoisted dequant loop, but
+    /// reading a transient unpacked level buffer.
+    fn qmatmul_rows_unpacked_oracle(
+        xd: &[f32],
+        q: &QuantizedLinear,
+        ychunk: &mut [f32],
+        i0: usize,
+    ) {
+        let in_f = q.in_features;
+        let out_f = q.out_features;
+        let gs = q.grid.group_size;
+        let ng = q.n_groups();
+        let rows = ychunk.len() / out_f;
+        let qw = q.levels();
+        let mut wbuf = vec![0.0f32; in_f];
+        for o in 0..out_f {
+            let wrow = &qw[o * in_f..(o + 1) * in_f];
+            for g in 0..ng {
+                let c0 = g * gs;
+                let c1 = (c0 + gs).min(in_f);
+                let scale = q.scales[o * ng + g];
+                let zero = q.zeros[o * ng + g];
+                for c in c0..c1 {
+                    wbuf[c] = (wrow[c] as f32 - zero) * scale;
+                }
+            }
+            for r in 0..rows {
+                let i = i0 + r;
+                let xrow = &xd[i * in_f..(i + 1) * in_f];
+                ychunk[r * out_f + o] = crate::tensor::dot(xrow, &wbuf);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_kernel_bit_identical_to_unpacked_oracle() {
+        // The tentpole's core numeric contract: fusing the nibble unpack
+        // into the dequant pass changes no float operation. Odd widths
+        // (tail nibble) and 3/4/8-bit grids all pinned.
+        let mut rng = Pcg64::seeded(309);
+        for (bits, in_f) in [(3u32, 33usize), (4, 96), (4, 33), (8, 40)] {
+            let w = Tensor::randn(&[24, in_f], 0.5, &mut rng);
+            let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(bits, 16));
+            let x = Tensor::randn(&[7, in_f], 1.0, &mut rng);
+            let mut packed = Tensor::zeros(&[7, 24]);
+            qmatmul_rows(x.data(), &q, packed.data_mut(), 0);
+            let mut oracle = Tensor::zeros(&[7, 24]);
+            qmatmul_rows_unpacked_oracle(x.data(), &q, oracle.data_mut(), 0);
+            assert_eq!(packed.data(), oracle.data(), "bits={bits} in_f={in_f}");
+        }
+    }
+
     #[test]
     fn qmatmul_parallel_bit_identical_across_thread_counts() {
         let _guard = crate::exec::thread_target_test_lock();
@@ -262,13 +369,46 @@ mod tests {
         let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 16));
         let x = Tensor::randn(&[33, 96], 1.0, &mut rng);
         let mut reference = Tensor::zeros(&[33, 64]);
-        qmatmul_rows(x.data(), &q, reference.data_mut(), 0);
+        qmatmul_rows_unpacked_oracle(x.data(), &q, reference.data_mut(), 0);
         for threads in [1, 2, 4] {
             crate::exec::set_threads(threads);
             let y = QuantizedLm::qmatmul(&x, &q);
             assert_eq!(y.data(), reference.data(), "threads={threads}");
         }
         crate::exec::set_threads(before);
+    }
+
+    #[test]
+    fn packed_forward_and_qckpt_roundtrip_deterministic_across_thread_counts() {
+        // Acceptance shape of the tentpole, run by the CI determinism
+        // matrix at RPIQ_THREADS=1/2/8: the packed forward and a forward
+        // through a save→load round-trip of the `.rpiq` container are
+        // bit-identical to the single-thread reference at any thread
+        // count.
+        let _guard = crate::exec::thread_target_test_lock();
+        let before = crate::exec::num_threads();
+        let (_, qlm, tokens) = build_rtn_qlm(4);
+        let dir = std::env::temp_dir().join("rpiq_qlm_det");
+        let path = dir.join("m.rpiq");
+        crate::model::io::save_qlm(&qlm, &path).unwrap();
+        let loaded = crate::model::io::load_qlm(&path).unwrap();
+        crate::exec::set_threads(1);
+        let reference = qlm.forward(&tokens, 2, 8);
+        for threads in [1usize, 2, 8] {
+            crate::exec::set_threads(threads);
+            assert_eq!(
+                qlm.forward(&tokens, 2, 8).data(),
+                reference.data(),
+                "packed forward @ {threads} threads"
+            );
+            assert_eq!(
+                loaded.forward(&tokens, 2, 8).data(),
+                reference.data(),
+                "qckpt-loaded forward @ {threads} threads"
+            );
+        }
+        crate::exec::set_threads(before);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -324,6 +464,84 @@ mod tests {
         assert!(e4 > e8, "e4={e4} e8={e8}");
     }
 
+    /// A linear-dominated config (unlike `test_tiny`, which is
+    /// embedding-dominated): this is the shape class where the paper's
+    /// Tables 1/3 memory claims live, scaled to test size.
+    fn linear_heavy_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "test-linear-heavy".into(),
+            vocab: 32,
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 256,
+            seq_len: 16,
+            activation: crate::model::Activation::Gelu,
+            tied_head: true,
+        }
+    }
+
+    #[test]
+    fn deploy_bytes_equals_ledger_observed_resident_bytes() {
+        // Satellite contract: deploy_bytes() must report the *actual*
+        // resident bytes of the representation — cross-checked two ways:
+        // (1) against an independent from-shapes computation, and
+        // (2) against the ledger-observed live bytes after registration.
+        let cfg = linear_heavy_cfg();
+        let mut rng = Pcg64::seeded(311);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let gs = 32usize;
+        let qlm = QuantizedLm::quantize_rtn(w.clone(), QuantGrid::new(4, gs));
+        // independent expectation straight from the shapes
+        let mut expect = 0usize;
+        for (_, t) in w.linears() {
+            let (out, inf) = (t.rows(), t.cols());
+            let ng = inf.div_ceil(gs);
+            expect += out * inf.div_ceil(2) + 2 * out * ng * 4;
+        }
+        for (name, t) in w.named_tensors() {
+            if w.linear(&name).is_none() {
+                expect += t.nbytes();
+            }
+        }
+        assert_eq!(qlm.deploy_bytes(), expect);
+        // ledger-observed live bytes of the registered model
+        let ledger = MemoryLedger::new();
+        qlm.register_resident(&ledger);
+        assert_eq!(ledger.live_bytes() as usize, qlm.deploy_bytes());
+        assert_eq!(ledger.peak_for(RESIDENT_TAG) as usize, qlm.deploy_bytes());
+        qlm.release_resident(&ledger);
+        assert_eq!(ledger.live_bytes(), 0);
+    }
+
+    #[test]
+    fn quantization_releases_fp32_linears_and_peak_drops() {
+        // The tentpole's memory claim at our scale: quantizing hands the
+        // fp32 weights over and keeps only skeleton + packed linears
+        // resident — on a linear-dominated model the post-quantization
+        // resident footprint must sit at ≤45% of fp32 (the paper's 60–75%
+        // reduction band, Tables 3–4).
+        let cfg = linear_heavy_cfg();
+        let mut rng = Pcg64::seeded(312);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let fp_bytes: usize = w.named_tensors().iter().map(|(_, t)| t.nbytes()).sum();
+        let ledger = MemoryLedger::new();
+        ledger.alloc("fp32_model", fp_bytes);
+        let qlm = QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 32));
+        qlm.register_resident(&ledger);
+        // the fp32 model dies at quantization (ownership was consumed)
+        ledger.free("fp32_model", fp_bytes);
+        let resident = ledger.live_bytes() as usize;
+        assert_eq!(resident, qlm.deploy_bytes());
+        let frac = resident as f64 / fp_bytes as f64;
+        assert!(frac <= 0.45, "resident {resident} is {frac:.2}x fp32 {fp_bytes}");
+        assert!(frac >= 0.10, "suspiciously small ({frac:.3}x): accounting bug?");
+        // peak covers the coexistence window; the steady state is the drop
+        assert!(ledger.peak_bytes() as usize >= fp_bytes);
+        qlm.release_resident(&ledger);
+        assert_eq!(ledger.live_bytes(), 0);
+    }
+
     #[test]
     fn deploy_bytes_smaller_than_fp() {
         let (w, qlm, _) = build_rtn_qlm(4);
@@ -337,6 +555,6 @@ mod tests {
         let cfg = ModelConfig::test_tiny(32);
         let mut rng = Pcg64::seeded(303);
         let w = LmWeights::init(&cfg, &mut rng);
-        let _ = QuantizedLm::new(w, HashMap::new());
+        let _ = QuantizedLm::from_weights(w, HashMap::new());
     }
 }

@@ -194,6 +194,194 @@ impl LmWeights {
     pub fn n_params(&self) -> usize {
         self.named_tensors().iter().map(|(_, t)| t.len()).sum()
     }
+
+    /// Canonical names of every quantizable linear under this config —
+    /// what [`LmSkeleton::linear_names`] (and therefore the quantized
+    /// model's completeness check) enumerates without holding the fp32
+    /// matrices.
+    pub fn linear_names(config: &ModelConfig) -> Vec<String> {
+        let mut v = Vec::new();
+        for i in 0..config.n_layers {
+            for field in ["attn.q", "attn.k", "attn.v", "attn.out", "mlp.up", "mlp.down"] {
+                v.push(format!("lm.layer{i}.{field}"));
+            }
+        }
+        if !config.tied_head {
+            v.push("lm.head".into());
+        }
+        v
+    }
+
+    /// `(out, in)` dims `config` implies for a canonical linear name —
+    /// what the quantized-checkpoint loader validates container payloads
+    /// against. `None` for names outside the config's linear set.
+    pub fn linear_dims(config: &ModelConfig, name: &str) -> Option<(usize, usize)> {
+        if name == "lm.head" {
+            return (!config.tied_head).then_some((config.vocab, config.d_model));
+        }
+        let rest = name.strip_prefix("lm.layer")?;
+        let (idx, field) = rest.split_once('.')?;
+        if idx.parse::<usize>().ok()? >= config.n_layers {
+            return None;
+        }
+        match field {
+            "attn.q" | "attn.k" | "attn.v" | "attn.out" => {
+                Some((config.d_model, config.d_model))
+            }
+            "mlp.up" => Some((config.d_ff, config.d_model)),
+            "mlp.down" => Some((config.d_model, config.d_ff)),
+            _ => None,
+        }
+    }
+}
+
+/// One transformer block's non-linear parameters (LayerNorm affine pairs)
+/// — the per-layer slice of the deployment skeleton.
+#[derive(Clone, Debug)]
+pub struct LayerNorms {
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+}
+
+/// The deployment skeleton of an LM: everything a quantized forward needs
+/// *except* the linears — embeddings, LayerNorms, and the config. Holding
+/// a [`QuantizedLm`](super::QuantizedLm) keeps exactly `skeleton + packed
+/// linears` resident; the fp32 linear matrices are released at
+/// quantization time, which is where the paper's 60–75% peak-memory
+/// reduction actually comes from. (A tied head needs no extra tensor —
+/// the head matrix *is* `tok_emb`; an untied head lives in the quantized
+/// linears as `lm.head`.)
+#[derive(Clone, Debug)]
+pub struct LmSkeleton {
+    pub config: ModelConfig,
+    /// `[vocab, d_model]`
+    pub tok_emb: Tensor,
+    /// `[seq_len, d_model]`
+    pub pos_emb: Tensor,
+    pub layers: Vec<LayerNorms>,
+    pub lnf_g: Tensor,
+    pub lnf_b: Tensor,
+}
+
+impl LmSkeleton {
+    /// Extract the skeleton from full training weights (clones only the
+    /// non-linear tensors; the fp32 linears are left behind with `w`).
+    pub fn from_weights(w: &LmWeights) -> Self {
+        LmSkeleton {
+            config: w.config.clone(),
+            tok_emb: w.tok_emb.clone(),
+            pos_emb: w.pos_emb.clone(),
+            layers: w
+                .layers
+                .iter()
+                .map(|l| LayerNorms {
+                    ln1_g: l.ln1_g.clone(),
+                    ln1_b: l.ln1_b.clone(),
+                    ln2_g: l.ln2_g.clone(),
+                    ln2_b: l.ln2_b.clone(),
+                })
+                .collect(),
+            lnf_g: w.lnf_g.clone(),
+            lnf_b: w.lnf_b.clone(),
+        }
+    }
+
+    /// All-zero skeleton of the right shapes (checkpoint-load scaffold).
+    pub fn zeros(config: &ModelConfig) -> Self {
+        let d = config.d_model;
+        LmSkeleton {
+            tok_emb: Tensor::zeros(&[config.vocab, d]),
+            pos_emb: Tensor::zeros(&[config.seq_len, d]),
+            layers: (0..config.n_layers)
+                .map(|_| LayerNorms {
+                    ln1_g: Tensor::zeros(&[d]),
+                    ln1_b: Tensor::zeros(&[d]),
+                    ln2_g: Tensor::zeros(&[d]),
+                    ln2_b: Tensor::zeros(&[d]),
+                })
+                .collect(),
+            lnf_g: Tensor::zeros(&[d]),
+            lnf_b: Tensor::zeros(&[d]),
+            config: config.clone(),
+        }
+    }
+
+    /// Canonical names of the linears this skeleton's model must provide
+    /// in quantized form.
+    pub fn linear_names(&self) -> Vec<String> {
+        LmWeights::linear_names(&self.config)
+    }
+
+    /// `(out, in)` dims the config implies for a canonical linear name
+    /// (see [`LmWeights::linear_dims`]).
+    pub fn linear_dims(&self, name: &str) -> Option<(usize, usize)> {
+        LmWeights::linear_dims(&self.config, name)
+    }
+
+    /// Mutable counterpart of [`Self::named_tensors`], same names and
+    /// order — what the quantized-checkpoint loader fills.
+    pub fn named_tensors_mut(&mut self) -> Vec<(String, &mut Tensor)> {
+        let mut v: Vec<(String, &mut Tensor)> = vec![
+            ("tok_emb".to_string(), &mut self.tok_emb),
+            ("pos_emb".to_string(), &mut self.pos_emb),
+        ];
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            v.push((format!("lm.layer{i}.ln1.g"), &mut l.ln1_g));
+            v.push((format!("lm.layer{i}.ln1.b"), &mut l.ln1_b));
+            v.push((format!("lm.layer{i}.ln2.g"), &mut l.ln2_g));
+            v.push((format!("lm.layer{i}.ln2.b"), &mut l.ln2_b));
+        }
+        v.push(("lnf.g".to_string(), &mut self.lnf_g));
+        v.push(("lnf.b".to_string(), &mut self.lnf_b));
+        v
+    }
+
+    /// Every named tensor of the skeleton, using the same canonical names
+    /// the full checkpoint uses (so quantized containers share the codec).
+    pub fn named_tensors(&self) -> Vec<(String, &Tensor)> {
+        let mut v = vec![
+            ("tok_emb".to_string(), &self.tok_emb),
+            ("pos_emb".to_string(), &self.pos_emb),
+        ];
+        for (i, l) in self.layers.iter().enumerate() {
+            v.push((format!("lm.layer{i}.ln1.g"), &l.ln1_g));
+            v.push((format!("lm.layer{i}.ln1.b"), &l.ln1_b));
+            v.push((format!("lm.layer{i}.ln2.g"), &l.ln2_g));
+            v.push((format!("lm.layer{i}.ln2.b"), &l.ln2_b));
+        }
+        v.push(("lnf.g".to_string(), &self.lnf_g));
+        v.push(("lnf.b".to_string(), &self.lnf_b));
+        v
+    }
+
+    /// Mutable named access covering every tensor in [`Self::named_tensors`].
+    pub fn named_tensor_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        match name {
+            "tok_emb" => return Some(&mut self.tok_emb),
+            "pos_emb" => return Some(&mut self.pos_emb),
+            "lnf.g" => return Some(&mut self.lnf_g),
+            "lnf.b" => return Some(&mut self.lnf_b),
+            _ => {}
+        }
+        let rest = name.strip_prefix("lm.layer")?;
+        let (idx, field) = rest.split_once('.')?;
+        let l = self.layers.get_mut(idx.parse::<usize>().ok()?)?;
+        match field {
+            "ln1.g" => Some(&mut l.ln1_g),
+            "ln1.b" => Some(&mut l.ln1_b),
+            "ln2.g" => Some(&mut l.ln2_g),
+            "ln2.b" => Some(&mut l.ln2_b),
+            _ => None,
+        }
+    }
+
+    /// Resident bytes of the skeleton (the fp32 residue of a deployed
+    /// model: embeddings + norms).
+    pub fn nbytes(&self) -> usize {
+        self.named_tensors().iter().map(|(_, t)| t.nbytes()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +414,46 @@ mod tests {
         let mut rng = Pcg64::seeded(9);
         let w = LmWeights::init(&cfg, &mut rng);
         assert!(w.linears().iter().any(|(n, _)| n == "lm.head"));
+    }
+
+    #[test]
+    fn skeleton_is_exactly_the_nonlinear_residue() {
+        // skeleton names = full named tensor set minus the linears, and
+        // its byte count is the fp32 residue deploy_bytes() adds to the
+        // packed linears.
+        let mut cfg = ModelConfig::test_tiny(48);
+        cfg.tied_head = false;
+        let mut rng = Pcg64::seeded(11);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let skel = LmSkeleton::from_weights(&w);
+        let lin: std::collections::HashSet<String> =
+            w.linears().into_iter().map(|(n, _)| n).collect();
+        let full: Vec<String> = w
+            .named_tensors()
+            .iter()
+            .filter(|(n, _)| !lin.contains(n))
+            .map(|(n, _)| n.clone())
+            .collect();
+        let skel_names: Vec<String> =
+            skel.named_tensors().iter().map(|(n, _)| n.clone()).collect();
+        assert_eq!(full, skel_names);
+        assert_eq!(
+            skel.linear_names(),
+            w.linears().into_iter().map(|(n, _)| n).collect::<Vec<_>>()
+        );
+        let residue: usize = w
+            .named_tensors()
+            .iter()
+            .filter(|(n, _)| !lin.contains(n))
+            .map(|(_, t)| t.nbytes())
+            .sum();
+        assert_eq!(skel.nbytes(), residue);
+        // every skeleton tensor is reachable mutably by name
+        let mut z = LmSkeleton::zeros(&cfg);
+        for (n, t) in skel.named_tensors() {
+            let dst = z.named_tensor_mut(&n).unwrap_or_else(|| panic!("{n}"));
+            assert_eq!(dst.shape(), t.shape(), "{n}");
+        }
     }
 
     #[test]

@@ -20,8 +20,8 @@
 //!
 //! The column walk is sequential *per row* by construction, but rows never
 //! interact: row `r`'s group fits, rounding, and error feedback read and
-//! write only row `r` of `W`/`qweight`/`scales`/`zeros` (the Cholesky
-//! factor `U` is shared read-only). The walk therefore shards **output
+//! write only row `r` of `W`/the level buffer/`scales`/`zeros` (the
+//! Cholesky factor `U` is shared read-only). The walk therefore shards **output
 //! rows** across the global pool — each worker runs the complete
 //! multi-block walk over its own disjoint row chunk via the same
 //! [`gptq_walk_rows`] kernel the sequential path uses, so results are
@@ -76,8 +76,14 @@ pub fn gptq_quantize(
         .map_err(|e| anyhow::anyhow!("GPTQ Hessian factorization failed: {e}"))?;
     ledger.alloc("gptq_hinv", in_f * in_f * 8);
 
-    let mut q = QuantizedLinear::empty(grid, out_f, in_f);
-    let ng = q.n_groups();
+    // The walk mutates levels column-by-column, so it runs over a
+    // transient byte-per-level working buffer; the resident nibble-packed
+    // form is built once at the end (`QuantizedLinear::from_levels`).
+    let ng = grid.n_groups(in_f);
+    let mut levels = vec![0u8; out_f * in_f];
+    let mut scales = vec![1.0f32; out_f * ng];
+    let mut zeros = vec![0.0f32; out_f * ng];
+    ledger.alloc("gptq_levels", levels.len());
     let bs = cfg.block_size;
 
     // Rows are independent (see module docs): shard the complete walk
@@ -94,9 +100,9 @@ pub fn gptq_quantize(
     if shards <= 1 {
         gptq_walk_rows(
             w.data_mut(),
-            &mut q.qweight,
-            &mut q.scales,
-            &mut q.zeros,
+            &mut levels,
+            &mut scales,
+            &mut zeros,
             &mut row_loss,
             &u,
             grid,
@@ -106,9 +112,9 @@ pub fn gptq_quantize(
         let rows_per = out_f.div_ceil(shards);
         let u_ref = &u[..];
         let w_chunks = w.data_mut().chunks_mut(rows_per * in_f);
-        let q_chunks = q.qweight.chunks_mut(rows_per * in_f);
-        let s_chunks = q.scales.chunks_mut(rows_per * ng);
-        let z_chunks = q.zeros.chunks_mut(rows_per * ng);
+        let q_chunks = levels.chunks_mut(rows_per * in_f);
+        let s_chunks = scales.chunks_mut(rows_per * ng);
+        let z_chunks = zeros.chunks_mut(rows_per * ng);
         let l_chunks = row_loss.chunks_mut(rows_per);
         crate::exec::global().scope(|s| {
             for ((((wc, qc), sc), zc), lc) in
@@ -119,7 +125,9 @@ pub fn gptq_quantize(
         });
     }
     let greedy_loss: f64 = row_loss.iter().sum();
+    let q = QuantizedLinear::from_levels(grid, out_f, in_f, &levels, scales, zeros);
 
+    ledger.free("gptq_levels", levels.len());
     ledger.free("gptq_rowloss", out_f * 8);
     ledger.free("gptq_errblock", shards * bs * 4);
     ledger.free("gptq_hinv", in_f * in_f * 8);
@@ -313,7 +321,7 @@ mod tests {
             crate::exec::set_threads(threads);
             let ledger = MemoryLedger::new();
             let par = gptq_quantize(&w, &h, cfg, &ledger).unwrap();
-            assert_eq!(seq.q.qweight, par.q.qweight, "qweight @ {threads} threads");
+            assert_eq!(seq.q.packed, par.q.packed, "packed levels @ {threads} threads");
             assert_eq!(seq.q.scales, par.q.scales, "scales @ {threads} threads");
             assert_eq!(seq.q.zeros, par.q.zeros, "zeros @ {threads} threads");
             assert_eq!(

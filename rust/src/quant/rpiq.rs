@@ -215,7 +215,7 @@ pub fn rpiq_refine(
     // Y_q from the projected (deployable) weights.
     let mut y_q = matmul_a_bt(&inst.x, &q_cur.dequantize());
     let state_bytes =
-        b_cont.iter().map(|b| b.nbytes()).sum::<usize>() + y_q.nbytes() + 2 * q_init.qweight.len();
+        b_cont.iter().map(|b| b.nbytes()).sum::<usize>() + y_q.nbytes() + 2 * q_init.packed.len();
     ledger.alloc("rpiq_state", state_bytes);
 
     let gamma = |yq: &Tensor| inst.y_orig.sub(yq).frob_sq();
@@ -334,12 +334,13 @@ fn project_block_feedback(
             }
         });
     }
-    // Scatter the rounded levels into the deployment matrix (columns are a
-    // strided window of each qweight row, so the kernels write a compact
-    // per-block buffer instead).
+    // Scatter the rounded levels into the packed deployment matrix
+    // (columns are a strided nibble window of each packed row, so the
+    // kernels write a compact byte-per-level block buffer instead).
     for r in 0..out_f {
-        let base = r * q.in_features;
-        q.qweight[base + c0..base + c1].copy_from_slice(&levels[r * bc..(r + 1) * bc]);
+        for (j, &lv) in levels[r * bc..(r + 1) * bc].iter().enumerate() {
+            q.set_level(r, c0 + j, lv);
+        }
     }
     ledger.free("rpiq_project", scratch_bytes);
 }
@@ -528,7 +529,7 @@ mod tests {
         let out = rpiq_refine(&f.q1, &f.inst, &f.h, params, &MemoryLedger::new()).unwrap();
         assert!(!out.early_stopped);
         assert_eq!(out.iters_run, 5);
-        assert_eq!(out.q.qweight, f.q1.qweight);
+        assert_eq!(out.q.packed, f.q1.packed);
         let l0 = out.loss_trace[0];
         assert!(out.loss_trace.iter().all(|&l| (l - l0).abs() < 1e-9 * l0.max(1.0)));
     }
@@ -611,7 +612,7 @@ mod tests {
             crate::exec::set_threads(threads);
             let ledger = MemoryLedger::new();
             let par = rpiq_refine(&f.q1, &f.inst, &f.h, RpiqParams::default(), &ledger).unwrap();
-            assert_eq!(seq.q.qweight, par.q.qweight, "qweight @ {threads} threads");
+            assert_eq!(seq.q.packed, par.q.packed, "packed levels @ {threads} threads");
             assert_eq!(
                 bits(&seq.loss_trace),
                 bits(&par.loss_trace),

@@ -44,7 +44,9 @@ pub fn lm_fp_args(w: &LmWeights, tokens: &[u32]) -> Vec<Arg> {
 }
 
 fn qlinear_args(q: &crate::quant::QuantizedLinear, args: &mut Vec<Arg>) {
-    let levels: Vec<i32> = q.qweight.iter().map(|&b| b as i32).collect();
+    // The artifact entry takes byte-per-level i32 planes; unpack the
+    // resident nibble buffer transiently at marshalling time.
+    let levels: Vec<i32> = q.levels().iter().map(|&b| b as i32).collect();
     args.push(Arg::I32(levels, vec![q.out_features, q.in_features]));
     let ng = q.n_groups();
     args.push(Arg::F32(Tensor::from_vec(
@@ -59,11 +61,11 @@ fn qlinear_args(q: &crate::quant::QuantizedLinear, args: &mut Vec<Arg>) {
 
 /// quant-variant arguments: tokens followed by `qparam_order`.
 pub fn lm_q_args(qlm: &QuantizedLm, tokens: &[u32]) -> Vec<Arg> {
-    let w = &qlm.base;
+    let s = &qlm.skeleton;
     let mut args = vec![tokens_arg(tokens)];
-    args.push(Arg::F32(w.tok_emb.clone()));
-    args.push(Arg::F32(w.pos_emb.clone()));
-    for (i, l) in w.layers.iter().enumerate() {
+    args.push(Arg::F32(s.tok_emb.clone()));
+    args.push(Arg::F32(s.pos_emb.clone()));
+    for (i, l) in s.layers.iter().enumerate() {
         args.push(Arg::F32(l.ln1_g.clone()));
         args.push(Arg::F32(l.ln1_b.clone()));
         for field in ["attn.q", "attn.k", "attn.v", "attn.out"] {
@@ -74,9 +76,9 @@ pub fn lm_q_args(qlm: &QuantizedLm, tokens: &[u32]) -> Vec<Arg> {
         qlinear_args(&qlm.qlinears[&format!("lm.layer{i}.mlp.up")], &mut args);
         qlinear_args(&qlm.qlinears[&format!("lm.layer{i}.mlp.down")], &mut args);
     }
-    args.push(Arg::F32(w.lnf_g.clone()));
-    args.push(Arg::F32(w.lnf_b.clone()));
-    if w.head.is_some() {
+    args.push(Arg::F32(s.lnf_g.clone()));
+    args.push(Arg::F32(s.lnf_b.clone()));
+    if !s.config.tied_head {
         qlinear_args(&qlm.qlinears["lm.head"], &mut args);
     }
     args
@@ -110,7 +112,7 @@ mod tests {
         for (name, t) in w.linears() {
             ql.insert(name, QuantizedLinear::quantize_rtn(t, QuantGrid::new(4, 8)));
         }
-        let qlm = QuantizedLm::new(w, ql);
+        let qlm = QuantizedLm::from_weights(w, ql);
         let args = lm_q_args(&qlm, &[0; 8]);
         // 1 tokens + 2 emb + per layer (2 ln + 6 linears×3 + 2 ln) + 2 lnf
         assert_eq!(args.len(), 1 + 2 + cfg.n_layers * (4 + 18) + 2);

@@ -1,7 +1,9 @@
-//! VLM checkpoint container (same binary layout as the LM one, different
-//! magic; vision/cross tensors plus the embedded LM tensor set).
+//! VLM checkpoint containers (same binary layouts as the LM ones,
+//! different magics): the fp32 container carries vision/cross tensors plus
+//! the embedded LM tensor set; the quantized `.rpiq` container carries
+//! nibble-packed linears for all three towers plus the LM skeleton.
 
-use super::{VlmConfig, VlmWeights};
+use super::{QuantizedVlm, VlmConfig, VlmSkeleton, VlmWeights};
 use crate::jsonx::Json;
 use crate::model::io::{lm_config_from_json, lm_config_to_json, read_container, write_container};
 use crate::tensor::Tensor;
@@ -9,6 +11,8 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"RPIQVLM1";
+/// Magic of the quantized-VLM container.
+pub const QVLM_MAGIC: &[u8; 8] = b"RPIQQVL1";
 
 fn config_to_json(c: &VlmConfig) -> Json {
     Json::obj()
@@ -73,6 +77,39 @@ pub fn load_vlm(path: &Path) -> Result<VlmWeights> {
         dst.data_mut().copy_from_slice(&data);
     }
     Ok(w)
+}
+
+/// Save a quantized VLM as a `.rpiq` container (same frame as
+/// [`crate::model::io::save_qlm`] — one shared writer body; the header's
+/// `config` is the VLM config and the linears span vision/cross/lm).
+pub fn save_qvlm(qvlm: &QuantizedVlm, path: &Path) -> Result<()> {
+    crate::model::io::write_qcontainer(
+        path,
+        QVLM_MAGIC,
+        "qvlm",
+        config_to_json(&qvlm.skeleton.config),
+        &qvlm.skeleton.lm.named_tensors(),
+        &qvlm.qlinears,
+    )
+}
+
+/// Load a quantized VLM from a `.rpiq` container. No fp32 linear is ever
+/// materialized; the loaded model's forward is bit-identical to the model
+/// that was saved.
+pub fn load_qvlm(path: &Path) -> Result<QuantizedVlm> {
+    use crate::model::io::{fill_and_validate, read_qcontainer};
+    let (cfg_json, qlinears, by_name) = read_qcontainer(path, QVLM_MAGIC)?;
+    let cfg = config_from_json(&cfg_json)?;
+    let mut skeleton = VlmSkeleton::zeros(&cfg);
+    let names = skeleton.linear_names();
+    fill_and_validate(
+        by_name,
+        skeleton.lm.named_tensors_mut(),
+        &qlinears,
+        &names,
+        |name| cfg.linear_dims(name),
+    )?;
+    Ok(QuantizedVlm::new(skeleton, qlinears))
 }
 
 #[cfg(test)]

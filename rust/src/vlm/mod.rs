@@ -98,6 +98,48 @@ impl VlmConfig {
     pub fn text_len(&self) -> usize {
         self.lm.seq_len - self.n_patches
     }
+
+    /// Total parameter count a [`VlmWeights::init`] of this config holds —
+    /// lets deployment surfaces report the fp32 baseline without ever
+    /// materializing the fp32 weights (the `--qckpt` cold-start path).
+    pub fn n_params(&self) -> usize {
+        let dv = self.d_vision;
+        let vis = dv * self.patch_dim
+            + self.n_vision_blocks * (2 * dv * dv + dv * 2 * dv)
+            + self.d_cross * dv
+            + self.lm.d_model * self.d_cross;
+        vis + self.lm.n_params()
+    }
+
+    /// fp32 byte footprint of the full weights (Table 2's "Mem" baseline).
+    pub fn fp32_bytes(&self) -> usize {
+        self.n_params() * 4
+    }
+
+    /// `(out, in)` dims this config implies for a canonical linear name
+    /// (vision/cross towers here, LM names delegated) — the
+    /// quantized-checkpoint loader's validation source.
+    pub fn linear_dims(&self, name: &str) -> Option<(usize, usize)> {
+        let dv = self.d_vision;
+        match name {
+            "vision.patch_proj" => return Some((dv, self.patch_dim)),
+            "cross.vision_mlp.up" => return Some((self.d_cross, dv)),
+            "cross.vision_mlp.down" => return Some((self.lm.d_model, self.d_cross)),
+            _ => {}
+        }
+        if let Some(rest) = name.strip_prefix("vision.block") {
+            let (idx, field) = rest.split_once('.')?;
+            if idx.parse::<usize>().ok()? >= self.n_vision_blocks {
+                return None;
+            }
+            return match field {
+                "fc1" => Some((2 * dv, dv)),
+                "fc2" => Some((dv, 2 * dv)),
+                _ => None,
+            };
+        }
+        crate::model::LmWeights::linear_dims(&self.lm, name)
+    }
 }
 
 /// One residual vision MLP block.
@@ -182,6 +224,60 @@ impl VlmWeights {
             + self.cross_up.len()
             + self.cross_down.len();
         vis + self.lm.n_params()
+    }
+}
+
+/// The deployment skeleton of a VLM: the LM's skeleton plus the VLM
+/// config. Every vision/cross tower weight is a linear and therefore
+/// lives quantized — the VLM adds *no* fp32 residue of its own beyond the
+/// embedded LM's embeddings and norms.
+#[derive(Clone, Debug)]
+pub struct VlmSkeleton {
+    pub config: VlmConfig,
+    pub lm: crate::model::LmSkeleton,
+}
+
+impl VlmSkeleton {
+    /// Extract the skeleton from full training weights (clones only the
+    /// LM's non-linear tensors).
+    pub fn from_weights(w: &VlmWeights) -> Self {
+        VlmSkeleton {
+            config: w.config.clone(),
+            lm: crate::model::LmSkeleton::from_weights(&w.lm),
+        }
+    }
+
+    /// All-zero skeleton of the right shapes (checkpoint-load scaffold).
+    pub fn zeros(config: &VlmConfig) -> Self {
+        VlmSkeleton {
+            lm: crate::model::LmSkeleton::zeros(&config.lm),
+            config: config.clone(),
+        }
+    }
+
+    /// Canonical names of the linears this skeleton's model must provide
+    /// in quantized form (vision + cross + LM).
+    pub fn linear_names(&self) -> Vec<String> {
+        let mut v = vec!["vision.patch_proj".to_string()];
+        for i in 0..self.config.n_vision_blocks {
+            v.push(format!("vision.block{i}.fc1"));
+            v.push(format!("vision.block{i}.fc2"));
+        }
+        v.push("cross.vision_mlp.up".to_string());
+        v.push("cross.vision_mlp.down".to_string());
+        v.extend(crate::model::LmWeights::linear_names(&self.config.lm));
+        v
+    }
+
+    /// `(out, in)` dims the config implies for a canonical linear name
+    /// (see [`VlmConfig::linear_dims`]).
+    pub fn linear_dims(&self, name: &str) -> Option<(usize, usize)> {
+        self.config.linear_dims(name)
+    }
+
+    /// Resident fp32 bytes (the embedded LM skeleton).
+    pub fn nbytes(&self) -> usize {
+        self.lm.nbytes()
     }
 }
 
@@ -287,16 +383,39 @@ pub fn assemble_embeddings(
     text: &[u32],
     batch: usize,
 ) -> Tensor {
-    let p = w.config.n_patches;
+    assemble_embeddings_rows(
+        &w.lm.tok_emb,
+        &w.lm.pos_emb,
+        w.config.n_patches,
+        w.config.lm.seq_len,
+        img_tokens,
+        text,
+        batch,
+    )
+}
+
+/// The assembly kernel on bare tensors — shared by the fp path
+/// ([`assemble_embeddings`]) and the deployment skeleton's quantized
+/// forward, which holds no [`VlmWeights`].
+fn assemble_embeddings_rows(
+    tok_emb: &Tensor,
+    pos_emb: &Tensor,
+    n_patches: usize,
+    seq_cap: usize,
+    img_tokens: &Tensor,
+    text: &[u32],
+    batch: usize,
+) -> Tensor {
+    let p = n_patches;
     let t_len = text.len() / batch;
     let s = p + t_len;
-    let d = w.config.lm.d_model;
-    assert!(s <= w.config.lm.seq_len);
+    let d = tok_emb.cols();
+    assert!(s <= seq_cap);
     let mut x = Tensor::zeros(&[batch * s, d]);
     for b in 0..batch {
         for i in 0..p {
             let src = img_tokens.row(b * p + i);
-            let pos = w.lm.pos_emb.row(i);
+            let pos = pos_emb.row(i);
             let dst = x.row_mut(b * s + i);
             for j in 0..d {
                 dst[j] = src[j] + pos[j];
@@ -304,8 +423,8 @@ pub fn assemble_embeddings(
         }
         for i in 0..t_len {
             let tok = text[b * t_len + i] as usize;
-            let te = w.lm.tok_emb.row(tok);
-            let pe = w.lm.pos_emb.row(p + i);
+            let te = tok_emb.row(tok);
+            let pe = pos_emb.row(p + i);
             let dst = x.row_mut(b * s + p + i);
             for j in 0..d {
                 dst[j] = te[j] + pe[j];
@@ -428,57 +547,90 @@ pub fn vlm_forward_batch(w: &VlmWeights, pairs: &[(&Tensor, &[u32])]) -> Vec<Ten
     forward_pairs_with(pairs, w.config.n_patches, &f)
 }
 
-/// Quantized VLM: vision/cross/lm linears replaced per the CMDQ policy.
+/// Quantized VLM: vision/cross/lm linears replaced per the CMDQ policy,
+/// carried over a [`VlmSkeleton`] — quantizing a VLM releases every fp32
+/// linear of all three towers; only the LM's embeddings and norms stay
+/// fp32-resident.
 pub struct QuantizedVlm {
-    pub base: VlmWeights,
+    pub skeleton: VlmSkeleton,
     pub qlinears: HashMap<String, QuantizedLinear>,
 }
 
 impl QuantizedVlm {
-    pub fn new(base: VlmWeights, qlinears: HashMap<String, QuantizedLinear>) -> Self {
-        for (name, _) in base.linears() {
+    /// Assemble from a deployment skeleton and per-layer quantized
+    /// matrices. Every linear the config declares must be present.
+    pub fn new(skeleton: VlmSkeleton, qlinears: HashMap<String, QuantizedLinear>) -> Self {
+        for name in skeleton.linear_names() {
             assert!(qlinears.contains_key(&name), "missing quantized layer {name}");
         }
-        QuantizedVlm { base, qlinears }
+        QuantizedVlm { skeleton, qlinears }
+    }
+
+    /// Assemble from full training weights: extracts the skeleton and
+    /// *drops* the fp32 linears.
+    pub fn from_weights(w: VlmWeights, qlinears: HashMap<String, QuantizedLinear>) -> Self {
+        Self::new(VlmSkeleton::from_weights(&w), qlinears)
+    }
+
+    /// The VLM config (lives in the skeleton).
+    pub fn config(&self) -> &VlmConfig {
+        &self.skeleton.config
     }
 
     /// Round-to-nearest quantize every linear of `w` onto `grid` — the
     /// calibration-free baseline, and the scaffolding the serve tests and
-    /// benches build their models with.
+    /// benches build their models with. Consumes `w`; the fp32 linears die
+    /// here.
     pub fn quantize_rtn(w: VlmWeights, grid: crate::quant::QuantGrid) -> Self {
         let mut qlinears = HashMap::new();
         for (name, t) in w.linears() {
             qlinears.insert(name, QuantizedLinear::quantize_rtn(t, grid));
         }
-        Self::new(w, qlinears)
+        Self::from_weights(w, qlinears)
     }
 
     fn q(&self, name: &str) -> &QuantizedLinear {
         &self.qlinears[name]
     }
 
-    /// Deployment bytes (packed weights + params + fp32 residue).
+    /// Actual resident deployment bytes: packed levels + group params of
+    /// every quantized linear plus the fp32 skeleton (the LM's embeddings
+    /// and norms — the vision/cross towers are all-linear and keep no fp32
+    /// residue).
     pub fn deploy_bytes(&self) -> usize {
         let qn: usize = self.qlinears.values().map(|q| q.nbytes()).sum();
-        // fp residue: embeddings + norms of the LM
-        let lm_fp: usize = self
-            .base
-            .lm
-            .named_tensors()
-            .iter()
-            .filter(|(n, _)| !self.qlinears.contains_key(n.as_str()))
-            .map(|(_, t)| t.nbytes())
-            .sum();
-        qn + lm_fp
+        qn + self.skeleton.nbytes()
+    }
+
+    /// Book this model's resident bytes into `ledger` under
+    /// [`crate::model::RESIDENT_TAG`] (see
+    /// [`QuantizedLm::register_resident`]).
+    pub fn register_resident(&self, ledger: &crate::metrics::MemoryLedger) {
+        crate::model::quantized::account_resident(
+            ledger,
+            &self.qlinears,
+            self.skeleton.nbytes(),
+            true,
+        );
+    }
+
+    /// Release the bytes booked by [`Self::register_resident`].
+    pub fn release_resident(&self, ledger: &crate::metrics::MemoryLedger) {
+        crate::model::quantized::account_resident(
+            ledger,
+            &self.qlinears,
+            self.skeleton.nbytes(),
+            false,
+        );
     }
 
     /// Quantized forward (mirrors [`vlm_forward`]).
     pub fn forward(&self, patches: &Tensor, text: &[u32], batch: usize) -> Tensor {
-        let w = &self.base;
+        let cfg = &self.skeleton.config;
         let gelu_act = crate::model::Activation::Gelu;
         let proj = QuantizedLm::qmatmul(patches, self.q("vision.patch_proj"));
         let mut h = proj;
-        for i in 0..w.config.n_vision_blocks {
+        for i in 0..cfg.n_vision_blocks {
             let mid = act_fwd(
                 &QuantizedLm::qmatmul(&h, self.q(&format!("vision.block{i}.fc1"))),
                 gelu_act,
@@ -491,8 +643,17 @@ impl QuantizedVlm {
             gelu_act,
         );
         let img_tokens = QuantizedLm::qmatmul(&cross, self.q("cross.vision_mlp.down"));
-        let x = assemble_embeddings(w, &img_tokens, text, batch);
-        let s = w.config.n_patches + text.len() / batch;
+        let lm = &self.skeleton.lm;
+        let x = assemble_embeddings_rows(
+            &lm.tok_emb,
+            &lm.pos_emb,
+            cfg.n_patches,
+            cfg.lm.seq_len,
+            &img_tokens,
+            text,
+            batch,
+        );
+        let s = cfg.n_patches + text.len() / batch;
         self.lm_body(x, batch, s)
     }
 
@@ -501,11 +662,11 @@ impl QuantizedVlm {
     /// [`Self::forward`] on that pair alone; see [`forward_pairs_with`].
     pub fn forward_batch(&self, pairs: &[(&Tensor, &[u32])]) -> Vec<Tensor> {
         let f = |p: &Tensor, t: &[u32], b: usize| self.forward(p, t, b);
-        forward_pairs_with(pairs, self.base.config.n_patches, &f)
+        forward_pairs_with(pairs, self.skeleton.config.n_patches, &f)
     }
 
     fn lm_body(&self, mut x: Tensor, batch: usize, seq: usize) -> Tensor {
-        let lm = &self.base.lm;
+        let lm = &self.skeleton.lm;
         let cfg = &lm.config;
         for (li, l) in lm.layers.iter().enumerate() {
             let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
@@ -525,7 +686,8 @@ impl QuantizedVlm {
         if self.qlinears.contains_key("lm.head") {
             QuantizedLm::qmatmul(&lnf, self.q("lm.head"))
         } else {
-            linear_fwd(&lnf, lm.head_matrix())
+            // tied head stays fp32 (it is the embedding)
+            linear_fwd(&lnf, &lm.tok_emb)
         }
     }
 }
@@ -685,7 +847,34 @@ mod tests {
     fn deploy_bytes_compresses() {
         let (w, _, _, _) = tiny();
         let fp_bytes = w.n_params() * 4;
+        assert_eq!(fp_bytes, w.config.fp32_bytes(), "config-derived count matches weights");
         let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8));
         assert!(qvlm.deploy_bytes() < fp_bytes);
+    }
+
+    #[test]
+    fn quantized_vlm_qckpt_roundtrip_bit_identical() {
+        // save_qvlm → load_qvlm restores packed levels, params, and the
+        // skeleton exactly; forwards are bit-identical.
+        let (w, patches, text, batch) = tiny();
+        let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8));
+        let dir = std::env::temp_dir().join("rpiq_qvlm_io");
+        let path = dir.join("v.rpiq");
+        crate::vlm::io::save_qvlm(&qvlm, &path).unwrap();
+        let loaded = crate::vlm::io::load_qvlm(&path).unwrap();
+        assert_eq!(loaded.skeleton.config, qvlm.skeleton.config);
+        for (name, q) in &qvlm.qlinears {
+            let l = &loaded.qlinears[name];
+            assert_eq!(q.packed, l.packed, "{name}");
+            assert_eq!(q.scales, l.scales, "{name}");
+            assert_eq!(q.zeros, l.zeros, "{name}");
+        }
+        assert_eq!(loaded.deploy_bytes(), qvlm.deploy_bytes());
+        let a = qvlm.forward(&patches, &text, batch);
+        let b = loaded.forward(&patches, &text, batch);
+        assert_eq!(a.data(), b.data(), "loaded forward must be bit-identical");
+        // the fp32 VLM loader must reject the quantized container
+        assert!(crate::vlm::io::load_vlm(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

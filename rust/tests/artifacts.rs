@@ -60,7 +60,7 @@ fn pallas_qmatmul_artifact_matches_rust_qmatmul() {
     let x = Tensor::randn(&[m, k], 1.0, &mut rng);
     let w = Tensor::randn(&[n, k], 0.5, &mut rng);
     let q = rpiq::quant::QuantizedLinear::quantize_rtn(&w, rpiq::quant::QuantGrid::new(4, gs));
-    let levels: Vec<i32> = q.qweight.iter().map(|&b| b as i32).collect();
+    let levels: Vec<i32> = q.levels().iter().map(|&b| b as i32).collect();
     let ng = q.n_groups();
     let out = eng
         .run(

@@ -11,7 +11,7 @@ use rpiq::coordinator::{
 use rpiq::data::corpus::Lexicon;
 use rpiq::data::Tokenizer;
 use rpiq::exec::Channel;
-use rpiq::model::{LmWeights, ModelConfig, QuantizedLm};
+use rpiq::model::{Activation, LmWeights, ModelConfig, QuantizedLm, RESIDENT_TAG};
 use rpiq::quant::QuantGrid;
 use rpiq::rng::Pcg64;
 use rpiq::tensor::Tensor;
@@ -138,10 +138,99 @@ fn shutdown_drains_all_pending_across_every_lane() {
 }
 
 #[test]
+fn mixed_mode_serving_peak_stays_under_fp32_baseline() {
+    // The deployment-memory contract end to end: a mixed-mode server over
+    // nibble-resident models, with the models registered on the server
+    // ledger and every lane booking its transient activations, must keep
+    // its ledger peak below what the fp32 weights alone would occupy.
+    // Linear-dominated shapes — the class the paper's Tables 1–3 memory
+    // claims live in (test_tiny is embedding-dominated and would mask the
+    // effect).
+    let tok = Lexicon::tokenizer();
+    let mcfg = ModelConfig {
+        name: "serve-footprint-lm".into(),
+        vocab: tok.vocab_size(),
+        d_model: 64,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 256,
+        seq_len: 16,
+        activation: Activation::Gelu,
+        tied_head: true,
+    };
+    let vcfg = VlmConfig::sim_cogvlm2(tok.vocab_size());
+    let mut rng = Pcg64::seeded(905);
+    let lm_w = LmWeights::init(&mcfg, &mut rng);
+    let vlm_w = VlmWeights::init(&vcfg, &mut rng);
+    let fp_baseline: usize = lm_w
+        .named_tensors()
+        .iter()
+        .map(|(_, t)| t.nbytes())
+        .sum::<usize>()
+        + vlm_w.n_params() * 4;
+    let qlm = Arc::new(QuantizedLm::quantize_rtn(lm_w, QuantGrid::new(4, 32)));
+    let qvlm = Arc::new(QuantizedVlm::quantize_rtn(vlm_w, QuantGrid::new(4, 32)));
+    let server = Server::start_mixed(
+        Arc::clone(&qlm),
+        Arc::clone(&qvlm),
+        &tok,
+        ServeConfig {
+            lanes: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+        },
+    );
+    qlm.register_resident(server.ledger());
+    qvlm.register_resident(server.ledger());
+    let ledger = server.ledger().clone();
+
+    let mut rng2 = Pcg64::seeded(906);
+    let n = 40;
+    let channels: Vec<Channel<Response>> = (0..n)
+        .map(|i| {
+            let payload = if i % 2 == 0 {
+                Payload::Sentiment {
+                    tokens: tok.encode("sentiment of text : it was fine answer :"),
+                }
+            } else {
+                Payload::Vqa {
+                    patches: Tensor::randn(&[vcfg.n_patches, vcfg.patch_dim], 1.0, &mut rng2),
+                    question: tok.encode("who wrote this book ? answer :"),
+                }
+            };
+            server.submit(payload).unwrap()
+        })
+        .collect();
+    for ch in &channels {
+        assert!(ch.recv().is_some(), "request dropped");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.count(), n);
+
+    // resident accounting matches the models' own deploy_bytes
+    let resident = ledger.peak_for(RESIDENT_TAG) as usize;
+    assert_eq!(resident, qlm.deploy_bytes() + qvlm.deploy_bytes());
+    // both lanes booked transient activations during the replay
+    assert!(ledger.peak_for("activations.sentiment") > 0, "sentiment transients");
+    assert!(ledger.peak_for("activations.vqa") > 0, "vqa transients");
+    // the headline: resident + concurrent activations under the fp32 bar
+    let peak = ledger.peak_bytes() as usize;
+    assert!(
+        peak < fp_baseline,
+        "serving peak {peak} should stay under fp32 baseline {fp_baseline}"
+    );
+    // transients all returned; releasing the models balances the ledger
+    qlm.release_resident(&ledger);
+    qvlm.release_resident(&ledger);
+    assert_eq!(ledger.live_bytes(), 0, "ledger balances after release");
+}
+
+#[test]
 fn mixed_replay_answers_every_id_exactly_once() {
     let tok = Lexicon::tokenizer();
     let qvlm = tiny_qvlm(&tok);
-    let vcfg = qvlm.base.config.clone();
+    let vcfg = qvlm.config().clone();
     let server = Server::start_mixed(
         tiny_qlm(&tok),
         qvlm,
