@@ -4,7 +4,7 @@
 # `cargo build` / `cargo test` (the PJRT integration tests skip when
 # `artifacts/` is absent).
 
-.PHONY: artifacts build test bench fmt clippy
+.PHONY: artifacts build test bench fmt clippy lint loom
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -23,3 +23,15 @@ fmt:
 
 clippy:
 	cargo clippy -- -D warnings
+
+# Repo-specific invariants (unsafe island, panic-free request paths,
+# deterministic iteration, ledger tag registry). The self-test proves the
+# seeded fixture violations still fire before the tree scan is trusted.
+lint:
+	cargo run -q --manifest-path rust/tools/rpiq-lint/Cargo.toml -- --self-test
+	cargo run -q --manifest-path rust/tools/rpiq-lint/Cargo.toml -- rust/src
+
+# Loom model checks of the exec pool's synchronization skeleton. Lives in
+# an excluded crate so `loom` never enters the default dependency graph.
+loom:
+	cd rust/tools/loom-models && cargo test --release

@@ -449,7 +449,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
             l.count(),
             l.percentile_ms(50.0),
             l.percentile_ms(95.0),
-            ledger.peak_for(&format!("activations.{name}")) as f64 / (1 << 20) as f64
+            ledger.peak_for(&crate::metrics::tags::activations(&name)) as f64 / (1 << 20) as f64
         );
     }
     println!(

@@ -12,6 +12,8 @@
 //! rpiq artifacts --dir artifacts   # validate + smoke-run the AOT bundle
 //! ```
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 mod args;
 mod commands;
 

@@ -3,6 +3,8 @@
 //! multi-lane serving engine (sharded router + per-workload dynamic
 //! batcher lanes) used by the latency experiments.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 pub mod experiments;
 pub mod pipeline;
 pub mod serve;

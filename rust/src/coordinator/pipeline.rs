@@ -40,7 +40,7 @@
 //! and timer totals may vary with scheduling (more work in flight ⇒ more
 //! concurrent transients); live-byte accounting still balances to zero.
 
-use crate::metrics::{MemoryLedger, Timers};
+use crate::metrics::{tags, MemoryLedger, Timers};
 use crate::model::forward::{lm_forward, ActivationTap};
 use crate::model::weights::LmWeights;
 use crate::model::QuantizedLm;
@@ -176,7 +176,7 @@ where
                         if retain_last && wi + 1 == nw {
                             // the single instance (paper Eq. 11): only the
                             // LAST batch is retained beyond the sweep.
-                            ledger.alloc("calib_last_batch", x.nbytes());
+                            ledger.alloc(tags::CALIB_LAST_BATCH, x.nbytes());
                             last.insert(name.clone(), x);
                         }
                     }
@@ -201,7 +201,7 @@ where
     for name in layer_names {
         let acc = accs.remove(name).unwrap();
         let (h, _lambda) = acc.finalize(percdamp);
-        ledger.alloc("hessian_final", h.nbytes());
+        ledger.alloc(tags::HESSIAN_FINAL, h.nbytes());
         out.insert(
             name.clone(),
             LayerCalib { h, last_x: last_x.remove(name) },
@@ -354,7 +354,7 @@ pub fn quantize_lm(
 
     // model weights resident during quantization (as on the paper's GPU)
     let model_bytes: usize = w.named_tensors().iter().map(|(_, t)| t.nbytes()).sum();
-    ledger.alloc("model_weights", model_bytes);
+    ledger.alloc(tags::MODEL_WEIGHTS, model_bytes);
 
     let retain_last = matches!(method, Method::Rpiq(_));
     let calib = timers.time("calibration", || {
@@ -384,13 +384,15 @@ pub fn quantize_lm(
         }
     }
     // release calibration state
+    // ORDER-INSENSITIVE: ledger frees commute; only the summed bytes
+    // matter, so hash order cannot affect any observable result.
     for (_name, c) in calib {
-        ledger.free("hessian_final", c.h.nbytes());
+        ledger.free(tags::HESSIAN_FINAL, c.h.nbytes());
         if let Some(x) = &c.last_x {
-            ledger.free("calib_last_batch", x.nbytes());
+            ledger.free(tags::CALIB_LAST_BATCH, x.nbytes());
         }
     }
-    ledger.free("model_weights", model_bytes);
+    ledger.free(tags::MODEL_WEIGHTS, model_bytes);
 
     Ok(PipelineOutput {
         // The deployed model carries only the skeleton (embeddings, norms)
@@ -425,7 +427,7 @@ pub fn quantize_vlm(
     let names: Vec<String> = w.linears().into_iter().map(|(n, _)| n).collect();
 
     let model_bytes = w.n_params() * 4;
-    ledger.alloc("model_weights", model_bytes);
+    ledger.alloc(tags::MODEL_WEIGHTS, model_bytes);
 
     // windows are indices into calib_samples; reuse the LM calibrate()
     // driver by closing over the sample list.
@@ -465,13 +467,15 @@ pub fn quantize_vlm(
             );
         }
     }
+    // ORDER-INSENSITIVE: ledger frees commute; only the summed bytes
+    // matter, so hash order cannot affect any observable result.
     for (_name, c) in calib {
-        ledger.free("hessian_final", c.h.nbytes());
+        ledger.free(tags::HESSIAN_FINAL, c.h.nbytes());
         if let Some(x) = &c.last_x {
-            ledger.free("calib_last_batch", x.nbytes());
+            ledger.free(tags::CALIB_LAST_BATCH, x.nbytes());
         }
     }
-    ledger.free("model_weights", model_bytes);
+    ledger.free(tags::MODEL_WEIGHTS, model_bytes);
 
     Ok(PipelineVlmOutput {
         // Skeleton-only, like the LM pipeline: no fp32 linear survives.
@@ -564,9 +568,9 @@ mod tests {
         };
         let release = |calib: HashMap<String, LayerCalib>, ledger: &MemoryLedger| {
             for (_name, c) in calib {
-                ledger.free("hessian_final", c.h.nbytes());
+                ledger.free(tags::HESSIAN_FINAL, c.h.nbytes());
                 if let Some(x) = &c.last_x {
-                    ledger.free("calib_last_batch", x.nbytes());
+                    ledger.free(tags::CALIB_LAST_BATCH, x.nbytes());
                 }
             }
         };

@@ -38,6 +38,11 @@
 //! forward's dequant-matmuls shard rows there, wide groups chunk there,
 //! and multi-engine pickups fan out there.
 
+// Request-path module: non-test code must stay panic-free. The repo lint
+// (`rpiq-lint`, rule `no-panic`) and these clippy denies enforce it.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used, clippy::panic))]
+#![cfg_attr(not(test), deny(clippy::indexing_slicing))]
+
 use crate::data::tokenizer::Tokenizer;
 use crate::data::SentimentSet;
 use crate::exec::{Channel, ShardedQueue};
@@ -214,7 +219,8 @@ impl LaneEngine for SentimentLane {
         }
         // left-truncate, keeping the answer scaffold at the end
         if tokens.len() > self.max_seq {
-            *tokens = tokens[tokens.len() - self.max_seq..].to_vec();
+            let cut = tokens.len() - self.max_seq;
+            tokens.drain(..cut);
         }
         Ok(())
     }
@@ -239,37 +245,46 @@ impl LaneEngine for SentimentLane {
     }
 
     fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
-        let seqs: Vec<&[u32]> = group
-            .iter()
-            .map(|p| match p {
-                Payload::Sentiment { tokens } => tokens.as_slice(),
-                other => panic!("sentiment lane got {other:?}"),
-            })
-            .collect();
+        let mut seqs: Vec<&[u32]> = Vec::with_capacity(group.len());
+        for p in group {
+            match p {
+                Payload::Sentiment { tokens } => seqs.push(tokens.as_slice()),
+                // Misrouted payload (impossible by construction): return a
+                // short answer vector so the lane loop's count check drops
+                // the group cleanly instead of poisoning the lane.
+                _ => return Vec::new(),
+            }
+        }
         // The lane loop groups by shape key, so all sequences here share
         // one length: fuse each chunk into one forward and read the
         // answer rows in place — no per-request logits copies (unlike the
         // general [`QuantizedLm::forward_batch`], which returns owned
         // full-sequence logits).
-        let seq = seqs[0].len();
+        let Some(seq) = seqs.first().map(|s| s.len()) else {
+            return Vec::new();
+        };
         debug_assert!(seqs.iter().all(|s| s.len() == seq), "mixed shapes in one group");
         crate::model::quantized::run_equal_shape_groups(seqs.len(), |_| 0, |chunk| {
             let mut tokens = Vec::with_capacity(chunk.len() * seq);
-            for &i in chunk {
-                tokens.extend_from_slice(seqs[i]);
+            for s in chunk.iter().filter_map(|&i| seqs.get(i)) {
+                tokens.extend_from_slice(s);
             }
             let logits = self.model.forward(&tokens, chunk.len(), seq);
             (0..chunk.len())
                 .map(|gi| {
                     let last = logits.row(gi * seq + seq - 1);
-                    let ll = [
-                        last[self.label_ids[0] as usize],
-                        last[self.label_ids[1] as usize],
-                        last[self.label_ids[2] as usize],
-                    ];
-                    let label = (0..3)
-                        .max_by(|&a, &b| ll[a].partial_cmp(&ll[b]).unwrap())
-                        .unwrap();
+                    let mut ll = [f32::NEG_INFINITY; 3];
+                    for (dst, &id) in ll.iter_mut().zip(self.label_ids.iter()) {
+                        *dst = last.get(id as usize).copied().unwrap_or(f32::NEG_INFINITY);
+                    }
+                    // Total order over f32: a NaN logit degrades this one
+                    // answer instead of killing the group via catch_unwind.
+                    let label = ll
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
                     Answer::Sentiment { label, label_logits: ll }
                 })
                 .collect()
@@ -320,7 +335,8 @@ impl LaneEngine for VqaLane {
         // left-truncate over-long questions, keeping the answer scaffold
         let text_len = cfg.text_len();
         if question.len() > text_len {
-            *question = question[question.len() - text_len..].to_vec();
+            let cut = question.len() - text_len;
+            question.drain(..cut);
         }
         Ok(())
     }
@@ -346,28 +362,34 @@ impl LaneEngine for VqaLane {
     }
 
     fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
-        let pairs: Vec<(&Tensor, &[u32])> = group
-            .iter()
-            .map(|p| match p {
-                Payload::Vqa { patches, question } => (patches, question.as_slice()),
-                other => panic!("vqa lane got {other:?}"),
-            })
-            .collect();
+        let mut pairs: Vec<(&Tensor, &[u32])> = Vec::with_capacity(group.len());
+        for p in group {
+            match p {
+                Payload::Vqa { patches, question } => pairs.push((patches, question.as_slice())),
+                // Misrouted payload (impossible by construction): a short
+                // answer vector makes the lane loop drop the group cleanly.
+                _ => return Vec::new(),
+            }
+        }
         // Equal shape key ⇒ equal question length: stack each chunk into
         // one fused forward and read the answer rows in place (the
         // general [`QuantizedVlm::forward_batch`] instead returns owned
         // full-sequence logits per pair).
-        let n_patches = self.model.config().n_patches;
-        let tlen = pairs[0].1.len();
+        let cfg = self.model.config();
+        let n_patches = cfg.n_patches;
+        // prepare() validated every patches tensor against the config, so
+        // the patch dim comes from the config rather than the group.
+        let pd = cfg.patch_dim;
+        let Some(tlen) = pairs.first().map(|(_, q)| q.len()) else {
+            return Vec::new();
+        };
         debug_assert!(pairs.iter().all(|(_, q)| q.len() == tlen), "mixed shapes in one group");
         let s = n_patches + tlen;
         crate::model::quantized::run_equal_shape_groups(pairs.len(), |_| 0, |chunk| {
             let b = chunk.len();
-            let pd = pairs[chunk[0]].0.cols();
             let mut pdata = Vec::with_capacity(b * n_patches * pd);
             let mut text = Vec::with_capacity(b * tlen);
-            for &i in chunk {
-                let (p, q) = &pairs[i];
+            for (p, q) in chunk.iter().filter_map(|&i| pairs.get(i)) {
                 pdata.extend_from_slice(p.data());
                 text.extend_from_slice(q);
             }
@@ -376,9 +398,13 @@ impl LaneEngine for VqaLane {
             (0..b)
                 .map(|gi| {
                     let last = logits.row(gi * s + s - 1);
-                    let pred = (0..last.len())
-                        .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
-                        .unwrap() as u32;
+                    // Total order over f32 (see the sentiment argmax).
+                    let pred = last
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i)
+                        .unwrap_or(0) as u32;
                     Answer::Vqa { answer_id: pred, answer: self.tok.word(pred).to_string() }
                 })
                 .collect()
@@ -427,6 +453,7 @@ pub struct Server {
 impl Server {
     /// Start a server from an explicit engine list — the generic core the
     /// typed constructors (and the serve tests' synthetic engines) use.
+    #[allow(clippy::expect_used)] // lane-thread spawn failure is unrecoverable
     pub fn start_engines(engines: Vec<Box<dyn LaneEngine>>, cfg: ServeConfig) -> Self {
         assert!(!engines.is_empty(), "server needs at least one lane engine");
         let n_lanes = cfg.lanes.max(1);
@@ -443,6 +470,8 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("rpiq-lane-{i}"))
                     .spawn(move || lane_loop(i, engines, queue, stats, ledger, cfg))
+                    // LINT-ALLOW(no-panic): thread-spawn failure at server
+                    // construction is unrecoverable resource exhaustion.
                     .expect("spawn lane")
             })
             .collect();
@@ -490,7 +519,7 @@ impl Server {
             .iter()
             .position(|e| e.accepts(&payload))
             .ok_or(SubmitError::Unsupported)?;
-        self.engines[engine].prepare(&mut payload)?;
+        self.engines.get(engine).ok_or(SubmitError::Unsupported)?.prepare(&mut payload)?;
         let reply = Channel::bounded(1);
         Ok(Request {
             id: self.next_id.fetch_add(1, Ordering::SeqCst),
@@ -587,7 +616,7 @@ fn lane_loop(
     // serving hot path and engines are fixed for the server's lifetime.
     let activation_tags: Vec<String> = engines
         .iter()
-        .map(|e| format!("activations.{}", e.name()))
+        .map(|e| crate::metrics::tags::activations(e.name()))
         .collect();
     loop {
         // Block for the first request. Shutdown wakes the pop directly
@@ -621,20 +650,27 @@ fn lane_loop(
         // long group does not wait for it.
         let mut groups: Vec<((usize, usize), Vec<Request>)> = Vec::new();
         for r in batch {
-            let key = (r.engine, engines[r.engine].shape_key(&r.payload));
-            match groups.iter().position(|(k, _)| *k == key) {
-                Some(i) => groups[i].1.push(r),
+            // `r.engine` was resolved by submit() against this fixed
+            // engine set; if it ever weren't, dropping `r` closes its
+            // reply channel and the client observes `Closed`.
+            let Some(engine) = engines.get(r.engine) else {
+                continue;
+            };
+            let key = (r.engine, engine.shape_key(&r.payload));
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, g)) => g.push(r),
                 None => groups.push((key, vec![r])),
             }
         }
         let run_group = |ei: usize, group: &[Request]| {
-            let engine = &engines[ei];
+            let (Some(engine), Some(tag)) = (engines.get(ei), activation_tags.get(ei)) else {
+                return; // unreachable: `ei` indexes the fixed engine set
+            };
             let payloads: Vec<&Payload> = group.iter().map(|r| &r.payload).collect();
             // Book the batch's dominant transient (the fused logits) for
             // the duration of the forward, per lane, so the ledger's peak
             // reflects resident + concurrent activations.
             let transient = engine.transient_bytes(&payloads);
-            let tag = &activation_tags[ei];
             // Contain engine bugs: on a panic (or a miscounted answer
             // vector) the group is discarded and each Request's Drop
             // closes its reply channel, so clients observe `Closed`
@@ -656,10 +692,9 @@ fn lane_loop(
                 let _ = r.reply.send(Response { id: r.id, answer: a, latency });
             }
         };
-        if groups.len() == 1 {
+        if let [((ei, _), g)] = groups.as_slice() {
             // single group: run inline (its fused matmuls still shard rows
             // on the pool)
-            let ((ei, _), g) = &groups[0];
             run_group(*ei, g);
         } else {
             // several (engine, shape) groups in one pickup: fan them out
@@ -688,12 +723,15 @@ pub fn replay(server: &Server, tok: &Tokenizer, prompts: &[String], n_clients: u
 /// `n_clients` producer threads, waiting for every answer; returns
 /// throughput (req/s). Panics if the server rejects or drops a request —
 /// replay is only meaningful on a live server.
+#[allow(clippy::expect_used)] // bench harness: a dead server must abort the measurement
 pub fn replay_mixed(server: &Server, items: Vec<Payload>, n_clients: usize) -> f64 {
     let n = items.len();
     let n_clients = n_clients.max(1);
     let mut per_client: Vec<Vec<Payload>> = (0..n_clients).map(|_| Vec::new()).collect();
     for (i, it) in items.into_iter().enumerate() {
-        per_client[i % n_clients].push(it);
+        if let Some(c) = per_client.get_mut(i % n_clients) {
+            c.push(it);
+        }
     }
     let t0 = Instant::now();
     std::thread::scope(|scope| {
@@ -701,7 +739,11 @@ pub fn replay_mixed(server: &Server, items: Vec<Payload>, n_clients: usize) -> f
             let server = &*server;
             scope.spawn(move || {
                 for p in chunk {
+                    // LINT-ALLOW(no-panic): replay is only meaningful on a
+                    // live server; a rejected request must fail the bench.
                     let reply = server.submit(p).expect("replay submit");
+                    // LINT-ALLOW(no-panic): a dropped reply means the
+                    // server under test lost a request — abort loudly.
                     let _ = reply.recv().expect("replay answer");
                 }
             });
@@ -829,8 +871,11 @@ mod tests {
         // answer must match the unbatched forward's argmax exactly
         let logits = qvlm.forward(&patches, &question, 1);
         let last = logits.row(vcfg.n_patches + question.len() - 1);
-        let pred = (0..last.len())
-            .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+        let pred = last
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
             .unwrap() as u32;
         match resp.answer {
             Answer::Vqa { answer_id, ref answer } => {

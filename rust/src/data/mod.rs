@@ -16,6 +16,8 @@
 //! corpora are bit-identical across runs — the experiment harness depends
 //! on that.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 pub mod corpus;
 pub mod sentiment;
 pub mod tokenizer;

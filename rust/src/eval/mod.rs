@@ -13,6 +13,8 @@
 //! the PJRT-artifact path (`runtime::Engine`) are evaluated by *identical*
 //! code.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 use crate::data::sentiment::SentimentSet;
 use crate::data::tokenizer::Tokenizer;
 use crate::data::vqa::{VqaExample, CATEGORIES};

@@ -417,14 +417,39 @@ impl<'pool, 'env> Scope<'pool, 'env> {
 
 /// Worker count the global pool is created with: `RPIQ_THREADS` if set to a
 /// positive integer, else `available_parallelism`, else 1.
+///
+/// A set-but-rejected `RPIQ_THREADS` (unparsable, zero, or non-unicode)
+/// prints a one-line stderr warning naming the rejected value before
+/// falling back — a silently ignored override would make a determinism
+/// matrix run (`RPIQ_THREADS=1/2/8`) measure the wrong configuration.
 pub fn default_threads() -> usize {
-    std::env::var("RPIQ_THREADS")
-        .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        })
+    let fallback = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match std::env::var("RPIQ_THREADS") {
+        Ok(v) => match parse_threads(&v) {
+            Some(n) => n,
+            None => {
+                eprintln!(
+                    "rpiq: ignoring RPIQ_THREADS={v:?} (want a positive integer); \
+                     falling back to available parallelism"
+                );
+                fallback()
+            }
+        },
+        Err(std::env::VarError::NotUnicode(raw)) => {
+            eprintln!(
+                "rpiq: ignoring non-unicode RPIQ_THREADS={raw:?}; \
+                 falling back to available parallelism"
+            );
+            fallback()
+        }
+        Err(std::env::VarError::NotPresent) => fallback(),
+    }
+}
+
+/// Parse an `RPIQ_THREADS` value: a positive integer (surrounding
+/// whitespace tolerated), else `None`.
+fn parse_threads(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().filter(|&n| n >= 1)
 }
 
 /// The process-global pool, created on first use. Worker count is fixed at
@@ -848,6 +873,19 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
+    fn parse_threads_accepts_positive_integers_only() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 8 "), Some(8));
+        assert_eq!(parse_threads("1"), Some(1));
+        // rejected values fall back (and default_threads warns on stderr)
+        assert_eq!(parse_threads("0"), None);
+        assert_eq!(parse_threads(""), None);
+        assert_eq!(parse_threads("two"), None);
+        assert_eq!(parse_threads("-2"), None);
+        assert_eq!(parse_threads("4.0"), None);
+    }
+
+    #[test]
     fn pool_runs_all_jobs() {
         let pool = ThreadPool::new(4);
         let counter = Arc::new(AtomicUsize::new(0));
@@ -1127,6 +1165,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-long under the interpreter; covered by the loom model")]
     fn sharded_queue_concurrent_producers_consumers_lose_nothing() {
         let q: ShardedQueue<usize> = ShardedQueue::new(3, 8);
         let total = 300usize;

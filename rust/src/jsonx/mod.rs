@@ -6,6 +6,8 @@
 //! need: full JSON parsing into a dynamic [`Json`] value, and emission with
 //! stable key order (insertion order preserved) so diffs are reviewable.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

@@ -8,6 +8,8 @@
 //! the Hessians of real calibration activations are ill-conditioned enough
 //! that f32 factorization loses the tail columns.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 use crate::tensor::Tensor;
 
 /// Errors from factorization routines.

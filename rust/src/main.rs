@@ -1,3 +1,5 @@
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 fn main() -> anyhow::Result<()> {
     rpiq::cli::run(std::env::args().skip(1).collect())
 }

@@ -17,6 +17,10 @@
 //! can legitimately raise it. Determinism-sensitive comparisons must pin
 //! `exec::set_threads` (see the pipeline tests).
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
+pub mod tags;
+
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;

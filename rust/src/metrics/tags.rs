@@ -1,0 +1,104 @@
+//! Central registry of every [`super::MemoryLedger`] tag string.
+//!
+//! Register/release pairs drift when the two sides of a booking spell the
+//! tag independently — a typo on one side leaks "live" bytes forever and
+//! silently corrupts the footprint gates in `benches/footprint.rs`. Every
+//! non-test `alloc`/`free`/`scoped` call site must therefore name its tag
+//! through a constant declared here (enforced by the `ledger-tags` rule of
+//! `rust/tools/rpiq-lint`); the registry's own unit test pins uniqueness.
+//!
+//! The one dynamic family — per-lane activation tags — goes through
+//! [`activations`] so the `"activations."` prefix is also single-sourced
+//! (readers like `rpiq serve`'s summary build the same string).
+
+/// Running Hessian accumulator (`HessianAccumulator`) backing store.
+pub const HESSIAN: &str = "hessian";
+/// Transient `XᵀX` of one calibration batch before it folds into the sum.
+pub const HESSIAN_TMP: &str = "hessian_tmp";
+/// Per-window partial Hessians awaiting the deterministic replay-merge.
+pub const HESSIAN_PARTIAL: &str = "hessian_partial";
+/// Finalized (damped, averaged) per-layer Hessian handed to the engines.
+pub const HESSIAN_FINAL: &str = "hessian_final";
+/// Last calibration batch retained for single-instance activation capture.
+pub const CALIB_LAST_BATCH: &str = "calib_last_batch";
+/// Single-instance activation snapshot (`SingleInstance`).
+pub const SINGLE_INSTANCE: &str = "single_instance";
+/// The fp32 model weights while the quantization pipeline holds them.
+pub const MODEL_WEIGHTS: &str = "model_weights";
+/// Resident deployment bytes of a quantized model (packed linears +
+/// skeleton) — re-exported as `crate::model::RESIDENT_TAG`.
+pub const MODEL_RESIDENT: &str = "model_resident";
+/// GPTQ working copies of the weight matrix and Hessian.
+pub const GPTQ_WORK: &str = "gptq_work";
+/// GPTQ inverse-Cholesky factor.
+pub const GPTQ_HINV: &str = "gptq_hinv";
+/// GPTQ level buffer under construction.
+pub const GPTQ_LEVELS: &str = "gptq_levels";
+/// GPTQ per-shard lazy trailing-update error blocks.
+pub const GPTQ_ERRBLOCK: &str = "gptq_errblock";
+/// GPTQ per-row greedy-loss subtotals.
+pub const GPTQ_ROWLOSS: &str = "gptq_rowloss";
+/// RPIQ residual-projection precompute (per-block `U` factors).
+pub const RPIQ_PRECOMP: &str = "rpiq_precomp";
+/// RPIQ closed-loop iteration state (continuous blocks + deployment copy).
+pub const RPIQ_STATE: &str = "rpiq_state";
+/// RPIQ projection scratch (work matrix + level buffer).
+pub const RPIQ_PROJECT: &str = "rpiq_project";
+
+/// Prefix of the per-lane transient activation tags booked by the serve
+/// engine's lane loop.
+pub const ACTIVATIONS_PREFIX: &str = "activations.";
+
+/// Activation tag for one serve lane, e.g. `activations.sentiment`.
+pub fn activations(lane: &str) -> String {
+    format!("{ACTIVATIONS_PREFIX}{lane}")
+}
+
+/// Every fixed tag in the registry (the dynamic `activations.*` family is
+/// represented by its prefix, which must not collide either).
+pub const ALL: &[&str] = &[
+    HESSIAN,
+    HESSIAN_TMP,
+    HESSIAN_PARTIAL,
+    HESSIAN_FINAL,
+    CALIB_LAST_BATCH,
+    SINGLE_INSTANCE,
+    MODEL_WEIGHTS,
+    MODEL_RESIDENT,
+    GPTQ_WORK,
+    GPTQ_HINV,
+    GPTQ_LEVELS,
+    GPTQ_ERRBLOCK,
+    GPTQ_ROWLOSS,
+    RPIQ_PRECOMP,
+    RPIQ_STATE,
+    RPIQ_PROJECT,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_are_unique_and_well_formed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for &t in ALL {
+            assert!(!t.is_empty(), "empty tag");
+            assert!(
+                t.bytes().all(|b| b.is_ascii_lowercase() || b == b'_'),
+                "tag '{t}' must be lowercase snake_case"
+            );
+            assert!(seen.insert(t), "duplicate tag '{t}'");
+            assert!(
+                !t.starts_with(ACTIVATIONS_PREFIX),
+                "fixed tag '{t}' collides with the dynamic activations family"
+            );
+        }
+    }
+
+    #[test]
+    fn activations_builds_prefixed_tags() {
+        assert_eq!(activations("vqa"), "activations.vqa");
+        assert!(activations("sentiment").starts_with(ACTIVATIONS_PREFIX));
+    }
+}

@@ -15,6 +15,11 @@
 //! Everything little-endian. No external deps, stable across runs, and
 //! diff-friendly enough via `rpiq inspect`.
 
+// Loader module: untrusted bytes in, clean `Err` out. The repo lint
+// (`rpiq-lint`, rule `no-panic`) and these clippy denies enforce it.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used, clippy::panic))]
+#![cfg_attr(not(test), deny(clippy::indexing_slicing))]
+
 use super::config::{Activation, ModelConfig};
 use super::quantized::QuantizedLm;
 use super::weights::{LmSkeleton, LmWeights};
@@ -140,8 +145,8 @@ pub fn read_container(
         let mut data = vec![0f32; n];
         let mut buf = vec![0u8; n * 4];
         f.read_exact(&mut buf)?;
-        for (i, chunk) in buf.chunks_exact(4).enumerate() {
-            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        for (dst, chunk) in data.iter_mut().zip(buf.chunks_exact(4)) {
+            *dst = f32_le4(chunk);
         }
         tensors.push((name, shape, data));
     }
@@ -234,12 +239,19 @@ impl TypedEntry {
             "entry '{}' is not an f32 plane",
             self.name
         );
-        Ok(self
-            .bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(self.bytes.chunks_exact(4).map(f32_le4).collect())
     }
+}
+
+/// Decode one little-endian f32 from a 4-byte chunk without a panicking
+/// conversion (`chunks_exact(4)` guarantees the length; a short chunk
+/// would zero-pad rather than panic).
+fn f32_le4(chunk: &[u8]) -> f32 {
+    let mut b = [0u8; 4];
+    for (dst, src) in b.iter_mut().zip(chunk) {
+        *dst = *src;
+    }
+    f32::from_le_bytes(b)
 }
 
 /// A borrowed payload for the write path — the writer streams straight
@@ -361,7 +373,8 @@ pub fn read_container_typed(path: &Path, magic: &[u8; 8]) -> Result<(Json, Vec<T
         let name = String::from_utf8(name_buf)?;
         let mut tag = [0u8; 1];
         f.read_exact(&mut tag)?;
-        let dtype = DType::from_tag(tag[0]).with_context(|| format!("entry '{name}'"))?;
+        let [tag_byte] = tag;
+        let dtype = DType::from_tag(tag_byte).with_context(|| format!("entry '{name}'"))?;
         let ndim = read_u32(&mut f)? as usize;
         anyhow::ensure!((ndim as u64) <= file_len, "entry '{name}' declares {ndim} dims");
         let mut dims = Vec::with_capacity(ndim.min(8));
@@ -518,10 +531,10 @@ pub(crate) fn write_qcontainer(
     qlinears: &HashMap<String, QuantizedLinear>,
 ) -> Result<()> {
     let mut linears_json = Json::obj();
-    let mut names: Vec<&String> = qlinears.keys().collect();
-    names.sort();
-    for name in &names {
-        linears_json = linears_json.with(name, qlinear_to_json(&qlinears[*name]));
+    let mut pairs: Vec<(&String, &QuantizedLinear)> = qlinears.iter().collect();
+    pairs.sort_by(|a, b| a.0.cmp(b.0));
+    for (name, q) in &pairs {
+        linears_json = linears_json.with(name, qlinear_to_json(q));
     }
     let header = Json::obj()
         .with("kind", Json::Str(kind.into()))
@@ -535,8 +548,8 @@ pub(crate) fn write_qcontainer(
             payload: PayloadRef::F32(t.data()),
         });
     }
-    for name in names {
-        push_qlinear_entries(name, &qlinears[name], &mut entries);
+    for (name, q) in pairs {
+        push_qlinear_entries(name, q, &mut entries);
     }
     write_container_typed(path, magic, &header.dump(), &entries)
 }

@@ -8,6 +8,8 @@
 //! in depth/width/ff-ratio/activation so the "diverse architectures" axis
 //! of Table 1 is preserved.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 pub mod config;
 pub mod forward;
 pub mod io;

@@ -17,7 +17,7 @@ use std::collections::HashMap;
 /// Ledger tag under which a deployed model's resident bytes (packed
 /// levels + group params + skeleton) are registered — the counterpart of
 /// the transient per-lane activation tags the serve loop uses.
-pub const RESIDENT_TAG: &str = "model_resident";
+pub const RESIDENT_TAG: &str = crate::metrics::tags::MODEL_RESIDENT;
 
 /// Equal-shape groups wider than this many sequences are sharded into
 /// chunked fused forwards that fan out across the global pool (see

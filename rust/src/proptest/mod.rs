@@ -19,6 +19,8 @@
 //! });
 //! ```
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 use crate::rng::Pcg64;
 use std::ops::Range;
 

@@ -22,7 +22,7 @@
 //! non-associative, so the grouping must never depend on the partition.)
 
 use crate::linalg::apply_damping;
-use crate::metrics::MemoryLedger;
+use crate::metrics::{tags, MemoryLedger};
 use crate::tensor::{matmul_at_b_acc, Tensor};
 
 /// Streaming `H += XᵀX` accumulator for one linear layer.
@@ -39,7 +39,7 @@ pub struct HessianAccumulator {
 impl HessianAccumulator {
     pub fn new(in_features: usize, ledger: MemoryLedger) -> Self {
         let h = Tensor::zeros(&[in_features, in_features]);
-        ledger.alloc("hessian", h.nbytes());
+        ledger.alloc(tags::HESSIAN, h.nbytes());
         HessianAccumulator { h, nsamples: 0, last_merged: None, ledger }
     }
 
@@ -54,10 +54,10 @@ impl HessianAccumulator {
             return;
         }
         let mut xtx = Tensor::zeros(&[x.cols(), x.cols()]);
-        self.ledger.alloc("hessian_tmp", xtx.nbytes());
+        self.ledger.alloc(tags::HESSIAN_TMP, xtx.nbytes());
         matmul_at_b_acc(x, x, &mut xtx);
         self.add_precomputed(&xtx, x.rows());
-        self.ledger.free("hessian_tmp", xtx.nbytes());
+        self.ledger.free(tags::HESSIAN_TMP, xtx.nbytes());
     }
 
     /// The running-mean update given a precomputed `xtx = XᵀX` over `rows`
@@ -106,7 +106,7 @@ impl HessianAccumulator {
             }
             self.last_merged = Some(e.window);
             self.add_precomputed(&e.xtx, e.rows);
-            led.free("hessian_partial", e.xtx.nbytes());
+            led.free(tags::HESSIAN_PARTIAL, e.xtx.nbytes());
         }
     }
 
@@ -116,7 +116,7 @@ impl HessianAccumulator {
         // Hand ownership (and its ledger accounting) to the caller; the
         // Drop impl then frees the zero bytes of the empty placeholder.
         let h = std::mem::replace(&mut self.h, Tensor::zeros(&[0]));
-        self.ledger.free("hessian", h.nbytes());
+        self.ledger.free(tags::HESSIAN, h.nbytes());
         (h, lambda)
     }
 
@@ -128,7 +128,7 @@ impl HessianAccumulator {
 
 impl Drop for HessianAccumulator {
     fn drop(&mut self) {
-        self.ledger.free("hessian", self.h.nbytes());
+        self.ledger.free(tags::HESSIAN, self.h.nbytes());
     }
 }
 
@@ -172,7 +172,7 @@ impl HessianPartial {
             return; // matches add_batch: empty batches contribute nothing
         }
         let mut xtx = Tensor::zeros(&[self.in_features, self.in_features]);
-        self.ledger.alloc("hessian_partial", xtx.nbytes());
+        self.ledger.alloc(tags::HESSIAN_PARTIAL, xtx.nbytes());
         matmul_at_b_acc(x, x, &mut xtx);
         self.entries.push(PartialEntry { window: index, xtx, rows: x.rows() });
     }
@@ -194,7 +194,7 @@ impl HessianPartial {
 impl Drop for HessianPartial {
     fn drop(&mut self) {
         for e in &self.entries {
-            self.ledger.free("hessian_partial", e.xtx.nbytes());
+            self.ledger.free(tags::HESSIAN_PARTIAL, e.xtx.nbytes());
         }
     }
 }
@@ -213,7 +213,7 @@ impl SingleInstance {
     /// Capture from the last batch + fp weights (`Y_orig = X·Wᵀ`).
     pub fn capture(x_last: Tensor, w_fp: &Tensor, ledger: &MemoryLedger) -> Self {
         let y_orig = crate::tensor::matmul_a_bt(&x_last, w_fp);
-        ledger.alloc("single_instance", x_last.nbytes() + y_orig.nbytes());
+        ledger.alloc(tags::SINGLE_INSTANCE, x_last.nbytes() + y_orig.nbytes());
         SingleInstance { x: x_last, y_orig }
     }
 
@@ -222,7 +222,7 @@ impl SingleInstance {
     }
 
     pub fn release(self, ledger: &MemoryLedger) {
-        ledger.free("single_instance", self.nbytes());
+        ledger.free(tags::SINGLE_INSTANCE, self.nbytes());
     }
 }
 
@@ -403,7 +403,7 @@ mod tests {
         assert_eq!(ledger.live_bytes() as usize, 2 * 8 * 8 * 4);
         drop(p);
         assert_eq!(ledger.live_bytes(), 0);
-        assert_eq!(ledger.peak_for("hessian_partial") as usize, 2 * 8 * 8 * 4);
+        assert_eq!(ledger.peak_for(tags::HESSIAN_PARTIAL) as usize, 2 * 8 * 8 * 4);
     }
 
     #[test]

@@ -34,7 +34,7 @@
 use super::grid::{QuantGrid, QuantizedLinear};
 use super::QuantConfig;
 use crate::linalg::{cholesky_inverse_upper, fix_dead_channels};
-use crate::metrics::MemoryLedger;
+use crate::metrics::{tags, MemoryLedger};
 use crate::tensor::Tensor;
 
 /// Output of stage-1 quantization.
@@ -68,13 +68,13 @@ pub fn gptq_quantize(
     // fixes before factorization.
     let mut w = w_fp.clone();
     let mut hh = h.clone();
-    ledger.alloc("gptq_work", w.nbytes() + hh.nbytes());
+    ledger.alloc(tags::GPTQ_WORK, w.nbytes() + hh.nbytes());
     let dead_channels = fix_dead_channels(&mut hh, &mut w);
 
     // U = chol(H⁻¹, upper); row j of U drives the feedback from column j.
     let u = cholesky_inverse_upper(&hh)
         .map_err(|e| anyhow::anyhow!("GPTQ Hessian factorization failed: {e}"))?;
-    ledger.alloc("gptq_hinv", in_f * in_f * 8);
+    ledger.alloc(tags::GPTQ_HINV, in_f * in_f * 8);
 
     // The walk mutates levels column-by-column, so it runs over a
     // transient byte-per-level working buffer; the resident nibble-packed
@@ -83,7 +83,7 @@ pub fn gptq_quantize(
     let mut levels = vec![0u8; out_f * in_f];
     let mut scales = vec![1.0f32; out_f * ng];
     let mut zeros = vec![0.0f32; out_f * ng];
-    ledger.alloc("gptq_levels", levels.len());
+    ledger.alloc(tags::GPTQ_LEVELS, levels.len());
     let bs = cfg.block_size;
 
     // Rows are independent (see module docs): shard the complete walk
@@ -91,11 +91,11 @@ pub fn gptq_quantize(
     // deciding when forking is worth it (feedback work ≈ out·in² MACs).
     let shards = crate::tensor::shard_count(out_f, out_f * in_f * in_f);
     // Per-shard error buffer for the lazy trailing update.
-    ledger.alloc("gptq_errblock", shards * bs * 4);
+    ledger.alloc(tags::GPTQ_ERRBLOCK, shards * bs * 4);
     // Per-row Σ err² subtotals, folded in row order after the join so the
     // greedy objective is identical at any shard count.
     let mut row_loss = vec![0.0f64; out_f];
-    ledger.alloc("gptq_rowloss", out_f * 8);
+    ledger.alloc(tags::GPTQ_ROWLOSS, out_f * 8);
 
     if shards <= 1 {
         gptq_walk_rows(
@@ -127,11 +127,11 @@ pub fn gptq_quantize(
     let greedy_loss: f64 = row_loss.iter().sum();
     let q = QuantizedLinear::from_levels(grid, out_f, in_f, &levels, scales, zeros);
 
-    ledger.free("gptq_levels", levels.len());
-    ledger.free("gptq_rowloss", out_f * 8);
-    ledger.free("gptq_errblock", shards * bs * 4);
-    ledger.free("gptq_hinv", in_f * in_f * 8);
-    ledger.free("gptq_work", w.nbytes() + hh.nbytes());
+    ledger.free(tags::GPTQ_LEVELS, levels.len());
+    ledger.free(tags::GPTQ_ROWLOSS, out_f * 8);
+    ledger.free(tags::GPTQ_ERRBLOCK, shards * bs * 4);
+    ledger.free(tags::GPTQ_HINV, in_f * in_f * 8);
+    ledger.free(tags::GPTQ_WORK, w.nbytes() + hh.nbytes());
 
     Ok(GptqOutput { q, greedy_loss, dead_channels })
 }

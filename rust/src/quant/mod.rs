@@ -12,6 +12,8 @@
 //! * [`cmdq`]  — the cross-modal differentiated quantization policy used
 //!   for the VLM experiments (paper §4.1, ref. [39]).
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 pub mod calib;
 pub mod cmdq;
 pub mod grid;

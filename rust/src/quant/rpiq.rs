@@ -51,7 +51,7 @@
 use super::calib::SingleInstance;
 use super::grid::{QuantGrid, QuantizedLinear};
 use crate::linalg::spd_inverse;
-use crate::metrics::MemoryLedger;
+use crate::metrics::{tags, MemoryLedger};
 use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Tensor};
 
 /// Where the per-block inverse curvature `H_i⁻¹` comes from.
@@ -202,7 +202,7 @@ pub fn rpiq_refine(
         hinv_blocks.push(hinv);
         u_blocks.push(u);
     }
-    ledger.alloc("rpiq_precomp", precomp_bytes);
+    ledger.alloc(tags::RPIQ_PRECOMP, precomp_bytes);
 
     // ---- State: continuous blocks + projected deployment copy ----
     // Continuous iterate starts at the dequantized stage-1 weights.
@@ -216,7 +216,7 @@ pub fn rpiq_refine(
     let mut y_q = matmul_a_bt(&inst.x, &q_cur.dequantize());
     let state_bytes =
         b_cont.iter().map(|b| b.nbytes()).sum::<usize>() + y_q.nbytes() + 2 * q_init.packed.len();
-    ledger.alloc("rpiq_state", state_bytes);
+    ledger.alloc(tags::RPIQ_STATE, state_bytes);
 
     let gamma = |yq: &Tensor| inst.y_orig.sub(yq).frob_sq();
     let mut loss_trace = vec![gamma(&y_q)];
@@ -274,8 +274,8 @@ pub fn rpiq_refine(
         }
     }
 
-    ledger.free("rpiq_state", state_bytes);
-    ledger.free("rpiq_precomp", precomp_bytes);
+    ledger.free(tags::RPIQ_STATE, state_bytes);
+    ledger.free(tags::RPIQ_PRECOMP, precomp_bytes);
 
     Ok(RpiqOutput { q: q_best, loss_trace, iters_run, early_stopped })
 }
@@ -316,7 +316,7 @@ fn project_block_feedback(
     // Projector working set: the mutable copy of the block plus the level
     // buffer the kernels write (scattered into `q` after the join).
     let scratch_bytes = work.nbytes() + levels.len();
-    ledger.alloc("rpiq_project", scratch_bytes);
+    ledger.alloc(tags::RPIQ_PROJECT, scratch_bytes);
     // Feedback work ≈ out·bc² MACs; small blocks stay on the caller.
     let shards = crate::tensor::shard_count(out_f, out_f * bc * bc);
     if shards <= 1 {
@@ -342,7 +342,7 @@ fn project_block_feedback(
             q.set_level(r, c0 + j, lv);
         }
     }
-    ledger.free("rpiq_project", scratch_bytes);
+    ledger.free(tags::RPIQ_PROJECT, scratch_bytes);
 }
 
 /// The projector walk over a contiguous chunk of output rows (rows
@@ -631,7 +631,7 @@ mod tests {
         let ledger = MemoryLedger::new();
         let _ = rpiq_refine(&f.q1, &f.inst, &f.h, RpiqParams::default(), &ledger).unwrap();
         assert_eq!(ledger.live_bytes(), 0);
-        assert!(ledger.peak_for("rpiq_precomp") > 0);
+        assert!(ledger.peak_for(tags::RPIQ_PRECOMP) > 0);
     }
 
     #[test]

@@ -2,6 +2,8 @@
 //! tables; this module renders aligned ASCII tables, CSV series (for the
 //! figures), and JSON blobs for machine consumption.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 use crate::jsonx::Json;
 
 /// A simple aligned-text table.

@@ -7,6 +7,8 @@
 //! requirement for the experiment harness, so we implement the generator
 //! ourselves and seed it explicitly everywhere.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 /// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
 ///
 /// Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient

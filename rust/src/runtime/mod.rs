@@ -23,6 +23,8 @@
 //! against the manifest so a stale `artifacts/` directory fails loudly
 //! instead of mis-executing.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 pub mod lm_args;
 
 use crate::jsonx::Json;

@@ -7,6 +7,8 @@
 //! arithmetic. Keeping the type this small also makes the byte-accurate
 //! memory ledger (`crate::metrics`) trivial to wire in.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 mod matmul;
 
 pub use matmul::{matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_acc, matmul_into};

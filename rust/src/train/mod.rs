@@ -9,6 +9,8 @@
 //! verified primitives in [`crate::model::ops`]; an end-to-end gradient
 //! check lives in this module's tests.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 use crate::model::forward::{lm_forward_training, shift_targets, FwdRecord};
 use crate::model::ops::*;
 use crate::model::weights::LmWeights;

@@ -3,6 +3,11 @@
 //! the embedded LM tensor set; the quantized `.rpiq` container carries
 //! nibble-packed linears for all three towers plus the LM skeleton.
 
+// Loader module: untrusted bytes in, clean `Err` out. The repo lint
+// (`rpiq-lint`, rule `no-panic`) and these clippy denies enforce it.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used, clippy::panic))]
+#![cfg_attr(not(test), deny(clippy::indexing_slicing))]
+
 use super::{QuantizedVlm, VlmConfig, VlmSkeleton, VlmWeights};
 use crate::jsonx::Json;
 use crate::model::io::{lm_config_from_json, lm_config_to_json, read_container, write_container};

@@ -16,6 +16,8 @@
 //! the question — exact-match accuracy over answers is then Table 2's
 //! metric.
 
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
 use crate::model::config::ModelConfig;
 
 pub mod io;

@@ -1,0 +1,169 @@
+//! Hostile-input property tests for the `.rpiq` typed-container loaders.
+//!
+//! The loaders (`model::io::load_qlm`, `vlm::io::load_qvlm`) sit on the
+//! deployment path and read untrusted bytes; their contract is a clean
+//! `Err` on any malformed file — never a panic, and never an
+//! attacker-sized allocation (every length field must be validated
+//! against the actual file size before memory is reserved).
+//!
+//! Three corruption families, all derived from one known-good container
+//! per format:
+//! * truncation at a random byte boundary,
+//! * random bit flips anywhere in the file,
+//! * length-field corruption (u32 fields overwritten with huge values).
+
+use rpiq::model::io::{load_qlm, save_qlm};
+use rpiq::model::{LmWeights, ModelConfig, QuantizedLm};
+use rpiq::proptest::{prop_assert, PropResult, Runner};
+use rpiq::quant::QuantGrid;
+use rpiq::rng::Pcg64;
+use rpiq::vlm::io::{load_qvlm, save_qvlm};
+use rpiq::vlm::{QuantizedVlm, VlmConfig, VlmWeights};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+
+/// Build one valid container per format and return its bytes.
+fn valid_qlm_bytes(dir: &Path) -> Vec<u8> {
+    let cfg = ModelConfig::test_tiny(32);
+    let mut rng = Pcg64::seeded(7001);
+    let w = LmWeights::init(&cfg, &mut rng);
+    let qlm = QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8));
+    let path = dir.join("seed_qlm.rpiq");
+    save_qlm(&qlm, &path).unwrap();
+    std::fs::read(&path).unwrap()
+}
+
+fn valid_qvlm_bytes(dir: &Path) -> Vec<u8> {
+    let cfg = VlmConfig::test_tiny(32);
+    let mut rng = Pcg64::seeded(7002);
+    let w = VlmWeights::init(&cfg, &mut rng);
+    let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8));
+    let path = dir.join("seed_qvlm.rpiq");
+    save_qvlm(&qvlm, &path).unwrap();
+    std::fs::read(&path).unwrap()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rpiq_qckpt_fuzz_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write `bytes` and run the loader under `catch_unwind`: `Ok(result)` is
+/// the loader's verdict, `Err(label)` means it panicked — always a
+/// property failure.
+fn load_corrupted<T>(
+    path: &Path,
+    bytes: &[u8],
+    load: impl Fn(&Path) -> anyhow::Result<T>,
+) -> Result<anyhow::Result<T>, String> {
+    std::fs::write(path, bytes).unwrap();
+    catch_unwind(AssertUnwindSafe(|| load(path)))
+        .map_err(|_| "loader panicked on corrupted container".to_string())
+}
+
+fn check_truncation<T>(
+    name: &'static str,
+    valid: &[u8],
+    path: &Path,
+    load: impl Fn(&Path) -> anyhow::Result<T> + Copy,
+) {
+    let mut runner = Runner::new(name, 48);
+    runner.run(|g| -> PropResult {
+        let cut = g.usize_in(0..valid.len());
+        let verdict = load_corrupted(path, &valid[..cut], load)?;
+        prop_assert(verdict.is_err(), "truncated container must fail to load")
+    });
+}
+
+fn check_bit_flips<T>(
+    name: &'static str,
+    valid: &[u8],
+    path: &Path,
+    load: impl Fn(&Path) -> anyhow::Result<T> + Copy,
+) {
+    let mut runner = Runner::new(name, 48);
+    runner.run(|g| -> PropResult {
+        let mut bytes = valid.to_vec();
+        let flips = g.usize_in(1..9);
+        for _ in 0..flips {
+            let at = g.usize_in(0..bytes.len());
+            let bit = g.usize_in(0..8) as u8;
+            bytes[at] ^= 1 << bit;
+        }
+        // A flip inside an f32 payload can leave the container valid, so
+        // the property is panic-freedom, not rejection.
+        let _verdict = load_corrupted(path, &bytes, load)?;
+        Ok(())
+    });
+}
+
+/// Byte offsets of the size-bearing header fields of a typed container
+/// (see `model::io::read_container_typed` for the layout): version,
+/// config-JSON length, entry count, and the first entry's name length,
+/// dim count, and first dim. Computed from the valid bytes because the
+/// JSON and name lengths vary.
+fn length_field_offsets(valid: &[u8]) -> Vec<usize> {
+    let u32_at = |at: usize| -> usize {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(&valid[at..at + 4]);
+        u32::from_le_bytes(b) as usize
+    };
+    let cfg_len = u32_at(12);
+    let entries_at = 16 + cfg_len; // u32 entry count
+    let name_len_at = entries_at + 4; // first entry: u32 name length
+    let name_len = u32_at(name_len_at);
+    let ndim_at = name_len_at + 4 + name_len + 1; // + name + dtype byte
+    let dim0_at = ndim_at + 4; // first u64 dim (low half corrupted)
+    vec![8, 12, entries_at, name_len_at, ndim_at, dim0_at]
+}
+
+/// Overwrite each size-bearing header field with `u32::MAX`: the loader
+/// must return `Err` (every declared size is validated against the real
+/// file size with checked arithmetic) rather than attempt a ~4 GiB
+/// allocation or a long read loop. Magic stays intact so corruption
+/// reaches the parser proper.
+fn check_length_corruption<T>(
+    valid: &[u8],
+    path: &Path,
+    load: impl Fn(&Path) -> anyhow::Result<T> + Copy,
+) {
+    for at in length_field_offsets(valid) {
+        assert!(at + 4 <= valid.len(), "offset computation escaped the container");
+        let mut bytes = valid.to_vec();
+        bytes[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let verdict = load_corrupted(path, &bytes, load)
+            .unwrap_or_else(|p| panic!("{p} (length field at byte {at})"));
+        assert!(
+            verdict.is_err(),
+            "container with length field {at} = u32::MAX must be rejected"
+        );
+    }
+}
+
+#[test]
+fn qlm_loader_survives_hostile_containers() {
+    let dir = fresh_dir("qlm");
+    let valid = valid_qlm_bytes(&dir);
+    let path = dir.join("corrupt.rpiq");
+    // sanity: the seed container itself loads
+    std::fs::write(&path, &valid).unwrap();
+    assert!(load_qlm(&path).is_ok());
+    check_truncation("qlm_truncation_rejected", &valid, &path, load_qlm);
+    check_bit_flips("qlm_bit_flips_never_panic", &valid, &path, load_qlm);
+    check_length_corruption(&valid, &path, load_qlm);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn qvlm_loader_survives_hostile_containers() {
+    let dir = fresh_dir("qvlm");
+    let valid = valid_qvlm_bytes(&dir);
+    let path = dir.join("corrupt.rpiq");
+    std::fs::write(&path, &valid).unwrap();
+    assert!(load_qvlm(&path).is_ok());
+    check_truncation("qvlm_truncation_rejected", &valid, &path, load_qvlm);
+    check_bit_flips("qvlm_bit_flips_never_panic", &valid, &path, load_qvlm);
+    check_length_corruption(&valid, &path, load_qvlm);
+    std::fs::remove_dir_all(&dir).ok();
+}

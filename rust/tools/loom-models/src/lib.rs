@@ -1,0 +1,45 @@
+//! Loom models of the synchronization protocols in `rpiq`'s `exec`
+//! module (`rust/src/exec/mod.rs`) — the repo's only `unsafe` island.
+//!
+//! These are faithful *re-expressions* of the production algorithms on
+//! `loom` primitives, not `cfg(loom)` swaps inside the main crate (that
+//! would pull `loom` into the offline dependency graph, which the repo
+//! forbids). Each model copies the production code's lock/condvar
+//! discipline line for line; if the production algorithm changes, change
+//! the model with it.
+//!
+//! One deliberate difference: the production `ShardedQueue::pop` and
+//! `help_until_done` park with `wait_timeout` backoff slices, and loom's
+//! `Condvar` has no timeout. The timeout only bounds worst-case steal
+//! latency — it must never be *required* for progress, or a quiet server
+//! would hang for a slice on every lost wakeup. The models therefore park
+//! with plain `wait`, which makes loom prove the stronger property: the
+//! notify discipline alone (deposit notifies owner + one sibling; close
+//! notifies under the shard lock; scope decrement notifies under the
+//! pending lock) is free of lost wakeups.
+//!
+//! What is validated:
+//! * [`queue`] — `ShardedQueue`: items survive submit/steal exactly once,
+//!   global backpressure cap is never exceeded, close-then-drain delivers
+//!   everything accepted before failing new pushes.
+//! * [`scope`] — the scope `pending`/`done`/panic-payload protocol: the
+//!   join cannot return before every job's side effects are visible
+//!   (checked with `loom::cell::UnsafeCell`, which is exactly the
+//!   happens-before edge the `'env → 'static` transmute's SAFETY comment
+//!   claims), and the first panic payload wins the slot.
+
+pub mod queue;
+pub mod scope;
+
+/// Run a closure under loom's exhaustive scheduler with a preemption
+/// bound. Bound 3 keeps each model in seconds while still covering every
+/// bug class loom finds in practice (loom's own guidance: 2–3 bounds
+/// catch essentially all real-world ordering bugs).
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    let mut builder = loom::model::Builder::new();
+    builder.preemption_bound = Some(3);
+    builder.check(f);
+}

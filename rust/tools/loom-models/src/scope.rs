@@ -1,0 +1,161 @@
+//! Loom model of the `exec::Scope` join protocol (rust/src/exec/mod.rs):
+//! a `pending` counter under a mutex, a `done` condvar notified when the
+//! counter hits zero, and a first-panic-wins payload slot.
+//!
+//! This is the protocol behind the one `unsafe` block in the repo — the
+//! `'env → 'static` transmute in `Scope::spawn`. Its SAFETY comment
+//! claims `scope` cannot return until every spawned job has run to
+//! completion, so borrows captured by jobs are never observed dangling.
+//! The model makes that claim checkable: each job writes to a
+//! `loom::cell::UnsafeCell` standing in for the borrowed `'env` data, and
+//! the joiner reads it after the join. If any interleaving let the join
+//! return while a job was still running, loom would flag the cell access
+//! as a data race — the precise failure the transmute would cause.
+
+use loom::cell::UnsafeCell;
+use loom::sync::{Arc, Condvar, Mutex};
+
+/// Mirror of the production `ScopeState` (the `id` used for help-first
+/// work accounting is orthogonal to the join protocol and omitted).
+pub struct ScopeState {
+    pub pending: Mutex<usize>,
+    pub done: Condvar,
+    pub panic_payload: Mutex<Option<usize>>,
+}
+
+impl ScopeState {
+    pub fn new() -> Arc<Self> {
+        Arc::new(ScopeState {
+            pending: Mutex::new(0),
+            done: Condvar::new(),
+            panic_payload: Mutex::new(None),
+        })
+    }
+
+    /// Mirror of `Scope::spawn`'s bookkeeping: the increment happens on
+    /// the spawning thread *before* the job is handed to a worker.
+    pub fn register_job(&self) {
+        *self.pending.lock().unwrap() += 1;
+    }
+
+    /// Mirror of the job wrapper's epilogue: decrement under the lock and
+    /// notify only on reaching zero, still holding the lock — which is
+    /// what makes a lost wakeup impossible (the joiner is either waiting,
+    /// or has not yet read `pending` and will see the zero).
+    pub fn complete_job(&self) {
+        let mut pending = self.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Mirror of the job wrapper's panic path: first payload wins.
+    pub fn record_panic(&self, payload: usize) {
+        let mut slot = self.panic_payload.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    /// Mirror of `help_until_done`'s blocking core. Production
+    /// interleaves queue-helping and a `wait_timeout`; the protocol
+    /// obligation is only this: do not return before `pending == 0`.
+    pub fn join(&self) {
+        let mut pending = self.pending.lock().unwrap();
+        while *pending != 0 {
+            pending = self.done.wait(pending).unwrap();
+        }
+    }
+}
+
+/// Stand-in for `'env`-borrowed shard data. The production jobs get
+/// `&mut` chunks of a caller-owned buffer through the transmute; the
+/// model gives each job its own cell of a shared array and lets loom's
+/// access tracking prove the writes are ordered before the joiner's read.
+pub struct EnvSlot(pub UnsafeCell<usize>);
+
+// SAFETY: loom's UnsafeCell tracks every access and fails the model if
+// two threads touch a slot concurrently — the whole point of the test.
+unsafe impl Sync for EnvSlot {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use loom::thread;
+
+    /// The SAFETY-claim model: two jobs write borrowed-style slots, the
+    /// joiner reads them after `join`. Any interleaving where the join
+    /// returns early is a loom-detected data race on the cell.
+    #[test]
+    fn join_orders_job_writes_before_caller_reads() {
+        crate::model(|| {
+            let state = ScopeState::new();
+            let slots = Arc::new((EnvSlot(UnsafeCell::new(0)), EnvSlot(UnsafeCell::new(0))));
+            let mut workers = Vec::new();
+            for i in 0..2usize {
+                state.register_job();
+                let state = Arc::clone(&state);
+                let slots = Arc::clone(&slots);
+                workers.push(thread::spawn(move || {
+                    let slot = if i == 0 { &slots.0 } else { &slots.1 };
+                    slot.0.with_mut(|p| unsafe { *p = 40 + i });
+                    state.complete_job();
+                }));
+            }
+            state.join();
+            // Reads are race-checked by loom: they must happen-after the
+            // writes above purely via the pending/done protocol.
+            let a = slots.0 .0.with(|p| unsafe { *p });
+            let b = slots.1 .0.with(|p| unsafe { *p });
+            assert_eq!((a, b), (40, 41));
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+    }
+
+    /// The panic protocol: both jobs "panic"; the joiner must observe
+    /// `pending == 0` and exactly one payload — whichever was recorded
+    /// first — matching the production re-raise of the *first* panic
+    /// after all sibling jobs finished.
+    #[test]
+    fn first_panic_payload_wins_and_join_still_completes() {
+        crate::model(|| {
+            let state = ScopeState::new();
+            let mut workers = Vec::new();
+            for payload in [1usize, 2] {
+                state.register_job();
+                let state = Arc::clone(&state);
+                workers.push(thread::spawn(move || {
+                    state.record_panic(payload);
+                    state.complete_job();
+                }));
+            }
+            state.join();
+            assert_eq!(*state.pending.lock().unwrap(), 0);
+            let got = state.panic_payload.lock().unwrap().take();
+            assert!(matches!(got, Some(1) | Some(2)));
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+    }
+
+    /// A job finishing before the joiner ever looks at `pending` must not
+    /// strand the join (the "notify with nobody waiting" ordering).
+    #[test]
+    fn early_completion_does_not_strand_join() {
+        crate::model(|| {
+            let state = ScopeState::new();
+            state.register_job();
+            let worker = {
+                let state = Arc::clone(&state);
+                thread::spawn(move || state.complete_job())
+            };
+            state.join();
+            worker.join().unwrap();
+            assert_eq!(*state.pending.lock().unwrap(), 0);
+        });
+    }
+}

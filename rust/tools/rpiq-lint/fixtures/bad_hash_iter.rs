@@ -1,0 +1,17 @@
+// Seeded violations for the `hash-iter` rule (virtual path
+// `quant/fake.rs`).
+use std::collections::HashMap;
+
+pub fn sum(m: &HashMap<String, usize>) -> usize {
+    let mut total = 0;
+    for (_k, v) in m {
+        // violation above: unordered iteration in a determinism-critical module
+        total += v;
+    }
+    let peek: usize = m.values().sum(); // violation: .values()
+    // ORDER-INSENSITIVE: summation commutes — must NOT fire.
+    for (_k, v) in m {
+        total += v;
+    }
+    total + peek
+}

@@ -1,0 +1,6 @@
+// Seeded violation for the `ledger-tags` rule (virtual path
+// `quant/fake.rs`): a raw string literal at an alloc site.
+pub fn book(ledger: &crate::metrics::MemoryLedger) {
+    ledger.alloc("raw_tag", 128); // violation: literal tag
+    ledger.free(crate::metrics::tags::HESSIAN, 128); // constant — must NOT fire
+}

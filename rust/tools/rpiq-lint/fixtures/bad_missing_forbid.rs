@@ -1,0 +1,6 @@
+//! Seeded violation: a module root (virtual path `tensor/mod.rs`)
+//! without `#![forbid(unsafe_code)]`.
+
+pub fn fine() -> usize {
+    0
+}

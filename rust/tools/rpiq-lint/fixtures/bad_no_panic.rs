@@ -1,0 +1,22 @@
+// Seeded violations for the `no-panic` rule (linted as a request-path
+// file). Each marked line below must fire exactly one violation.
+pub fn handler(xs: &[u32]) -> u32 {
+    let a = xs.first().copied().unwrap(); // violation: unwrap
+    let b: u32 = "7".parse().expect("seeded"); // violation: expect
+    if xs.is_empty() {
+        panic!("seeded"); // violation: panic!
+    }
+    let c = xs[0]; // violation: bare index
+    // LINT-ALLOW(no-panic): seeded escape — this one must NOT fire
+    let d = xs[1];
+    a + b + c + d
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let v = vec![1u32];
+        assert_eq!(v[0], super::handler(&v).min(1)); // exempt: tests
+    }
+}

@@ -1,0 +1,10 @@
+// Seeded violations for the `unsafe-island` rule when linted *inside*
+// the island (virtual path `exec/mod.rs`): an unjustified unsafe block.
+pub fn covered(p: *const u8) -> u8 {
+    // SAFETY: seeded justified block — must NOT fire.
+    unsafe { *p }
+}
+
+pub fn uncovered(p: *const u8) -> u8 {
+    unsafe { *p } // violation: no SAFETY comment
+}

@@ -1,0 +1,7 @@
+// Seeded violation for the `unsafe-island` rule outside the island
+// (virtual path `quant/fake.rs`): even a justified unsafe block is
+// forbidden outside `exec/`.
+pub fn outside(p: *const u8) -> u8 {
+    // SAFETY: irrelevant — unsafe is not allowed here at all.
+    unsafe { *p }
+}

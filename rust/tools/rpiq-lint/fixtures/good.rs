@@ -1,0 +1,24 @@
+// A clean request-path file (virtual path `coordinator/serve.rs`): every
+// construct here is one the lints must accept.
+use std::collections::BTreeMap;
+
+pub fn handler(xs: &[f32], m: &BTreeMap<String, usize>) -> f32 {
+    // slice patterns and array literals are not bare indexing
+    if let [only] = xs {
+        return *only;
+    }
+    let arr = [0usize; 3];
+    let first = xs.first().copied().unwrap_or(0.0); // unwrap_or is fine
+    // argmax via total order, no panicking comparator
+    let best = xs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    // BTreeMap iteration is deterministic and always allowed
+    let n: usize = m.values().sum();
+    // strings containing suspicious tokens are not code: "xs[0].unwrap()"
+    let s = "xs[0].unwrap() panic!";
+    first + best as f32 + n as f32 + s.len() as f32 + arr.len() as f32
+}

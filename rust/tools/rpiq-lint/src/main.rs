@@ -1,0 +1,336 @@
+//! `rpiq-lint` — repo-specific static invariants clippy cannot express.
+//!
+//! Four rules over `rust/src` (see rust/DESIGN.md §"Static analysis &
+//! concurrency validation" for the rationale):
+//!
+//! * **unsafe-island** — `unsafe` may appear only under `exec/`; every
+//!   `unsafe` there needs a `// SAFETY:` comment on the same line or in
+//!   the comment block directly above; every other top-level module root
+//!   (`*/mod.rs`, plus `main.rs`) must carry `#![forbid(unsafe_code)]`.
+//! * **no-panic** — request-path and loader modules
+//!   (`coordinator/serve.rs`, `model/io.rs`, `vlm/io.rs`) must not use
+//!   `unwrap()/expect()/panic!`-family macros or bare slice indexing in
+//!   non-test code.
+//! * **hash-iter** — determinism-critical modules (`quant/*`,
+//!   `coordinator/pipeline.rs`) must not iterate `HashMap`/`HashSet`
+//!   (hash order is nondeterministic across runs and platforms).
+//! * **ledger-tags** — `MemoryLedger::{alloc,free,scoped}` must take tag
+//!   constants from `metrics/tags.rs`, never raw string literals, so
+//!   register/release pairs cannot drift; the registry itself must be
+//!   duplicate-free.
+//!
+//! Escapes: a `// LINT-ALLOW(<lint>): reason` comment on the offending
+//! line or in the comment block directly above silences that one site;
+//! `// ORDER-INSENSITIVE:` is an alias accepted by `hash-iter` for loops
+//! whose result provably does not depend on iteration order.
+//!
+//! Test code (everything from the first `#[cfg(test)]` line to EOF — the
+//! repo convention keeps test modules at the end of a file) is exempt
+//! from every rule except `unsafe-island`.
+//!
+//! Usage: `rpiq-lint [rust/src]` scans a tree; `rpiq-lint --self-test`
+//! checks that each seeded fixture violation still fires (CI runs both).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+mod scan;
+
+use scan::SourceFile;
+
+/// One reported violation.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub path: String,
+    pub line: usize,
+    pub lint: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.lint, self.message)
+    }
+}
+
+/// Files (relative to the scanned root) whose non-test code must be free
+/// of panicking constructs.
+const NO_PANIC_FILES: &[&str] = &["coordinator/serve.rs", "model/io.rs", "vlm/io.rs"];
+
+/// The one directory allowed to contain `unsafe`.
+const UNSAFE_ISLAND: &str = "exec/";
+
+/// Panic-capable tokens (macros checked with their `!`).
+const PANIC_MACROS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+fn is_hash_iter_file(rel: &str) -> bool {
+    rel.starts_with("quant/") || rel == "coordinator/pipeline.rs"
+}
+
+fn is_module_root(rel: &str) -> bool {
+    rel == "main.rs" || (rel.ends_with("/mod.rs") && rel.matches('/').count() == 1)
+}
+
+/// Run every rule over one file; `rel` is the path relative to the
+/// scanned root (used for classification and reporting).
+pub fn lint_file(rel: &str, text: &str) -> Vec<Violation> {
+    let src = SourceFile::parse(rel, text);
+    let mut out = Vec::new();
+    lint_unsafe_island(rel, &src, &mut out);
+    if NO_PANIC_FILES.contains(&rel) {
+        lint_no_panic(&src, &mut out);
+    }
+    if is_hash_iter_file(rel) {
+        lint_hash_iter(&src, &mut out);
+    }
+    if rel != "metrics/tags.rs" {
+        lint_ledger_tags(&src, &mut out);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: unsafe-island
+// ---------------------------------------------------------------------------
+
+fn lint_unsafe_island(rel: &str, src: &SourceFile, out: &mut Vec<Violation>) {
+    let in_island = rel.starts_with(UNSAFE_ISLAND);
+    for (i, line) in src.lines.iter().enumerate() {
+        if !scan::has_word(&line.code, "unsafe") {
+            continue;
+        }
+        if !in_island {
+            out.push(src.violation(i, "unsafe-island", "`unsafe` outside the `exec` island"));
+        } else if !src.comment_block_contains(i, "SAFETY:") {
+            out.push(src.violation(
+                i,
+                "unsafe-island",
+                "`unsafe` without a `// SAFETY:` comment on the line or directly above",
+            ));
+        }
+    }
+    if is_module_root(rel) && !rel.starts_with(UNSAFE_ISLAND) {
+        let has_forbid = src.lines.iter().any(|l| l.code.contains("#![forbid(unsafe_code)]"));
+        if !has_forbid {
+            out.push(src.violation(
+                0,
+                "unsafe-island",
+                "module root missing `#![forbid(unsafe_code)]`",
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: no-panic
+// ---------------------------------------------------------------------------
+
+fn lint_no_panic(src: &SourceFile, out: &mut Vec<Violation>) {
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.in_tests || src.allowed(i, "no-panic") {
+            continue;
+        }
+        let code = &line.code;
+        if code.contains(".unwrap()") {
+            out.push(src.violation(i, "no-panic", "`unwrap()` in request-path/loader code"));
+        }
+        if code.contains(".expect(") {
+            out.push(src.violation(i, "no-panic", "`expect()` in request-path/loader code"));
+        }
+        for m in PANIC_MACROS {
+            if scan::has_macro(code, m) {
+                out.push(src.violation(
+                    i,
+                    "no-panic",
+                    &format!("`{m}` in request-path/loader code"),
+                ));
+            }
+        }
+        for col in scan::bare_index_columns(code) {
+            out.push(src.violation(
+                i,
+                "no-panic",
+                &format!("bare slice indexing at column {} (use `get`/patterns)", col + 1),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: hash-iter
+// ---------------------------------------------------------------------------
+
+const ITER_METHODS: &[&str] =
+    &[".iter()", ".iter_mut()", ".keys()", ".values()", ".values_mut()", ".drain()", ".into_iter()"];
+
+fn lint_hash_iter(src: &SourceFile, out: &mut Vec<Violation>) {
+    let bindings = scan::hash_bindings(src);
+    if bindings.is_empty() {
+        return;
+    }
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.in_tests || src.allowed(i, "hash-iter") {
+            continue;
+        }
+        let code = &line.code;
+        for name in &bindings {
+            let direct_iter =
+                ITER_METHODS.iter().any(|m| scan::calls_method_on(code, name, m));
+            let for_over = scan::for_loop_over(code, name);
+            if direct_iter || for_over {
+                out.push(src.violation(
+                    i,
+                    "hash-iter",
+                    &format!(
+                        "iteration over hash collection `{name}` in a determinism-critical \
+                         module (use BTreeMap, sort first, or mark `// ORDER-INSENSITIVE:`)"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: ledger-tags
+// ---------------------------------------------------------------------------
+
+fn lint_ledger_tags(src: &SourceFile, out: &mut Vec<Violation>) {
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.in_tests || src.allowed(i, "ledger-tags") {
+            continue;
+        }
+        for call in [".alloc(", ".free(", ".scoped("] {
+            // `line.code` has string contents blanked but keeps the
+            // quotes, so a literal first argument still shows as `("`.
+            if let Some(pos) = line.code.find(call) {
+                let rest = &line.code[pos + call.len()..];
+                if rest.trim_start().starts_with('"') {
+                    out.push(src.violation(
+                        i,
+                        "ledger-tags",
+                        "ledger tag is a raw string literal (declare it in `metrics::tags`)",
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Check the registry itself: every `pub const NAME: &str = "...";` value
+/// must be unique and non-empty.
+pub fn lint_tag_registry(rel: &str, text: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut seen: Vec<(String, usize)> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let t = raw.trim();
+        if !(t.starts_with("pub const ") && t.contains(": &str = \"")) {
+            continue;
+        }
+        let Some(val) = t.split('"').nth(1) else { continue };
+        if val.is_empty() {
+            out.push(Violation {
+                path: rel.into(),
+                line: i + 1,
+                lint: "ledger-tags",
+                message: "empty tag in the registry".into(),
+            });
+        }
+        if let Some((_, first)) = seen.iter().find(|(v, _)| v == val) {
+            out.push(Violation {
+                path: rel.into(),
+                line: i + 1,
+                lint: "ledger-tags",
+                message: format!("duplicate tag \"{val}\" (first declared on line {first})"),
+            });
+        } else {
+            seen.push((val.to_string(), i + 1));
+        }
+    }
+    if seen.is_empty() {
+        out.push(Violation {
+            path: rel.into(),
+            line: 1,
+            lint: "ledger-tags",
+            message: "tag registry declares no `pub const ...: &str` tags".into(),
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn rust_files(root: &Path) -> Vec<PathBuf> {
+    let mut stack = vec![root.to_path_buf()];
+    let mut files = Vec::new();
+    while let Some(dir) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&dir) else { continue };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                files.push(p);
+            }
+        }
+    }
+    files.sort();
+    files
+}
+
+fn lint_tree(root: &Path) -> Result<Vec<Violation>, String> {
+    if !root.is_dir() {
+        return Err(format!("not a directory: {}", root.display()));
+    }
+    let mut all = Vec::new();
+    let mut n = 0usize;
+    for path in rust_files(root) {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|e| e.to_string())?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        all.extend(lint_file(&rel, &text));
+        if rel == "metrics/tags.rs" {
+            all.extend(lint_tag_registry(&rel, &text));
+        }
+        n += 1;
+    }
+    if n == 0 {
+        return Err(format!("no .rs files under {}", root.display()));
+    }
+    eprintln!("rpiq-lint: scanned {n} files under {}", root.display());
+    Ok(all)
+}
+
+mod self_test;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--self-test") {
+        return self_test::run();
+    }
+    let root = PathBuf::from(args.first().map_or("rust/src", String::as_str));
+    match lint_tree(&root) {
+        Ok(v) if v.is_empty() => {
+            eprintln!("rpiq-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(v) => {
+            for viol in &v {
+                println!("{viol}");
+            }
+            eprintln!("rpiq-lint: {} violation(s)", v.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("rpiq-lint: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Line-oriented Rust source scanner: comment/string-aware code views.
+//!
+//! Not a parser — a tokenizer that is exact about what matters for the
+//! lints: comments (line, nested block, doc), string/char literals
+//! (including raw strings and lifetimes), and the `#[cfg(test)]` tail
+//! convention. Each source line yields a *code view* with comment text
+//! removed and literal contents blanked (quotes preserved), plus the
+//! line's comment text for marker detection.
+
+/// One source line, split into code and comment channels.
+pub struct Line {
+    /// Code with comments stripped and literal contents blanked.
+    pub code: String,
+    /// Comment text on the line (contents of `//…` / `/*…*/` parts).
+    pub comment: String,
+    /// True from the first `#[cfg(test)]` line to EOF.
+    pub in_tests: bool,
+}
+
+/// A scanned file.
+pub struct SourceFile {
+    pub rel: String,
+    pub lines: Vec<Line>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let mut lines = Vec::new();
+        let mut chars = text.chars().peekable();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut block_depth = 0usize; // nested /* */
+        let mut in_line_comment = false;
+
+        let mut push_line = |code: &mut String, comment: &mut String, lines: &mut Vec<Line>| {
+            lines.push(Line {
+                code: std::mem::take(code),
+                comment: std::mem::take(comment),
+                in_tests: false,
+            });
+        };
+
+        while let Some(c) = chars.next() {
+            if c == '\n' {
+                in_line_comment = false;
+                push_line(&mut code, &mut comment, &mut lines);
+                continue;
+            }
+            if in_line_comment {
+                comment.push(c);
+                continue;
+            }
+            if block_depth > 0 {
+                if c == '*' && chars.peek() == Some(&'/') {
+                    chars.next();
+                    block_depth -= 1;
+                } else if c == '/' && chars.peek() == Some(&'*') {
+                    chars.next();
+                    block_depth += 1;
+                } else {
+                    comment.push(c);
+                }
+                continue;
+            }
+            match c {
+                '/' if chars.peek() == Some(&'/') => {
+                    chars.next();
+                    in_line_comment = true;
+                }
+                '/' if chars.peek() == Some(&'*') => {
+                    chars.next();
+                    block_depth = 1;
+                }
+                '"' => {
+                    // string literal (the `r`/`b` prefix, if any, is
+                    // already in `code`); blank the contents
+                    let raw = code.ends_with('r') || code.ends_with("r#") || code.ends_with("##");
+                    code.push('"');
+                    if raw {
+                        // raw string: count the `#`s just emitted
+                        let hashes =
+                            code.trim_end_matches('"').chars().rev().take_while(|&h| h == '#').count();
+                        let closer: String =
+                            std::iter::once('"').chain(std::iter::repeat('#').take(hashes)).collect();
+                        let mut tail = String::new();
+                        for c2 in chars.by_ref() {
+                            tail.push(c2);
+                            if tail.ends_with(&closer) {
+                                break;
+                            }
+                        }
+                        // preserve line structure of multi-line raw strings
+                        for c2 in tail.chars() {
+                            if c2 == '\n' {
+                                push_line(&mut code, &mut comment, &mut lines);
+                            }
+                        }
+                        code.push('"');
+                    } else {
+                        while let Some(c2) = chars.next() {
+                            match c2 {
+                                '\\' => {
+                                    chars.next();
+                                }
+                                '"' => break,
+                                '\n' => push_line(&mut code, &mut comment, &mut lines),
+                                _ => {}
+                            }
+                        }
+                        code.push('"');
+                    }
+                }
+                '\'' => {
+                    // char literal vs lifetime: a char literal closes
+                    // within two chars (one scalar or an escape)
+                    let mut look = chars.clone();
+                    let first = look.next();
+                    match first {
+                        Some('\\') => {
+                            // escaped char literal: consume to closing quote
+                            code.push('\'');
+                            chars.next(); // backslash
+                            chars.next(); // escaped char
+                            for c2 in chars.by_ref() {
+                                if c2 == '\'' {
+                                    break;
+                                }
+                            }
+                            code.push('\'');
+                        }
+                        Some(_) if look.next() == Some('\'') => {
+                            code.push('\'');
+                            chars.next();
+                            chars.next();
+                            code.push('\'');
+                        }
+                        _ => code.push('\''), // lifetime
+                    }
+                }
+                _ => code.push(c),
+            }
+        }
+        if !code.is_empty() || !comment.is_empty() {
+            push_line(&mut code, &mut comment, &mut lines);
+        }
+
+        let mut in_tests = false;
+        for l in &mut lines {
+            if l.code.contains("#[cfg(test)]") {
+                in_tests = true;
+            }
+            l.in_tests = in_tests;
+        }
+        SourceFile { rel: rel.to_string(), lines }
+    }
+
+    /// True if the marker text appears in the comment of line `i` or in
+    /// the contiguous run of comment-only lines directly above it.
+    pub fn comment_block_contains(&self, i: usize, marker: &str) -> bool {
+        if self.lines.get(i).is_some_and(|l| l.comment.contains(marker)) {
+            return true;
+        }
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let Some(l) = self.lines.get(j) else { break };
+            let blank_code = l.code.trim().is_empty();
+            let has_comment = !l.comment.trim().is_empty();
+            if blank_code && has_comment {
+                if l.comment.contains(marker) {
+                    return true;
+                }
+            } else if blank_code && !has_comment {
+                break; // blank line ends the block
+            } else {
+                // a code line above: only its trailing comment counts
+                return l.comment.contains(marker);
+            }
+        }
+        false
+    }
+
+    /// `// LINT-ALLOW(<lint>): reason` (or `// ORDER-INSENSITIVE:` for
+    /// `hash-iter`) on the line or in the comment block directly above.
+    pub fn allowed(&self, i: usize, lint: &str) -> bool {
+        let marker = format!("LINT-ALLOW({lint})");
+        self.comment_block_contains(i, &marker)
+            || (lint == "hash-iter" && self.comment_block_contains(i, "ORDER-INSENSITIVE:"))
+    }
+
+    pub fn violation(&self, i: usize, lint: &'static str, message: &str) -> super::Violation {
+        super::Violation {
+            path: self.rel.clone(),
+            line: i + 1,
+            lint,
+            message: message.to_string(),
+        }
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Whole-word occurrence of `word` in `code`.
+pub fn has_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(code[..at].chars().next_back().unwrap_or(' '));
+        let after = code[at + word.len()..].chars().next().unwrap_or(' ');
+        if before_ok && !is_ident(after) {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+/// Macro invocation `name!(…)` / `name![…]` / `name!{…}` (the `!` is part
+/// of `mac`, e.g. `"panic!"`).
+pub fn has_macro(code: &str, mac: &str) -> bool {
+    let name = &mac[..mac.len() - 1];
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(mac) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(code[..at].chars().next_back().unwrap_or(' '));
+        if before_ok {
+            return true;
+        }
+        start = at + name.len();
+    }
+    false
+}
+
+/// Columns of `[` that index an expression (previous non-space char is an
+/// identifier char, `)`, or `]`) — i.e. potential panicking indexing.
+/// Attribute lines (`#[…]`, `#![…]`) are skipped entirely.
+pub fn bare_index_columns(code: &str) -> Vec<usize> {
+    let t = code.trim_start();
+    if t.starts_with("#[") || t.starts_with("#![") {
+        return Vec::new();
+    }
+    let bytes: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    for (i, &c) in bytes.iter().enumerate() {
+        if c != '[' {
+            continue;
+        }
+        let mut j = i;
+        let prev = loop {
+            if j == 0 {
+                break ' ';
+            }
+            j -= 1;
+            if bytes[j] != ' ' {
+                break bytes[j];
+            }
+        };
+        if !(is_ident(prev) || prev == ')' || prev == ']') {
+            // `x!`-macro brackets never reach here (prev would be `!`)
+            continue;
+        }
+        if is_ident(prev) {
+            // a keyword before `[` introduces a slice *pattern* or array
+            // literal, not indexing (`let [a] = …`, `for [a, b] in …`)
+            let mut word = String::new();
+            let mut k = j;
+            loop {
+                word.insert(0, bytes[k]);
+                if k == 0 || !is_ident(bytes[k - 1]) {
+                    break;
+                }
+                k -= 1;
+            }
+            const PATTERN_KEYWORDS: &[&str] =
+                &["let", "mut", "ref", "for", "move", "box", "dyn", "return", "else"];
+            if PATTERN_KEYWORDS.contains(&word.as_str()) {
+                continue;
+            }
+            // a lifetime before `[` is a slice *type* (`&'a [f32]`), not
+            // an indexing expression
+            if k > 0 && bytes[k - 1] == '\'' {
+                continue;
+            }
+        }
+        out.push(i);
+    }
+    out
+}
+
+/// Names bound to `HashMap`/`HashSet` values in this file: `let` bindings
+/// with a hash type or constructor on the line, and `name: [&mut ]Hash…`
+/// type ascriptions (fn params, struct fields used locally).
+pub fn hash_bindings(src: &SourceFile) -> Vec<String> {
+    let mut names = Vec::new();
+    for line in &src.lines {
+        let code = &line.code;
+        if !(code.contains("HashMap") || code.contains("HashSet")) {
+            continue;
+        }
+        // `let [mut] NAME` …
+        if let Some(pos) = code.find("let ") {
+            let rest = code[pos + 4..].trim_start();
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+            let name: String = rest.chars().take_while(|&c| is_ident(c)).collect();
+            if !name.is_empty() && !names.contains(&name) {
+                names.push(name);
+            }
+            continue;
+        }
+        // `NAME: [&][mut ]Hash…`
+        for hay in ["HashMap", "HashSet"] {
+            let Some(hpos) = code.find(hay) else { continue };
+            let before = code[..hpos].trim_end();
+            let before = before.strip_suffix("mut").unwrap_or(before).trim_end();
+            let before = before.strip_suffix('&').unwrap_or(before).trim_end();
+            let Some(before) = before.strip_suffix(':') else { continue };
+            let name: String =
+                before.chars().rev().take_while(|&c| is_ident(c)).collect::<String>();
+            let name: String = name.chars().rev().collect();
+            if !name.is_empty()
+                && !name.chars().next().is_some_and(|c| c.is_ascii_digit())
+                && !names.contains(&name)
+            {
+                names.push(name);
+            }
+        }
+    }
+    names
+}
+
+/// `for … in [&]NAME {` — a by-value/by-ref loop directly over `NAME`.
+pub fn for_loop_over(code: &str, name: &str) -> bool {
+    let Some(fpos) = code.find("for ") else { return false };
+    let Some(inpos_rel) = code[fpos..].find(" in ") else { return false };
+    let expr = code[fpos + inpos_rel + 4..].trim_start();
+    let expr = expr.strip_prefix('&').unwrap_or(expr).trim_start();
+    let expr = expr.strip_prefix("mut ").unwrap_or(expr).trim_start();
+    let Some(rest) = expr.strip_prefix(name) else { return false };
+    rest.trim_start().starts_with('{')
+}
+
+/// Boundary-checked `NAME<method>` call, e.g. `calls_method_on(code,
+/// "calib", ".iter()")` matches `calib.iter()` but not `my_calib.iter()`.
+pub fn calls_method_on(code: &str, name: &str, method: &str) -> bool {
+    let needle = format!("{name}{method}");
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(&needle) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(code[..at].chars().next_back().unwrap_or(' '));
+        if before_ok {
+            return true;
+        }
+        start = at + name.len();
+    }
+    false
+}

@@ -1,0 +1,117 @@
+//! Self-test: seeded fixture violations must keep firing. CI runs
+//! `rpiq-lint --self-test` next to the tree scan, so a regression that
+//! silently blinds a rule fails the build the same way a violation does.
+
+use crate::{lint_file, lint_tag_registry};
+use std::process::ExitCode;
+
+struct Case {
+    fixture: &'static str,
+    source: &'static str,
+    /// Virtual path controlling how the file is classified.
+    path: &'static str,
+    /// (lint name, expected violation count)
+    expect: &'static [(&'static str, usize)],
+}
+
+const CASES: &[Case] = &[
+    Case {
+        fixture: "bad_no_panic.rs",
+        source: include_str!("../fixtures/bad_no_panic.rs"),
+        path: "coordinator/serve.rs",
+        expect: &[("no-panic", 4)],
+    },
+    Case {
+        fixture: "bad_unsafe.rs",
+        source: include_str!("../fixtures/bad_unsafe.rs"),
+        path: "exec/mod.rs",
+        expect: &[("unsafe-island", 1)],
+    },
+    Case {
+        fixture: "bad_unsafe_outside.rs",
+        source: include_str!("../fixtures/bad_unsafe_outside.rs"),
+        path: "quant/fake.rs",
+        expect: &[("unsafe-island", 1)],
+    },
+    Case {
+        fixture: "bad_missing_forbid.rs",
+        source: include_str!("../fixtures/bad_missing_forbid.rs"),
+        path: "tensor/mod.rs",
+        expect: &[("unsafe-island", 1)],
+    },
+    Case {
+        fixture: "bad_hash_iter.rs",
+        source: include_str!("../fixtures/bad_hash_iter.rs"),
+        path: "quant/fake.rs",
+        expect: &[("hash-iter", 2)],
+    },
+    Case {
+        fixture: "bad_ledger_literal.rs",
+        source: include_str!("../fixtures/bad_ledger_literal.rs"),
+        path: "quant/fake.rs",
+        expect: &[("ledger-tags", 1)],
+    },
+    Case {
+        fixture: "good.rs",
+        source: include_str!("../fixtures/good.rs"),
+        path: "coordinator/serve.rs",
+        expect: &[],
+    },
+];
+
+pub fn check() -> Result<(), String> {
+    for case in CASES {
+        let got = lint_file(case.path, case.source);
+        for &(lint, want) in case.expect {
+            let n = got.iter().filter(|v| v.lint == lint).count();
+            if n != want {
+                return Err(format!(
+                    "fixture {} (as {}): expected {want} `{lint}` violation(s), got {n}:\n{}",
+                    case.fixture,
+                    case.path,
+                    got.iter().map(|v| format!("  {v}\n")).collect::<String>()
+                ));
+            }
+        }
+        let expected_total: usize = case.expect.iter().map(|&(_, n)| n).sum();
+        if got.len() != expected_total {
+            return Err(format!(
+                "fixture {} (as {}): {} unexpected extra violation(s):\n{}",
+                case.fixture,
+                case.path,
+                got.len() - expected_total.min(got.len()),
+                got.iter().map(|v| format!("  {v}\n")).collect::<String>()
+            ));
+        }
+    }
+    // The registry check must catch duplicates and an emptied registry.
+    let dup = "pub const A: &str = \"same\";\npub const B: &str = \"same\";\n";
+    if lint_tag_registry("metrics/tags.rs", dup).len() != 1 {
+        return Err("registry duplicate not detected".into());
+    }
+    if lint_tag_registry("metrics/tags.rs", "// nothing\n").is_empty() {
+        return Err("empty registry not detected".into());
+    }
+    Ok(())
+}
+
+pub fn run() -> ExitCode {
+    match check() {
+        Ok(()) => {
+            eprintln!("rpiq-lint: self-test ok ({} fixtures)", CASES.len());
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("rpiq-lint: self-test FAILED: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fixtures_fire_expected_violations() {
+        super::check().expect("self-test");
+    }
+}
