@@ -185,5 +185,39 @@ fn main() -> anyhow::Result<()> {
         }
     }
     exec::set_threads(exec::default_threads());
+
+    // Optional trace artifact: `RPIQ_TRACE=out.json` records one extra
+    // bounded pipeline run (the small arm, after the timed sweep, so it
+    // cannot perturb the numbers above) as Chrome trace JSON. CI uploads
+    // the file with the bench logs and runs `rpiq trace summarize` over
+    // it, so a trace that fails to balance fails the job.
+    if let Some(path) = std::env::var_os("RPIQ_TRACE") {
+        let arm = &ARMS[0];
+        let cfg = ModelConfig {
+            name: format!("quant-trace-{}", arm.label),
+            vocab,
+            d_model: arm.d_model,
+            n_layers: arm.n_layers,
+            n_heads: 4,
+            d_ff: arm.d_ff,
+            seq_len: arm.seq,
+            activation: Activation::Gelu,
+            tied_head: false,
+        };
+        let mut rng = Pcg64::seeded(8003);
+        let w = LmWeights::init(&cfg, &mut rng);
+        let windows = corpus.calibration(5, arm.windows, arm.seq);
+        let qcfg = QuantConfig { bits: 4, group_size: 32, block_size: 32, percdamp: 0.01 };
+        rpiq::trace::start();
+        let _ = quantize_lm(&w, &windows, qcfg, Method::Rpiq(RpiqParams::default()))?;
+        let t = rpiq::trace::stop_and_take();
+        t.summary().map_err(|e| anyhow::anyhow!("quantize trace did not balance: {e}"))?;
+        std::fs::write(&path, t.to_chrome_json())?;
+        println!(
+            "trace: {} events -> {} (chrome://tracing / ui.perfetto.dev)",
+            t.events.len(),
+            std::path::Path::new(&path).display()
+        );
+    }
     Ok(())
 }

@@ -141,5 +141,23 @@ fn main() -> anyhow::Result<()> {
             if p4 < p1 { "multi-lane wins" } else { "single-lane wins here" }
         );
     }
+
+    // Optional trace artifact: `RPIQ_TRACE=out.json` records one extra
+    // bounded replay (outside the timed sweep, so it cannot perturb the
+    // numbers above) as Chrome trace JSON. CI uploads the file with the
+    // bench logs and runs `rpiq trace summarize` over it, so a trace that
+    // fails to balance fails the job.
+    if let Some(path) = std::env::var_os("RPIQ_TRACE") {
+        rpiq::trace::start();
+        arm(&lm, &vlm, &world, "mixed", 2, 8, 8, 120, "traced");
+        let t = rpiq::trace::stop_and_take();
+        t.summary().map_err(|e| anyhow::anyhow!("serve trace did not balance: {e}"))?;
+        std::fs::write(&path, t.to_chrome_json())?;
+        println!(
+            "trace: {} events -> {} (chrome://tracing / ui.perfetto.dev)",
+            t.events.len(),
+            std::path::Path::new(&path).display()
+        );
+    }
     Ok(())
 }

@@ -142,10 +142,14 @@ fn quant_cfg(args: &mut Args) -> Result<QuantConfig> {
 pub fn quantize(args: &mut Args) -> Result<()> {
     let ckpt = PathBuf::from(args.require("ckpt")?);
     let out_path = args.opt("out").map(PathBuf::from);
+    let trace_out = args.opt("trace").map(PathBuf::from);
     let method = parse_method(args)?;
     let cfg = quant_cfg(args)?;
     args.finish()?;
 
+    if trace_out.is_some() {
+        crate::trace::start();
+    }
     let w = world();
     if is_vlm(&ckpt) {
         let weights = load_vlm(&ckpt)?;
@@ -177,6 +181,47 @@ pub fn quantize(args: &mut Args) -> Result<()> {
             );
         }
     }
+    if let Some(p) = &trace_out {
+        write_trace(p)?;
+    }
+    Ok(())
+}
+
+/// Stop collecting, export the Chrome trace-event JSON to `path`, and
+/// print the in-process per-phase summary (the same aggregation `rpiq
+/// trace summarize` recomputes from the file).
+fn write_trace(path: &Path) -> Result<()> {
+    let t = crate::trace::stop_and_take();
+    std::fs::write(path, t.to_chrome_json())?;
+    let summary = t.summary().map_err(|e| anyhow::anyhow!("trace summary: {e}"))?;
+    print!("{}", summary.render());
+    println!(
+        "trace: {} events -> {} (open in chrome://tracing or ui.perfetto.dev)",
+        t.events.len(),
+        path.display()
+    );
+    Ok(())
+}
+
+/// `rpiq trace summarize` — aggregate a recorded Chrome-trace JSON into
+/// per-phase span/counter/instant tables. Errors (non-zero exit) on
+/// malformed JSON or unbalanced span trees, so CI can gate on trace
+/// integrity.
+pub fn trace_summarize(args: &mut Args) -> Result<()> {
+    let path = PathBuf::from(args.require("in")?);
+    args.finish()?;
+    let text = std::fs::read_to_string(&path)?;
+    let t = crate::trace::parse_chrome(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let summary = t.summary().map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    print!("{}", summary.render());
+    let tids: std::collections::BTreeSet<u64> = t.events.iter().map(|e| e.tid).collect();
+    println!(
+        "{}: {} events across {} thread(s)",
+        path.display(),
+        t.events.len(),
+        tids.len()
+    );
     Ok(())
 }
 
@@ -278,6 +323,13 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let n_clients = args.usize_of("clients", 4)?;
     let max_batch = args.usize_of("max-batch", 8)?;
     let lanes = args.usize_of("lanes", 2)?;
+    // `--trace out.json` or bare `--trace` (default path)
+    let trace_out = args
+        .opt("trace")
+        .map(PathBuf::from)
+        .or_else(|| args.flag("trace").then(|| PathBuf::from("serve-trace.json")));
+    // heartbeat period in seconds; 0 (the default) disables it
+    let stats_every = args.f32_of("stats-every", 0.0)?;
     // Quantization flags apply only to fp32 startup quantization; record
     // which were explicitly passed so a --qckpt-only invocation can
     // reject them instead of silently serving the container's baked-in
@@ -292,6 +344,9 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let cfg = quant_cfg(args)?;
     args.finish()?;
 
+    if trace_out.is_some() {
+        crate::trace::start();
+    }
     let w = world();
     let tok = w.tokenizer().clone();
     let scfg = ServeConfig { max_batch, lanes, ..Default::default() };
@@ -430,8 +485,30 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let ledger = server.ledger().clone();
 
     // Replay workload: sentiment prompts and/or VQA pairs from the world's
-    // test sets, interleaved in mixed mode.
-    let tput = replay_mixed(&server, w.replay_items(&mode, n_requests), n_clients);
+    // test sets, interleaved in mixed mode. The heartbeat thread borrows
+    // the server for the replay's duration (scoped), polling in short
+    // slices so it exits promptly once the replay returns.
+    let items = w.replay_items(&mode, n_requests);
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let tput = std::thread::scope(|sc| {
+        if stats_every > 0.0 {
+            let (server, ledger, stop) = (&server, &ledger, &stop);
+            let period = std::time::Duration::from_secs_f32(stats_every.max(0.05));
+            sc.spawn(move || {
+                let mut next = std::time::Instant::now() + period;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    if std::time::Instant::now() >= next {
+                        next += period;
+                        print_heartbeat(server, ledger);
+                    }
+                }
+            });
+        }
+        let tput = replay_mixed(&server, items, n_clients);
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        tput
+    });
     let stats = server.shutdown();
     println!(
         "served {} requests over {} lane(s): {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p95 {:.2} ms",
@@ -451,13 +528,68 @@ pub fn serve(args: &mut Args) -> Result<()> {
             l.percentile_ms(95.0),
             ledger.peak_for(&crate::metrics::tags::activations(&name)) as f64 / (1 << 20) as f64
         );
+        // queue-wait vs service decomposition + the lane's error accounting
+        if let (Some(q), Some(svc)) = (stats.lane_queue(&name), stats.lane_service(&name)) {
+            let hist: Vec<String> = stats
+                .batch_histogram(&name)
+                .iter()
+                .map(|(size, n)| format!("{size}\u{00d7}{n}"))
+                .collect();
+            println!(
+                "       {:9} queue-wait mean {:.2} ms p95 {:.2} ms | service mean {:.2} ms p95 {:.2} ms | drops {} | batches {}",
+                "",
+                q.mean_ms(),
+                q.percentile_ms(95.0),
+                svc.mean_ms(),
+                svc.percentile_ms(95.0),
+                stats.drops(&name),
+                if hist.is_empty() { "-".to_string() } else { hist.join(" ") }
+            );
+        }
     }
+    let rej = stats.rejects();
+    println!(
+        "dropped {} request(s), rejected {} (closed {} / unsupported {} / invalid {})",
+        stats.total_drops(),
+        rej.total(),
+        rej.closed,
+        rej.unsupported,
+        rej.invalid
+    );
     println!(
         "serving peak {:.2} MiB (model resident {:.2} MiB)",
         ledger.peak_mib(),
         ledger.peak_for(crate::model::RESIDENT_TAG) as f64 / (1 << 20) as f64
     );
+    if let Some(p) = &trace_out {
+        write_trace(p)?;
+    }
     Ok(())
+}
+
+/// One heartbeat line while the replay runs: queue depth, per-lane
+/// p50/p99, drop/reject totals, ledger live/peak.
+fn print_heartbeat(server: &Server, ledger: &crate::metrics::MemoryLedger) {
+    let stats = &server.stats;
+    let mut lanes = String::new();
+    for name in stats.lane_names() {
+        if let Some(l) = stats.lane(&name) {
+            lanes.push_str(&format!(
+                " | {name} n={} p50={:.1}ms p99={:.1}ms",
+                l.count(),
+                l.percentile_ms(50.0),
+                l.percentile_ms(99.0)
+            ));
+        }
+    }
+    println!(
+        "[serve] qdepth={}{lanes} | drops={} rejects={} | mem live={:.1} MiB peak={:.1} MiB",
+        server.queue_depth(),
+        stats.total_drops(),
+        stats.rejects().total(),
+        ledger.live_bytes() as f64 / (1 << 20) as f64,
+        ledger.peak_mib()
+    );
 }
 
 /// `rpiq inspect` — describe a checkpoint (fp32 or quantized `.rpiq`).

@@ -3,13 +3,15 @@
 //! ```text
 //! rpiq pretrain  --all | --preset NAME   [--steps N] [--out-dir DIR]
 //! rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G]
-//!                [--iters T] [--alpha A] [--out model.rpiq]
+//!                [--iters T] [--alpha A] [--out model.rpiq] [--trace t.json]
 //! rpiq eval      --ckpt PATH [--method gptq|rpiq|fp] [--n-test N]
 //! rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed]
 //!                [--vlm-ckpt PATH | --vlm-qckpt model.rpiq]
 //!                [--lanes N] [--requests N] [--clients C] [--method ...]
+//!                [--trace [t.json]] [--stats-every SECS]
 //! rpiq inspect   --ckpt PATH               # fp32 or quantized .rpiq
 //! rpiq artifacts --dir artifacts   # validate + smoke-run the AOT bundle
+//! rpiq trace summarize --in t.json # per-phase table of a Chrome trace
 //! ```
 
 #![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
@@ -20,7 +22,20 @@ mod commands;
 pub use args::Args;
 
 /// Entry point used by `main.rs`.
-pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
+pub fn run(mut argv: Vec<String>) -> anyhow::Result<()> {
+    // `trace` takes a sub-verb (`rpiq trace summarize --in t.json`), which
+    // Args (one command + flags, no positionals) cannot express — peel the
+    // word here and parse the remainder as its own command line.
+    if argv.first().map(String::as_str) == Some("trace") {
+        argv.remove(0);
+        let mut args = Args::parse(argv)?;
+        return match args.command() {
+            "summarize" => commands::trace_summarize(&mut args),
+            other => {
+                anyhow::bail!("unknown trace subcommand '{other}' (expected: summarize)\n{HELP}")
+            }
+        };
+    }
     let mut args = Args::parse(argv)?;
     let cmd = args.command().to_string();
     match cmd.as_str() {
@@ -44,17 +59,25 @@ rpiq — Residual-Projected Multi-Collaboration Closed-Loop and Single Instance 
 USAGE:
   rpiq pretrain  --all | --preset NAME [--steps N] [--out-dir DIR] [--seed S]
   rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G] [--iters T] [--alpha A]
-                 [--out model.rpiq]
+                 [--out model.rpiq] [--trace trace.json]
   rpiq eval      --ckpt PATH [--method fp|gptq|rpiq] [--n-test N]
   rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed]
                  [--vlm-ckpt PATH | --vlm-qckpt model.rpiq]
                  [--lanes N] [--requests N] [--clients C] [--max-batch B]
+                 [--trace [trace.json]] [--stats-every SECS]
   rpiq inspect   --ckpt PATH               (fp32 checkpoint or quantized .rpiq)
   rpiq artifacts [--dir artifacts]
+  rpiq trace summarize --in trace.json     (per-phase table of a recorded trace)
 
 The pretrain command produces the subject checkpoints (4 LM presets + the
 VLM) that the table benches quantize. `quantize --out` writes the
 nibble-packed deployment container; `serve --qckpt` cold-starts from it
 without ever materializing fp32 linears. See rust/DESIGN.md for the
 experiment map and §Deployment memory for the container format.
+
+`--trace` records a Chrome trace-event JSON of the run (open it in
+chrome://tracing or ui.perfetto.dev; `serve --trace` without a value
+writes serve-trace.json). `serve --stats-every SECS` prints a one-line
+heartbeat (queue depth, per-lane p50/p99, drops/rejects, ledger
+live/peak) while the replay runs. See rust/DESIGN.md §Observability.
 ";

@@ -162,6 +162,8 @@ where
             .map(|(k, w)| {
                 let wi = ci * wave + k;
                 move || {
+                    let _span =
+                        crate::trace::span_detail("quant", "calib.window", || format!("w{wi}"));
                     let mut tap = ActivationTap::new();
                     fwd(w, &mut tap);
                     let mut partials: HashMap<String, HessianPartial> = HashMap::new();
@@ -198,6 +200,7 @@ where
         }
     }
     let mut out = HashMap::new();
+    let _finalize = crate::trace::span("quant", "calib.finalize");
     for name in layer_names {
         let acc = accs.remove(name).unwrap();
         let (h, _lambda) = acc.finalize(percdamp);
@@ -280,8 +283,10 @@ fn quantize_layer(
     ledger: &MemoryLedger,
     timers: &Timers,
 ) -> Result<(QuantizedLinear, LayerReport)> {
-    let (stage1, stage1_secs) =
-        timers.time_secs("stage1", || gptq_quantize(w_fp, &calib.h, cfg, ledger));
+    let (stage1, stage1_secs) = timers.time_secs("stage1", || {
+        let _span = crate::trace::span_detail("quant", "gptq", || name.to_string());
+        gptq_quantize(w_fp, &calib.h, cfg, ledger)
+    });
     let stage1 = stage1?;
 
     match method {
@@ -315,6 +320,7 @@ fn quantize_layer(
                 .as_ref()
                 .expect("RPIQ arm requires the retained single instance");
             let (out, stage2_secs) = timers.time_secs("stage2", || -> Result<_> {
+                let _span = crate::trace::span_detail("quant", "rpiq.refine", || name.to_string());
                 let inst = SingleInstance::capture(x_last.clone(), w_fp, ledger);
                 let out = rpiq_refine(&stage1.q, &inst, &calib.h, params, ledger)?;
                 inst.release(ledger);
@@ -358,6 +364,7 @@ pub fn quantize_lm(
 
     let retain_last = matches!(method, Method::Rpiq(_));
     let calib = timers.time("calibration", || {
+        let _span = crate::trace::span("quant", "calibrate");
         calibrate(&names, windows, cfg.percdamp, retain_last, &ledger, |win, tap| {
             let _ = lm_forward(w, win, 1, seq, Some(tap));
         })
@@ -368,10 +375,12 @@ pub fn quantize_lm(
     // the exact sequential code, so the join reassembles reports and
     // qlinears in layer order with byte-identical contents.
     let linears = w.linears();
+    let layers_span = crate::trace::span("quant", "layers");
     let (qlinears, mut reports) =
         fan_out_layers(&linears, &calib, &ledger, &timers, |_, w_fp| {
             (cfg.fitted(w_fp.cols()), method)
         })?;
+    drop(layers_span);
 
     // GPTQ arm: Γ(0) for report parity, computed transiently after the
     // fact (the arm never retains calibration data through quantization —
@@ -436,6 +445,7 @@ pub fn quantize_vlm(
         .collect();
     let retain_last = matches!(method, Method::Rpiq(_));
     let calib = timers.time("calibration", || {
+        let _span = crate::trace::span("quant", "calibrate");
         calibrate(&names, &idx_windows, policy.language.percdamp, retain_last, &ledger, |win, tap| {
             let (patches, text) = &calib_samples[win[0] as usize];
             let _ = vlm_forward(w, patches, text, 1, Some(tap));
@@ -444,6 +454,7 @@ pub fn quantize_vlm(
 
     // Per-layer fan-out across the global pool (see quantize_lm).
     let linears = w.linears();
+    let layers_span = crate::trace::span("quant", "layers");
     let (qlinears, mut reports) =
         fan_out_layers(&linears, &calib, &ledger, &timers, |name, w_fp| {
             let m = match method {
@@ -452,6 +463,7 @@ pub fn quantize_vlm(
             };
             (policy.config_for(name).fitted(w_fp.cols()), m)
         })?;
+    drop(layers_span);
 
     // Transient Γ(0) for the GPTQ arm (see quantize_lm).
     if !retain_last {

@@ -530,24 +530,36 @@ impl Server {
         })
     }
 
+    /// Count a rejected submission in the stats before handing the error
+    /// back — rejections never reach a lane, so this is their only trace.
+    fn reject(&self, e: SubmitError) -> SubmitError {
+        self.stats.record_reject(match &e {
+            SubmitError::Closed => crate::metrics::RejectKind::Closed,
+            SubmitError::Unsupported => crate::metrics::RejectKind::Unsupported,
+            SubmitError::Invalid(_) => crate::metrics::RejectKind::Invalid,
+        });
+        e
+    }
+
     /// Submit a payload; blocks while the queue holds `queue_cap` requests
     /// (backpressure). Returns the reply channel, or an error when the
     /// server is closed / the payload has no lane.
     pub fn submit(&self, payload: Payload) -> Result<Channel<Response>, SubmitError> {
-        let req = self.make_request(payload)?;
+        let req = self.make_request(payload).map_err(|e| self.reject(e))?;
         let reply = req.reply.clone();
-        self.queue.push(req).map_err(|_| SubmitError::Closed)?;
+        self.queue.push(req).map_err(|_| self.reject(SubmitError::Closed))?;
         Ok(reply)
     }
 
-    /// Non-blocking submit attempt: `Ok(None)` when the queue is full.
+    /// Non-blocking submit attempt: `Ok(None)` when the queue is full
+    /// (backpressure, not a rejection — it is not counted as one).
     pub fn try_submit(&self, payload: Payload) -> Result<Option<Channel<Response>>, SubmitError> {
-        let req = self.make_request(payload)?;
+        let req = self.make_request(payload).map_err(|e| self.reject(e))?;
         let reply = req.reply.clone();
         match self.queue.try_push(req) {
             Ok(true) => Ok(Some(reply)),
             Ok(false) => Ok(None),
-            Err(_) => Err(SubmitError::Closed),
+            Err(_) => Err(self.reject(SubmitError::Closed)),
         }
     }
 
@@ -662,10 +674,31 @@ fn lane_loop(
                 None => groups.push((key, vec![r])),
             }
         }
+        // Queue-depth gauges at pickup: the lane's own shard plus the
+        // global occupancy, so Perfetto shows where backlog accumulates.
+        if crate::trace::enabled() {
+            crate::trace::counter(format!("serve.qdepth.lane{lane}"), queue.shard_len(lane) as f64);
+            crate::trace::counter("serve.qdepth", queue.len() as f64);
+        }
         let run_group = |ei: usize, group: &[Request]| {
             let (Some(engine), Some(tag)) = (engines.get(ei), activation_tags.get(ei)) else {
                 return; // unreachable: `ei` indexes the fixed engine set
             };
+            let picked = Instant::now();
+            stats.record_batch(engine.name(), group.len());
+            if crate::trace::enabled() {
+                // One cross-thread range per request: enqueue→pickup. The
+                // submit happened on a client thread, so this is emitted as
+                // a Complete event with an explicit start timestamp.
+                for r in group {
+                    crate::trace::complete_at(
+                        "serve",
+                        "req.queue_wait",
+                        r.enqueued,
+                        picked.saturating_duration_since(r.enqueued),
+                    );
+                }
+            }
             let payloads: Vec<&Payload> = group.iter().map(|r| &r.payload).collect();
             // Book the batch's dominant transient (the fused logits) for
             // the duration of the forward, per lane, so the ledger's peak
@@ -677,18 +710,34 @@ fn lane_loop(
             // instead of hanging and the lane keeps serving. The transient
             // is freed outside catch_unwind so a panicking engine cannot
             // leak ledger bytes.
+            let batch_span = crate::trace::span_detail("serve", "batch", || {
+                format!("{} n={}", engine.name(), group.len())
+            });
             ledger.alloc(tag, transient);
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 engine.run_batch(&payloads)
             }));
             ledger.free(tag, transient);
+            drop(batch_span);
             let answers = match result {
                 Ok(a) if a.len() == group.len() => a,
-                Ok(_) | Err(_) => return,
+                Ok(_) | Err(_) => {
+                    // The whole group died (engine panic / miscounted
+                    // answers): count it so lost requests are visible in
+                    // the heartbeat and final report.
+                    stats.record_drop(engine.name(), group.len());
+                    crate::trace::instant("serve", "group.dropped");
+                    return;
+                }
             };
             for (r, a) in group.iter().zip(answers) {
                 let latency = r.enqueued.elapsed();
-                stats.record(engine.name(), latency.as_secs_f64());
+                let queue_wait = picked.saturating_duration_since(r.enqueued);
+                let service = latency.saturating_sub(queue_wait);
+                stats.record_split(engine.name(), queue_wait.as_secs_f64(), service.as_secs_f64());
+                if crate::trace::enabled() {
+                    crate::trace::complete_at("serve", "req.service", picked, service);
+                }
                 let _ = r.reply.send(Response { id: r.id, answer: a, latency });
             }
         };

@@ -114,7 +114,7 @@ pub fn load_or_run(ckpt_dir: &Path) -> Result<Suite> {
     if cache.exists() {
         let text = std::fs::read_to_string(cache)?;
         if let Ok(s) = from_json(&Json::parse(&text)?) {
-            eprintln!("[suite] using cached reports/suite.json");
+            crate::trace::log("[suite] using cached reports/suite.json");
             return Ok(s);
         }
     }
@@ -134,13 +134,13 @@ pub fn run(ckpt_dir: &Path) -> Result<Suite> {
         let path = exp::ckpt_path(ckpt_dir, &cfg.name);
         let w = load_lm(&path)
             .with_context(|| format!("load {} (run `make checkpoints`)", path.display()))?;
-        eprintln!("[suite] {}: fp eval", cfg.name);
+        crate::trace::log(&format!("[suite] {}: fp eval", cfg.name));
         let fp = exp::eval_lm_fp(&w, &world, EVAL_WINDOWS, EVAL_SENT);
         let windows = world.calib_windows(cfg.seq_len, exp::CALIB_SAMPLES);
         let qcfg = exp::quant_config_for(&cfg.name);
 
         let arm = |method: Method, label: &str| -> Result<ArmResult> {
-            eprintln!("[suite] {}: {} quantize+eval", cfg.name, label);
+            crate::trace::log(&format!("[suite] {}: {} quantize+eval", cfg.name, label));
             let t0 = std::time::Instant::now();
             let out = quantize_lm(&w, &windows, qcfg, method)?;
             let quant_secs = t0.elapsed().as_secs_f64();
@@ -171,7 +171,7 @@ pub fn run(ckpt_dir: &Path) -> Result<Suite> {
     let vpath = exp::ckpt_path(ckpt_dir, "sim-cogvlm2-19b");
     let vw = load_vlm(&vpath)
         .with_context(|| format!("load {} (run `make checkpoints`)", vpath.display()))?;
-    eprintln!("[suite] vlm: fp eval");
+    crate::trace::log("[suite] vlm: fp eval");
     let fp_rep = exp::eval_vlm_fp(&vw, &world);
     let samples = world.vlm_calib(exp::CALIB_SAMPLES_VLM);
     let mut arms = Vec::new();
@@ -185,7 +185,7 @@ pub fn run(ckpt_dir: &Path) -> Result<Suite> {
         ),
     ];
     for (label, method, iters) in arm_specs {
-        eprintln!("[suite] vlm: {label}");
+        crate::trace::log(&format!("[suite] vlm: {label}"));
         let policy = CmdqPolicy {
             rpiq: match method {
                 Method::Rpiq(p) => p,

@@ -312,9 +312,14 @@ impl Drop for ThreadPool {
 
 /// Run one queued job with panic containment and in-flight bookkeeping.
 fn run_one(shared: &PoolShared, job: Job) {
+    // Span per task on the running thread's timeline: worker imbalance and
+    // help-while-waiting nesting show up as gaps/stacking per tid. The
+    // guard's drop emits the End even when the job panics.
+    let task = crate::trace::span("exec", "task");
     if catch_unwind(AssertUnwindSafe(job)).is_err() {
         shared.panicked_jobs.fetch_add(1, Ordering::SeqCst);
     }
+    drop(task);
     shared.in_flight.fetch_sub(1, Ordering::SeqCst);
     shared.idle.notify_all();
 }
@@ -419,27 +424,27 @@ impl<'pool, 'env> Scope<'pool, 'env> {
 /// positive integer, else `available_parallelism`, else 1.
 ///
 /// A set-but-rejected `RPIQ_THREADS` (unparsable, zero, or non-unicode)
-/// prints a one-line stderr warning naming the rejected value before
-/// falling back — a silently ignored override would make a determinism
-/// matrix run (`RPIQ_THREADS=1/2/8`) measure the wrong configuration.
+/// logs a one-line warning naming the rejected value before falling back —
+/// a silently ignored override would make a determinism matrix run
+/// (`RPIQ_THREADS=1/2/8`) measure the wrong configuration.
 pub fn default_threads() -> usize {
     let fallback = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     match std::env::var("RPIQ_THREADS") {
         Ok(v) => match parse_threads(&v) {
             Some(n) => n,
             None => {
-                eprintln!(
+                crate::trace::log(&format!(
                     "rpiq: ignoring RPIQ_THREADS={v:?} (want a positive integer); \
                      falling back to available parallelism"
-                );
+                ));
                 fallback()
             }
         },
         Err(std::env::VarError::NotUnicode(raw)) => {
-            eprintln!(
+            crate::trace::log(&format!(
                 "rpiq: ignoring non-unicode RPIQ_THREADS={raw:?}; \
                  falling back to available parallelism"
-            );
+            ));
             fallback()
         }
         Err(std::env::VarError::NotPresent) => fallback(),
@@ -844,6 +849,14 @@ impl<T> ShardedQueue<T> {
         self.inner.occupancy.lock().unwrap().len
     }
 
+    /// Items currently queued in one shard (`shard` taken modulo the shard
+    /// count). A momentary gauge for observability — the serve loop emits
+    /// it as a per-lane queue-depth counter track.
+    pub fn shard_len(&self, shard: usize) -> usize {
+        let n = self.inner.shards.len();
+        self.inner.shards[shard % n].items.lock().unwrap().len()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -1110,6 +1123,18 @@ mod tests {
         let got: Vec<u32> = (0..5).map(|_| q.pop(0, Duration::from_millis(10)).unwrap()).collect();
         assert_eq!(got, vec![0, 1, 2, 3, 4]);
         assert_eq!(q.pop(0, Duration::from_millis(5)), None); // timeout, not closed
+    }
+
+    #[test]
+    fn sharded_queue_shard_len_tracks_round_robin() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 8);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.shard_len(0), 2);
+        assert_eq!(q.shard_len(1), 2);
+        assert_eq!(q.shard_len(3), 2); // taken modulo the shard count
+        assert_eq!(q.shard_len(0) + q.shard_len(1), q.len());
     }
 
     #[test]

@@ -48,3 +48,4 @@ pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
 pub mod report;
+pub mod trace;

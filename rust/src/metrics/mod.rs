@@ -47,25 +47,44 @@ impl MemoryLedger {
 
     /// Record an allocation of `bytes` under `tag`.
     pub fn alloc(&self, tag: &str, bytes: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.live += bytes as i64;
-        if g.live > g.peak {
-            g.peak = g.live;
-        }
-        let e = g.by_tag.entry(tag.to_string()).or_insert(0);
-        *e += bytes as i64;
-        let cur = *e;
-        let p = g.peak_by_tag.entry(tag.to_string()).or_insert(0);
-        if cur > *p {
-            *p = cur;
-        }
+        let (tag_live, live) = {
+            let mut g = self.inner.lock().unwrap();
+            g.live += bytes as i64;
+            if g.live > g.peak {
+                g.peak = g.live;
+            }
+            let e = g.by_tag.entry(tag.to_string()).or_insert(0);
+            *e += bytes as i64;
+            let cur = *e;
+            let p = g.peak_by_tag.entry(tag.to_string()).or_insert(0);
+            if cur > *p {
+                *p = cur;
+            }
+            (cur, g.live)
+        };
+        self.trace_counters(tag, tag_live, live);
     }
 
     /// Record a release of `bytes` under `tag`.
     pub fn free(&self, tag: &str, bytes: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.live -= bytes as i64;
-        *g.by_tag.entry(tag.to_string()).or_insert(0) -= bytes as i64;
+        let (tag_live, live) = {
+            let mut g = self.inner.lock().unwrap();
+            g.live -= bytes as i64;
+            let e = g.by_tag.entry(tag.to_string()).or_insert(0);
+            *e -= bytes as i64;
+            (*e, g.live)
+        };
+        self.trace_counters(tag, tag_live, live);
+    }
+
+    /// Emit the per-tag and total live bytes as trace counter tracks, so a
+    /// transient peak in the Chrome trace is attributable to whichever span
+    /// it rises under. Outside the ledger lock; a branch when disabled.
+    fn trace_counters(&self, tag: &str, tag_live: i64, live: i64) {
+        if crate::trace::enabled() {
+            crate::trace::counter(format!("mem.{tag}"), tag_live as f64);
+            crate::trace::counter("mem.live", live as f64);
+        }
     }
 
     /// Convenience: account `bytes` for the duration of `f`.
@@ -180,10 +199,45 @@ impl Timers {
     }
 }
 
-/// Streaming percentile/latency collector for the serving experiments.
+/// Percentile estimation keeps at most this many samples; count and mean
+/// stay exact at any volume (running count/sum).
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+/// SplitMix64 finalizer — the fixed, seedless hash behind the reservoir's
+/// replacement decisions.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+#[derive(Default)]
+struct LatencyInner {
+    count: u64,
+    sum_secs: f64,
+    reservoir: Vec<f64>,
+}
+
+/// Streaming latency collector for the serving experiments: exact
+/// count/mean plus a bounded percentile reservoir.
+///
+/// Memory is O([`LATENCY_RESERVOIR_CAP`]) under sustained traffic and
+/// `percentile_ms` sorts at most that many samples per call (the unbounded
+/// `Vec<f64>` it replaces re-sorted the full history every call).
+///
+/// Determinism story: below the cap every sample is retained, so results
+/// are exact and order-independent. Above the cap, replacement is
+/// Algorithm R driven not by an RNG but by a fixed hash of the arrival
+/// index ([`splitmix64`]) — each index's keep/replace decision is a pure
+/// function of that index, so a fixed arrival *order* always yields the
+/// same reservoir. Concurrent recorders make the arrival order itself
+/// scheduling-dependent, so percentiles above the cap are estimates — the
+/// same caveat the ledger's peak carries (see the module docs); exact
+/// comparisons must stay under the cap or pin the recording order.
 #[derive(Clone, Default)]
 pub struct LatencyStats {
-    samples: Arc<Mutex<Vec<f64>>>,
+    inner: Arc<Mutex<LatencyInner>>,
 }
 
 impl LatencyStats {
@@ -192,24 +246,36 @@ impl LatencyStats {
     }
 
     pub fn record(&self, secs: f64) {
-        self.samples.lock().unwrap().push(secs);
+        let mut g = self.inner.lock().unwrap();
+        g.count += 1;
+        g.sum_secs += secs;
+        if g.reservoir.len() < LATENCY_RESERVOIR_CAP {
+            g.reservoir.push(secs);
+        } else {
+            // Algorithm R: sample i (1-based) replaces a uniform slot in
+            // [0, i) iff that slot lands inside the reservoir.
+            let slot = (splitmix64(g.count) % g.count) as usize;
+            if let Some(s) = g.reservoir.get_mut(slot) {
+                *s = secs;
+            }
+        }
     }
 
     pub fn count(&self) -> usize {
-        self.samples.lock().unwrap().len()
+        self.inner.lock().unwrap().count as usize
     }
 
     pub fn mean_ms(&self) -> f64 {
-        let s = self.samples.lock().unwrap();
-        if s.is_empty() {
+        let g = self.inner.lock().unwrap();
+        if g.count == 0 {
             return 0.0;
         }
-        s.iter().sum::<f64>() / s.len() as f64 * 1e3
+        g.sum_secs / g.count as f64 * 1e3
     }
 
-    /// p in [0,100].
+    /// p in [0,100], estimated over the retained reservoir.
     pub fn percentile_ms(&self, p: f64) -> f64 {
-        let mut s = self.samples.lock().unwrap().clone();
+        let mut s = self.inner.lock().unwrap().reservoir.clone();
         if s.is_empty() {
             return 0.0;
         }
@@ -219,15 +285,63 @@ impl LatencyStats {
     }
 }
 
+/// Why a submission never became a served request (mirrors the server's
+/// `SubmitError` without depending on the coordinator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectKind {
+    /// Submitted after shutdown / queue closed.
+    Closed,
+    /// No engine accepts the payload.
+    Unsupported,
+    /// Payload failed the engine's prepare step.
+    Invalid,
+}
+
+/// Rejected-submission totals, by kind.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RejectCounts {
+    pub closed: u64,
+    pub unsupported: u64,
+    pub invalid: u64,
+}
+
+impl RejectCounts {
+    pub fn total(&self) -> u64 {
+        self.closed + self.unsupported + self.invalid
+    }
+}
+
+#[derive(Default)]
+struct LaneRecord {
+    /// enqueue→reply latency (what [`LaneStats::record`] always fed).
+    total: LatencyStats,
+    /// enqueue→pickup wait in the sharded queue.
+    queue: LatencyStats,
+    /// pickup→reply time inside the fused forward + delivery.
+    service: LatencyStats,
+    /// Requests that died with their group (engine panic / bad answer
+    /// count) and never produced a reply.
+    drops: u64,
+    /// batch size → number of fused groups of that size.
+    batches: std::collections::BTreeMap<usize, u64>,
+}
+
 /// Latency stats for the multi-lane server: one aggregate collector plus
 /// one per named workload lane ("sentiment", "vqa", …). Cheap `Clone`
 /// handle over shared state, like [`LatencyStats`]. The aggregate methods
 /// (`count`/`mean_ms`/`percentile_ms`) delegate to the overall collector
 /// so single-lane callers can treat a `LaneStats` like a `LatencyStats`.
+///
+/// Beyond latencies, lanes carry the serve loop's error/drop accounting —
+/// group drops after engine panics, `SubmitError` rejections by kind, the
+/// queue-wait vs. service split, and a batch-size histogram — so lost
+/// requests are visible in the heartbeat and final report instead of
+/// silently missing from the counts.
 #[derive(Clone, Default)]
 pub struct LaneStats {
     overall: LatencyStats,
-    lanes: Arc<Mutex<Vec<(String, LatencyStats)>>>,
+    lanes: Arc<Mutex<Vec<(String, LaneRecord)>>>,
+    rejects: Arc<Mutex<RejectCounts>>,
 }
 
 impl LaneStats {
@@ -235,16 +349,53 @@ impl LaneStats {
         Self::default()
     }
 
+    fn with_lane<T>(&self, lane: &str, f: impl FnOnce(&mut LaneRecord) -> T) -> T {
+        let mut lanes = self.lanes.lock().unwrap();
+        if let Some(idx) = lanes.iter().position(|(n, _)| n == lane) {
+            f(&mut lanes[idx].1)
+        } else {
+            lanes.push((lane.to_string(), LaneRecord::default()));
+            let last = lanes.len() - 1;
+            f(&mut lanes[last].1)
+        }
+    }
+
     /// Record one request latency under `lane` (and in the aggregate).
     pub fn record(&self, lane: &str, secs: f64) {
         self.overall.record(secs);
-        let mut lanes = self.lanes.lock().unwrap();
-        if let Some(idx) = lanes.iter().position(|(n, _)| n == lane) {
-            lanes[idx].1.record(secs);
-        } else {
-            let s = LatencyStats::new();
-            s.record(secs);
-            lanes.push((lane.to_string(), s));
+        self.with_lane(lane, |rec| rec.total.record(secs));
+    }
+
+    /// Record one served request as its queue-wait + service decomposition
+    /// (total = `queue_secs + service_secs` lands where [`Self::record`]
+    /// would put it, so counts are unchanged).
+    pub fn record_split(&self, lane: &str, queue_secs: f64, service_secs: f64) {
+        let total = queue_secs + service_secs;
+        self.overall.record(total);
+        self.with_lane(lane, |rec| {
+            rec.total.record(total);
+            rec.queue.record(queue_secs);
+            rec.service.record(service_secs);
+        });
+    }
+
+    /// Record `n` requests dropped with their group (no reply delivered).
+    pub fn record_drop(&self, lane: &str, n: usize) {
+        self.with_lane(lane, |rec| rec.drops += n as u64);
+    }
+
+    /// Record one fused group of `size` requests picked up on `lane`.
+    pub fn record_batch(&self, lane: &str, size: usize) {
+        self.with_lane(lane, |rec| *rec.batches.entry(size).or_insert(0) += 1);
+    }
+
+    /// Record one rejected submission.
+    pub fn record_reject(&self, kind: RejectKind) {
+        let mut r = self.rejects.lock().unwrap();
+        match kind {
+            RejectKind::Closed => r.closed += 1,
+            RejectKind::Unsupported => r.unsupported += 1,
+            RejectKind::Invalid => r.invalid += 1,
         }
     }
 
@@ -260,7 +411,61 @@ impl LaneStats {
             .unwrap()
             .iter()
             .find(|(n, _)| n == name)
-            .map(|(_, s)| s.clone())
+            .map(|(_, rec)| rec.total.clone())
+    }
+
+    /// Queue-wait collector for one lane (populated by
+    /// [`Self::record_split`]).
+    pub fn lane_queue(&self, name: &str) -> Option<LatencyStats> {
+        self.lanes
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, rec)| rec.queue.clone())
+    }
+
+    /// Service-time collector for one lane (populated by
+    /// [`Self::record_split`]).
+    pub fn lane_service(&self, name: &str) -> Option<LatencyStats> {
+        self.lanes
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, rec)| rec.service.clone())
+    }
+
+    /// Dropped-request count for one lane.
+    pub fn drops(&self, name: &str) -> u64 {
+        self.lanes
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, rec)| rec.drops)
+            .unwrap_or(0)
+    }
+
+    /// Dropped-request count across every lane.
+    pub fn total_drops(&self) -> u64 {
+        self.lanes.lock().unwrap().iter().map(|(_, rec)| rec.drops).sum()
+    }
+
+    /// `(batch size, groups)` histogram for one lane, ascending by size.
+    pub fn batch_histogram(&self, name: &str) -> Vec<(usize, u64)> {
+        self.lanes
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, rec)| rec.batches.iter().map(|(&s, &c)| (s, c)).collect())
+            .unwrap_or_default()
+    }
+
+    /// Rejected-submission totals.
+    pub fn rejects(&self) -> RejectCounts {
+        *self.rejects.lock().unwrap()
     }
 
     /// Lane names in first-recorded order.
@@ -403,5 +608,83 @@ mod tests {
         assert!((l.percentile_ms(50.0) - 50.0).abs() <= 1.0);
         assert!((l.percentile_ms(95.0) - 95.0).abs() <= 1.0);
         assert!((l.mean_ms() - 50.5).abs() < 0.5);
+    }
+
+    #[test]
+    fn latency_reservoir_bounds_memory_and_stays_deterministic() {
+        let n = LATENCY_RESERVOIR_CAP * 4;
+        let l = LatencyStats::new();
+        // uniform ramp: percentiles of the reservoir should track the
+        // stream's percentiles
+        for i in 1..=n {
+            l.record(i as f64 / n as f64);
+        }
+        assert_eq!(l.count(), n, "count exact past the cap");
+        assert!((l.mean_ms() - 500.0 * (1.0 + 1.0 / n as f64)).abs() < 1e-6, "mean exact");
+        assert!(l.inner.lock().unwrap().reservoir.len() <= LATENCY_RESERVOIR_CAP);
+        let p50 = l.percentile_ms(50.0);
+        assert!((p50 - 500.0).abs() < 50.0, "reservoir p50 ≈ stream p50, got {p50}");
+        // fixed arrival order ⇒ identical reservoir ⇒ identical percentile
+        let l2 = LatencyStats::new();
+        for i in 1..=n {
+            l2.record(i as f64 / n as f64);
+        }
+        for p in [10.0, 50.0, 99.0] {
+            assert_eq!(l.percentile_ms(p).to_bits(), l2.percentile_ms(p).to_bits());
+        }
+    }
+
+    #[test]
+    fn lane_stats_split_drops_rejects_and_batches() {
+        let s = LaneStats::new();
+        s.record_split("vqa", 0.002, 0.008);
+        s.record_split("vqa", 0.004, 0.006);
+        // total lands where record() would put it
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.lane("vqa").unwrap().count(), 2);
+        assert!((s.lane("vqa").unwrap().mean_ms() - 10.0).abs() < 1e-9);
+        assert!((s.lane_queue("vqa").unwrap().mean_ms() - 3.0).abs() < 1e-9);
+        assert!((s.lane_service("vqa").unwrap().mean_ms() - 7.0).abs() < 1e-9);
+        assert!(s.lane_queue("nope").is_none());
+        // drops are per lane and never enter the latency counts
+        s.record_drop("vqa", 3);
+        s.record_drop("sentiment", 1);
+        assert_eq!(s.drops("vqa"), 3);
+        assert_eq!(s.total_drops(), 4);
+        assert_eq!(s.count(), 2);
+        // rejects by kind
+        s.record_reject(RejectKind::Closed);
+        s.record_reject(RejectKind::Invalid);
+        s.record_reject(RejectKind::Invalid);
+        let r = s.rejects();
+        assert_eq!((r.closed, r.unsupported, r.invalid, r.total()), (1, 0, 2, 3));
+        // batch histogram, ascending by size
+        s.record_batch("vqa", 4);
+        s.record_batch("vqa", 1);
+        s.record_batch("vqa", 4);
+        assert_eq!(s.batch_histogram("vqa"), vec![(1, 1), (4, 2)]);
+        assert!(s.batch_histogram("nope").is_empty());
+    }
+
+    #[test]
+    fn ledger_emits_counter_tracks_when_tracing() {
+        let _guard = crate::trace::test_lock();
+        crate::trace::start();
+        let led = MemoryLedger::new();
+        led.alloc("hessian", 1000);
+        led.alloc("hessian", 500);
+        led.free("hessian", 1500);
+        let t = crate::trace::stop_and_take();
+        let s = t.summary().unwrap();
+        let mem = s.counters.iter().find(|c| c.name == "mem.hessian").unwrap();
+        assert_eq!(mem.samples, 3);
+        assert!((mem.peak - 1500.0).abs() < 1e-9);
+        assert!((mem.last - 0.0).abs() < 1e-9);
+        let live = s.counters.iter().find(|c| c.name == "mem.live").unwrap();
+        assert!((live.peak - 1500.0).abs() < 1e-9);
+        // and nothing when disabled
+        led.alloc("hessian", 10);
+        led.free("hessian", 10);
+        assert!(crate::trace::take().events.is_empty());
     }
 }

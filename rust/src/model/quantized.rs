@@ -208,6 +208,7 @@ impl QuantizedLm {
 
     /// Forward pass: tokens → logits, all linears via [`Self::qmatmul`].
     pub fn forward(&self, tokens: &[u32], batch: usize, seq: usize) -> Tensor {
+        let _span = crate::trace::span_detail("model", "lm.forward", || format!("{batch}x{seq}"));
         let s = &self.skeleton;
         let cfg = &s.config;
         let ql = |name: String| &self.qlinears[&name];

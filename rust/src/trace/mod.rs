@@ -1,0 +1,772 @@
+//! Zero-dependency tracing & telemetry: span-instrumented hot paths with
+//! Chrome-trace export.
+//!
+//! The pipeline, the serve engine, and the `exec` pool emit **events**
+//! here — span begin/end pairs, instants, counters (ledger bytes, queue
+//! depth), and completed ranges — which export as Chrome trace-event JSON
+//! (loadable in `chrome://tracing` / <https://ui.perfetto.dev>) plus a
+//! self-contained text summary (`rpiq trace summarize`). See
+//! rust/DESIGN.md §Observability for the event model and overhead
+//! argument.
+//!
+//! # Design
+//!
+//! * **Near-zero cost when disabled.** Every emission checks one relaxed
+//!   atomic ([`enabled`]) *before* touching names, formatting closures, or
+//!   buffers: a disabled span/instant/counter call is a load + branch and
+//!   performs **no allocation** (asserted by the disabled-overhead test in
+//!   `rust/tests/trace.rs`).
+//! * **Thread-local buffers, process-global drain.** Each thread appends
+//!   to its own buffer (registered once in a global registry); the hot
+//!   path never touches a shared lock, so pool workers helping with
+//!   foreign scopes (`exec`'s help-while-waiting join) record their
+//!   nested spans on their own timeline without contention. [`take`]
+//!   walks the registry and drains every buffer.
+//! * **Spans are RAII guards.** [`span`] emits `Begin` and its guard's
+//!   `Drop` emits `End` — so trees stay balanced across early returns and
+//!   `catch_unwind` (the serve lane loop contains engine panics; the
+//!   guard's drop still runs during the unwind).
+//! * **Cross-thread ranges** (e.g. a request's queue wait, which starts on
+//!   the submitting thread and ends on a lane thread) are emitted as
+//!   single `Complete` events with an explicit start timestamp
+//!   ([`complete_at`]), sidestepping begin/end pairing across threads.
+//!
+//! Concurrency: the enable flag and buffers are process-global, so tests
+//! that enable tracing must serialize on [`test_lock`] (mirroring
+//! `exec::thread_target_test_lock`).
+
+#![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Event model
+// ---------------------------------------------------------------------------
+
+/// Event kind, mirroring the Chrome trace-event phases we emit
+/// (`B`/`E`/`i`/`C`/`X`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Phase {
+    /// Span start (`ph: "B"`); paired with an [`Phase::End`] on the same
+    /// thread.
+    Begin,
+    /// Span end (`ph: "E"`).
+    End,
+    /// A point event (`ph: "i"`).
+    Instant,
+    /// A gauge sample (`ph: "C"`): Perfetto renders one counter track per
+    /// event name.
+    Counter(f64),
+    /// A completed range with explicit duration in µs (`ph: "X"`) — used
+    /// for cross-thread ranges like a request's queue wait.
+    Complete(f64),
+}
+
+/// One trace event on one thread's timeline.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub name: Cow<'static, str>,
+    pub cat: Cow<'static, str>,
+    pub ph: Phase,
+    /// Microseconds since the process trace epoch.
+    pub ts_us: f64,
+    /// Stable per-thread id assigned at first emission.
+    pub tid: u64,
+    /// Optional free-form annotation (exported as `args.detail`).
+    pub detail: Option<String>,
+}
+
+// ---------------------------------------------------------------------------
+// Global state: enable flag, epoch, thread-buffer registry
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+
+struct ThreadBuf {
+    tid: u64,
+    name: String,
+    events: Mutex<Vec<Event>>,
+}
+
+thread_local! {
+    static BUF: std::cell::OnceCell<Arc<ThreadBuf>> = const { std::cell::OnceCell::new() };
+}
+
+fn registry() -> MutexGuard<'static, Vec<Arc<ThreadBuf>>> {
+    // A panicking emitter cannot corrupt a Vec push; recover from poison.
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the trace epoch, now.
+fn now_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+/// Microseconds since the trace epoch for an arbitrary [`Instant`]
+/// (clamped to 0 for instants taken before the epoch was initialized).
+fn instant_us(t: Instant) -> f64 {
+    t.checked_duration_since(epoch())
+        .map(|d| d.as_secs_f64() * 1e6)
+        .unwrap_or(0.0)
+}
+
+fn with_buf(f: impl FnOnce(&ThreadBuf)) {
+    BUF.with(|cell| {
+        let buf = cell.get_or_init(|| {
+            let tb = Arc::new(ThreadBuf {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                name: std::thread::current().name().unwrap_or("thread").to_string(),
+                events: Mutex::new(Vec::new()),
+            });
+            registry().push(Arc::clone(&tb));
+            tb
+        });
+        f(buf);
+    });
+}
+
+fn emit(name: Cow<'static, str>, cat: Cow<'static, str>, ph: Phase, detail: Option<String>) {
+    let ts_us = now_us();
+    with_buf(|b| {
+        b.events
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(Event { name, cat, ph, ts_us, tid: b.tid, detail });
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Public API: enable/disable, emission, collection
+// ---------------------------------------------------------------------------
+
+/// Whether tracing is currently collecting. One relaxed load — this is the
+/// whole cost of a disabled emission site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Clear every thread buffer and start collecting.
+pub fn start() {
+    let _ = epoch(); // pin the epoch before the first event
+    for b in registry().iter() {
+        b.events.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop collecting (buffers are kept for [`take`]).
+pub fn stop() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Drain every thread's buffer into one time-sorted [`Trace`].
+pub fn take() -> Trace {
+    let bufs: Vec<Arc<ThreadBuf>> = registry().iter().cloned().collect();
+    let mut events = Vec::new();
+    let mut threads = Vec::new();
+    for b in &bufs {
+        threads.push((b.tid, b.name.clone()));
+        events.append(&mut b.events.lock().unwrap_or_else(|e| e.into_inner()));
+    }
+    // Stable sort: each buffer is already chronological, so same-timestamp
+    // events on one thread keep their emission order (Begin before End).
+    events.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+    Trace { events, threads }
+}
+
+/// [`stop`] + [`take`].
+pub fn stop_and_take() -> Trace {
+    stop();
+    take()
+}
+
+/// RAII span: `Begin` at creation, `End` at drop (including during an
+/// unwind, which is what keeps span trees balanced across the serve lane
+/// loop's `catch_unwind`).
+#[must_use = "a span measures until the guard drops"]
+pub struct SpanGuard {
+    armed: bool,
+    cat: Cow<'static, str>,
+    name: Cow<'static, str>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        // Emit the End even if tracing was disabled mid-span, so collected
+        // trees always balance.
+        if self.armed {
+            emit(std::mem::take(&mut self.name), std::mem::take(&mut self.cat), Phase::End, None);
+        }
+    }
+}
+
+/// Open a span named `name` under category `cat`.
+pub fn span(cat: &'static str, name: impl Into<Cow<'static, str>>) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { armed: false, cat: Cow::Borrowed(""), name: Cow::Borrowed("") };
+    }
+    let name = name.into();
+    emit(name.clone(), Cow::Borrowed(cat), Phase::Begin, None);
+    SpanGuard { armed: true, cat: Cow::Borrowed(cat), name }
+}
+
+/// [`span`] with a lazily-built annotation (the closure runs only when
+/// tracing is enabled, so disabled sites pay no formatting cost).
+pub fn span_detail(
+    cat: &'static str,
+    name: impl Into<Cow<'static, str>>,
+    detail: impl FnOnce() -> String,
+) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { armed: false, cat: Cow::Borrowed(""), name: Cow::Borrowed("") };
+    }
+    let name = name.into();
+    emit(name.clone(), Cow::Borrowed(cat), Phase::Begin, Some(detail()));
+    SpanGuard { armed: true, cat: Cow::Borrowed(cat), name }
+}
+
+/// Emit a point event.
+pub fn instant(cat: &'static str, name: impl Into<Cow<'static, str>>) {
+    if !enabled() {
+        return;
+    }
+    emit(name.into(), Cow::Borrowed(cat), Phase::Instant, None);
+}
+
+/// Emit a gauge sample; Perfetto renders one counter track per `name`
+/// (the ledger emits `mem.<tag>` tracks, the serve loop `serve.qdepth`).
+pub fn counter(name: impl Into<Cow<'static, str>>, value: f64) {
+    if !enabled() {
+        return;
+    }
+    emit(name.into(), Cow::Borrowed("counter"), Phase::Counter(value), None);
+}
+
+/// Emit a completed range that *started* at `start` (possibly on another
+/// thread) and lasted `dur` — recorded on the calling thread's timeline.
+pub fn complete_at(
+    cat: &'static str,
+    name: impl Into<Cow<'static, str>>,
+    start: Instant,
+    dur: Duration,
+) {
+    if !enabled() {
+        return;
+    }
+    let ts_us = instant_us(start);
+    with_buf(|b| {
+        b.events.lock().unwrap_or_else(|e| e.into_inner()).push(Event {
+            name: name.into(),
+            cat: Cow::Borrowed(cat),
+            ph: Phase::Complete(dur.as_secs_f64() * 1e6),
+            ts_us,
+            tid: b.tid,
+            detail: None,
+        });
+    });
+}
+
+/// The logging facade for non-CLI modules (enforced by the rpiq-lint
+/// `print` rule): one stderr line, plus an instant trace event when
+/// collecting so operator-facing messages land on the timeline too.
+pub fn log(msg: &str) {
+    if enabled() {
+        emit(Cow::Owned(msg.to_string()), Cow::Borrowed("log"), Phase::Instant, None);
+    }
+    // The stderr sink itself — `trace/` is the print rule's exempt sink.
+    eprintln!("{msg}");
+}
+
+/// Test support: serializes tests that enable/collect the process-global
+/// trace state (mirrors `exec::thread_target_test_lock`). Panic-poisoning
+/// is ignored deliberately.
+#[doc(hidden)]
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Collected trace: Chrome export, parse, summary
+// ---------------------------------------------------------------------------
+
+/// A drained trace: time-sorted events plus the thread-name table.
+pub struct Trace {
+    pub events: Vec<Event>,
+    /// `(tid, thread name)` for every thread that ever emitted.
+    pub threads: Vec<(u64, String)>,
+}
+
+fn esc(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+impl Trace {
+    /// Count of span-opening events named `name` (Begin or Complete) —
+    /// the unit the span-count determinism tests compare.
+    pub fn count_spans(&self, name: &str) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.name == name && matches!(e.ph, Phase::Begin | Phase::Complete(_)))
+            .count()
+    }
+
+    /// Serialize as Chrome trace-event JSON (`{"traceEvents": [...]}`),
+    /// loadable in `chrome://tracing` and <https://ui.perfetto.dev>.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::with_capacity(64 + self.events.len() * 96);
+        out.push_str("{\"traceEvents\":[");
+        let mut first = true;
+        let mut push_sep = |out: &mut String| {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push('\n');
+        };
+        for (tid, name) in &self.threads {
+            push_sep(&mut out);
+            out.push_str(&format!(
+                "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":1,\"tid\":{tid},\"args\":{{\"name\":\""
+            ));
+            esc(name, &mut out);
+            out.push_str("\"}}");
+        }
+        for e in &self.events {
+            push_sep(&mut out);
+            out.push_str("{\"name\":\"");
+            esc(&e.name, &mut out);
+            out.push_str("\",\"cat\":\"");
+            esc(&e.cat, &mut out);
+            out.push_str("\",\"ph\":\"");
+            match &e.ph {
+                Phase::Begin => out.push('B'),
+                Phase::End => out.push('E'),
+                Phase::Instant => out.push('i'),
+                Phase::Counter(_) => out.push('C'),
+                Phase::Complete(_) => out.push('X'),
+            }
+            out.push_str(&format!("\",\"ts\":{:.3},\"pid\":1,\"tid\":{}", e.ts_us, e.tid));
+            match &e.ph {
+                Phase::Instant => out.push_str(",\"s\":\"t\""),
+                Phase::Complete(dur) => out.push_str(&format!(",\"dur\":{dur:.3}")),
+                Phase::Counter(v) => {
+                    out.push_str(&format!(",\"args\":{{\"value\":{v}}}"));
+                }
+                _ => {}
+            }
+            if let Some(d) = &e.detail {
+                out.push_str(",\"args\":{\"detail\":\"");
+                esc(d, &mut out);
+                out.push_str("\"}");
+            }
+            out.push('}');
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Aggregate into the per-phase table (errors on unbalanced trees).
+    pub fn summary(&self) -> Result<TraceSummary, String> {
+        summarize(&self.events)
+    }
+}
+
+/// Parse a Chrome trace-event JSON file (either the `{"traceEvents":[…]}`
+/// object or a bare event array) back into a [`Trace`]. Malformed input —
+/// bad JSON, a missing `ph`/`ts`/`name`, an unknown phase — is an error,
+/// which is what lets `rpiq trace summarize` gate CI on trace integrity.
+pub fn parse_chrome(text: &str) -> Result<Trace, String> {
+    let root = crate::jsonx::Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let arr = root
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .or_else(|| root.as_arr())
+        .ok_or("expected a traceEvents array")?;
+    let mut events = Vec::new();
+    let mut threads = Vec::new();
+    for (i, ev) in arr.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| format!("event {i}: missing \"ph\""))?;
+        let tid = ev.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0) as u64;
+        if ph == "M" {
+            if ev.get("name").and_then(|n| n.as_str()) == Some("thread_name") {
+                if let Some(n) = ev.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str())
+                {
+                    threads.push((tid, n.to_string()));
+                }
+            }
+            continue;
+        }
+        let name = ev
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| format!("event {i}: missing \"name\""))?
+            .to_string();
+        let cat = ev.get("cat").and_then(|c| c.as_str()).unwrap_or("").to_string();
+        let ts_us = ev
+            .get("ts")
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| format!("event {i} ({name}): missing \"ts\""))?;
+        let phase = match ph {
+            "B" => Phase::Begin,
+            "E" => Phase::End,
+            "i" | "I" => Phase::Instant,
+            "X" => Phase::Complete(ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0)),
+            "C" => {
+                let v = ev
+                    .get("args")
+                    .and_then(|a| a.get("value"))
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("event {i} ({name}): counter without args.value"))?;
+                Phase::Counter(v)
+            }
+            other => return Err(format!("event {i} ({name}): unknown phase {other:?}")),
+        };
+        let detail = ev
+            .get("args")
+            .and_then(|a| a.get("detail"))
+            .and_then(|d| d.as_str())
+            .map(|s| s.to_string());
+        events.push(Event {
+            name: Cow::Owned(name),
+            cat: Cow::Owned(cat),
+            ph: phase,
+            ts_us,
+            tid,
+            detail,
+        });
+    }
+    Ok(Trace { events, threads })
+}
+
+/// Aggregate of one span name within one category.
+#[derive(Clone, Debug)]
+pub struct SpanAgg {
+    pub cat: String,
+    pub name: String,
+    pub count: u64,
+    pub total_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Aggregate of one counter track.
+#[derive(Clone, Debug)]
+pub struct CounterAgg {
+    pub name: String,
+    pub peak: f64,
+    pub last: f64,
+    pub samples: u64,
+}
+
+/// Per-phase totals of a trace (what `rpiq trace summarize` prints).
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    pub spans: Vec<SpanAgg>,
+    /// `(name, count)` of instant events.
+    pub instants: Vec<(String, u64)>,
+    pub counters: Vec<CounterAgg>,
+}
+
+/// Aggregate events into per-(cat, name) span totals, instant counts, and
+/// counter peaks. Errors on unbalanced span trees (an `End` without a
+/// matching `Begin`, mismatched nesting, or spans left open), so feeding a
+/// truncated or corrupted trace through `rpiq trace summarize` fails.
+pub fn summarize(events: &[Event]) -> Result<TraceSummary, String> {
+    let mut order: Vec<&Event> = events.iter().collect();
+    order.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+    let mut stacks: BTreeMap<u64, Vec<(&Event, f64)>> = BTreeMap::new();
+    let mut spans: BTreeMap<(String, String), (u64, f64, f64)> = BTreeMap::new();
+    let mut instants: BTreeMap<String, u64> = BTreeMap::new();
+    let mut counters: BTreeMap<String, (f64, f64, u64)> = BTreeMap::new();
+    let mut add_span = |cat: &str, name: &str, dur_ms: f64| {
+        let e = spans.entry((cat.to_string(), name.to_string())).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += dur_ms;
+        e.2 = e.2.max(dur_ms);
+    };
+    for ev in order {
+        match &ev.ph {
+            Phase::Begin => stacks.entry(ev.tid).or_default().push((ev, ev.ts_us)),
+            Phase::End => {
+                let (open, t0) = stacks
+                    .entry(ev.tid)
+                    .or_default()
+                    .pop()
+                    .ok_or_else(|| format!("tid {}: end of {:?} without a begin", ev.tid, ev.name))?;
+                if open.name != ev.name {
+                    return Err(format!(
+                        "tid {}: mismatched span nesting (begin {:?}, end {:?})",
+                        ev.tid, open.name, ev.name
+                    ));
+                }
+                add_span(&open.cat, &open.name, (ev.ts_us - t0) / 1e3);
+            }
+            Phase::Complete(dur_us) => add_span(&ev.cat, &ev.name, dur_us / 1e3),
+            Phase::Instant => *instants.entry(ev.name.to_string()).or_insert(0) += 1,
+            Phase::Counter(v) => {
+                let e = counters.entry(ev.name.to_string()).or_insert((f64::MIN, 0.0, 0));
+                e.0 = e.0.max(*v);
+                e.1 = *v;
+                e.2 += 1;
+            }
+        }
+    }
+    for (tid, stack) in &stacks {
+        if let Some((open, _)) = stack.last() {
+            return Err(format!(
+                "tid {tid}: {} span(s) left open (innermost: {:?})",
+                stack.len(),
+                open.name
+            ));
+        }
+    }
+    let mut spans: Vec<SpanAgg> = spans
+        .into_iter()
+        .map(|((cat, name), (count, total_ms, max_ms))| SpanAgg {
+            cat,
+            name,
+            count,
+            total_ms,
+            max_ms,
+        })
+        .collect();
+    spans.sort_by(|a, b| b.total_ms.total_cmp(&a.total_ms));
+    Ok(TraceSummary {
+        spans,
+        instants: instants.into_iter().collect(),
+        counters: counters
+            .into_iter()
+            .map(|(name, (peak, last, samples))| CounterAgg { name, peak, last, samples })
+            .collect(),
+    })
+}
+
+impl TraceSummary {
+    /// Totals of one span name (summed across categories) — what the
+    /// summarize CLI test checks against the in-process trace.
+    pub fn span_total_ms(&self, name: &str) -> f64 {
+        self.spans.iter().filter(|s| s.name == name).map(|s| s.total_ms).sum()
+    }
+
+    /// Render the per-phase tables as text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut t = crate::report::Table::new(
+            "Trace summary — spans (per phase)",
+            &["cat", "name", "count", "total ms", "mean ms", "max ms"],
+        );
+        for s in &self.spans {
+            t.row(vec![
+                s.cat.clone(),
+                s.name.clone(),
+                s.count.to_string(),
+                format!("{:.2}", s.total_ms),
+                format!("{:.3}", s.total_ms / s.count.max(1) as f64),
+                format!("{:.2}", s.max_ms),
+            ]);
+        }
+        out.push_str(&t.render());
+        if !self.counters.is_empty() {
+            let mut t = crate::report::Table::new(
+                "Trace summary — counters",
+                &["name", "peak", "last", "samples"],
+            );
+            for c in &self.counters {
+                t.row(vec![
+                    c.name.clone(),
+                    format!("{:.0}", c.peak),
+                    format!("{:.0}", c.last),
+                    c.samples.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        if !self.instants.is_empty() {
+            let mut t =
+                crate::report::Table::new("Trace summary — instants", &["name", "count"]);
+            for (name, n) in &self.instants {
+                t.row(vec![name.clone(), n.to_string()]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_balance() {
+        let _guard = test_lock();
+        start();
+        {
+            let _outer = span("test", "outer");
+            {
+                let _inner = span("test", "inner");
+            }
+            instant("test", "tick");
+            counter("test.gauge", 42.0);
+        }
+        let t = stop_and_take();
+        assert_eq!(t.count_spans("outer"), 1);
+        assert_eq!(t.count_spans("inner"), 1);
+        let s = t.summary().expect("balanced");
+        assert_eq!(s.instants, vec![("tick".to_string(), 1)]);
+        assert_eq!(s.counters.len(), 1);
+        assert!((s.counters[0].peak - 42.0).abs() < 1e-12);
+        // inner is contained in outer
+        let outer = s.spans.iter().find(|x| x.name == "outer").unwrap();
+        let inner = s.spans.iter().find(|x| x.name == "inner").unwrap();
+        assert!(outer.total_ms >= inner.total_ms);
+    }
+
+    #[test]
+    fn guard_drop_balances_across_unwind() {
+        let _guard = test_lock();
+        start();
+        let r = std::panic::catch_unwind(|| {
+            let _s = span("test", "doomed");
+            panic!("boom");
+        });
+        assert!(r.is_err());
+        let t = stop_and_take();
+        t.summary().expect("the guard's drop emitted the End during the unwind");
+        assert_eq!(t.count_spans("doomed"), 1);
+    }
+
+    #[test]
+    fn disabled_emission_is_a_noop() {
+        let _guard = test_lock();
+        stop();
+        let _ = take(); // drain leftovers
+        {
+            let _s = span("test", "nope");
+            instant("test", "nope");
+            counter("test.nope", 1.0);
+            complete_at("test", "nope", Instant::now(), Duration::from_millis(1));
+            let _d = span_detail("test", "nope", || unreachable!("lazy detail must not run"));
+        }
+        assert!(take().events.is_empty());
+    }
+
+    #[test]
+    fn chrome_json_round_trips_through_parse() {
+        let _guard = test_lock();
+        start();
+        {
+            let _s = span_detail("test", "phase \"a\"", || "layer\n0".to_string());
+            counter("test.bytes", 123.0);
+            instant("test", "mark");
+        }
+        complete_at("test", "range", Instant::now(), Duration::from_micros(250));
+        let t = stop_and_take();
+        let json = t.to_chrome_json();
+        let back = parse_chrome(&json).expect("parse our own export");
+        assert_eq!(back.events.len(), t.events.len());
+        assert!(!back.threads.is_empty(), "thread_name metadata survives");
+        let (a, b) = (t.summary().unwrap(), back.summary().unwrap());
+        assert_eq!(a.spans.len(), b.spans.len());
+        for (x, y) in a.spans.iter().zip(b.spans.iter()) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.count, y.count);
+            assert!((x.total_ms - y.total_ms).abs() < 1e-2, "{}", x.name);
+        }
+        assert_eq!(a.counters.len(), b.counters.len());
+    }
+
+    #[test]
+    fn summarize_rejects_malformed_traces() {
+        assert!(parse_chrome("not json").is_err());
+        assert!(parse_chrome("{\"traceEvents\": 3}").is_err());
+        // end without begin
+        let text = r#"{"traceEvents":[
+            {"name":"x","cat":"t","ph":"E","ts":1.0,"pid":1,"tid":1}
+        ]}"#;
+        let t = parse_chrome(text).unwrap();
+        assert!(t.summary().is_err());
+        // begin left open
+        let text = r#"{"traceEvents":[
+            {"name":"x","cat":"t","ph":"B","ts":1.0,"pid":1,"tid":1}
+        ]}"#;
+        assert!(parse_chrome(text).unwrap().summary().is_err());
+        // mismatched nesting
+        let text = r#"{"traceEvents":[
+            {"name":"a","cat":"t","ph":"B","ts":1.0,"pid":1,"tid":1},
+            {"name":"b","cat":"t","ph":"E","ts":2.0,"pid":1,"tid":1}
+        ]}"#;
+        assert!(parse_chrome(text).unwrap().summary().is_err());
+        // unknown phase
+        let text = r#"{"traceEvents":[
+            {"name":"a","cat":"t","ph":"Q","ts":1.0,"pid":1,"tid":1}
+        ]}"#;
+        assert!(parse_chrome(text).is_err());
+    }
+
+    #[test]
+    fn cross_thread_events_land_on_own_timelines() {
+        let _guard = test_lock();
+        start();
+        let main_span = span("test", "main");
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    let _s = span("test", "worker");
+                });
+            }
+        });
+        drop(main_span);
+        let t = stop_and_take();
+        let s = t.summary().expect("per-thread trees balance");
+        let worker = s.spans.iter().find(|x| x.name == "worker").unwrap();
+        assert_eq!(worker.count, 2);
+        let tids: std::collections::BTreeSet<u64> = t
+            .events
+            .iter()
+            .filter(|e| e.name == "worker")
+            .map(|e| e.tid)
+            .collect();
+        assert_eq!(tids.len(), 2, "each worker on its own tid");
+    }
+
+    #[test]
+    fn log_emits_instant_when_enabled() {
+        let _guard = test_lock();
+        start();
+        log("hello from the facade");
+        let t = stop_and_take();
+        let s = t.summary().unwrap();
+        assert_eq!(s.instants.iter().filter(|(n, _)| n.contains("facade")).count(), 1);
+        // and is pure stderr when disabled
+        log("disabled: no event");
+        assert!(take().events.is_empty());
+    }
+}

@@ -628,6 +628,7 @@ impl QuantizedVlm {
 
     /// Quantized forward (mirrors [`vlm_forward`]).
     pub fn forward(&self, patches: &Tensor, text: &[u32], batch: usize) -> Tensor {
+        let _span = crate::trace::span_detail("model", "vlm.forward", || format!("b{batch}"));
         let cfg = &self.skeleton.config;
         let gelu_act = crate::model::Activation::Gelu;
         let proj = QuantizedLm::qmatmul(patches, self.q("vision.patch_proj"));

@@ -1,0 +1,211 @@
+//! Tracing integration tests: the observability contract end to end.
+//!
+//! * Disabled tracing is free — no events *and no allocations* from the
+//!   instrumented hot paths (a counting global allocator proves it).
+//! * Span trees balance even when a lane engine panics mid-batch (the
+//!   serve loop's `catch_unwind` path), and the drop/reject accounting
+//!   matches what the trace records.
+//! * Span counts from the quantization pipeline are deterministic across
+//!   `RPIQ_THREADS`-style shard targets — the same invariant the
+//!   determinism CI matrix asserts for numerics, extended to telemetry.
+
+use rpiq::coordinator::{
+    quantize_lm, Answer, LaneEngine, Method, Payload, ServeConfig, Server, SubmitError,
+};
+use rpiq::model::{LmWeights, ModelConfig, QuantizedLm};
+use rpiq::quant::{QuantConfig, QuantGrid, RpiqParams};
+use rpiq::rng::Pcg64;
+use rpiq::tensor::Tensor;
+use rpiq::trace;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Counting allocator: per-thread allocation counts over the System
+// allocator, so the disabled-overhead test is immune to allocations from
+// concurrently running test threads.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY-free wrapper: defers entirely to System; the only addition is a
+// thread-local counter bump (`try_with` so allocations during TLS
+// teardown cannot panic).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// Disabled tracing: zero events, zero allocations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_tracing_is_event_free_and_allocation_free() {
+    let _guard = trace::test_lock();
+    trace::stop();
+    let _ = trace::take(); // drain leftovers from other tests
+
+    let t0 = Instant::now();
+    let before = thread_allocs();
+    for _ in 0..10_000 {
+        let _s = trace::span("quant", "gptq");
+        let _d = trace::span_detail("serve", "batch", || String::from("never built"));
+        trace::instant("serve", "tick");
+        trace::counter("mem.live", 1.0);
+        trace::complete_at("serve", "req.queue_wait", t0, Duration::from_micros(5));
+    }
+    let after = thread_allocs();
+    assert_eq!(after - before, 0, "disabled emission sites must not allocate");
+    assert!(trace::take().events.is_empty(), "disabled emission sites must not record");
+
+    // The deployment-path check: a fused quantized forward (qmatmul rows
+    // sharded over the pool) with tracing disabled records nothing — the
+    // pool's per-task spans and the model spans are all behind the flag.
+    let cfg = ModelConfig::test_tiny(50);
+    let mut rng = Pcg64::seeded(7001);
+    let w = LmWeights::init(&cfg, &mut rng);
+    let qlm = QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8));
+    let tokens: Vec<u32> = (0..cfg.seq_len).map(|i| (i % 50) as u32).collect();
+    let logits = qlm.forward(&tokens, 1, cfg.seq_len);
+    assert!(logits.data().iter().all(|v| v.is_finite()));
+    assert!(trace::take().events.is_empty(), "disabled qmatmul emitted trace events");
+}
+
+// ---------------------------------------------------------------------------
+// Balance across an engine panic + drop/reject accounting
+// ---------------------------------------------------------------------------
+
+/// A lane whose compute always panics — the serve loop must contain it,
+/// count the dropped group, and leave balanced span trees behind.
+struct PanicLane;
+
+impl LaneEngine for PanicLane {
+    fn name(&self) -> &'static str {
+        "panicky"
+    }
+
+    fn accepts(&self, payload: &Payload) -> bool {
+        matches!(payload, Payload::Sentiment { .. })
+    }
+
+    fn run_batch(&self, _group: &[&Payload]) -> Vec<Answer> {
+        panic!("engine bug");
+    }
+}
+
+#[test]
+fn span_trees_balance_across_engine_panics() {
+    let _guard = trace::test_lock();
+    trace::start();
+    let server = Server::start_engines(
+        vec![Box::new(PanicLane)],
+        ServeConfig {
+            lanes: 1,
+            max_batch: 4,
+            max_wait: Duration::from_millis(0),
+            queue_cap: 16,
+        },
+    );
+    // The engine panics inside the lane's catch_unwind; the request's
+    // reply channel closes without an answer.
+    let ch = server.submit(Payload::Sentiment { tokens: vec![1, 2, 3] }).unwrap();
+    assert!(ch.recv().is_none(), "a dropped group must close the reply channel");
+    // An unsupported payload is rejected at submit and counted by kind.
+    let mut rng = Pcg64::seeded(7002);
+    let err = server.submit(Payload::Vqa {
+        patches: Tensor::randn(&[2, 2], 1.0, &mut rng),
+        question: vec![1],
+    });
+    assert!(matches!(err, Err(SubmitError::Unsupported)));
+    let stats = server.shutdown();
+    assert_eq!(stats.drops("panicky"), 1, "the dead group is counted as dropped");
+    assert_eq!(stats.total_drops(), 1);
+    assert_eq!(stats.rejects().unsupported, 1);
+    assert_eq!(stats.count(), 0, "dropped requests never enter the latency counts");
+    assert_eq!(stats.batch_histogram("panicky"), vec![(1, 1)]);
+
+    let t = trace::stop_and_take();
+    // The headline: even with the panic, every Begin has its End — the
+    // batch span's guard dropped normally (the panic is caught inside it)
+    // and the lane thread kept its stack consistent.
+    let summary = t.summary().expect("span trees must balance across catch_unwind");
+    assert!(t.count_spans("batch") >= 1, "the doomed batch was spanned");
+    assert!(t.count_spans("req.queue_wait") >= 1, "queue wait recorded before the panic");
+    assert!(
+        summary.instants.iter().any(|(n, c)| n == "group.dropped" && *c == 1),
+        "the drop left an instant marker on the timeline"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Span-count determinism across shard targets
+// ---------------------------------------------------------------------------
+
+/// Pipeline span names whose counts must not depend on the thread target.
+/// `exec.task` is deliberately absent: the pool legitimately runs more
+/// (smaller) tasks at higher shard targets.
+const STABLE_SPANS: &[&str] =
+    &["calibrate", "calib.window", "calib.finalize", "layers", "gptq", "rpiq.refine"];
+
+#[test]
+fn pipeline_span_counts_deterministic_across_thread_counts() {
+    let _threads = rpiq::exec::thread_target_test_lock();
+    let _trace = trace::test_lock();
+    let before = rpiq::exec::num_threads();
+
+    let vocab = 60usize;
+    let mut cfg = ModelConfig::test_tiny(vocab);
+    cfg.seq_len = 16;
+    let mut rng = Pcg64::seeded(7003);
+    let w = LmWeights::init(&cfg, &mut rng);
+    let n_linears = w.linears().len();
+    let n_windows = 6usize;
+    let windows: Vec<Vec<u32>> = (0..n_windows)
+        .map(|wi| (0..cfg.seq_len).map(|i| ((wi * 7 + i * 3) % vocab) as u32).collect())
+        .collect();
+    let qcfg = QuantConfig { bits: 4, group_size: 8, block_size: 8, percdamp: 0.01 };
+
+    let run = |threads: usize| -> BTreeMap<&'static str, usize> {
+        rpiq::exec::set_threads(threads);
+        trace::start();
+        let out = quantize_lm(&w, &windows, qcfg, Method::Rpiq(RpiqParams::default()))
+            .expect("pipeline");
+        assert_eq!(out.reports.len(), n_linears);
+        let t = trace::stop_and_take();
+        t.summary().expect("pipeline trace balances");
+        STABLE_SPANS.iter().map(|&n| (n, t.count_spans(n))).collect()
+    };
+
+    let base = run(1);
+    assert_eq!(base["calib.window"], n_windows, "one span per calibration window");
+    assert_eq!(base["gptq"], n_linears, "one GPTQ walk per linear");
+    assert_eq!(base["rpiq.refine"], n_linears, "one refine per linear");
+    assert_eq!(base["calibrate"], 1);
+    assert_eq!(base["calib.finalize"], 1);
+    assert_eq!(base["layers"], 1);
+    for threads in [2usize, 8] {
+        let counts = run(threads);
+        assert_eq!(counts, base, "span counts diverged at {threads} threads");
+    }
+    rpiq::exec::set_threads(before);
+}

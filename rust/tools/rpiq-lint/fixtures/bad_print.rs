@@ -1,0 +1,22 @@
+//! Fixture: print-family macros in library code must fire the `print`
+//! rule — except escaped sites and the `#[cfg(test)]` tail.
+
+pub fn noisy(progress: f32) {
+    println!("progress: {progress:.1}%"); // violation 1: stdout from library code
+    if progress > 100.0 {
+        eprintln!("progress overshot: {progress}"); // violation 2: stderr, same rule
+    }
+}
+
+pub fn escorted() {
+    // LINT-ALLOW(print): fixture demonstrating the escape hatch
+    eprintln!("this site is explicitly allowed");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_print() {
+        println!("test output is exempt from the print rule");
+    }
+}

@@ -1,6 +1,6 @@
 //! `rpiq-lint` — repo-specific static invariants clippy cannot express.
 //!
-//! Four rules over `rust/src` (see rust/DESIGN.md §"Static analysis &
+//! Five rules over `rust/src` (see rust/DESIGN.md §"Static analysis &
 //! concurrency validation" for the rationale):
 //!
 //! * **unsafe-island** — `unsafe` may appear only under `exec/`; every
@@ -18,6 +18,12 @@
 //!   constants from `metrics/tags.rs`, never raw string literals, so
 //!   register/release pairs cannot drift; the registry itself must be
 //!   duplicate-free.
+//! * **print** — `println!`/`eprintln!` (and the non-`ln` forms) may
+//!   appear only under `cli/` and the designated sinks (`trace/`,
+//!   `report/`). Library code reports through return values, the
+//!   `LaneStats`/`MemoryLedger` surfaces, or `trace::log` — stray
+//!   prints bypass the trace timeline and corrupt machine-read bench
+//!   output on stdout.
 //!
 //! Escapes: a `// LINT-ALLOW(<lint>): reason` comment on the offending
 //! line or in the comment block directly above silences that one site;
@@ -61,6 +67,10 @@ const NO_PANIC_FILES: &[&str] = &["coordinator/serve.rs", "model/io.rs", "vlm/io
 /// The one directory allowed to contain `unsafe`.
 const UNSAFE_ISLAND: &str = "exec/";
 
+/// Directories (relative-path prefixes) whose files may print to
+/// stdout/stderr: the CLI surface plus the trace/report sinks.
+const PRINT_SINKS: &[&str] = &["cli/", "trace/", "report/"];
+
 /// Panic-capable tokens (macros checked with their `!`).
 const PANIC_MACROS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
 
@@ -86,6 +96,9 @@ pub fn lint_file(rel: &str, text: &str) -> Vec<Violation> {
     }
     if rel != "metrics/tags.rs" {
         lint_ledger_tags(&src, &mut out);
+    }
+    if !PRINT_SINKS.iter().any(|p| rel.starts_with(p)) {
+        lint_print(&src, &mut out);
     }
     out
 }
@@ -185,6 +198,35 @@ fn lint_hash_iter(src: &SourceFile, out: &mut Vec<Violation>) {
                     &format!(
                         "iteration over hash collection `{name}` in a determinism-critical \
                          module (use BTreeMap, sort first, or mark `// ORDER-INSENSITIVE:`)"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: print
+// ---------------------------------------------------------------------------
+
+/// Print-family macros (the `ln` forms do not substring-match the short
+/// forms: `has_macro` looks for the full `name!` token, and `println!`
+/// never contains the literal `print!`).
+const PRINT_MACROS: &[&str] = &["println!", "eprintln!", "print!", "eprint!"];
+
+fn lint_print(src: &SourceFile, out: &mut Vec<Violation>) {
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.in_tests || src.allowed(i, "print") {
+            continue;
+        }
+        for m in PRINT_MACROS {
+            if scan::has_macro(&line.code, m) {
+                out.push(src.violation(
+                    i,
+                    "print",
+                    &format!(
+                        "`{m}` outside `cli/` and the trace/report sinks \
+                         (route through `trace::log` or a stats surface)"
                     ),
                 ));
             }

@@ -52,6 +52,20 @@ const CASES: &[Case] = &[
         expect: &[("ledger-tags", 1)],
     },
     Case {
+        fixture: "bad_print.rs",
+        source: include_str!("../fixtures/bad_print.rs"),
+        path: "exec/fake.rs",
+        expect: &[("print", 2)],
+    },
+    Case {
+        // The same file under a sink path must be clean: the rule is
+        // a path classification, not a content one.
+        fixture: "bad_print.rs",
+        source: include_str!("../fixtures/bad_print.rs"),
+        path: "trace/fake.rs",
+        expect: &[],
+    },
+    Case {
         fixture: "good.rs",
         source: include_str!("../fixtures/good.rs"),
         path: "coordinator/serve.rs",
