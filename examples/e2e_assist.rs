@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         let tokens = &windows[0];
         let args = rpiq::runtime::lm_args::lm_q_args(&rpiq.model, tokens);
         let via_pjrt = eng.run(&format!("lm_qlogits_{name}"), &args)?;
-        let via_rust = rpiq.model.forward(tokens, 1, tokens.len());
+        let via_rust = rpiq.model.forward(tokens, 1, tokens.len())?;
         let rel = via_pjrt[0].sub(&via_rust).frob() / via_rust.frob().max(1e-9);
         println!("\nPallas-artifact vs Rust quantized forward: rel err {rel:.2e} (platform {})", eng.platform());
         anyhow::ensure!(rel < 1e-3, "three-layer parity check failed");

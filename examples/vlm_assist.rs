@@ -69,8 +69,8 @@ fn main() -> anyhow::Result<()> {
         // loaded model must answer bit-identically to the freshly
         // quantized one
         let (p0, q0) = &samples[0];
-        let a = out.model.forward(p0, q0, 1);
-        let b = model.forward(p0, q0, 1);
+        let a = out.model.forward(p0, q0, 1)?;
+        let b = model.forward(p0, q0, 1)?;
         assert_eq!(a.data(), b.data(), "qckpt round-trip must be bit-identical");
     }
     drop(out); // the freshly quantized copy is no longer needed
@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n-- assistive session --");
     for e in world.vqa.test.iter().step_by(31).take(6) {
         let q_ids = tok.encode(&e.question);
-        let logits = model.forward(&e.cover.patches, &q_ids, 1);
+        let logits = model.forward(&e.cover.patches, &q_ids, 1)?;
         let last = logits.row(fp_cfg.n_patches + q_ids.len() - 1);
         let pred = (0..last.len())
             .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())

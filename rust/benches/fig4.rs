@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     println!("== Fig 4 (a): sentiment qualitative cases [{name}] ==");
     let classify = |model: &rpiq::model::QuantizedLm, prompt: &str| -> usize {
         let ids = tok.encode(prompt);
-        let logits = model.forward(&ids, 1, ids.len());
+        let logits = model.forward(&ids, 1, ids.len()).expect("forward");
         let last = logits.row(ids.len() - 1);
         (0..3)
             .max_by(|&a, &b| {
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n== Fig 4 (b): OCR-VQA qualitative cases [sim-cogvlm2-19b] ==");
     let answer = |m: &rpiq::vlm::QuantizedVlm, e: &rpiq::data::vqa::VqaExample| -> String {
         let q_ids = tok.encode(&e.question);
-        let logits = m.forward(&e.cover.patches, &q_ids, 1);
+        let logits = m.forward(&e.cover.patches, &q_ids, 1).expect("forward");
         let last = logits.row(vw.config.n_patches + q_ids.len() - 1);
         let pred = (0..last.len())
             .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())

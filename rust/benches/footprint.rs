@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         let ppl = perplexity(
             &|t: &[u32], b: usize, s: usize| {
                 ledger.scoped("activations.eval", b * s * vocab * 4, || {
-                    model.forward(t, b, s)
+                    model.forward(t, b, s).expect("forward")
                 })
             },
             &eval_windows,

@@ -20,7 +20,7 @@ use rpiq::coordinator::{quantize_lm, Method};
 use rpiq::data::WikiCorpus;
 use rpiq::exec;
 use rpiq::jsonx::Json;
-use rpiq::model::{Activation, LmWeights, ModelConfig, QuantizedLm};
+use rpiq::model::{kernels, Activation, LmWeights, ModelConfig, QmatmulKernel, QuantizedLm};
 use rpiq::quant::{QuantConfig, QuantGrid, QuantizedLinear, RpiqParams};
 use rpiq::rng::Pcg64;
 use rpiq::tensor::Tensor;
@@ -128,13 +128,23 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    // ---- qmatmul: packed fused dequant-matmul, threads x sizes ----
-    // The nibble-resident kernel's scaling/regression arm: every shape is
-    // past the parallel flop cutoff, every shard target is cross-checked
-    // bit-identical to target 1, and the fused kernel is timed against the
-    // materialize(dequantize)-then-matmul two-step as a live ratio.
-    println!("== qmatmul sweep: packed fused dequant-matmul ==");
-    for &(m, k, n) in &[(64usize, 256usize, 256usize), (256, 512, 512)] {
+    // ---- qmatmul: packed dequant-matmul kernels, kernel x threads x size ----
+    // The nibble-resident kernel's scaling/regression arm. Both inner
+    // kernels (scalar oracle-identical default + cache-blocked register
+    // tile, see `model::kernels`) run every shape at every shard target:
+    //   * per kernel, every shard target is cross-checked bit-identical to
+    //     its own target-1 run (the determinism contract);
+    //   * tiled output is cross-checked against scalar within
+    //     TILED_REL_TOL (the accuracy contract);
+    //   * both are timed against materialize(dequantize)-then-matmul.
+    // The whole sweep is additionally summarized into BENCH_qmatmul.json
+    // (one record per kernel x size x threads + single-thread speedup
+    // lines) so the perf trajectory is recorded in-repo by CI.
+    println!("== qmatmul sweep: packed dequant-matmul kernels ==");
+    let sizes = [(64usize, 256usize, 256usize), (256, 512, 512), (384, 1024, 768)];
+    let mut records: Vec<Json> = Vec::new();
+    let mut speedups: Vec<Json> = Vec::new();
+    for &(m, k, n) in &sizes {
         let mut rng = Pcg64::seeded(8002);
         let wt = Tensor::randn(&[n, k], 0.5, &mut rng);
         let q = QuantizedLinear::quantize_rtn(&wt, QuantGrid::new(4, 64));
@@ -147,31 +157,58 @@ fn main() -> anyhow::Result<()> {
             }
             t0.elapsed().as_secs_f64() / reps as f64
         };
-        let mut base: Option<(f64, Vec<u32>)> = None;
-        for &t in THREADS {
-            exec::set_threads(t);
-            let y = QuantizedLm::qmatmul(&x, &q);
-            let bits: Vec<u32> = y.data().iter().map(|v| v.to_bits()).collect();
-            let fused = time_n(10, &|| QuantizedLm::qmatmul(&x, &q));
-            let two_step = time_n(10, &|| {
-                let deq = q.dequantize();
-                rpiq::tensor::matmul_a_bt(&x, &deq)
-            });
-            let gflops = 2.0 * (m * k * n) as f64 / fused / 1e9;
-            match &base {
-                None => base = Some((fused, bits)),
-                Some((t1, b1)) => {
-                    assert_eq!(b1, &bits, "qmatmul diverged at {t} shards ({m}x{k}x{n})");
-                    println!(
-                        "-- qmatmul {m}x{k}x{n} @ {t} shards: {:.2}x vs 1",
-                        t1 / fused
-                    );
+        // Accuracy cross-check once per size, single-threaded.
+        exec::set_threads(1);
+        kernels::set_kernel(Some(QmatmulKernel::Scalar));
+        let y_scalar = QuantizedLm::qmatmul(&x, &q)?;
+        kernels::set_kernel(Some(QmatmulKernel::Tiled));
+        let y_tiled = QuantizedLm::qmatmul(&x, &q)?;
+        let max_abs = y_scalar.data().iter().fold(0f32, |a, v| a.max(v.abs()));
+        let max_diff = y_scalar
+            .data()
+            .iter()
+            .zip(y_tiled.data())
+            .fold(0f32, |a, (s, t)| a.max((s - t).abs()));
+        assert!(
+            max_diff <= kernels::TILED_REL_TOL * max_abs.max(1.0),
+            "tiled kernel out of tolerance at {m}x{k}x{n}: {max_diff} vs scale {max_abs}"
+        );
+        let mut single: [f64; 2] = [0.0; 2];
+        for (ki, kernel) in [QmatmulKernel::Scalar, QmatmulKernel::Tiled].into_iter().enumerate() {
+            kernels::set_kernel(Some(kernel));
+            let mut base: Option<(f64, Vec<u32>)> = None;
+            for &t in THREADS {
+                exec::set_threads(t);
+                let y = QuantizedLm::qmatmul(&x, &q)?;
+                let bits: Vec<u32> = y.data().iter().map(|v| v.to_bits()).collect();
+                let fused = time_n(10, &|| QuantizedLm::qmatmul(&x, &q).expect("shapes agree"));
+                let two_step = time_n(10, &|| {
+                    let deq = q.dequantize();
+                    rpiq::tensor::matmul_a_bt(&x, &deq)
+                });
+                let gflops = 2.0 * (m * k * n) as f64 / fused / 1e9;
+                match &base {
+                    None => {
+                        single[ki] = fused;
+                        base = Some((fused, bits));
+                    }
+                    Some((t1, b1)) => {
+                        assert_eq!(
+                            b1,
+                            &bits,
+                            "{} qmatmul diverged at {t} shards ({m}x{k}x{n})",
+                            kernel.label()
+                        );
+                        println!(
+                            "-- qmatmul[{}] {m}x{k}x{n} @ {t} shards: {:.2}x vs 1",
+                            kernel.label(),
+                            t1 / fused
+                        );
+                    }
                 }
-            }
-            println!(
-                "{}",
-                Json::obj()
+                let rec = Json::obj()
                     .with("bench", Json::Str("qmatmul".into()))
+                    .with("kernel", Json::Str(kernel.label().into()))
                     .with("m", Json::Num(m as f64))
                     .with("k", Json::Num(k as f64))
                     .with("n", Json::Num(n as f64))
@@ -179,12 +216,35 @@ fn main() -> anyhow::Result<()> {
                     .with("fused_secs", Json::Num(fused))
                     .with("two_step_secs", Json::Num(two_step))
                     .with("fused_vs_two_step", Json::Num(two_step / fused))
-                    .with("gflops", Json::Num(gflops))
-                    .dump()
-            );
+                    .with("gflops", Json::Num(gflops));
+                println!("{}", rec.dump());
+                records.push(rec);
+            }
         }
+        let ratio = single[0] / single[1];
+        println!("SPEEDUP qmatmul {m}x{k}x{n} @ 1 thread: tiled {ratio:.2}x vs scalar");
+        if ratio < 2.0 {
+            println!("WARNING: tiled speedup below the 2x target at {m}x{k}x{n}");
+        }
+        speedups.push(
+            Json::obj()
+                .with("m", Json::Num(m as f64))
+                .with("k", Json::Num(k as f64))
+                .with("n", Json::Num(n as f64))
+                .with("scalar_secs", Json::Num(single[0]))
+                .with("tiled_secs", Json::Num(single[1]))
+                .with("tiled_vs_scalar", Json::Num(ratio)),
+        );
     }
+    kernels::set_kernel(None);
     exec::set_threads(exec::default_threads());
+    let bench_json = Json::obj()
+        .with("bench", Json::Str("qmatmul".into()))
+        .with("threads_swept", Json::Arr(THREADS.iter().map(|&t| Json::Num(t as f64)).collect()))
+        .with("single_thread_speedups", Json::Arr(speedups))
+        .with("records", Json::Arr(records));
+    std::fs::write("BENCH_qmatmul.json", bench_json.pretty())?;
+    println!("wrote BENCH_qmatmul.json");
 
     // Optional trace artifact: `RPIQ_TRACE=out.json` records one extra
     // bounded pipeline run (the small arm, after the timed sweep, so it

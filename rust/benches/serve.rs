@@ -43,8 +43,8 @@ fn bench_models(vocab: usize) -> (Arc<QuantizedLm>, Arc<QuantizedVlm>) {
     let vcfg = VlmConfig::sim_cogvlm2(vocab);
     let vw = VlmWeights::init(&vcfg, &mut rng);
     (
-        Arc::new(QuantizedLm::quantize_rtn(lw, QuantGrid::new(4, 8))),
-        Arc::new(QuantizedVlm::quantize_rtn(vw, QuantGrid::new(4, 8))),
+        Arc::new(QuantizedLm::quantize_rtn(lw, QuantGrid::new(4, 8)).expect("complete")),
+        Arc::new(QuantizedVlm::quantize_rtn(vw, QuantGrid::new(4, 8)).expect("complete")),
     )
 }
 

@@ -632,12 +632,12 @@ pub fn inspect(args: &mut Args) -> Result<()> {
 }
 
 fn print_qlinear_summary(
-    qlinears: &std::collections::HashMap<String, crate::quant::QuantizedLinear>,
+    qlinears: &crate::quant::QLinearStore,
     deploy_bytes: usize,
     fp_bytes: usize,
 ) {
     let mut bit_counts: Vec<(u32, usize)> = Vec::new();
-    for q in qlinears.values() {
+    for q in qlinears.linears() {
         match bit_counts.iter_mut().find(|(b, _)| *b == q.grid.bits) {
             Some((_, n)) => *n += 1,
             None => bit_counts.push((q.grid.bits, 1)),

@@ -195,7 +195,7 @@ pub fn eval_lm_fp(w: &LmWeights, world: &World, n_eval_windows: usize, n_sent: u
 
 /// Evaluate a quantized LM.
 pub fn eval_lm_q(q: &QuantizedLm, world: &World, n_eval_windows: usize, n_sent: usize) -> LmEval {
-    let f = |t: &[u32], b: usize, s: usize| q.forward(t, b, s);
+    let f = |t: &[u32], b: usize, s: usize| q.forward(t, b, s).expect("quantized forward");
     eval_with(&f, q.config().seq_len, world, n_eval_windows, n_sent)
 }
 
@@ -230,7 +230,7 @@ pub fn eval_vlm_fp(w: &VlmWeights, world: &World) -> VqaReport {
 
 /// Evaluate a quantized VLM on the VQA test set.
 pub fn eval_vlm_q(q: &QuantizedVlm, world: &World) -> VqaReport {
-    let f = |p: &Tensor, t: &[u32], b: usize| q.forward(p, t, b);
+    let f = |p: &Tensor, t: &[u32], b: usize| q.forward(p, t, b).expect("quantized forward");
     vqa_accuracy(&f, world.tokenizer(), &world.vqa.test, q.config().n_patches)
 }
 

@@ -407,7 +407,7 @@ pub fn quantize_lm(
         // The deployed model carries only the skeleton (embeddings, norms)
         // + packed linears — the caller's fp32 `w` is NOT cloned into it,
         // so the post-quantization resident footprint is deploy_bytes().
-        model: QuantizedLm::new(crate::model::LmSkeleton::from_weights(w), qlinears),
+        model: QuantizedLm::new(crate::model::LmSkeleton::from_weights(w), qlinears)?,
         reports,
         ledger,
         timers,
@@ -491,7 +491,7 @@ pub fn quantize_vlm(
 
     Ok(PipelineVlmOutput {
         // Skeleton-only, like the LM pipeline: no fp32 linear survives.
-        model: QuantizedVlm::new(crate::vlm::VlmSkeleton::from_weights(w), qlinears),
+        model: QuantizedVlm::new(crate::vlm::VlmSkeleton::from_weights(w), qlinears)?,
         reports,
         ledger,
         timers,
@@ -639,8 +639,8 @@ mod tests {
                 assert_eq!(rs.iters_run, rp.iters_run);
                 assert_eq!(rs.early_stopped, rp.early_stopped);
             }
-            for (name, qs) in &seq.model.qlinears {
-                let qp = &par.model.qlinears[name];
+            for (name, qs) in seq.model.qlinears.iter() {
+                let qp = par.model.qlinears.get(name).expect("same layer set");
                 assert_eq!(qs.packed, qp.packed, "packed levels diverged for {name}");
                 assert_eq!(qs.scales, qp.scales, "scales diverged for {name}");
                 assert_eq!(qs.zeros, qp.zeros, "zeros diverged for {name}");
@@ -698,8 +698,8 @@ mod tests {
         };
         let out = quantize_vlm(&w, &samples, &policy, Method::Rpiq(policy.rpiq)).unwrap();
         // vision layers got 8 bits, language 4
-        assert_eq!(out.model.qlinears["vision.block0.fc1"].grid.bits, 8);
-        assert_eq!(out.model.qlinears["lm.layer0.attn.q"].grid.bits, 4);
+        assert_eq!(out.model.qlinears.get("vision.block0.fc1").expect("present").grid.bits, 8);
+        assert_eq!(out.model.qlinears.get("lm.layer0.attn.q").expect("present").grid.bits, 4);
         assert_eq!(out.ledger.live_bytes(), 0);
         assert_eq!(out.reports.len(), w.linears().len());
     }

@@ -264,13 +264,13 @@ impl LaneEngine for SentimentLane {
             return Vec::new();
         };
         debug_assert!(seqs.iter().all(|s| s.len() == seq), "mixed shapes in one group");
-        crate::model::quantized::run_equal_shape_groups(seqs.len(), |_| 0, |chunk| {
+        let answers = crate::model::quantized::run_equal_shape_groups(seqs.len(), |_| 0, |chunk| {
             let mut tokens = Vec::with_capacity(chunk.len() * seq);
             for s in chunk.iter().filter_map(|&i| seqs.get(i)) {
                 tokens.extend_from_slice(s);
             }
-            let logits = self.model.forward(&tokens, chunk.len(), seq);
-            (0..chunk.len())
+            let logits = self.model.forward(&tokens, chunk.len(), seq)?;
+            Ok((0..chunk.len())
                 .map(|gi| {
                     let last = logits.row(gi * seq + seq - 1);
                     let mut ll = [f32::NEG_INFINITY; 3];
@@ -287,8 +287,18 @@ impl LaneEngine for SentimentLane {
                         .unwrap_or(0);
                     Answer::Sentiment { label, label_logits: ll }
                 })
-                .collect()
-        })
+                .collect())
+        });
+        match answers {
+            Ok(a) => a,
+            // A forward error (e.g. shape mismatch) surfaces as a short
+            // answer vector — the lane loop's count check drops the group
+            // cleanly instead of poisoning the lane.
+            Err(e) => {
+                crate::trace::log(&format!("sentiment lane batch failed: {e:#}"));
+                Vec::new()
+            }
+        }
     }
 }
 
@@ -385,7 +395,7 @@ impl LaneEngine for VqaLane {
         };
         debug_assert!(pairs.iter().all(|(_, q)| q.len() == tlen), "mixed shapes in one group");
         let s = n_patches + tlen;
-        crate::model::quantized::run_equal_shape_groups(pairs.len(), |_| 0, |chunk| {
+        let answers = crate::model::quantized::run_equal_shape_groups(pairs.len(), |_| 0, |chunk| {
             let b = chunk.len();
             let mut pdata = Vec::with_capacity(b * n_patches * pd);
             let mut text = Vec::with_capacity(b * tlen);
@@ -394,8 +404,8 @@ impl LaneEngine for VqaLane {
                 text.extend_from_slice(q);
             }
             let patches = Tensor::from_vec(&[b * n_patches, pd], pdata);
-            let logits = self.model.forward(&patches, &text, b);
-            (0..b)
+            let logits = self.model.forward(&patches, &text, b)?;
+            Ok((0..b)
                 .map(|gi| {
                     let last = logits.row(gi * s + s - 1);
                     // Total order over f32 (see the sentiment argmax).
@@ -407,8 +417,17 @@ impl LaneEngine for VqaLane {
                         .unwrap_or(0) as u32;
                     Answer::Vqa { answer_id: pred, answer: self.tok.word(pred).to_string() }
                 })
-                .collect()
-        })
+                .collect())
+        });
+        match answers {
+            Ok(a) => a,
+            // Same clean group drop as the sentiment lane: errors become a
+            // short answer vector, never a lane-thread panic.
+            Err(e) => {
+                crate::trace::log(&format!("vqa lane batch failed: {e:#}"));
+                Vec::new()
+            }
+        }
     }
 }
 
@@ -455,6 +474,8 @@ impl Server {
     /// typed constructors (and the serve tests' synthetic engines) use.
     #[allow(clippy::expect_used)] // lane-thread spawn failure is unrecoverable
     pub fn start_engines(engines: Vec<Box<dyn LaneEngine>>, cfg: ServeConfig) -> Self {
+        // LINT-ALLOW(no-panic): construction-time invariant, checked before
+        // any request exists — misconfiguration should fail loudly at startup.
         assert!(!engines.is_empty(), "server needs at least one lane engine");
         let n_lanes = cfg.lanes.max(1);
         let queue: ShardedQueue<Request> = ShardedQueue::new(n_lanes, cfg.queue_cap);
@@ -816,7 +837,7 @@ mod tests {
         let mcfg = ModelConfig::test_tiny(tok.vocab_size());
         let mut rng = Pcg64::seeded(801);
         let w = LmWeights::init(&mcfg, &mut rng);
-        Arc::new(QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8)))
+        Arc::new(QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete"))
     }
 
     fn test_qvlm() -> Arc<QuantizedVlm> {
@@ -824,7 +845,7 @@ mod tests {
         let vcfg = VlmConfig::test_tiny(tok.vocab_size());
         let mut rng = Pcg64::seeded(802);
         let w = VlmWeights::init(&vcfg, &mut rng);
-        Arc::new(QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)))
+        Arc::new(QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete"))
     }
 
     fn test_server(cfg: ServeConfig) -> (Server, Tokenizer) {
@@ -909,6 +930,9 @@ mod tests {
 
     #[test]
     fn vqa_lane_answers_questions() {
+        // fixed kernel: the lane's forward and the reference forward must
+        // run the same numerics for the exact-argmax compare below
+        let _kernel = crate::model::kernels::kernel_test_lock();
         let tok = Lexicon::tokenizer();
         let qvlm = test_qvlm();
         let vcfg = qvlm.config().clone();
@@ -918,7 +942,7 @@ mod tests {
         let question = tok.encode("what genre this book ? answer :");
         let resp = server.ask(patches.clone(), question.clone()).unwrap();
         // answer must match the unbatched forward's argmax exactly
-        let logits = qvlm.forward(&patches, &question, 1);
+        let logits = qvlm.forward(&patches, &question, 1).expect("forward");
         let last = logits.row(vcfg.n_patches + question.len() - 1);
         let pred = last
             .iter()

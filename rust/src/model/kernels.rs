@@ -1,0 +1,466 @@
+//! The packed dequant-matmul inner kernels behind [`QuantizedLm::qmatmul`]
+//! (and therefore every LM/VLM quantized forward and both serve lanes).
+//!
+//! Two kernels share one contract — compute activation rows
+//! `[i0, i0 + ychunk.len()/out_f)` of `y = x · deq(W)ᵀ` into a
+//! **zero-initialized** `ychunk` — and differ in schedule:
+//!
+//! * [`qmatmul_rows_scalar`] — the bit-identity reference and default:
+//!   dequantize one weight row at a time into a thread-local scratch row,
+//!   contract it against every activation row with [`crate::tensor::dot`].
+//!   Per output element this runs the exact `(q − zero)·scale` + 8-way
+//!   `dot` float sequence the repo has always run, so outputs are
+//!   bit-identical to every previous release (the unpacked oracle in the
+//!   `quantized` tests pins this).
+//! * [`qmatmul_rows_tiled`] — the cache-blocked, register-tiled fast
+//!   path: K-blocked ([`KC`]) loop over [`NR`]-lane K-major weight
+//!   panels (packed by [`QuantizedLinear::deq_span_strided`], two 4-bit
+//!   levels per packed byte read), contracted against [`MR`]-row
+//!   activation tiles with an `MR×NR` register-resident accumulator and
+//!   explicit `mul_add` (FMA). See `rust/DESIGN.md` §Packed microkernels
+//!   for the tile-shape rationale and measured numbers.
+//!
+//! Numerics contract: the tiled path accumulates each output element in
+//! one strict k-ascending chain per K-block (lanes vectorize over the
+//! `NR` *output* columns, never over k), so its results are
+//! **bit-deterministic** — independent of thread count, shard layout,
+//! and `MR`/`NR` edge tiles — but NOT bit-identical to the scalar
+//! kernel, whose `dot` keeps 8 interleaved partial sums, nor across
+//! machines with and without hardware FMA codegen for the same binary.
+//! The divergence is ordinary f32 reassociation/fusion, bounded by
+//! [`TILED_REL_TOL`] (asserted by the property tests here).
+//!
+//! Selection: [`set_kernel`] override (tests/benches) → `RPIQ_KERNEL`
+//! env (`scalar`/`tiled`) → the `tiled-kernel` cargo feature → scalar.
+
+use crate::quant::QuantizedLinear;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Activation rows per register tile (accumulator height). 6×16 fills
+/// the 16 AVX2 ymm registers exactly (12 accumulators + 2 panel lanes +
+/// broadcast + spare) — the classic BLIS/GotoBLAS sgemm shape — and
+/// keeps 6 independent FMA chains per lane pair in flight, enough to
+/// cover FMA latency on both 256- and 512-bit units.
+pub const MR: usize = 6;
+
+/// Output columns per register tile (accumulator width): one 512-bit or
+/// two 256-bit vectors of f32, and the stride of the K-major weight
+/// panel ([`QuantizedLinear::deq_span_strided`] lanes).
+pub const NR: usize = 16;
+
+/// K-block depth: one `KC × NR` dequantized panel is 16 KiB — half a
+/// 32 KiB L1d — leaving room for the `MR` activation row slices walking
+/// beside it. Each panel is dequantized once and contracted against
+/// every activation row of the shard, so the unpack cost stays the same
+/// `1/rows` fraction the scalar kernel pays.
+pub const KC: usize = 256;
+
+/// Floor of activation rows per shard for [`crate::tensor::par_rows`]:
+/// every shard re-dequantizes the whole weight matrix (`O(out·in)`
+/// setup for either kernel), so thinner shards would spend a large
+/// fraction of their time on conversion. Centralized here so the model
+/// and the benches agree on the sharding geometry.
+pub const MIN_ROWS_PER_SHARD: usize = 8;
+
+/// Relative tolerance of the tiled kernel against the scalar reference:
+/// `max|tiled − scalar| ≤ TILED_REL_TOL · max(1, max|scalar|)`. The
+/// observed divergence (f32 reassociation + FMA fusion over the K
+/// reduction) sits orders of magnitude below this at the repo's shapes;
+/// the bound is asserted by the kernel property tests and documented in
+/// rust/DESIGN.md §Packed microkernels.
+pub const TILED_REL_TOL: f32 = 1e-4;
+
+/// Which inner kernel [`crate::model::QuantizedLm::qmatmul`] dispatches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QmatmulKernel {
+    /// Row-at-a-time reference kernel (bit-identical to all prior
+    /// releases; the default).
+    Scalar,
+    /// Cache-blocked register-tiled kernel (fast path, [`TILED_REL_TOL`]
+    /// numerics contract).
+    Tiled,
+}
+
+impl QmatmulKernel {
+    /// Stable label for traces, benches, and JSON artifacts.
+    pub fn label(self) -> &'static str {
+        match self {
+            QmatmulKernel::Scalar => "scalar",
+            QmatmulKernel::Tiled => "tiled",
+        }
+    }
+}
+
+/// Process-wide kernel override: 0 = none, 1 = scalar, 2 = tiled.
+/// Mirrors `exec::set_threads` — benches and tests move it under
+/// [`kernel_test_lock`]; production code never writes it.
+static KERNEL_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Override the kernel selection (`None` restores env/feature default).
+pub fn set_kernel(k: Option<QmatmulKernel>) {
+    let v = match k {
+        None => 0,
+        Some(QmatmulKernel::Scalar) => 1,
+        Some(QmatmulKernel::Tiled) => 2,
+    };
+    KERNEL_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Test support: serializes tests that move the process-global kernel
+/// override (mirrors `exec::thread_target_test_lock`; take that lock
+/// first when a test moves both). Panic-poisoning is ignored.
+#[doc(hidden)]
+pub fn kernel_test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The kernel the next [`crate::model::QuantizedLm::qmatmul`] call will
+/// run: override → `RPIQ_KERNEL` env → feature default.
+pub fn active_kernel() -> QmatmulKernel {
+    match KERNEL_OVERRIDE.load(Ordering::Relaxed) {
+        1 => QmatmulKernel::Scalar,
+        2 => QmatmulKernel::Tiled,
+        _ => {
+            static ENV_DEFAULT: OnceLock<QmatmulKernel> = OnceLock::new();
+            *ENV_DEFAULT.get_or_init(env_default)
+        }
+    }
+}
+
+/// Compile-time default: scalar unless the `tiled-kernel` feature flips
+/// the deployment default to the fast path.
+const fn feature_default() -> QmatmulKernel {
+    if cfg!(feature = "tiled-kernel") {
+        QmatmulKernel::Tiled
+    } else {
+        QmatmulKernel::Scalar
+    }
+}
+
+fn env_default() -> QmatmulKernel {
+    match std::env::var("RPIQ_KERNEL") {
+        Ok(v) if v.eq_ignore_ascii_case("scalar") => QmatmulKernel::Scalar,
+        Ok(v) if v.eq_ignore_ascii_case("tiled") => QmatmulKernel::Tiled,
+        Ok(v) => {
+            crate::trace::log(&format!(
+                "RPIQ_KERNEL={v:?} not recognized (expected \"scalar\" or \"tiled\"); \
+                 using the {} default",
+                feature_default().label()
+            ));
+            feature_default()
+        }
+        Err(_) => feature_default(),
+    }
+}
+
+thread_local! {
+    /// Per-thread kernel scratch (the scalar kernel's dequantized weight
+    /// row / the tiled kernel's weight panel). Replaces the per-shard
+    /// `vec![0.0; in_f]` the old kernel allocated on every dispatch —
+    /// the buffer is grown once per thread and reused across every
+    /// qmatmul the pool worker ever runs. Kernels are leaf compute (they
+    /// never re-enter the pool), so the borrow can never nest.
+    static SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
+/// Dispatch one shard to the selected kernel (the body `par_rows` runs).
+#[inline]
+pub(crate) fn run_rows(
+    kernel: QmatmulKernel,
+    xd: &[f32],
+    q: &QuantizedLinear,
+    ychunk: &mut [f32],
+    i0: usize,
+) {
+    match kernel {
+        QmatmulKernel::Scalar => qmatmul_rows_scalar(xd, q, ychunk, i0),
+        QmatmulKernel::Tiled => qmatmul_rows_tiled(xd, q, ychunk, i0),
+    }
+}
+
+/// The scalar reference kernel: unpack + dequantize weight row `o` once
+/// into thread-local scratch, then contract it against every activation
+/// row of the shard. Structurally the Pallas kernel's schedule with a
+/// `(1 × K)` weight tile; bit-identical to the pre-tiling releases (the
+/// scratch row replaces a per-shard allocation, not any float op).
+pub(crate) fn qmatmul_rows_scalar(xd: &[f32], q: &QuantizedLinear, ychunk: &mut [f32], i0: usize) {
+    let in_f = q.in_features;
+    let out_f = q.out_features;
+    let rows = ychunk.len() / out_f;
+    with_scratch(in_f, |wbuf| {
+        for o in 0..out_f {
+            // unpack + dequantize row o once: w_c = (q_c − z_g)·s_g
+            q.deq_row_into(o, wbuf);
+            // contract against every activation row of this shard
+            for r in 0..rows {
+                let i = i0 + r;
+                let xrow = &xd[i * in_f..(i + 1) * in_f];
+                ychunk[r * out_f + o] = crate::tensor::dot(xrow, wbuf);
+            }
+        }
+    });
+}
+
+/// The cache-blocked register-tiled kernel.
+///
+/// Loop structure (GEBP): for each K-block of depth ≤ [`KC`] → for each
+/// [`NR`]-column output panel, dequantize the `kc × NR` K-major weight
+/// panel *once* into thread-local scratch (nibble pairs unpacked a byte
+/// at a time by [`QuantizedLinear::deq_span_strided`]) → sweep all
+/// activation rows of the shard in [`MR`]-row tiles through
+/// [`micro`], accumulating into `ychunk` (`+=`, hence the zero-init
+/// contract shared with the scalar kernel, whose first write is `=`).
+///
+/// Each output element's value is one k-ascending `mul_add` chain per
+/// K-block, summed block-by-block into `y` — independent of the shard
+/// layout, thread count, and edge-tile geometry, so the tiled path is
+/// bit-deterministic for a fixed [`KC`].
+pub(crate) fn qmatmul_rows_tiled(xd: &[f32], q: &QuantizedLinear, ychunk: &mut [f32], i0: usize) {
+    let in_f = q.in_features;
+    let out_f = q.out_features;
+    let rows = ychunk.len() / out_f;
+    with_scratch(KC * NR, |wtile| {
+        let mut k0 = 0;
+        while k0 < in_f {
+            let kc = KC.min(in_f - k0);
+            let mut o0 = 0;
+            while o0 < out_f {
+                let nr = NR.min(out_f - o0);
+                if nr < NR {
+                    // partial edge panel: zero the padded lanes so the
+                    // microkernel can run full-width regardless
+                    wtile[..kc * NR].fill(0.0);
+                }
+                for j in 0..nr {
+                    q.deq_span_strided(o0 + j, k0, k0 + kc, NR, &mut wtile[j..]);
+                }
+                let mut r0 = 0;
+                while r0 < rows {
+                    let mr = MR.min(rows - r0);
+                    // const-generic dispatch so every tile height gets a
+                    // fully-unrolled accumulator array
+                    match mr {
+                        6 => micro::<6>(xd, in_f, i0 + r0, k0, kc, wtile, ychunk, out_f, r0, o0, nr),
+                        5 => micro::<5>(xd, in_f, i0 + r0, k0, kc, wtile, ychunk, out_f, r0, o0, nr),
+                        4 => micro::<4>(xd, in_f, i0 + r0, k0, kc, wtile, ychunk, out_f, r0, o0, nr),
+                        3 => micro::<3>(xd, in_f, i0 + r0, k0, kc, wtile, ychunk, out_f, r0, o0, nr),
+                        2 => micro::<2>(xd, in_f, i0 + r0, k0, kc, wtile, ychunk, out_f, r0, o0, nr),
+                        _ => micro::<1>(xd, in_f, i0 + r0, k0, kc, wtile, ychunk, out_f, r0, o0, nr),
+                    }
+                    r0 += mr;
+                }
+                o0 += nr;
+            }
+            k0 += kc;
+        }
+    });
+}
+
+/// One `M × NR` register tile over one K-block: `acc[i][j] +=
+/// x[row0+i][k] · wtile[k][j]` for `k ∈ [k0, k0+kc)`, then `y += acc`
+/// for the `nr` real lanes. `chunks_exact(NR)` pins the panel walk to
+/// exactly `kc` steps (bounds checks vanish); the j-loop over a fixed
+/// `NR` array is the vectorized axis, so the per-element k chain stays
+/// strictly ordered while still filling the FMA pipes.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro<const M: usize>(
+    xd: &[f32],
+    in_f: usize,
+    x_row0: usize,
+    k0: usize,
+    kc: usize,
+    wtile: &[f32],
+    ychunk: &mut [f32],
+    out_f: usize,
+    y_row0: usize,
+    o0: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; M];
+    let mut xs: [&[f32]; M] = [&[][..]; M];
+    for (i, slot) in xs.iter_mut().enumerate() {
+        let base = (x_row0 + i) * in_f + k0;
+        *slot = &xd[base..base + kc];
+    }
+    for (k, w) in wtile[..kc * NR].chunks_exact(NR).enumerate() {
+        for i in 0..M {
+            let xv = xs[i][k];
+            let a = &mut acc[i];
+            for j in 0..NR {
+                a[j] = xv.mul_add(w[j], a[j]);
+            }
+        }
+    }
+    for (i, a) in acc.iter().enumerate() {
+        let base = (y_row0 + i) * out_f + o0;
+        for (y, v) in ychunk[base..base + nr].iter_mut().zip(a.iter()) {
+            *y += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QuantizedLm;
+    use crate::proptest::{prop_assert, Runner};
+    use crate::quant::QuantGrid;
+    use crate::rng::Pcg64;
+    use crate::tensor::Tensor;
+
+    fn tol_ok(tiled: &[f32], scalar: &[f32]) -> (bool, f32, f32) {
+        let scale = scalar.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        let diff = tiled
+            .iter()
+            .zip(scalar)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        (diff <= TILED_REL_TOL * scale, diff, scale)
+    }
+
+    #[test]
+    fn tiled_matches_scalar_within_tolerance_property() {
+        // The tiled-path numerics contract over the full edge-case grid:
+        // odd in/out features (nibble tails + partial NR panels), rows
+        // not a multiple of MR (partial edge tiles), group boundaries
+        // straddling panel boundaries, 3/4/8-bit grids, and in_features
+        // beyond one K-block (KC straddling).
+        Runner::new("kernels_tiled_vs_scalar", 48).run(|g| {
+            let bits = [3u32, 4, 8][g.usize_in(0..3)];
+            let rows = g.usize_in(1..2 * MR + 2);
+            let out_f = g.usize_in(1..2 * NR + 3);
+            let in_f = if g.bool() {
+                g.usize_in(1..64) // small: head/tail nibble paths
+            } else {
+                g.usize_in(KC - 8..KC + 40) // straddles the K-block edge
+            };
+            let gs = g.usize_in(1..in_f.max(2));
+            let w = Tensor::from_vec(&[out_f, in_f], g.matrix(out_f, in_f, 0.5));
+            let q = crate::quant::QuantizedLinear::quantize_rtn(&w, QuantGrid::new(bits, gs));
+            let x = Tensor::from_vec(&[rows, in_f], g.matrix(rows, in_f, 1.0));
+            let mut scalar = vec![0.0f32; rows * out_f];
+            qmatmul_rows_scalar(x.data(), &q, &mut scalar, 0);
+            let mut tiled = vec![0.0f32; rows * out_f];
+            qmatmul_rows_tiled(x.data(), &q, &mut tiled, 0);
+            let (ok, diff, scale) = tol_ok(&tiled, &scalar);
+            prop_assert(
+                ok,
+                &format!(
+                    "tiled within {TILED_REL_TOL} of scalar \
+                     (diff={diff:e}, scale={scale:e}, bits={bits}, \
+                     {rows}x{in_f}x{out_f}, gs={gs})"
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn tiled_equals_reference_blockwise_fma_reduction() {
+        // Pin the tiled path's exact numerics (not just a tolerance): one
+        // strict k-ascending mul_add chain per KC block per element,
+        // block sums added in ascending block order.
+        let mut rng = Pcg64::seeded(317);
+        let (rows, in_f, out_f) = (5, KC + 37, 2 * NR + 5);
+        let w = Tensor::randn(&[out_f, in_f], 0.5, &mut rng);
+        let q = crate::quant::QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 32));
+        let x = Tensor::randn(&[rows, in_f], 1.0, &mut rng);
+        let mut tiled = vec![0.0f32; rows * out_f];
+        qmatmul_rows_tiled(x.data(), &q, &mut tiled, 0);
+        let deq = q.dequantize();
+        for r in 0..rows {
+            for o in 0..out_f {
+                let mut y = 0.0f32;
+                let mut k0 = 0;
+                while k0 < in_f {
+                    let kc = KC.min(in_f - k0);
+                    let mut acc = 0.0f32;
+                    for k in k0..k0 + kc {
+                        acc = x.at(r, k).mul_add(deq.at(o, k), acc);
+                    }
+                    y += acc;
+                    k0 += kc;
+                }
+                assert_eq!(tiled[r * out_f + o].to_bits(), y.to_bits(), "({r},{o})");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_qmatmul_bit_deterministic_across_thread_counts() {
+        // The CI determinism matrix (RPIQ_THREADS=1/2/8) runs this with
+        // the tiled path enabled: shard layout and thread count must not
+        // change a single bit (each element is one fixed reduction chain
+        // regardless of which shard/tile computes it).
+        let _threads = crate::exec::thread_target_test_lock();
+        let _kernel = kernel_test_lock();
+        let before = crate::exec::num_threads();
+        let mut rng = Pcg64::seeded(313);
+        // 33 rows shard unevenly; dims exercise partial MR/NR edge tiles
+        let w = Tensor::randn(&[3 * NR + 7, 96], 0.5, &mut rng);
+        let q = crate::quant::QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 16));
+        let x = Tensor::randn(&[33, 96], 1.0, &mut rng);
+        set_kernel(Some(QmatmulKernel::Tiled));
+        let mut reference = vec![0.0f32; 33 * (3 * NR + 7)];
+        qmatmul_rows_tiled(x.data(), &q, &mut reference, 0);
+        for threads in [1, 2, 4, 8] {
+            crate::exec::set_threads(threads);
+            let y = QuantizedLm::qmatmul(&x, &q).expect("shapes agree");
+            assert_eq!(y.data(), reference.as_slice(), "threads={threads}");
+        }
+        set_kernel(None);
+        crate::exec::set_threads(before);
+    }
+
+    #[test]
+    fn kernel_override_wins_over_default() {
+        let _kernel = kernel_test_lock();
+        set_kernel(Some(QmatmulKernel::Tiled));
+        assert_eq!(active_kernel(), QmatmulKernel::Tiled);
+        set_kernel(Some(QmatmulKernel::Scalar));
+        assert_eq!(active_kernel(), QmatmulKernel::Scalar);
+        set_kernel(None);
+        // default is whatever env/feature give — just must not be stuck
+        let d = active_kernel();
+        assert!(matches!(d, QmatmulKernel::Scalar | QmatmulKernel::Tiled));
+    }
+
+    #[test]
+    fn scalar_scratch_reuse_is_bit_identical_to_fresh_buffers() {
+        // The thread-local scratch must be fully overwritten per weight
+        // row: run a wide matmul then a narrow one on the same thread and
+        // check the narrow result against a fresh computation.
+        let mut rng = Pcg64::seeded(331);
+        let w_wide = Tensor::randn(&[8, 200], 0.5, &mut rng);
+        let q_wide = crate::quant::QuantizedLinear::quantize_rtn(&w_wide, QuantGrid::new(4, 16));
+        let x_wide = Tensor::randn(&[3, 200], 1.0, &mut rng);
+        let mut y = vec![0.0f32; 3 * 8];
+        qmatmul_rows_scalar(x_wide.data(), &q_wide, &mut y, 0);
+        let w = Tensor::randn(&[10, 24], 0.5, &mut rng);
+        let q = crate::quant::QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 8));
+        let x = Tensor::randn(&[4, 24], 1.0, &mut rng);
+        let mut after_wide = vec![0.0f32; 4 * 10];
+        qmatmul_rows_scalar(x.data(), &q, &mut after_wide, 0);
+        let expect: Vec<f32> = (0..4)
+            .flat_map(|r| {
+                let deq = q.dequantize();
+                (0..10)
+                    .map(|o| crate::tensor::dot(x.row(r), deq.row(o)))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        assert_eq!(after_wide, expect);
+    }
+}

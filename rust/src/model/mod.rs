@@ -13,11 +13,13 @@
 pub mod config;
 pub mod forward;
 pub mod io;
+pub mod kernels;
 pub mod ops;
 pub mod quantized;
 pub mod weights;
 
 pub use config::{Activation, ModelConfig};
 pub use forward::{lm_forward, lm_loss, ActivationTap, FwdRecord};
+pub use kernels::QmatmulKernel;
 pub use quantized::{QuantizedLm, RESIDENT_TAG, WIDE_GROUP_ROWS};
 pub use weights::{LayerNorms, LmSkeleton, LmWeights};

@@ -2,16 +2,22 @@
 //! nibble-resident [`QuantizedLinear`] and everything else lives in a
 //! [`LmSkeleton`] — no fp32 linear survives quantization, so the resident
 //! footprint *is* the paper's "Mem" claim rather than an accounting of it.
-//! The forward path runs fused unpack→dequant→matmul — the Rust mirror of
-//! the Pallas `quant_matmul` kernel (numerics are cross-checked against
+//! The forward path runs fused unpack→dequant→matmul through the
+//! microkernels in [`super::kernels`] (numerics are cross-checked against
 //! the PJRT artifacts in the integration tests).
+//!
+//! This module is covered by rpiq-lint's no-panic rule: the forward and
+//! qmatmul paths are serve-reachable, so shape problems surface as
+//! `Err`, never as a panic inside a lane thread.
 
 use super::forward::embed_rows;
+use super::kernels;
 use super::ops::{act_fwd, attention_fwd, layernorm_fwd, linear_fwd};
 use super::weights::{LmSkeleton, LmWeights};
 use crate::metrics::MemoryLedger;
-use crate::quant::QuantizedLinear;
+use crate::quant::{QLinearStore, QuantizedLinear};
 use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Result};
 use std::collections::HashMap;
 
 /// Ledger tag under which a deployed model's resident bytes (packed
@@ -35,15 +41,15 @@ pub const WIDE_GROUP_ROWS: usize = 16;
 /// of one very wide group — fan out across the global pool together; a
 /// lone chunk runs inline on the calling thread. `run` receives the
 /// original item indices of one equal-shape chunk and must return one
-/// result per index, in order.
+/// result per index, in order; the first chunk `Err` aborts the batch.
 pub(crate) fn run_equal_shape_groups<R, F>(
     n: usize,
     key_of: impl Fn(usize) -> usize,
     run: F,
-) -> Vec<R>
+) -> Result<Vec<R>>
 where
     R: Send,
-    F: Fn(&[usize]) -> Vec<R> + Sync,
+    F: Fn(&[usize]) -> Result<Vec<R>> + Sync,
 {
     let mut by_key: std::collections::BTreeMap<usize, Vec<usize>> =
         std::collections::BTreeMap::new();
@@ -54,7 +60,7 @@ where
         .values()
         .flat_map(|members| members.chunks(WIDE_GROUP_ROWS))
         .collect();
-    let results: Vec<Vec<R>> = if chunks.len() <= 1 {
+    let results: Vec<Result<Vec<R>>> = if chunks.len() <= 1 {
         chunks.iter().map(|&c| run(c)).collect()
     } else {
         let run_ref = &run;
@@ -62,11 +68,81 @@ where
     };
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     for (chunk, res) in chunks.iter().zip(results) {
+        let res = res?;
+        ensure!(
+            res.len() == chunk.len(),
+            "equal-shape chunk returned {} results for {} items",
+            res.len(),
+            chunk.len()
+        );
         for (&i, l) in chunk.iter().zip(res) {
-            out[i] = Some(l);
+            if let Some(slot) = out.get_mut(i) {
+                *slot = Some(l);
+            }
         }
     }
-    out.into_iter().map(|o| o.expect("item answered")).collect()
+    let mut answered = Vec::with_capacity(n);
+    for slot in out {
+        match slot {
+            Some(l) => answered.push(l),
+            None => bail!("equal-shape grouping left an item unanswered"),
+        }
+    }
+    Ok(answered)
+}
+
+/// Per-transformer-block [`QLinearStore`] indices, resolved once at model
+/// construction so the forward path never formats a layer name or probes
+/// a map — the hot loop addresses linears by dense index. Shared with the
+/// VLM's decoder body (same canonical `lm.layer{i}.*` name space).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct LmLayerPlan {
+    pub(crate) q: usize,
+    pub(crate) k: usize,
+    pub(crate) v: usize,
+    pub(crate) out: usize,
+    pub(crate) up: usize,
+    pub(crate) down: usize,
+}
+
+/// The forward path's resolved addressing plan (one [`LmLayerPlan`] per
+/// block, plus the optional untied head).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct LmPlan {
+    pub(crate) layers: Vec<LmLayerPlan>,
+    pub(crate) head: Option<usize>,
+}
+
+impl LmPlan {
+    /// Resolve every canonical layer name to its store index, verifying
+    /// completeness (every linear the config declares must be present).
+    pub(crate) fn resolve(skeleton: &LmSkeleton, store: &QLinearStore) -> Result<LmPlan> {
+        let need = |name: String| -> Result<usize> {
+            match store.index_of(&name) {
+                Some(i) => Ok(i),
+                None => bail!("missing quantized layer {name}"),
+            }
+        };
+        let mut layers = Vec::with_capacity(skeleton.config.n_layers);
+        for li in 0..skeleton.config.n_layers {
+            layers.push(LmLayerPlan {
+                q: need(format!("lm.layer{li}.attn.q"))?,
+                k: need(format!("lm.layer{li}.attn.k"))?,
+                v: need(format!("lm.layer{li}.attn.v"))?,
+                out: need(format!("lm.layer{li}.attn.out"))?,
+                up: need(format!("lm.layer{li}.mlp.up"))?,
+                down: need(format!("lm.layer{li}.mlp.down"))?,
+            });
+        }
+        let head = if skeleton.config.tied_head {
+            // a quantized head may still be present (untied checkpoints
+            // loaded under a tied config are rejected elsewhere)
+            store.index_of("lm.head")
+        } else {
+            Some(need("lm.head".into())?)
+        };
+        Ok(LmPlan { layers, head })
+    }
 }
 
 /// A model whose linears are quantized (nibble-packed); everything else
@@ -76,24 +152,27 @@ where
 pub struct QuantizedLm {
     /// fp32 residue: embeddings, norms, config — no linears.
     pub skeleton: LmSkeleton,
-    /// canonical layer name → quantized weights.
-    pub qlinears: HashMap<String, QuantizedLinear>,
+    /// canonical layer name → quantized weights (sorted, index-addressed).
+    pub qlinears: QLinearStore,
+    /// name→index resolution, computed once at construction.
+    plan: LmPlan,
 }
 
 impl QuantizedLm {
     /// Assemble from a deployment skeleton and per-layer quantized
-    /// matrices. Every linear the config declares must be present.
-    pub fn new(skeleton: LmSkeleton, qlinears: HashMap<String, QuantizedLinear>) -> Self {
-        for name in skeleton.linear_names() {
-            assert!(qlinears.contains_key(&name), "missing quantized layer {name}");
-        }
-        QuantizedLm { skeleton, qlinears }
+    /// matrices. Every linear the config declares must be present — a
+    /// missing layer is an `Err`, since the loaders feed this from
+    /// on-disk containers.
+    pub fn new(skeleton: LmSkeleton, qlinears: HashMap<String, QuantizedLinear>) -> Result<Self> {
+        let store = QLinearStore::from_map(qlinears);
+        let plan = LmPlan::resolve(&skeleton, &store)?;
+        Ok(QuantizedLm { skeleton, qlinears: store, plan })
     }
 
     /// Assemble from full training weights: extracts the skeleton and
     /// *drops* the fp32 linears (the caller hands over ownership — this is
     /// the release point of the 60–75% resident reduction).
-    pub fn from_weights(w: LmWeights, qlinears: HashMap<String, QuantizedLinear>) -> Self {
+    pub fn from_weights(w: LmWeights, qlinears: HashMap<String, QuantizedLinear>) -> Result<Self> {
         Self::new(LmSkeleton::from_weights(&w), qlinears)
     }
 
@@ -106,7 +185,7 @@ impl QuantizedLm {
     /// calibration-free baseline, and the scaffolding the serve tests and
     /// benches build their models with. Consumes `w`; the fp32 linears die
     /// here.
-    pub fn quantize_rtn(w: LmWeights, grid: crate::quant::QuantGrid) -> Self {
+    pub fn quantize_rtn(w: LmWeights, grid: crate::quant::QuantGrid) -> Result<Self> {
         let mut qlinears = HashMap::new();
         for (name, t) in w.linears() {
             qlinears.insert(name, QuantizedLinear::quantize_rtn(t, grid));
@@ -119,8 +198,7 @@ impl QuantizedLm {
     /// — the "Mem (GB)" quantity of Tables 1–2 at our scale, and exactly
     /// what [`Self::register_resident`] books into a ledger.
     pub fn deploy_bytes(&self) -> usize {
-        let q: usize = self.qlinears.values().map(|q| q.nbytes()).sum();
-        q + self.skeleton.nbytes()
+        self.qlinears.nbytes() + self.skeleton.nbytes()
     }
 
     /// Book this model's resident bytes into `ledger` under
@@ -136,44 +214,68 @@ impl QuantizedLm {
         account_resident(ledger, &self.qlinears, self.skeleton.nbytes(), false);
     }
 
-    /// Fused dequant-matmul: `y = x · deq(W)ᵀ` with only `O(K)` transient
-    /// state per worker (one dequantized weight row at a time, reused
-    /// across every activation row of the shard) — structurally the Pallas
-    /// kernel's schedule with a (1 × K) weight tile. The weight row is
-    /// unpacked from nibbles *inside* the same pass that dequantizes it
-    /// ([`QuantizedLinear::deq_row_into`]); no byte-per-level copy of the
-    /// matrix ever exists.
+    /// Fused dequant-matmul: `y = x · deq(W)ᵀ` through the selected inner
+    /// kernel (see [`super::kernels`] for the scalar/tiled contract and
+    /// selection order). Only `O(K)` (scalar) or `O(KC·NR)` (tiled)
+    /// transient state per worker lives in thread-local scratch — no
+    /// byte-per-level copy of the matrix ever exists, and no per-call
+    /// allocation happens beyond the output tensor.
     ///
     /// Parallelism: activation rows are sharded across the global pool
     /// (`crate::exec`), each worker owning a disjoint `&mut` row chunk of
     /// `y` and running the identical inner kernel — results are
-    /// bit-identical to the sequential walk for any thread count. Each
+    /// bit-identical across thread counts for *both* kernels (the scalar
+    /// path matches the sequential walk exactly; the tiled path is a
+    /// fixed per-element reduction chain regardless of sharding). Each
     /// shard re-dequantizes the weight rows; with `R` rows per shard the
-    /// extra conversion cost is `1/R` of the contraction work, negligible
-    /// for the batched shapes the pipeline and server feed in. Small
+    /// extra conversion cost is `1/R` of the contraction work, which is
+    /// why the shard floor [`kernels::MIN_ROWS_PER_SHARD`] exists. Small
     /// problems stay on the calling thread (same cutoff as the dense
     /// matmul kernels).
     ///
-    /// Perf note (rust/DESIGN.md §Perf notes): an earlier per-(i,o) group
-    /// loop re-converted each u8 level `N` times and ran 0.81× the speed
-    /// of materialize-then-matmul; hoisting the row dequantization out of
-    /// the activation loop amortizes the conversion `N`-fold and removes
-    /// the `O(N·K)` materialization of the naive two-step path. The nibble
-    /// unpack rides in that same amortized pass (see the `qmatmul` arm of
-    /// `benches/quantize.rs` for the threads × sizes evidence).
-    pub fn qmatmul(x: &Tensor, q: &QuantizedLinear) -> Tensor {
+    /// Perf note (rust/DESIGN.md §Perf notes, §Packed microkernels): an
+    /// earlier per-(i,o) group loop re-converted each u8 level `N` times
+    /// and ran 0.81× the speed of materialize-then-matmul; hoisting the
+    /// row dequantization out of the activation loop amortizes the
+    /// conversion `N`-fold, and the tiled kernel layers cache blocking +
+    /// register tiling + FMA on top (see the `qmatmul` arm of
+    /// `benches/quantize.rs` for the kernel × threads × sizes evidence).
+    ///
+    /// Errors when `x`'s width disagrees with the linear's `in_features`
+    /// — this is serve-reachable, so it must not panic.
+    pub fn qmatmul(x: &Tensor, q: &QuantizedLinear) -> Result<Tensor> {
         let (n, in_f) = (x.rows(), x.cols());
-        assert_eq!(in_f, q.in_features);
+        ensure!(
+            in_f == q.in_features,
+            "qmatmul shape mismatch: x is {n}x{in_f} but the linear expects \
+             in_features={} (out_features={})",
+            q.in_features,
+            q.out_features
+        );
         let out_f = q.out_features;
+        let kernel = kernels::active_kernel();
+        // Span only on the tiled path (the attribution the tentpole
+        // needs), emitted on the calling thread so span counts stay
+        // thread-count-stable; alloc-free when tracing is disabled.
+        let _span = match kernel {
+            kernels::QmatmulKernel::Tiled => Some(crate::trace::span_detail(
+                "model",
+                "qmatmul.tile",
+                || format!("{n}x{in_f}x{out_f}"),
+            )),
+            kernels::QmatmulKernel::Scalar => None,
+        };
         let mut y = Tensor::zeros(&[n, out_f]);
         let xd = x.data();
-        // Floor of 8 activation rows per shard: each shard re-dequantizes
-        // the whole weight matrix (O(out·in) setup), so thinner shards
-        // would spend a large fraction of their time on conversion.
-        crate::tensor::par_rows(y.data_mut(), n, out_f, 2 * n * in_f * out_f, 8, |chunk, i0| {
-            qmatmul_rows(xd, q, chunk, i0)
-        });
-        y
+        crate::tensor::par_rows(
+            y.data_mut(),
+            n,
+            out_f,
+            2 * n * in_f * out_f,
+            kernels::MIN_ROWS_PER_SHARD,
+            |chunk, i0| kernels::run_rows(kernel, xd, q, chunk, i0),
+        );
+        Ok(y)
     }
 
     /// Batched forward over independent sequences of possibly different
@@ -189,52 +291,63 @@ impl QuantizedLm {
     /// fixed f32 order), so the returned per-sequence logits `[S_i, V]`
     /// are **bit-identical** to `forward(seq_i, 1, S_i)` — asserted by the
     /// batch-parity test.
-    pub fn forward_batch(&self, seqs: &[&[u32]]) -> Vec<Tensor> {
+    pub fn forward_batch(&self, seqs: &[&[u32]]) -> Result<Vec<Tensor>> {
         for s in seqs {
-            assert!(!s.is_empty(), "empty sequence in batch");
+            ensure!(!s.is_empty(), "empty sequence in batch");
         }
-        run_equal_shape_groups(seqs.len(), |i| seqs[i].len(), |chunk| {
-            let seq = seqs[chunk[0]].len();
-            let mut tokens = Vec::with_capacity(chunk.len() * seq);
-            for &i in chunk {
-                tokens.extend_from_slice(seqs[i]);
-            }
-            let logits = self.forward(&tokens, chunk.len(), seq);
-            (0..chunk.len())
-                .map(|gi| logits.slice_rows(gi * seq, (gi + 1) * seq))
-                .collect()
-        })
+        run_equal_shape_groups(
+            seqs.len(),
+            |i| seqs.get(i).map_or(0, |s| s.len()),
+            |chunk| {
+                let Some(&first) = chunk.first() else {
+                    return Ok(Vec::new());
+                };
+                let seq = seqs.get(first).map_or(0, |s| s.len());
+                let mut tokens = Vec::with_capacity(chunk.len() * seq);
+                for &i in chunk {
+                    if let Some(s) = seqs.get(i) {
+                        tokens.extend_from_slice(s);
+                    }
+                }
+                ensure!(
+                    tokens.len() == chunk.len() * seq,
+                    "equal-shape chunk mixed sequence lengths"
+                );
+                let logits = self.forward(&tokens, chunk.len(), seq)?;
+                Ok((0..chunk.len())
+                    .map(|gi| logits.slice_rows(gi * seq, (gi + 1) * seq))
+                    .collect())
+            },
+        )
     }
 
-    /// Forward pass: tokens → logits, all linears via [`Self::qmatmul`].
-    pub fn forward(&self, tokens: &[u32], batch: usize, seq: usize) -> Tensor {
+    /// Forward pass: tokens → logits, all linears via [`Self::qmatmul`]
+    /// addressed through the resolved [`LmPlan`] — no name formatting or
+    /// map lookups on the hot path.
+    pub fn forward(&self, tokens: &[u32], batch: usize, seq: usize) -> Result<Tensor> {
         let _span = crate::trace::span_detail("model", "lm.forward", || format!("{batch}x{seq}"));
         let s = &self.skeleton;
         let cfg = &s.config;
-        let ql = |name: String| &self.qlinears[&name];
+        let st = &self.qlinears;
         let mut x = embed_rows(&s.tok_emb, &s.pos_emb, cfg.seq_len, tokens, batch, seq);
-        for (li, l) in s.layers.iter().enumerate() {
+        for (l, p) in s.layers.iter().zip(self.plan.layers.iter()) {
             let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
-            let q = Self::qmatmul(&ln1, ql(format!("lm.layer{li}.attn.q")));
-            let k = Self::qmatmul(&ln1, ql(format!("lm.layer{li}.attn.k")));
-            let v = Self::qmatmul(&ln1, ql(format!("lm.layer{li}.attn.v")));
+            let q = Self::qmatmul(&ln1, st.at(p.q))?;
+            let k = Self::qmatmul(&ln1, st.at(p.k))?;
+            let v = Self::qmatmul(&ln1, st.at(p.v))?;
             let (ctx, _) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
-            let attn_out = Self::qmatmul(&ctx, ql(format!("lm.layer{li}.attn.out")));
+            let attn_out = Self::qmatmul(&ctx, st.at(p.out))?;
             x.add_assign(&attn_out);
             let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
-            let up = act_fwd(
-                &Self::qmatmul(&ln2, ql(format!("lm.layer{li}.mlp.up"))),
-                cfg.activation,
-            );
-            let down = Self::qmatmul(&up, ql(format!("lm.layer{li}.mlp.down")));
+            let up = act_fwd(&Self::qmatmul(&ln2, st.at(p.up))?, cfg.activation);
+            let down = Self::qmatmul(&up, st.at(p.down))?;
             x.add_assign(&down);
         }
         let (lnf, _, _) = layernorm_fwd(&x, &s.lnf_g, &s.lnf_b);
-        if self.qlinears.contains_key("lm.head") {
-            Self::qmatmul(&lnf, &self.qlinears["lm.head"])
-        } else {
+        match self.plan.head {
+            Some(h) => Self::qmatmul(&lnf, st.at(h)),
             // tied head stays fp32 (it is the embedding)
-            linear_fwd(&lnf, &s.tok_emb)
+            None => Ok(linear_fwd(&lnf, &s.tok_emb)),
         }
     }
 }
@@ -247,7 +360,7 @@ impl QuantizedLm {
 /// assertions in the serve and footprint suites rely on.
 pub(crate) fn account_resident(
     ledger: &MemoryLedger,
-    qlinears: &HashMap<String, QuantizedLinear>,
+    qlinears: &QLinearStore,
     skeleton_bytes: usize,
     alloc: bool,
 ) {
@@ -258,36 +371,10 @@ pub(crate) fn account_resident(
             ledger.free(RESIDENT_TAG, bytes);
         }
     };
-    for q in qlinears.values() {
+    for q in qlinears.linears() {
         book(q.nbytes());
     }
     book(skeleton_bytes);
-}
-
-/// Activation rows `[i0, i0 + ychunk.len()/out_f)` of the fused
-/// dequant-matmul, written into `ychunk`. Shared by the sequential and
-/// sharded paths of [`QuantizedLm::qmatmul`] so both run identical f32
-/// operations per output element. Each weight row is unpacked-and-
-/// dequantized straight out of the packed buffer into `wbuf` once, then
-/// contracted against every activation row of the shard — per element this
-/// is the same `(q − zero)·scale` + `dot` float sequence the old
-/// byte-per-level kernel ran, so outputs are bit-identical to it (the
-/// unpacked oracle in the tests pins this).
-pub(crate) fn qmatmul_rows(xd: &[f32], q: &QuantizedLinear, ychunk: &mut [f32], i0: usize) {
-    let in_f = q.in_features;
-    let out_f = q.out_features;
-    let rows = ychunk.len() / out_f;
-    let mut wbuf = vec![0.0f32; in_f];
-    for o in 0..out_f {
-        // unpack + dequantize row o once: w_c = (q_c − z_g)·s_g
-        q.deq_row_into(o, &mut wbuf);
-        // contract against every activation row of this shard
-        for r in 0..rows {
-            let i = i0 + r;
-            let xrow = &xd[i * in_f..(i + 1) * in_f];
-            ychunk[r * out_f + o] = crate::tensor::dot(xrow, &wbuf);
-        }
-    }
 }
 
 #[cfg(test)]
@@ -295,6 +382,9 @@ mod tests {
     use super::*;
     use crate::model::config::ModelConfig;
     use crate::model::forward::lm_forward;
+    use crate::model::kernels::{
+        kernel_test_lock, qmatmul_rows_scalar, set_kernel, QmatmulKernel,
+    };
     use crate::quant::{QuantGrid, QuantizedLinear};
     use crate::rng::Pcg64;
 
@@ -302,14 +392,14 @@ mod tests {
         let cfg = ModelConfig::test_tiny(32);
         let mut rng = Pcg64::seeded(301);
         let w = LmWeights::init(&cfg, &mut rng);
-        let qlm = QuantizedLm::quantize_rtn(w.clone(), QuantGrid::new(bits, 8));
+        let qlm = QuantizedLm::quantize_rtn(w.clone(), QuantGrid::new(bits, 8)).expect("complete");
         let tokens: Vec<u32> = (0..16).map(|_| rng.next_below(32) as u32).collect();
         (w, qlm, tokens)
     }
 
     /// The pre-refactor byte-per-level kernel, kept as the bit-identity
-    /// oracle for the packed kernel: same group-hoisted dequant loop, but
-    /// reading a transient unpacked level buffer.
+    /// oracle for the packed scalar kernel: same group-hoisted dequant
+    /// loop, but reading a transient unpacked level buffer.
     fn qmatmul_rows_unpacked_oracle(
         xd: &[f32],
         q: &QuantizedLinear,
@@ -344,16 +434,16 @@ mod tests {
 
     #[test]
     fn packed_kernel_bit_identical_to_unpacked_oracle() {
-        // The tentpole's core numeric contract: fusing the nibble unpack
-        // into the dequant pass changes no float operation. Odd widths
-        // (tail nibble) and 3/4/8-bit grids all pinned.
+        // The default path's core numeric contract: fusing the nibble
+        // unpack into the dequant pass changes no float operation. Odd
+        // widths (tail nibble) and 3/4/8-bit grids all pinned.
         let mut rng = Pcg64::seeded(309);
         for (bits, in_f) in [(3u32, 33usize), (4, 96), (4, 33), (8, 40)] {
             let w = Tensor::randn(&[24, in_f], 0.5, &mut rng);
             let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(bits, 16));
             let x = Tensor::randn(&[7, in_f], 1.0, &mut rng);
             let mut packed = Tensor::zeros(&[7, 24]);
-            qmatmul_rows(x.data(), &q, packed.data_mut(), 0);
+            qmatmul_rows_scalar(x.data(), &q, packed.data_mut(), 0);
             let mut oracle = Tensor::zeros(&[7, 24]);
             qmatmul_rows_unpacked_oracle(x.data(), &q, oracle.data_mut(), 0);
             assert_eq!(packed.data(), oracle.data(), "bits={bits} in_f={in_f}");
@@ -362,8 +452,11 @@ mod tests {
 
     #[test]
     fn qmatmul_parallel_bit_identical_across_thread_counts() {
-        let _guard = crate::exec::thread_target_test_lock();
+        let _threads = crate::exec::thread_target_test_lock();
+        let _kernel = kernel_test_lock();
         let before = crate::exec::num_threads();
+        // bit-identity to the oracle is a *scalar*-kernel contract
+        set_kernel(Some(QmatmulKernel::Scalar));
         let mut rng = Pcg64::seeded(305);
         // 2·33·96·64 flops ≥ the parallel cutoff; 33 rows shard unevenly.
         let w = Tensor::randn(&[64, 96], 0.5, &mut rng);
@@ -373,20 +466,34 @@ mod tests {
         qmatmul_rows_unpacked_oracle(x.data(), &q, reference.data_mut(), 0);
         for threads in [1, 2, 4] {
             crate::exec::set_threads(threads);
-            let y = QuantizedLm::qmatmul(&x, &q);
+            let y = QuantizedLm::qmatmul(&x, &q).expect("shapes agree");
             assert_eq!(y.data(), reference.data(), "threads={threads}");
         }
+        set_kernel(None);
         crate::exec::set_threads(before);
     }
 
     #[test]
+    fn qmatmul_shape_mismatch_is_an_error_not_a_panic() {
+        // Serve-reachable path: a malformed payload must surface as Err.
+        let mut rng = Pcg64::seeded(306);
+        let w = Tensor::randn(&[8, 16], 0.5, &mut rng);
+        let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 8));
+        let x = Tensor::randn(&[3, 12], 1.0, &mut rng);
+        let err = QuantizedLm::qmatmul(&x, &q).expect_err("width 12 vs 16");
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+    }
+
+    #[test]
     fn packed_forward_and_qckpt_roundtrip_deterministic_across_thread_counts() {
-        // Acceptance shape of the tentpole, run by the CI determinism
+        // Acceptance shape of the kernel work, run by the CI determinism
         // matrix at RPIQ_THREADS=1/2/8: the packed forward and a forward
         // through a save→load round-trip of the `.rpiq` container are
         // bit-identical to the single-thread reference at any thread
-        // count.
-        let _guard = crate::exec::thread_target_test_lock();
+        // count. Holds for either kernel (both are thread-deterministic);
+        // the kernel lock keeps the selection fixed across the compares.
+        let _threads = crate::exec::thread_target_test_lock();
+        let _kernel = kernel_test_lock();
         let before = crate::exec::num_threads();
         let (_, qlm, tokens) = build_rtn_qlm(4);
         let dir = std::env::temp_dir().join("rpiq_qlm_det");
@@ -394,16 +501,16 @@ mod tests {
         crate::model::io::save_qlm(&qlm, &path).unwrap();
         let loaded = crate::model::io::load_qlm(&path).unwrap();
         crate::exec::set_threads(1);
-        let reference = qlm.forward(&tokens, 2, 8);
+        let reference = qlm.forward(&tokens, 2, 8).expect("forward");
         for threads in [1usize, 2, 8] {
             crate::exec::set_threads(threads);
             assert_eq!(
-                qlm.forward(&tokens, 2, 8).data(),
+                qlm.forward(&tokens, 2, 8).expect("forward").data(),
                 reference.data(),
                 "packed forward @ {threads} threads"
             );
             assert_eq!(
-                loaded.forward(&tokens, 2, 8).data(),
+                loaded.forward(&tokens, 2, 8).expect("forward").data(),
                 reference.data(),
                 "qckpt-loaded forward @ {threads} threads"
             );
@@ -418,13 +525,14 @@ mod tests {
         let w = Tensor::randn(&[6, 20], 1.0, &mut rng);
         let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 8));
         let x = Tensor::randn(&[5, 20], 1.0, &mut rng);
-        let fused = QuantizedLm::qmatmul(&x, &q);
+        let fused = QuantizedLm::qmatmul(&x, &q).expect("shapes agree");
         let reference = crate::tensor::matmul_a_bt(&x, &q.dequantize());
         assert!(fused.max_abs_diff(&reference) < 1e-4);
     }
 
     #[test]
     fn forward_batch_bit_identical_to_looped_forward() {
+        let _kernel = kernel_test_lock(); // fixed kernel across the compares
         let (_, qlm, _) = build_rtn_qlm(4);
         let mut rng = Pcg64::seeded(307);
         // mixed lengths, with 20 sequences of one length so the wide-group
@@ -437,20 +545,28 @@ mod tests {
             seqs.push((0..8).map(|_| rng.next_below(32) as u32).collect());
         }
         let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
-        let batched = qlm.forward_batch(&refs);
+        let batched = qlm.forward_batch(&refs).expect("batch forward");
         assert_eq!(batched.len(), seqs.len());
         for (s, b) in seqs.iter().zip(&batched) {
-            let single = qlm.forward(s, 1, s.len());
+            let single = qlm.forward(s, 1, s.len()).expect("forward");
             assert_eq!(b.shape(), single.shape());
             assert_eq!(b.data(), single.data(), "len={}", s.len());
         }
     }
 
     #[test]
+    fn forward_batch_rejects_empty_sequence() {
+        let (_, qlm, _) = build_rtn_qlm(4);
+        let seqs: Vec<&[u32]> = vec![&[1, 2], &[]];
+        let err = qlm.forward_batch(&seqs).expect_err("empty sequence");
+        assert!(err.to_string().contains("empty sequence"), "{err}");
+    }
+
+    #[test]
     fn eight_bit_forward_close_to_fp() {
         let (w, qlm, tokens) = build_rtn_qlm(8);
         let fp = lm_forward(&w, &tokens, 2, 8, None);
-        let qf = qlm.forward(&tokens, 2, 8);
+        let qf = qlm.forward(&tokens, 2, 8).expect("forward");
         let rel = qf.sub(&fp).frob() / fp.frob().max(1e-9);
         assert!(rel < 0.05, "rel={rel}");
     }
@@ -460,8 +576,8 @@ mod tests {
         let (w, q4, tokens) = build_rtn_qlm(4);
         let (_, q8, _) = build_rtn_qlm(8);
         let fp = lm_forward(&w, &tokens, 2, 8, None);
-        let e4 = q4.forward(&tokens, 2, 8).sub(&fp).frob();
-        let e8 = q8.forward(&tokens, 2, 8).sub(&fp).frob();
+        let e4 = q4.forward(&tokens, 2, 8).expect("forward").sub(&fp).frob();
+        let e8 = q8.forward(&tokens, 2, 8).expect("forward").sub(&fp).frob();
         assert!(e4 > e8, "e4={e4} e8={e8}");
     }
 
@@ -492,7 +608,7 @@ mod tests {
         let mut rng = Pcg64::seeded(311);
         let w = LmWeights::init(&cfg, &mut rng);
         let gs = 32usize;
-        let qlm = QuantizedLm::quantize_rtn(w.clone(), QuantGrid::new(4, gs));
+        let qlm = QuantizedLm::quantize_rtn(w.clone(), QuantGrid::new(4, gs)).expect("complete");
         // independent expectation straight from the shapes
         let mut expect = 0usize;
         for (_, t) in w.linears() {
@@ -517,8 +633,8 @@ mod tests {
 
     #[test]
     fn quantization_releases_fp32_linears_and_peak_drops() {
-        // The tentpole's memory claim at our scale: quantizing hands the
-        // fp32 weights over and keeps only skeleton + packed linears
+        // The memory claim at our scale: quantizing hands the fp32
+        // weights over and keeps only skeleton + packed linears
         // resident — on a linear-dominated model the post-quantization
         // resident footprint must sit at ≤45% of fp32 (the paper's 60–75%
         // reduction band, Tables 3–4).
@@ -528,7 +644,7 @@ mod tests {
         let fp_bytes: usize = w.named_tensors().iter().map(|(_, t)| t.nbytes()).sum();
         let ledger = MemoryLedger::new();
         ledger.alloc("fp32_model", fp_bytes);
-        let qlm = QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 32));
+        let qlm = QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 32)).expect("complete");
         qlm.register_resident(&ledger);
         // the fp32 model dies at quantization (ownership was consumed)
         ledger.free("fp32_model", fp_bytes);
@@ -551,11 +667,11 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "missing quantized layer")]
     fn missing_layer_rejected() {
         let cfg = ModelConfig::test_tiny(32);
         let mut rng = Pcg64::seeded(303);
         let w = LmWeights::init(&cfg, &mut rng);
-        let _ = QuantizedLm::from_weights(w, HashMap::new());
+        let err = QuantizedLm::from_weights(w, HashMap::new()).expect_err("no linears supplied");
+        assert!(err.to_string().contains("missing quantized layer"), "{err}");
     }
 }

@@ -322,6 +322,70 @@ impl QuantizedLinear {
         }
     }
 
+    /// Dequantize the column span `[c0, c1)` of row `r` into strided
+    /// slots: element `c` lands at `out[(c − c0) · stride]`. This is the
+    /// lane-batched sibling of [`Self::deq_row_into`] that the tiled
+    /// microkernel uses to pack K-major weight panels: with `stride = NR`
+    /// each call writes one panel *lane* and consecutive k steps stay
+    /// `NR` floats apart, so the panel ends up `[kc][NR]` K-major.
+    ///
+    /// The nibble path walks packed *bytes* rather than elements: after
+    /// an odd-alignment head, each byte emits its two levels (low nibble
+    /// = even channel) in one read, halving the packed-buffer loads of
+    /// the per-element walk. Per element the float op is the exact
+    /// `(q − zero)·scale` of [`Self::deq_row_into`], so a stride-1 call
+    /// over `[0, in_features)` is bit-identical to it.
+    pub fn deq_span_strided(&self, r: usize, c0: usize, c1: usize, stride: usize, out: &mut [f32]) {
+        debug_assert!(c1 <= self.in_features && c0 <= c1);
+        debug_assert!(stride >= 1);
+        if c0 == c1 {
+            return;
+        }
+        debug_assert!(out.len() > (c1 - c0 - 1) * stride);
+        let ng = self.n_groups();
+        let gs = self.grid.group_size;
+        let g_last = (c1 - 1) / gs;
+        if self.grid.nibble_packed() {
+            let pcols = self.packed_cols();
+            let prow = &self.packed[r * pcols..(r + 1) * pcols];
+            for g in (c0 / gs)..=g_last {
+                let scale = self.scales[r * ng + g];
+                let zero = self.zeros[r * ng + g];
+                let lo = (g * gs).max(c0);
+                let hi = ((g + 1) * gs).min(c1);
+                let mut c = lo;
+                if c < hi && c % 2 == 1 {
+                    // odd head: high nibble of the straddling byte
+                    out[(c - c0) * stride] = ((prow[c / 2] >> 4) as f32 - zero) * scale;
+                    c += 1;
+                }
+                while c + 1 < hi {
+                    // byte-at-a-time body: two levels per packed read
+                    let byte = prow[c / 2];
+                    out[(c - c0) * stride] = ((byte & 0x0F) as f32 - zero) * scale;
+                    out[(c + 1 - c0) * stride] = ((byte >> 4) as f32 - zero) * scale;
+                    c += 2;
+                }
+                if c < hi {
+                    // even tail: low nibble only
+                    out[(c - c0) * stride] = ((prow[c / 2] & 0x0F) as f32 - zero) * scale;
+                }
+            }
+        } else {
+            let in_f = self.in_features;
+            let prow = &self.packed[r * in_f..(r + 1) * in_f];
+            for g in (c0 / gs)..=g_last {
+                let scale = self.scales[r * ng + g];
+                let zero = self.zeros[r * ng + g];
+                let lo = (g * gs).max(c0);
+                let hi = ((g + 1) * gs).min(c1);
+                for c in lo..hi {
+                    out[(c - c0) * stride] = (prow[c] as f32 - zero) * scale;
+                }
+            }
+        }
+    }
+
     /// Full dequantized matrix `[out, in]`.
     pub fn dequantize(&self) -> Tensor {
         let mut out = Tensor::zeros(&[self.out_features, self.in_features]);
@@ -640,6 +704,67 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn deq_span_strided_matches_per_element_dequant_property() {
+        // The tiled kernel's panel packer: any (bits, group_size, span,
+        // stride) combination — odd span starts (the nibble head/tail
+        // paths), group-straddling spans, 3/4/8-bit grids — must emit
+        // exactly deq_at(r, c) at out[(c - c0)·stride], touching nothing
+        // else.
+        Runner::new("grid_deq_span_strided", 96).run(|g| {
+            let bits = [3u32, 4, 8][g.usize_in(0..3)];
+            let rows = g.usize_in(1..5);
+            let cols = g.usize_in(1..48); // odd widths included
+            let gs = g.usize_in(1..cols.max(2));
+            let data = g.matrix(rows, cols, 2.0);
+            let w = Tensor::from_vec(&[rows, cols], data);
+            let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(bits, gs));
+            let r = g.usize_in(0..rows);
+            let c0 = g.usize_in(0..cols);
+            let c1 = c0 + g.usize_in(0..cols + 1 - c0);
+            let stride = g.usize_in(1..5);
+            let span = c1 - c0;
+            let len = span.max(1) * stride + 2; // slack slots must stay untouched
+            let mut out = vec![f32::NAN; len];
+            q.deq_span_strided(r, c0, c1, stride, &mut out);
+            for c in c0..c1 {
+                prop_assert(
+                    out[(c - c0) * stride] == q.deq_at(r, c),
+                    "strided slot == deq_at",
+                )?;
+            }
+            for (i, v) in out.iter().enumerate() {
+                let on_span = i % stride == 0 && i / stride < span;
+                if !on_span {
+                    prop_assert(v.is_nan(), "off-span slot untouched")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deq_span_strided_full_row_bit_identical_to_deq_row_into() {
+        // stride-1 full-span call must be bit-identical to the scalar
+        // kernel's row dequant (the documented contract).
+        let mut rng = Pcg64::seeded(47);
+        for (bits, cols) in [(3u32, 33usize), (4, 96), (4, 33), (8, 40)] {
+            let w = Tensor::randn(&[6, cols], 1.0, &mut rng);
+            let q = QuantizedLinear::quantize_rtn(&w, QuantGrid::new(bits, 16));
+            for r in 0..6 {
+                let mut a = vec![0.0f32; cols];
+                let mut b = vec![0.0f32; cols];
+                q.deq_row_into(r, &mut a);
+                q.deq_span_strided(r, 0, cols, 1, &mut b);
+                assert_eq!(
+                    a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "bits={bits} cols={cols} r={r}"
+                );
+            }
+        }
     }
 
     #[test]

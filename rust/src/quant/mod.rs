@@ -19,10 +19,12 @@ pub mod cmdq;
 pub mod grid;
 pub mod gptq;
 pub mod rpiq;
+pub mod store;
 
 pub use calib::{HessianAccumulator, HessianPartial, SingleInstance};
 pub use cmdq::{CmdqPolicy, Modality};
 pub use grid::{QuantGrid, QuantizedLinear};
+pub use store::QLinearStore;
 pub use gptq::{gptq_quantize, GptqOutput};
 pub use rpiq::{rpiq_refine, RpiqOutput, RpiqParams};
 

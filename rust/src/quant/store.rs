@@ -1,0 +1,125 @@
+//! Name-indexed storage for a model's quantized linears.
+//!
+//! Deployment models used to hold `HashMap<String, QuantizedLinear>` and
+//! rebuild `format!("lm.layer{li}.attn.q")` keys on *every* linear of
+//! *every* forward — a per-call heap allocation plus a hash lookup on the
+//! hot serve path. [`QLinearStore`] fixes the representation: names are
+//! resolved to dense indices once at construction, forwards address
+//! linears by index ([`QLinearStore::at`]), and the name table stays
+//! around only for (de)serialization, validation, and reporting.
+//!
+//! Entries are kept sorted by name, so iteration order is deterministic
+//! (the `.rpiq` container writers rely on sorted traversal) and `get`
+//! is a binary search rather than a hash probe.
+
+use super::grid::QuantizedLinear;
+use std::collections::HashMap;
+
+/// Sorted name → quantized-linear table with index addressing.
+#[derive(Clone, Debug, Default)]
+pub struct QLinearStore {
+    /// Sorted, unique names; `linears[i]` belongs to `names[i]`.
+    names: Vec<String>,
+    linears: Vec<QuantizedLinear>,
+}
+
+impl QLinearStore {
+    /// Build from a name-keyed map (the quantization pipelines and the
+    /// container loaders produce maps). Entries are sorted by name.
+    pub fn from_map(map: HashMap<String, QuantizedLinear>) -> Self {
+        // ORDER-INSENSITIVE: the pairs are sorted by name immediately
+        // below, so hash iteration order cannot reach any observable.
+        let mut pairs: Vec<(String, QuantizedLinear)> = map.into_iter().collect();
+        pairs.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut names = Vec::with_capacity(pairs.len());
+        let mut linears = Vec::with_capacity(pairs.len());
+        for (n, q) in pairs {
+            names.push(n);
+            linears.push(q);
+        }
+        QLinearStore { names, linears }
+    }
+
+    /// Number of linears.
+    pub fn len(&self) -> usize {
+        self.linears.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.linears.is_empty()
+    }
+
+    /// Dense index of `name`, if present (binary search over the sorted
+    /// name table — resolution happens once at model build, never on the
+    /// forward path).
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.binary_search_by(|n| n.as_str().cmp(name)).ok()
+    }
+
+    /// Linear by name (validation/reporting path).
+    pub fn get(&self, name: &str) -> Option<&QuantizedLinear> {
+        self.index_of(name).and_then(|i| self.linears.get(i))
+    }
+
+    /// Linear by dense index — the forward-path accessor. Indices come
+    /// from [`Self::index_of`] at model construction and stay valid for
+    /// the life of the store (it is append-never after build).
+    #[inline]
+    pub fn at(&self, idx: usize) -> &QuantizedLinear {
+        &self.linears[idx]
+    }
+
+    /// `(name, linear)` pairs in sorted name order — deterministic, so
+    /// the container writers and summaries need no re-sort.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &QuantizedLinear)> {
+        self.names.iter().map(String::as_str).zip(self.linears.iter())
+    }
+
+    /// The linears in sorted-name order (accounting walks).
+    pub fn linears(&self) -> impl Iterator<Item = &QuantizedLinear> {
+        self.linears.iter()
+    }
+
+    /// Total packed + group-parameter bytes across all linears.
+    pub fn nbytes(&self) -> usize {
+        self.linears.iter().map(|q| q.nbytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantGrid;
+    use crate::tensor::Tensor;
+
+    fn store_of(names: &[&str]) -> QLinearStore {
+        let mut map = HashMap::new();
+        for n in names {
+            let w = Tensor::zeros(&[4, 8]);
+            map.insert(n.to_string(), QuantizedLinear::quantize_rtn(&w, QuantGrid::new(4, 8)));
+        }
+        QLinearStore::from_map(map)
+    }
+
+    #[test]
+    fn sorted_iteration_and_binary_search_agree() {
+        let s = store_of(&["lm.layer1.attn.q", "lm.head", "lm.layer0.attn.q"]);
+        let names: Vec<&str> = s.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, ["lm.head", "lm.layer0.attn.q", "lm.layer1.attn.q"]);
+        for (i, n) in names.iter().enumerate() {
+            assert_eq!(s.index_of(n), Some(i));
+            assert!(s.get(n).is_some());
+        }
+        assert_eq!(s.index_of("missing"), None);
+        assert!(s.get("missing").is_none());
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn nbytes_sums_linears() {
+        let s = store_of(&["a", "b"]);
+        let per: usize = s.get("a").unwrap().nbytes();
+        assert_eq!(s.nbytes(), 2 * per);
+    }
+}

@@ -62,6 +62,11 @@ fn qlinear_args(q: &crate::quant::QuantizedLinear, args: &mut Vec<Arg>) {
 /// quant-variant arguments: tokens followed by `qparam_order`.
 pub fn lm_q_args(qlm: &QuantizedLm, tokens: &[u32]) -> Vec<Arg> {
     let s = &qlm.skeleton;
+    let get = |name: String| {
+        qlm.qlinears
+            .get(&name)
+            .unwrap_or_else(|| panic!("quantized layer {name} missing at marshalling time"))
+    };
     let mut args = vec![tokens_arg(tokens)];
     args.push(Arg::F32(s.tok_emb.clone()));
     args.push(Arg::F32(s.pos_emb.clone()));
@@ -69,17 +74,17 @@ pub fn lm_q_args(qlm: &QuantizedLm, tokens: &[u32]) -> Vec<Arg> {
         args.push(Arg::F32(l.ln1_g.clone()));
         args.push(Arg::F32(l.ln1_b.clone()));
         for field in ["attn.q", "attn.k", "attn.v", "attn.out"] {
-            qlinear_args(&qlm.qlinears[&format!("lm.layer{i}.{field}")], &mut args);
+            qlinear_args(get(format!("lm.layer{i}.{field}")), &mut args);
         }
         args.push(Arg::F32(l.ln2_g.clone()));
         args.push(Arg::F32(l.ln2_b.clone()));
-        qlinear_args(&qlm.qlinears[&format!("lm.layer{i}.mlp.up")], &mut args);
-        qlinear_args(&qlm.qlinears[&format!("lm.layer{i}.mlp.down")], &mut args);
+        qlinear_args(get(format!("lm.layer{i}.mlp.up")), &mut args);
+        qlinear_args(get(format!("lm.layer{i}.mlp.down")), &mut args);
     }
     args.push(Arg::F32(s.lnf_g.clone()));
     args.push(Arg::F32(s.lnf_b.clone()));
     if !s.config.tied_head {
-        qlinear_args(&qlm.qlinears["lm.head"], &mut args);
+        qlinear_args(get("lm.head".to_string()), &mut args);
     }
     args
 }
@@ -112,7 +117,7 @@ mod tests {
         for (name, t) in w.linears() {
             ql.insert(name, QuantizedLinear::quantize_rtn(t, QuantGrid::new(4, 8)));
         }
-        let qlm = QuantizedLm::from_weights(w, ql);
+        let qlm = QuantizedLm::from_weights(w, ql).expect("complete layer set");
         let args = lm_q_args(&qlm, &[0; 8]);
         // 1 tokens + 2 emb + per layer (2 ln + 6 linears×3 + 2 ln) + 2 lnf
         assert_eq!(args.len(), 1 + 2 + cfg.n_layers * (4 + 18) + 2);

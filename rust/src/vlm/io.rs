@@ -114,7 +114,7 @@ pub fn load_qvlm(path: &Path) -> Result<QuantizedVlm> {
         &names,
         |name| cfg.linear_dims(name),
     )?;
-    Ok(QuantizedVlm::new(skeleton, qlinears))
+    QuantizedVlm::new(skeleton, qlinears)
 }
 
 #[cfg(test)]

@@ -24,11 +24,13 @@ pub mod io;
 pub mod train;
 use crate::model::forward::ActivationTap;
 use crate::model::ops::*;
+use crate::model::quantized::LmPlan;
 use crate::model::weights::LmWeights;
 use crate::model::QuantizedLm;
-use crate::quant::QuantizedLinear;
+use crate::quant::{QLinearStore, QuantizedLinear};
 use crate::rng::Pcg64;
 use crate::tensor::{matmul_at_b, Tensor};
+use anyhow::{bail, ensure, Result};
 use std::collections::HashMap;
 
 /// VLM configuration.
@@ -510,11 +512,11 @@ fn lm_body_forward(
 fn forward_pairs_with(
     pairs: &[(&Tensor, &[u32])],
     n_patches: usize,
-    f: &(dyn Fn(&Tensor, &[u32], usize) -> Tensor + Sync),
-) -> Vec<Tensor> {
+    f: &(dyn Fn(&Tensor, &[u32], usize) -> Result<Tensor> + Sync),
+) -> Result<Vec<Tensor>> {
     for (i, (p, q)) in pairs.iter().enumerate() {
-        assert_eq!(p.rows(), n_patches, "pair {i}: patch grid mismatch");
-        assert!(!q.is_empty(), "pair {i}: empty question");
+        ensure!(p.rows() == n_patches, "pair {i}: patch grid mismatch");
+        ensure!(!q.is_empty(), "pair {i}: empty question");
     }
     crate::model::quantized::run_equal_shape_groups(
         pairs.len(),
@@ -527,14 +529,14 @@ fn forward_pairs_with(
             let mut text = Vec::with_capacity(b * tlen);
             for &i in chunk {
                 let (p, q) = &pairs[i];
-                assert_eq!(p.cols(), pd, "pair {i}: patch dim mismatch");
+                ensure!(p.cols() == pd, "pair {i}: patch dim mismatch");
                 pdata.extend_from_slice(p.data());
                 text.extend_from_slice(q);
             }
             let patches = Tensor::from_vec(&[b * n_patches, pd], pdata);
-            let logits = f(&patches, &text, b);
+            let logits = f(&patches, &text, b)?;
             let s = n_patches + tlen;
-            (0..b).map(|gi| logits.slice_rows(gi * s, (gi + 1) * s)).collect()
+            Ok((0..b).map(|gi| logits.slice_rows(gi * s, (gi + 1) * s)).collect())
         },
     )
 }
@@ -544,8 +546,8 @@ fn forward_pairs_with(
 /// `[n_patches + |question_i|, vocab]`, bit-identical per pair to
 /// [`vlm_forward`] on that pair alone. See [`forward_pairs_with`] for the
 /// fusion/sharding policy.
-pub fn vlm_forward_batch(w: &VlmWeights, pairs: &[(&Tensor, &[u32])]) -> Vec<Tensor> {
-    let f = |p: &Tensor, t: &[u32], b: usize| vlm_forward(w, p, t, b, None);
+pub fn vlm_forward_batch(w: &VlmWeights, pairs: &[(&Tensor, &[u32])]) -> Result<Vec<Tensor>> {
+    let f = |p: &Tensor, t: &[u32], b: usize| Ok(vlm_forward(w, p, t, b, None));
     forward_pairs_with(pairs, w.config.n_patches, &f)
 }
 
@@ -555,22 +557,63 @@ pub fn vlm_forward_batch(w: &VlmWeights, pairs: &[(&Tensor, &[u32])]) -> Vec<Ten
 /// fp32-resident.
 pub struct QuantizedVlm {
     pub skeleton: VlmSkeleton,
-    pub qlinears: HashMap<String, QuantizedLinear>,
+    pub qlinears: QLinearStore,
+    /// name→index resolution for all three towers, computed once at
+    /// construction (no name formatting on the forward path).
+    plan: VlmPlan,
+}
+
+/// The VLM forward path's resolved [`QLinearStore`] addressing: vision
+/// tower, cross adapter, and the embedded LM's [`LmPlan`].
+#[derive(Clone, Debug)]
+struct VlmPlan {
+    patch_proj: usize,
+    /// `(fc1, fc2)` per vision block.
+    vision: Vec<(usize, usize)>,
+    cross_up: usize,
+    cross_down: usize,
+    lm: LmPlan,
+}
+
+impl VlmPlan {
+    fn resolve(skeleton: &VlmSkeleton, store: &QLinearStore) -> Result<VlmPlan> {
+        let need = |name: String| -> Result<usize> {
+            match store.index_of(&name) {
+                Some(i) => Ok(i),
+                None => bail!("missing quantized layer {name}"),
+            }
+        };
+        let mut vision = Vec::with_capacity(skeleton.config.n_vision_blocks);
+        for i in 0..skeleton.config.n_vision_blocks {
+            vision.push((
+                need(format!("vision.block{i}.fc1"))?,
+                need(format!("vision.block{i}.fc2"))?,
+            ));
+        }
+        Ok(VlmPlan {
+            patch_proj: need("vision.patch_proj".into())?,
+            vision,
+            cross_up: need("cross.vision_mlp.up".into())?,
+            cross_down: need("cross.vision_mlp.down".into())?,
+            lm: LmPlan::resolve(&skeleton.lm, store)?,
+        })
+    }
 }
 
 impl QuantizedVlm {
     /// Assemble from a deployment skeleton and per-layer quantized
-    /// matrices. Every linear the config declares must be present.
-    pub fn new(skeleton: VlmSkeleton, qlinears: HashMap<String, QuantizedLinear>) -> Self {
-        for name in skeleton.linear_names() {
-            assert!(qlinears.contains_key(&name), "missing quantized layer {name}");
-        }
-        QuantizedVlm { skeleton, qlinears }
+    /// matrices. Every linear the config declares must be present — a
+    /// missing layer is an `Err`, since the loaders feed this from
+    /// on-disk containers.
+    pub fn new(skeleton: VlmSkeleton, qlinears: HashMap<String, QuantizedLinear>) -> Result<Self> {
+        let store = QLinearStore::from_map(qlinears);
+        let plan = VlmPlan::resolve(&skeleton, &store)?;
+        Ok(QuantizedVlm { skeleton, qlinears: store, plan })
     }
 
     /// Assemble from full training weights: extracts the skeleton and
     /// *drops* the fp32 linears.
-    pub fn from_weights(w: VlmWeights, qlinears: HashMap<String, QuantizedLinear>) -> Self {
+    pub fn from_weights(w: VlmWeights, qlinears: HashMap<String, QuantizedLinear>) -> Result<Self> {
         Self::new(VlmSkeleton::from_weights(&w), qlinears)
     }
 
@@ -583,7 +626,7 @@ impl QuantizedVlm {
     /// calibration-free baseline, and the scaffolding the serve tests and
     /// benches build their models with. Consumes `w`; the fp32 linears die
     /// here.
-    pub fn quantize_rtn(w: VlmWeights, grid: crate::quant::QuantGrid) -> Self {
+    pub fn quantize_rtn(w: VlmWeights, grid: crate::quant::QuantGrid) -> Result<Self> {
         let mut qlinears = HashMap::new();
         for (name, t) in w.linears() {
             qlinears.insert(name, QuantizedLinear::quantize_rtn(t, grid));
@@ -591,17 +634,12 @@ impl QuantizedVlm {
         Self::from_weights(w, qlinears)
     }
 
-    fn q(&self, name: &str) -> &QuantizedLinear {
-        &self.qlinears[name]
-    }
-
     /// Actual resident deployment bytes: packed levels + group params of
     /// every quantized linear plus the fp32 skeleton (the LM's embeddings
     /// and norms — the vision/cross towers are all-linear and keep no fp32
     /// residue).
     pub fn deploy_bytes(&self) -> usize {
-        let qn: usize = self.qlinears.values().map(|q| q.nbytes()).sum();
-        qn + self.skeleton.nbytes()
+        self.qlinears.nbytes() + self.skeleton.nbytes()
     }
 
     /// Book this model's resident bytes into `ledger` under
@@ -626,26 +664,23 @@ impl QuantizedVlm {
         );
     }
 
-    /// Quantized forward (mirrors [`vlm_forward`]).
-    pub fn forward(&self, patches: &Tensor, text: &[u32], batch: usize) -> Tensor {
+    /// Quantized forward (mirrors [`vlm_forward`]); linears addressed
+    /// through the resolved [`VlmPlan`].
+    pub fn forward(&self, patches: &Tensor, text: &[u32], batch: usize) -> Result<Tensor> {
         let _span = crate::trace::span_detail("model", "vlm.forward", || format!("b{batch}"));
         let cfg = &self.skeleton.config;
+        let st = &self.qlinears;
+        let plan = &self.plan;
         let gelu_act = crate::model::Activation::Gelu;
-        let proj = QuantizedLm::qmatmul(patches, self.q("vision.patch_proj"));
+        let proj = QuantizedLm::qmatmul(patches, st.at(plan.patch_proj))?;
         let mut h = proj;
-        for i in 0..cfg.n_vision_blocks {
-            let mid = act_fwd(
-                &QuantizedLm::qmatmul(&h, self.q(&format!("vision.block{i}.fc1"))),
-                gelu_act,
-            );
-            let out = QuantizedLm::qmatmul(&mid, self.q(&format!("vision.block{i}.fc2")));
+        for &(fc1, fc2) in &plan.vision {
+            let mid = act_fwd(&QuantizedLm::qmatmul(&h, st.at(fc1))?, gelu_act);
+            let out = QuantizedLm::qmatmul(&mid, st.at(fc2))?;
             h.add_assign(&out);
         }
-        let cross = act_fwd(
-            &QuantizedLm::qmatmul(&h, self.q("cross.vision_mlp.up")),
-            gelu_act,
-        );
-        let img_tokens = QuantizedLm::qmatmul(&cross, self.q("cross.vision_mlp.down"));
+        let cross = act_fwd(&QuantizedLm::qmatmul(&h, st.at(plan.cross_up))?, gelu_act);
+        let img_tokens = QuantizedLm::qmatmul(&cross, st.at(plan.cross_down))?;
         let lm = &self.skeleton.lm;
         let x = assemble_embeddings_rows(
             &lm.tok_emb,
@@ -663,34 +698,31 @@ impl QuantizedVlm {
     /// Batched quantized inference over `(patches, question)` pairs — the
     /// VQA serve lane's entry point. Bit-identical per pair to
     /// [`Self::forward`] on that pair alone; see [`forward_pairs_with`].
-    pub fn forward_batch(&self, pairs: &[(&Tensor, &[u32])]) -> Vec<Tensor> {
+    pub fn forward_batch(&self, pairs: &[(&Tensor, &[u32])]) -> Result<Vec<Tensor>> {
         let f = |p: &Tensor, t: &[u32], b: usize| self.forward(p, t, b);
         forward_pairs_with(pairs, self.skeleton.config.n_patches, &f)
     }
 
-    fn lm_body(&self, mut x: Tensor, batch: usize, seq: usize) -> Tensor {
+    fn lm_body(&self, mut x: Tensor, batch: usize, seq: usize) -> Result<Tensor> {
         let lm = &self.skeleton.lm;
         let cfg = &lm.config;
-        for (li, l) in lm.layers.iter().enumerate() {
+        let st = &self.qlinears;
+        for (l, p) in lm.layers.iter().zip(self.plan.lm.layers.iter()) {
             let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
-            let q = QuantizedLm::qmatmul(&ln1, self.q(&format!("lm.layer{li}.attn.q")));
-            let k = QuantizedLm::qmatmul(&ln1, self.q(&format!("lm.layer{li}.attn.k")));
-            let v = QuantizedLm::qmatmul(&ln1, self.q(&format!("lm.layer{li}.attn.v")));
+            let q = QuantizedLm::qmatmul(&ln1, st.at(p.q))?;
+            let k = QuantizedLm::qmatmul(&ln1, st.at(p.k))?;
+            let v = QuantizedLm::qmatmul(&ln1, st.at(p.v))?;
             let (ctx, _) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
-            x.add_assign(&QuantizedLm::qmatmul(&ctx, self.q(&format!("lm.layer{li}.attn.out"))));
+            x.add_assign(&QuantizedLm::qmatmul(&ctx, st.at(p.out))?);
             let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
-            let up = act_fwd(
-                &QuantizedLm::qmatmul(&ln2, self.q(&format!("lm.layer{li}.mlp.up"))),
-                cfg.activation,
-            );
-            x.add_assign(&QuantizedLm::qmatmul(&up, self.q(&format!("lm.layer{li}.mlp.down"))));
+            let up = act_fwd(&QuantizedLm::qmatmul(&ln2, st.at(p.up))?, cfg.activation);
+            x.add_assign(&QuantizedLm::qmatmul(&up, st.at(p.down))?);
         }
         let (lnf, _, _) = layernorm_fwd(&x, &lm.lnf_g, &lm.lnf_b);
-        if self.qlinears.contains_key("lm.head") {
-            QuantizedLm::qmatmul(&lnf, self.q("lm.head"))
-        } else {
+        match self.plan.lm.head {
+            Some(h) => QuantizedLm::qmatmul(&lnf, st.at(h)),
             // tied head stays fp32 (it is the embedding)
-            linear_fwd(&lnf, &lm.tok_emb)
+            None => Ok(linear_fwd(&lnf, &lm.tok_emb)),
         }
     }
 }
@@ -812,7 +844,7 @@ mod tests {
         let owned = mixed_pairs(&w.config, &mut rng);
         let pairs: Vec<(&Tensor, &[u32])> =
             owned.iter().map(|(p, q)| (p, q.as_slice())).collect();
-        let batched = vlm_forward_batch(&w, &pairs);
+        let batched = vlm_forward_batch(&w, &pairs).expect("batch forward");
         assert_eq!(batched.len(), pairs.len());
         for ((p, q), b) in pairs.iter().zip(&batched) {
             let single = vlm_forward(&w, p, q, 1, None);
@@ -823,25 +855,39 @@ mod tests {
 
     #[test]
     fn quantized_vlm_forward_batch_bit_identical_to_looped_single() {
+        let _kernel = crate::model::kernels::kernel_test_lock(); // fixed kernel across compares
         let (w, _, _, _) = tiny();
-        let qvlm = QuantizedVlm::quantize_rtn(w.clone(), QuantGrid::new(4, 8));
+        let qvlm = QuantizedVlm::quantize_rtn(w.clone(), QuantGrid::new(4, 8)).expect("complete");
         let mut rng = Pcg64::seeded(612);
         let owned = mixed_pairs(&w.config, &mut rng);
         let pairs: Vec<(&Tensor, &[u32])> =
             owned.iter().map(|(p, q)| (p, q.as_slice())).collect();
-        let batched = qvlm.forward_batch(&pairs);
+        let batched = qvlm.forward_batch(&pairs).expect("batch forward");
         for ((p, q), b) in pairs.iter().zip(&batched) {
-            let single = qvlm.forward(p, q, 1);
+            let single = qvlm.forward(p, q, 1).expect("forward");
             assert_eq!(b.data(), single.data(), "t_len={}", q.len());
         }
     }
 
     #[test]
+    fn quantized_vlm_rejects_mismatched_patch_grid() {
+        let (w, _, _, _) = tiny();
+        let qvlm = QuantizedVlm::quantize_rtn(w.clone(), QuantGrid::new(4, 8)).expect("complete");
+        let mut rng = Pcg64::seeded(613);
+        // wrong number of patch rows for the config's grid
+        let bad = Tensor::randn(&[w.config.n_patches + 1, w.config.patch_dim], 1.0, &mut rng);
+        let q: Vec<u32> = vec![1, 2, 3];
+        let pairs: Vec<(&Tensor, &[u32])> = vec![(&bad, q.as_slice())];
+        let err = qvlm.forward_batch(&pairs).expect_err("grid mismatch");
+        assert!(err.to_string().contains("patch grid mismatch"), "{err}");
+    }
+
+    #[test]
     fn quantized_vlm_8bit_close_to_fp() {
         let (w, patches, text, batch) = tiny();
-        let qvlm = QuantizedVlm::quantize_rtn(w.clone(), QuantGrid::new(8, 8));
+        let qvlm = QuantizedVlm::quantize_rtn(w.clone(), QuantGrid::new(8, 8)).expect("complete");
         let fp = vlm_forward(&w, &patches, &text, batch, None);
-        let qf = qvlm.forward(&patches, &text, batch);
+        let qf = qvlm.forward(&patches, &text, batch).expect("forward");
         let rel = qf.sub(&fp).frob() / fp.frob().max(1e-9);
         assert!(rel < 0.05, "rel={rel}");
     }
@@ -851,7 +897,7 @@ mod tests {
         let (w, _, _, _) = tiny();
         let fp_bytes = w.n_params() * 4;
         assert_eq!(fp_bytes, w.config.fp32_bytes(), "config-derived count matches weights");
-        let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8));
+        let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete");
         assert!(qvlm.deploy_bytes() < fp_bytes);
     }
 
@@ -859,22 +905,23 @@ mod tests {
     fn quantized_vlm_qckpt_roundtrip_bit_identical() {
         // save_qvlm → load_qvlm restores packed levels, params, and the
         // skeleton exactly; forwards are bit-identical.
+        let _kernel = crate::model::kernels::kernel_test_lock(); // fixed kernel across compares
         let (w, patches, text, batch) = tiny();
-        let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8));
+        let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete");
         let dir = std::env::temp_dir().join("rpiq_qvlm_io");
         let path = dir.join("v.rpiq");
         crate::vlm::io::save_qvlm(&qvlm, &path).unwrap();
         let loaded = crate::vlm::io::load_qvlm(&path).unwrap();
         assert_eq!(loaded.skeleton.config, qvlm.skeleton.config);
-        for (name, q) in &qvlm.qlinears {
-            let l = &loaded.qlinears[name];
+        for (name, q) in qvlm.qlinears.iter() {
+            let l = loaded.qlinears.get(name).expect("layer present after roundtrip");
             assert_eq!(q.packed, l.packed, "{name}");
             assert_eq!(q.scales, l.scales, "{name}");
             assert_eq!(q.zeros, l.zeros, "{name}");
         }
         assert_eq!(loaded.deploy_bytes(), qvlm.deploy_bytes());
-        let a = qvlm.forward(&patches, &text, batch);
-        let b = loaded.forward(&patches, &text, batch);
+        let a = qvlm.forward(&patches, &text, batch).expect("forward");
+        let b = loaded.forward(&patches, &text, batch).expect("forward");
         assert_eq!(a.data(), b.data(), "loaded forward must be bit-identical");
         // the fp32 VLM loader must reject the quantized container
         assert!(crate::vlm::io::load_vlm(&path).is_err());

@@ -73,7 +73,7 @@ fn pallas_qmatmul_artifact_matches_rust_qmatmul() {
             ],
         )
         .unwrap();
-    let rust = rpiq::model::QuantizedLm::qmatmul(&x, &q);
+    let rust = rpiq::model::QuantizedLm::qmatmul(&x, &q).expect("shapes agree");
     let rel = out[0].sub(&rust).frob() / rust.frob().max(1e-9);
     assert!(rel < 1e-4, "kernel vs rust rel err {rel}");
 }
@@ -135,7 +135,7 @@ fn quantized_model_artifact_matches_rust_qforward() {
         .collect();
     let args = lm_args::lm_q_args(&out.model, &tokens);
     let got = eng.run("lm_qlogits_sim-opt-6.7b", &args).unwrap();
-    let rust = out.model.forward(&tokens, 1, cfg.seq_len);
+    let rust = out.model.forward(&tokens, 1, cfg.seq_len).expect("forward");
     let rel = got[0].sub(&rust).frob() / rust.frob().max(1e-9);
     assert!(rel < 1e-3, "quant artifact vs rust rel err {rel}");
 }

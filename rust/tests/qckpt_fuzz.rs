@@ -27,7 +27,7 @@ fn valid_qlm_bytes(dir: &Path) -> Vec<u8> {
     let cfg = ModelConfig::test_tiny(32);
     let mut rng = Pcg64::seeded(7001);
     let w = LmWeights::init(&cfg, &mut rng);
-    let qlm = QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8));
+    let qlm = QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete");
     let path = dir.join("seed_qlm.rpiq");
     save_qlm(&qlm, &path).unwrap();
     std::fs::read(&path).unwrap()
@@ -37,7 +37,7 @@ fn valid_qvlm_bytes(dir: &Path) -> Vec<u8> {
     let cfg = VlmConfig::test_tiny(32);
     let mut rng = Pcg64::seeded(7002);
     let w = VlmWeights::init(&cfg, &mut rng);
-    let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8));
+    let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete");
     let path = dir.join("seed_qvlm.rpiq");
     save_qvlm(&qvlm, &path).unwrap();
     std::fs::read(&path).unwrap()

@@ -23,14 +23,14 @@ fn tiny_qlm(tok: &Tokenizer) -> Arc<QuantizedLm> {
     let mcfg = ModelConfig::test_tiny(tok.vocab_size());
     let mut rng = Pcg64::seeded(901);
     let w = LmWeights::init(&mcfg, &mut rng);
-    Arc::new(QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8)))
+    Arc::new(QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete"))
 }
 
 fn tiny_qvlm(tok: &Tokenizer) -> Arc<QuantizedVlm> {
     let vcfg = VlmConfig::test_tiny(tok.vocab_size());
     let mut rng = Pcg64::seeded(902);
     let w = VlmWeights::init(&vcfg, &mut rng);
-    Arc::new(QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)))
+    Arc::new(QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete"))
 }
 
 /// A lane whose compute blocks until the test feeds the gate — makes
@@ -168,8 +168,8 @@ fn mixed_mode_serving_peak_stays_under_fp32_baseline() {
         .map(|(_, t)| t.nbytes())
         .sum::<usize>()
         + vlm_w.n_params() * 4;
-    let qlm = Arc::new(QuantizedLm::quantize_rtn(lm_w, QuantGrid::new(4, 32)));
-    let qvlm = Arc::new(QuantizedVlm::quantize_rtn(vlm_w, QuantGrid::new(4, 32)));
+    let qlm = Arc::new(QuantizedLm::quantize_rtn(lm_w, QuantGrid::new(4, 32)).expect("complete"));
+    let qvlm = Arc::new(QuantizedVlm::quantize_rtn(vlm_w, QuantGrid::new(4, 32)).expect("complete"));
     let server = Server::start_mixed(
         Arc::clone(&qlm),
         Arc::clone(&qvlm),

@@ -84,9 +84,9 @@ fn disabled_tracing_is_event_free_and_allocation_free() {
     let cfg = ModelConfig::test_tiny(50);
     let mut rng = Pcg64::seeded(7001);
     let w = LmWeights::init(&cfg, &mut rng);
-    let qlm = QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8));
+    let qlm = QuantizedLm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete");
     let tokens: Vec<u32> = (0..cfg.seq_len).map(|i| (i % 50) as u32).collect();
-    let logits = qlm.forward(&tokens, 1, cfg.seq_len);
+    let logits = qlm.forward(&tokens, 1, cfg.seq_len).expect("forward");
     assert!(logits.data().iter().all(|v| v.is_finite()));
     assert!(trace::take().events.is_empty(), "disabled qmatmul emitted trace events");
 }

@@ -1,0 +1,20 @@
+// Seeded violations for the assert-family extension of the `no-panic`
+// rule (linted as the quantized-model forward path). Each marked line
+// below must fire exactly one violation; the debug_assert! must NOT.
+pub fn forward_rows(x: &[f32], in_f: usize, out_f: usize) -> usize {
+    assert!(in_f > 0, "seeded"); // violation: assert!
+    assert_eq!(x.len() % in_f, 0, "seeded"); // violation: assert_eq!
+    assert_ne!(out_f, 0, "seeded"); // violation: assert_ne!
+    debug_assert!(x.len() / in_f <= 4096); // allowed: debug-only check
+    // LINT-ALLOW(no-panic): seeded escape — this one must NOT fire
+    assert!(out_f <= 1 << 20);
+    x.len() / in_f * out_f
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        assert_eq!(super::forward_rows(&[0.0; 8], 4, 2), 4); // exempt: tests
+    }
+}

@@ -8,9 +8,10 @@
 //!   the comment block directly above; every other top-level module root
 //!   (`*/mod.rs`, plus `main.rs`) must carry `#![forbid(unsafe_code)]`.
 //! * **no-panic** — request-path and loader modules
-//!   (`coordinator/serve.rs`, `model/io.rs`, `vlm/io.rs`) must not use
-//!   `unwrap()/expect()/panic!`-family macros or bare slice indexing in
-//!   non-test code.
+//!   (`coordinator/serve.rs`, `model/io.rs`, `vlm/io.rs`,
+//!   `model/quantized.rs`) must not use `unwrap()/expect()`,
+//!   `panic!`/`assert!`-family macros, or bare slice indexing in
+//!   non-test code (`debug_assert!` stays allowed).
 //! * **hash-iter** — determinism-critical modules (`quant/*`,
 //!   `coordinator/pipeline.rs`) must not iterate `HashMap`/`HashSet`
 //!   (hash order is nondeterministic across runs and platforms).
@@ -62,7 +63,8 @@ impl fmt::Display for Violation {
 
 /// Files (relative to the scanned root) whose non-test code must be free
 /// of panicking constructs.
-const NO_PANIC_FILES: &[&str] = &["coordinator/serve.rs", "model/io.rs", "vlm/io.rs"];
+const NO_PANIC_FILES: &[&str] =
+    &["coordinator/serve.rs", "model/io.rs", "vlm/io.rs", "model/quantized.rs"];
 
 /// The one directory allowed to contain `unsafe`.
 const UNSAFE_ISLAND: &str = "exec/";
@@ -71,8 +73,20 @@ const UNSAFE_ISLAND: &str = "exec/";
 /// stdout/stderr: the CLI surface plus the trace/report sinks.
 const PRINT_SINKS: &[&str] = &["cli/", "trace/", "report/"];
 
-/// Panic-capable tokens (macros checked with their `!`).
-const PANIC_MACROS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
+/// Panic-capable tokens (macros checked with their `!`). The assert
+/// family is included: on a request path a failed precondition must come
+/// back as an `Err`, not tear the lane down. `debug_assert!`-family calls
+/// do not match (`has_macro` requires a non-identifier char before the
+/// name, and the `_` in `debug_assert!` is one).
+const PANIC_MACROS: &[&str] = &[
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+    "assert!",
+    "assert_eq!",
+    "assert_ne!",
+];
 
 fn is_hash_iter_file(rel: &str) -> bool {
     rel.starts_with("quant/") || rel == "coordinator/pipeline.rs"

@@ -22,6 +22,12 @@ const CASES: &[Case] = &[
         expect: &[("no-panic", 4)],
     },
     Case {
+        fixture: "bad_assert.rs",
+        source: include_str!("../fixtures/bad_assert.rs"),
+        path: "model/quantized.rs",
+        expect: &[("no-panic", 3)],
+    },
+    Case {
         fixture: "bad_unsafe.rs",
         source: include_str!("../fixtures/bad_unsafe.rs"),
         path: "exec/mod.rs",
