@@ -70,6 +70,7 @@ fn arm(
             max_batch,
             max_wait: Duration::from_millis(2),
             queue_cap: 256,
+            ..Default::default()
         },
     );
     let tput = replay_mixed(&server, world.replay_items(mode, n_requests), clients);

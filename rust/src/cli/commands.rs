@@ -323,6 +323,12 @@ pub fn serve(args: &mut Args) -> Result<()> {
     let n_clients = args.usize_of("clients", 4)?;
     let max_batch = args.usize_of("max-batch", 8)?;
     let lanes = args.usize_of("lanes", 2)?;
+    // `--activation-budget BYTES` caps each lane's concurrent transient
+    // activations on the server ledger; omitted = observe-only.
+    let activation_budget: Option<usize> = match args.opt("activation-budget") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
     // `--trace out.json` or bare `--trace` (default path)
     let trace_out = args
         .opt("trace")
@@ -349,7 +355,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
     }
     let w = world();
     let tok = w.tokenizer().clone();
-    let scfg = ServeConfig { max_batch, lanes, ..Default::default() };
+    let scfg = ServeConfig { max_batch, lanes, activation_budget, ..Default::default() };
 
     let want_lm = mode != "vqa";
     let want_vlm = mode != "sentiment";
@@ -549,12 +555,13 @@ pub fn serve(args: &mut Args) -> Result<()> {
     }
     let rej = stats.rejects();
     println!(
-        "dropped {} request(s), rejected {} (closed {} / unsupported {} / invalid {})",
+        "dropped {} request(s), rejected {} (closed {} / unsupported {} / invalid {} / over-budget {})",
         stats.total_drops(),
         rej.total(),
         rej.closed,
         rej.unsupported,
-        rej.invalid
+        rej.invalid,
+        rej.over_budget
     );
     println!(
         "serving peak {:.2} MiB (model resident {:.2} MiB)",

@@ -8,6 +8,7 @@
 //! rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed]
 //!                [--vlm-ckpt PATH | --vlm-qckpt model.rpiq]
 //!                [--lanes N] [--requests N] [--clients C] [--method ...]
+//!                [--activation-budget BYTES]
 //!                [--trace [t.json]] [--stats-every SECS]
 //! rpiq inspect   --ckpt PATH               # fp32 or quantized .rpiq
 //! rpiq artifacts --dir artifacts   # validate + smoke-run the AOT bundle
@@ -64,6 +65,7 @@ USAGE:
   rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed]
                  [--vlm-ckpt PATH | --vlm-qckpt model.rpiq]
                  [--lanes N] [--requests N] [--clients C] [--max-batch B]
+                 [--activation-budget BYTES]
                  [--trace [trace.json]] [--stats-every SECS]
   rpiq inspect   --ckpt PATH               (fp32 checkpoint or quantized .rpiq)
   rpiq artifacts [--dir artifacts]
@@ -79,5 +81,8 @@ experiment map and §Deployment memory for the container format.
 chrome://tracing or ui.perfetto.dev; `serve --trace` without a value
 writes serve-trace.json). `serve --stats-every SECS` prints a one-line
 heartbeat (queue depth, per-lane p50/p99, drops/rejects, ledger
-live/peak) while the replay runs. See rust/DESIGN.md §Observability.
+live/peak) while the replay runs. `serve --activation-budget BYTES` caps
+each lane's concurrent transient activations: over-cap single requests
+are rejected at submit and fused batches split to fit. See rust/DESIGN.md
+§Observability and §Activation memory.
 ";

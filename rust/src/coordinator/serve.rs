@@ -27,10 +27,23 @@
 //! * memory is accounted on a server-owned [`MemoryLedger`]: callers
 //!   register the deployed models' resident bytes
 //!   (`QuantizedLm::register_resident`, tag `model_resident`) and each
-//!   lane books its dominant transient — the fused forward's logits —
-//!   under `activations.<lane>` for the duration of the batch, so the
-//!   ledger's peak is `resident + max concurrent activations` and per-lane
-//!   activation peaks print beside the latency stats at shutdown.
+//!   lane books its dominant transient under `activations.<lane>` for the
+//!   duration of the batch, so the ledger's peak is `resident + max
+//!   concurrent activations` and per-lane activation peaks print beside
+//!   the latency stats at shutdown;
+//! * the built-in lanes serve in **row-select** mode
+//!   ([`crate::model::RowSelect::LastRow`]): the answer head runs only
+//!   over the rows the lane reads and attention streams key blocks with
+//!   an online softmax, so the booked transient is the model's
+//!   [`QuantizedLm::serve_transient_bytes`] — `O(B·V + B·S·d)`, never the
+//!   full `[B·S, V]` logits;
+//! * an optional **activation budget** ([`ServeConfig::activation_budget`])
+//!   caps each lane's concurrent transients: single requests that cannot
+//!   ever fit are rejected at submit ([`SubmitError::OverBudget`], counted
+//!   in [`LaneStats`]), fused groups that would overshoot are split into
+//!   budget-fitting sub-batches, and admission into the cap is arbitrated
+//!   through [`MemoryLedger::try_alloc`] so concurrent lanes cannot
+//!   jointly overshoot their own caps.
 //!
 //! Threading: lanes are dedicated event-loop threads (they block on the
 //! request queue, so parking them on pool workers would starve the pool).
@@ -47,7 +60,7 @@ use crate::data::tokenizer::Tokenizer;
 use crate::data::SentimentSet;
 use crate::exec::{Channel, ShardedQueue};
 use crate::metrics::{LaneStats, MemoryLedger};
-use crate::model::QuantizedLm;
+use crate::model::{QuantizedLm, RowSelect};
 use crate::tensor::Tensor;
 use crate::vlm::QuantizedVlm;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -133,6 +146,10 @@ pub enum SubmitError {
     Unsupported,
     /// The payload is malformed for its lane (e.g. patch-shape mismatch).
     Invalid(String),
+    /// The request alone books more transient-activation bytes than its
+    /// lane's [`ServeConfig::activation_budget`] — it could never be
+    /// admitted, so it is rejected at submit instead of deadlocking a lane.
+    OverBudget { needed: usize, cap: usize },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -141,6 +158,10 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Closed => write!(f, "server closed"),
             SubmitError::Unsupported => write!(f, "no lane accepts this payload"),
             SubmitError::Invalid(why) => write!(f, "invalid payload: {why}"),
+            SubmitError::OverBudget { needed, cap } => write!(
+                f,
+                "request books {needed} transient bytes, over the lane's {cap}-byte activation budget"
+            ),
         }
     }
 }
@@ -233,15 +254,19 @@ impl LaneEngine for SentimentLane {
     }
 
     fn transient_bytes(&self, group: &[&Payload]) -> usize {
-        // fused forward's logits: [Σ seq_i, vocab] f32
-        let toks: usize = group
+        // Row-select serving: the dominant transients are the selected-row
+        // logits `[B, V]` plus the widest per-layer activation `[B·S, d]`
+        // (the full `[B·S, V]` logits are never built). Groups share one
+        // shape key, so every prompt here has the max length.
+        let seq = group
             .iter()
             .map(|p| match p {
                 Payload::Sentiment { tokens } => tokens.len(),
                 _ => 0,
             })
-            .sum();
-        toks * self.model.config().vocab * 4
+            .max()
+            .unwrap_or(0);
+        self.model.serve_transient_bytes(group.len(), seq)
     }
 
     fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
@@ -256,10 +281,10 @@ impl LaneEngine for SentimentLane {
             }
         }
         // The lane loop groups by shape key, so all sequences here share
-        // one length: fuse each chunk into one forward and read the
-        // answer rows in place — no per-request logits copies (unlike the
-        // general [`QuantizedLm::forward_batch`], which returns owned
-        // full-sequence logits).
+        // one length: fuse each chunk into one row-select forward
+        // ([`RowSelect::LastRow`]) — the head matmul runs only over the
+        // answer rows and attention streams key blocks, so the transient
+        // is `[B, V]` logits plus `O(S·chunk)` scores, never `[B·S, V]`.
         let Some(seq) = seqs.first().map(|s| s.len()) else {
             return Vec::new();
         };
@@ -269,10 +294,11 @@ impl LaneEngine for SentimentLane {
             for s in chunk.iter().filter_map(|&i| seqs.get(i)) {
                 tokens.extend_from_slice(s);
             }
-            let logits = self.model.forward(&tokens, chunk.len(), seq)?;
+            let logits =
+                self.model.forward_rows(&tokens, chunk.len(), seq, RowSelect::LastRow)?;
             Ok((0..chunk.len())
                 .map(|gi| {
-                    let last = logits.row(gi * seq + seq - 1);
+                    let last = logits.row(gi);
                     let mut ll = [f32::NEG_INFINITY; 3];
                     for (dst, &id) in ll.iter_mut().zip(self.label_ids.iter()) {
                         *dst = last.get(id as usize).copied().unwrap_or(f32::NEG_INFINITY);
@@ -359,16 +385,19 @@ impl LaneEngine for VqaLane {
     }
 
     fn transient_bytes(&self, group: &[&Payload]) -> usize {
-        // fused forward's logits: [B·(P + T), vocab] f32
-        let cfg = self.model.config();
-        let toks: usize = group
+        // Row-select serving: selected-row logits `[B, V]` plus the widest
+        // per-layer activation over the fused `[B·(P + T), ·]` sequence —
+        // see [`QuantizedVlm::serve_transient_bytes`]. One shape key ⇒ one
+        // question length, so the max is the common length.
+        let qlen = group
             .iter()
             .map(|p| match p {
-                Payload::Vqa { question, .. } => cfg.n_patches + question.len(),
+                Payload::Vqa { question, .. } => question.len(),
                 _ => 0,
             })
-            .sum();
-        toks * cfg.lm.vocab * 4
+            .max()
+            .unwrap_or(0);
+        self.model.serve_transient_bytes(group.len(), qlen)
     }
 
     fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
@@ -382,9 +411,9 @@ impl LaneEngine for VqaLane {
             }
         }
         // Equal shape key ⇒ equal question length: stack each chunk into
-        // one fused forward and read the answer rows in place (the
-        // general [`QuantizedVlm::forward_batch`] instead returns owned
-        // full-sequence logits per pair).
+        // one fused row-select forward ([`RowSelect::LastRow`]) — only the
+        // answer rows reach the vocab head, so the transient is `[B, V]`
+        // logits plus streamed `O(S·chunk)` attention scores.
         let cfg = self.model.config();
         let n_patches = cfg.n_patches;
         // prepare() validated every patches tensor against the config, so
@@ -394,7 +423,6 @@ impl LaneEngine for VqaLane {
             return Vec::new();
         };
         debug_assert!(pairs.iter().all(|(_, q)| q.len() == tlen), "mixed shapes in one group");
-        let s = n_patches + tlen;
         let answers = crate::model::quantized::run_equal_shape_groups(pairs.len(), |_| 0, |chunk| {
             let b = chunk.len();
             let mut pdata = Vec::with_capacity(b * n_patches * pd);
@@ -404,10 +432,10 @@ impl LaneEngine for VqaLane {
                 text.extend_from_slice(q);
             }
             let patches = Tensor::from_vec(&[b * n_patches, pd], pdata);
-            let logits = self.model.forward(&patches, &text, b)?;
+            let logits = self.model.forward_rows(&patches, &text, b, RowSelect::LastRow)?;
             Ok((0..b)
                 .map(|gi| {
-                    let last = logits.row(gi * s + s - 1);
+                    let last = logits.row(gi);
                     // Total order over f32 (see the sentiment argmax).
                     let pred = last
                         .iter()
@@ -442,6 +470,14 @@ pub struct ServeConfig {
     pub max_wait: Duration,
     /// Number of batcher lanes (event-loop threads / queue shards).
     pub lanes: usize,
+    /// Per-lane transient-activation budget in bytes. When set, each
+    /// lane's `activations.<lane>` ledger tag is capped at this value:
+    /// submissions whose single-request transient exceeds it are rejected
+    /// ([`SubmitError::OverBudget`]), fused groups are split into
+    /// budget-fitting sub-batches, and lanes block admission (never the
+    /// ledger math) until their concurrent bookings fit. `None` disables
+    /// enforcement — the ledger still observes, it just never gates.
+    pub activation_budget: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -451,6 +487,7 @@ impl Default for ServeConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             lanes: 2,
+            activation_budget: None,
         }
     }
 }
@@ -466,6 +503,9 @@ pub struct Server {
     /// (registered by the caller) + per-lane transient activations
     /// (booked by the lane loop around each fused batch).
     ledger: MemoryLedger,
+    /// Copied from [`ServeConfig::activation_budget`]; checked per request
+    /// at submit so over-cap payloads never reach a lane.
+    activation_budget: Option<usize>,
     lanes: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -482,6 +522,14 @@ impl Server {
         let stats = LaneStats::new();
         let ledger = MemoryLedger::new();
         let engines = Arc::new(engines);
+        if let Some(cap) = cfg.activation_budget {
+            // Cap every lane's transient tag up front — lanes gate their
+            // bookings through `try_alloc`, so the budget binds from the
+            // first request.
+            for e in engines.iter() {
+                ledger.set_budget(&crate::metrics::tags::activations(e.name()), cap);
+            }
+        }
         let lanes = (0..n_lanes)
             .map(|i| {
                 let queue = queue.clone();
@@ -496,7 +544,15 @@ impl Server {
                     .expect("spawn lane")
             })
             .collect();
-        Server { queue, engines, next_id: AtomicU64::new(0), stats, ledger, lanes }
+        Server {
+            queue,
+            engines,
+            next_id: AtomicU64::new(0),
+            stats,
+            ledger,
+            activation_budget: cfg.activation_budget,
+            lanes,
+        }
     }
 
     /// The server's memory ledger. Register deployed models' resident
@@ -540,7 +596,17 @@ impl Server {
             .iter()
             .position(|e| e.accepts(&payload))
             .ok_or(SubmitError::Unsupported)?;
-        self.engines.get(engine).ok_or(SubmitError::Unsupported)?.prepare(&mut payload)?;
+        let lane = self.engines.get(engine).ok_or(SubmitError::Unsupported)?;
+        lane.prepare(&mut payload)?;
+        if let Some(cap) = self.activation_budget {
+            // A request that alone overshoots its lane's budget can never
+            // be admitted (sub-batches are at least one request): reject
+            // here instead of letting a lane spin on it forever.
+            let needed = lane.transient_bytes(&[&payload]);
+            if needed > cap {
+                return Err(SubmitError::OverBudget { needed, cap });
+            }
+        }
         let reply = Channel::bounded(1);
         Ok(Request {
             id: self.next_id.fetch_add(1, Ordering::SeqCst),
@@ -558,6 +624,7 @@ impl Server {
             SubmitError::Closed => crate::metrics::RejectKind::Closed,
             SubmitError::Unsupported => crate::metrics::RejectKind::Unsupported,
             SubmitError::Invalid(_) => crate::metrics::RejectKind::Invalid,
+            SubmitError::OverBudget { .. } => crate::metrics::RejectKind::OverBudget,
         });
         e
     }
@@ -706,7 +773,6 @@ fn lane_loop(
                 return; // unreachable: `ei` indexes the fixed engine set
             };
             let picked = Instant::now();
-            stats.record_batch(engine.name(), group.len());
             if crate::trace::enabled() {
                 // One cross-thread range per request: enqueue→pickup. The
                 // submit happened on a client thread, so this is emitted as
@@ -720,46 +786,92 @@ fn lane_loop(
                     );
                 }
             }
-            let payloads: Vec<&Payload> = group.iter().map(|r| &r.payload).collect();
-            // Book the batch's dominant transient (the fused logits) for
-            // the duration of the forward, per lane, so the ledger's peak
-            // reflects resident + concurrent activations.
-            let transient = engine.transient_bytes(&payloads);
-            // Contain engine bugs: on a panic (or a miscounted answer
-            // vector) the group is discarded and each Request's Drop
-            // closes its reply channel, so clients observe `Closed`
-            // instead of hanging and the lane keeps serving. The transient
-            // is freed outside catch_unwind so a panicking engine cannot
-            // leak ledger bytes.
-            let batch_span = crate::trace::span_detail("serve", "batch", || {
-                format!("{} n={}", engine.name(), group.len())
-            });
-            ledger.alloc(tag, transient);
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                engine.run_batch(&payloads)
-            }));
-            ledger.free(tag, transient);
-            drop(batch_span);
-            let answers = match result {
-                Ok(a) if a.len() == group.len() => a,
-                Ok(_) | Err(_) => {
-                    // The whole group died (engine panic / miscounted
-                    // answers): count it so lost requests are visible in
-                    // the heartbeat and final report.
-                    stats.record_drop(engine.name(), group.len());
-                    crate::trace::instant("serve", "group.dropped");
-                    return;
+            // Partition the group into contiguous sub-batches whose booked
+            // transient fits the lane's activation budget (the whole group
+            // when unbudgeted or already fitting). Submit-time rejection
+            // guarantees every single request fits, so each sub-batch holds
+            // at least one request and the partition always terminates.
+            let cap = ledger.budget_for(tag);
+            let mut start = 0usize;
+            while start < group.len() {
+                let mut end = group.len();
+                if let Some(cap) = cap {
+                    end = start + 1;
+                    while end < group.len() {
+                        let fits = group.get(start..end + 1).is_some_and(|rs| {
+                            let pl: Vec<&Payload> = rs.iter().map(|r| &r.payload).collect();
+                            engine.transient_bytes(&pl) <= cap
+                        });
+                        if !fits {
+                            break;
+                        }
+                        end += 1;
+                    }
                 }
-            };
-            for (r, a) in group.iter().zip(answers) {
-                let latency = r.enqueued.elapsed();
-                let queue_wait = picked.saturating_duration_since(r.enqueued);
-                let service = latency.saturating_sub(queue_wait);
-                stats.record_split(engine.name(), queue_wait.as_secs_f64(), service.as_secs_f64());
-                if crate::trace::enabled() {
-                    crate::trace::complete_at("serve", "req.service", picked, service);
+                let Some(sub) = group.get(start..end) else {
+                    return; // unreachable: start < end ≤ group.len()
+                };
+                start = end;
+                stats.record_batch(engine.name(), sub.len());
+                let payloads: Vec<&Payload> = sub.iter().map(|r| &r.payload).collect();
+                // Book the sub-batch's dominant transient for the duration
+                // of the forward, per lane, so the ledger's peak reflects
+                // resident + concurrent activations — and, when budgeted,
+                // wait for admission so concurrent bookings under one tag
+                // never jointly overshoot the cap.
+                let transient = engine.transient_bytes(&payloads);
+                let batch_span = crate::trace::span_detail("serve", "batch", || {
+                    format!("{} n={}", engine.name(), sub.len())
+                });
+                if cap.is_some_and(|c| transient <= c) {
+                    // Every holder of this tag frees its booking after a
+                    // finite forward, so admission always makes progress.
+                    while ledger.try_alloc(tag, transient).is_err() {
+                        std::thread::sleep(Duration::from_micros(100));
+                    }
+                } else {
+                    // Unbudgeted — or oversized despite the submit-time
+                    // check (a custom engine's transient grew after
+                    // prepare): book unconditionally rather than deadlock
+                    // the lane; the ledger still observes the overshoot.
+                    ledger.alloc(tag, transient);
                 }
-                let _ = r.reply.send(Response { id: r.id, answer: a, latency });
+                // Contain engine bugs: on a panic (or a miscounted answer
+                // vector) the sub-batch is discarded and each Request's
+                // Drop closes its reply channel, so clients observe
+                // `Closed` instead of hanging and the lane keeps serving.
+                // The transient is freed outside catch_unwind so a
+                // panicking engine cannot leak ledger bytes.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    engine.run_batch(&payloads)
+                }));
+                ledger.free(tag, transient);
+                drop(batch_span);
+                let answers = match result {
+                    Ok(a) if a.len() == sub.len() => a,
+                    Ok(_) | Err(_) => {
+                        // The whole sub-batch died (engine panic /
+                        // miscounted answers): count it so lost requests
+                        // are visible in the heartbeat and final report.
+                        stats.record_drop(engine.name(), sub.len());
+                        crate::trace::instant("serve", "group.dropped");
+                        continue;
+                    }
+                };
+                for (r, a) in sub.iter().zip(answers) {
+                    let latency = r.enqueued.elapsed();
+                    let queue_wait = picked.saturating_duration_since(r.enqueued);
+                    let service = latency.saturating_sub(queue_wait);
+                    stats.record_split(
+                        engine.name(),
+                        queue_wait.as_secs_f64(),
+                        service.as_secs_f64(),
+                    );
+                    if crate::trace::enabled() {
+                        crate::trace::complete_at("serve", "req.service", picked, service);
+                    }
+                    let _ = r.reply.send(Response { id: r.id, answer: a, latency });
+                }
             }
         };
         if let [((ei, _), g)] = groups.as_slice() {
@@ -870,6 +982,7 @@ mod tests {
             max_wait: Duration::from_millis(10),
             queue_cap: 64,
             lanes: 2,
+            ..Default::default()
         });
         let prompts: Vec<String> = (0..24)
             .map(|i| {
@@ -941,9 +1054,13 @@ mod tests {
         let patches = Tensor::randn(&[vcfg.n_patches, vcfg.patch_dim], 1.0, &mut rng);
         let question = tok.encode("what genre this book ? answer :");
         let resp = server.ask(patches.clone(), question.clone()).unwrap();
-        // answer must match the unbatched forward's argmax exactly
-        let logits = qvlm.forward(&patches, &question, 1).expect("forward");
-        let last = logits.row(vcfg.n_patches + question.len() - 1);
+        // answer must match the unbatched row-select forward's argmax
+        // exactly (the lane serves via RowSelect::LastRow, so the
+        // reference runs the same path)
+        let logits = qvlm
+            .forward_rows(&patches, &question, 1, RowSelect::LastRow)
+            .expect("forward");
+        let last = logits.row(0);
         let pred = last
             .iter()
             .enumerate()
@@ -1006,6 +1123,7 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_millis(5),
             queue_cap: 32,
+            ..Default::default()
         });
         assert_eq!(server.n_lanes(), 4);
         let prompts: Vec<String> = (0..40)

@@ -16,6 +16,13 @@
 //! *peak* is a property of the observed interleaving: more jobs in flight
 //! can legitimately raise it. Determinism-sensitive comparisons must pin
 //! `exec::set_threads` (see the pipeline tests).
+//!
+//! Budgets: a tag can carry a live-byte cap ([`MemoryLedger::set_budget`])
+//! that [`MemoryLedger::try_alloc`] checks-and-books in one critical
+//! section — the serve lanes use this as admission control on their
+//! `activations.<lane>` tags, so concurrent bookings under one capped tag
+//! never jointly overshoot. Plain [`MemoryLedger::alloc`] is never gated:
+//! accounting stays exact even when a caller opts out of enforcement.
 
 #![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
 
@@ -38,6 +45,8 @@ struct LedgerInner {
     /// live bytes per named category (weights, hessian, calib, residuals…)
     by_tag: HashMap<String, i64>,
     peak_by_tag: HashMap<String, i64>,
+    /// per-tag live-byte caps (admission control; see [`MemoryLedger::try_alloc`])
+    budgets: HashMap<String, i64>,
 }
 
 impl MemoryLedger {
@@ -85,6 +94,61 @@ impl MemoryLedger {
             crate::trace::counter(format!("mem.{tag}"), tag_live as f64);
             crate::trace::counter("mem.live", live as f64);
         }
+    }
+
+    /// Cap a tag's live bytes at `bytes` — subsequent [`Self::try_alloc`]
+    /// calls on `tag` fail instead of exceeding the cap. Plain
+    /// [`Self::alloc`] is *not* gated (resident weights and eval scopes
+    /// keep exact accounting); budgets are an admission-control contract
+    /// for the paths that opt in, i.e. the serve lanes' per-lane
+    /// `activations.<lane>` caps derived from `ServeConfig`.
+    pub fn set_budget(&self, tag: &str, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.budgets.insert(tag.to_string(), bytes as i64);
+    }
+
+    /// Remove a tag's cap.
+    pub fn clear_budget(&self, tag: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.budgets.remove(tag);
+    }
+
+    /// The cap set for `tag`, if any.
+    pub fn budget_for(&self, tag: &str) -> Option<usize> {
+        let g = self.inner.lock().unwrap();
+        g.budgets.get(tag).map(|&b| b.max(0) as usize)
+    }
+
+    /// Budget-checked allocation: books `bytes` under `tag` exactly like
+    /// [`Self::alloc`] unless the tag has a budget and the allocation
+    /// would push its live bytes past it, in which case nothing is booked
+    /// and `Err` carries the cap. The check and the booking are one
+    /// critical section, so concurrent lanes cannot jointly overshoot a
+    /// shared tag's cap.
+    pub fn try_alloc(&self, tag: &str, bytes: usize) -> Result<(), usize> {
+        let (tag_live, live) = {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(&cap) = g.budgets.get(tag) {
+                let cur = g.by_tag.get(tag).copied().unwrap_or(0);
+                if cur + bytes as i64 > cap {
+                    return Err(cap.max(0) as usize);
+                }
+            }
+            g.live += bytes as i64;
+            if g.live > g.peak {
+                g.peak = g.live;
+            }
+            let e = g.by_tag.entry(tag.to_string()).or_insert(0);
+            *e += bytes as i64;
+            let cur = *e;
+            let p = g.peak_by_tag.entry(tag.to_string()).or_insert(0);
+            if cur > *p {
+                *p = cur;
+            }
+            (cur, g.live)
+        };
+        self.trace_counters(tag, tag_live, live);
+        Ok(())
     }
 
     /// Convenience: account `bytes` for the duration of `f`.
@@ -295,6 +359,9 @@ pub enum RejectKind {
     Unsupported,
     /// Payload failed the engine's prepare step.
     Invalid,
+    /// A single request's booked activation transient exceeds its lane's
+    /// `activations.<lane>` budget — it could never be scheduled.
+    OverBudget,
 }
 
 /// Rejected-submission totals, by kind.
@@ -303,11 +370,12 @@ pub struct RejectCounts {
     pub closed: u64,
     pub unsupported: u64,
     pub invalid: u64,
+    pub over_budget: u64,
 }
 
 impl RejectCounts {
     pub fn total(&self) -> u64 {
-        self.closed + self.unsupported + self.invalid
+        self.closed + self.unsupported + self.invalid + self.over_budget
     }
 }
 
@@ -396,6 +464,7 @@ impl LaneStats {
             RejectKind::Closed => r.closed += 1,
             RejectKind::Unsupported => r.unsupported += 1,
             RejectKind::Invalid => r.invalid += 1,
+            RejectKind::OverBudget => r.over_budget += 1,
         }
     }
 
@@ -523,6 +592,35 @@ mod tests {
         assert_eq!(led.peak_for("hessian"), 40);
         assert_eq!(led.peak_for("weights"), 5);
         assert_eq!(led.breakdown()[0].0, "hessian");
+    }
+
+    #[test]
+    fn budgets_gate_try_alloc_but_not_alloc() {
+        let led = MemoryLedger::new();
+        led.set_budget("activations.sentiment", 100);
+        assert_eq!(led.budget_for("activations.sentiment"), Some(100));
+        assert_eq!(led.budget_for("activations.vqa"), None);
+        // fits: booked
+        assert_eq!(led.try_alloc("activations.sentiment", 60), Ok(()));
+        // would overshoot: refused, nothing booked, cap reported
+        assert_eq!(led.try_alloc("activations.sentiment", 50), Err(100));
+        assert_eq!(led.live_bytes(), 60);
+        // frees open the budget back up
+        led.free("activations.sentiment", 60);
+        assert_eq!(led.try_alloc("activations.sentiment", 100), Ok(()));
+        led.free("activations.sentiment", 100);
+        // plain alloc is exact accounting, not admission control
+        led.alloc("activations.sentiment", 500);
+        assert_eq!(led.live_bytes(), 500);
+        led.free("activations.sentiment", 500);
+        // unbudgeted tags always admit
+        assert_eq!(led.try_alloc("activations.vqa", 1 << 30), Ok(()));
+        led.free("activations.vqa", 1 << 30);
+        // clearing removes the cap
+        led.clear_budget("activations.sentiment");
+        assert_eq!(led.try_alloc("activations.sentiment", 1 << 20), Ok(()));
+        led.free("activations.sentiment", 1 << 20);
+        assert_eq!(led.live_bytes(), 0);
     }
 
     #[test]

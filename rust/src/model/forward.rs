@@ -9,6 +9,12 @@
 //!   stage does with forward hooks.
 //! * [`lm_forward_training`] — same math but returns the [`FwdRecord`] of
 //!   every intermediate needed by the manual backward in `crate::train`.
+//!
+//! Both full-logits entries are [`RowSelect::Full`] specializations of
+//! [`lm_forward_rows`]: serve lanes that only read answer rows pass
+//! [`RowSelect::LastRow`] so the final layernorm and head matmul run over
+//! one row per sequence and the `[B·S, V]` logits tensor is never
+//! allocated.
 
 use super::ops::*;
 use super::weights::LmWeights;
@@ -59,6 +65,60 @@ impl ActivationTap {
         };
         if wanted {
             self.inputs.insert(name.to_string(), x.clone());
+        }
+    }
+}
+
+/// Which logits rows a forward materializes — i.e. the row set of the
+/// final layernorm + head matmul.
+///
+/// [`RowSelect::Full`] is the training/eval mode and is bit-identical to
+/// the historical full-logits path. [`RowSelect::LastRow`] is the serve
+/// mode for answer-row readers (sentiment classification, VQA answer
+/// extraction): logits come back as `[B, V]` with row `b` bit-identical to
+/// full-mode row `b·S + S−1`, because the head matmul computes output rows
+/// independently in a fixed f32 order and layernorm is row-wise.
+///
+/// On the quantized serve paths, `LastRow` additionally selects the
+/// chunked online-softmax attention
+/// ([`super::ops::attention_fwd_chunked`], within
+/// [`super::ops::ATTN_CHUNK_REL_TOL`] of the exact oracle), so both the
+/// `O(S²)` score transients and the full logits disappear from serving.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RowSelect {
+    /// Full logits `[B·S, V]` — training/eval; bit-identical to the
+    /// pre-row-select path.
+    #[default]
+    Full,
+    /// Only each sequence's final position: logits `[B, V]`.
+    LastRow,
+}
+
+impl RowSelect {
+    /// Number of logits rows this mode produces for a `[batch, seq]`
+    /// forward.
+    pub fn out_rows(self, batch: usize, seq: usize) -> usize {
+        match self {
+            RowSelect::Full => batch * seq,
+            RowSelect::LastRow => batch,
+        }
+    }
+
+    /// Gather the head-input rows this mode selects from `x: [B·S, d]`.
+    /// Selection happens *before* the final layernorm (row-wise, so the
+    /// two orders are bit-identical) to avoid normalizing rows nobody
+    /// reads.
+    pub fn select(self, x: Tensor, batch: usize, seq: usize) -> Tensor {
+        match self {
+            RowSelect::Full => x,
+            RowSelect::LastRow => {
+                let d = x.cols();
+                let mut out = Tensor::zeros(&[batch, d]);
+                for b in 0..batch {
+                    out.row_mut(b).copy_from_slice(x.row(b * seq + seq - 1));
+                }
+                out
+            }
         }
     }
 }
@@ -138,38 +198,58 @@ pub fn lm_forward(
     tokens: &[u32],
     batch: usize,
     seq: usize,
+    tap: Option<&mut ActivationTap>,
+) -> Tensor {
+    lm_forward_rows(w, tokens, batch, seq, tap, RowSelect::Full)
+}
+
+/// Inference forward with an explicit [`RowSelect`] mode: tokens → logits
+/// `[rows.out_rows(B, S), vocab]`.
+///
+/// `RowSelect::Full` is exactly [`lm_forward`] (bit-identical);
+/// `RowSelect::LastRow` runs the final layernorm and head matmul over one
+/// row per sequence.
+pub fn lm_forward_rows(
+    w: &LmWeights,
+    tokens: &[u32],
+    batch: usize,
+    seq: usize,
     mut tap: Option<&mut ActivationTap>,
+    rows: RowSelect,
 ) -> Tensor {
     let cfg = &w.config;
+    let names = w.tap_names();
     let mut x = embed(w, tokens, batch, seq);
     for (li, l) in w.layers.iter().enumerate() {
+        let names = names.layer(li);
         let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
         if let Some(t) = tap.as_deref_mut() {
-            t.grab(&format!("lm.layer{li}.attn.q"), &ln1);
-            t.grab(&format!("lm.layer{li}.attn.k"), &ln1);
-            t.grab(&format!("lm.layer{li}.attn.v"), &ln1);
+            t.grab(&names.attn_q, &ln1);
+            t.grab(&names.attn_k, &ln1);
+            t.grab(&names.attn_v, &ln1);
         }
         let q = linear_fwd(&ln1, &l.wq);
         let k = linear_fwd(&ln1, &l.wk);
         let v = linear_fwd(&ln1, &l.wv);
         let (ctx, _) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
         if let Some(t) = tap.as_deref_mut() {
-            t.grab(&format!("lm.layer{li}.attn.out"), &ctx);
+            t.grab(&names.attn_out, &ctx);
         }
         let attn_out = linear_fwd(&ctx, &l.wo);
         x.add_assign(&attn_out);
 
         let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
         if let Some(t) = tap.as_deref_mut() {
-            t.grab(&format!("lm.layer{li}.mlp.up"), &ln2);
+            t.grab(&names.mlp_up, &ln2);
         }
         let up = act_fwd(&linear_fwd(&ln2, &l.w_up), cfg.activation);
         if let Some(t) = tap.as_deref_mut() {
-            t.grab(&format!("lm.layer{li}.mlp.down"), &up);
+            t.grab(&names.mlp_down, &up);
         }
         let down = linear_fwd(&up, &l.w_down);
         x.add_assign(&down);
     }
+    let x = rows.select(x, batch, seq);
     let (lnf, _, _) = layernorm_fwd(&x, &w.lnf_g, &w.lnf_b);
     if let Some(t) = tap.as_deref_mut() {
         if w.head.is_some() {
@@ -284,6 +364,23 @@ mod tests {
         let l1 = lm_forward(&w, &tokens, b, s, None);
         let rec = lm_forward_training(&w, &tokens, b, s);
         assert!(l1.max_abs_diff(&rec.logits) < 1e-5);
+    }
+
+    #[test]
+    fn last_row_logits_bit_identical_to_full_last_rows() {
+        let (w, tokens, b, s) = tiny();
+        let full = lm_forward(&w, &tokens, b, s, None);
+        let last = lm_forward_rows(&w, &tokens, b, s, None, RowSelect::LastRow);
+        assert_eq!(last.shape(), &[b, 32]);
+        for bi in 0..b {
+            assert_eq!(last.row(bi), full.row(bi * s + s - 1), "seq {bi}");
+        }
+    }
+
+    #[test]
+    fn row_select_out_rows() {
+        assert_eq!(RowSelect::Full.out_rows(3, 7), 21);
+        assert_eq!(RowSelect::LastRow.out_rows(3, 7), 3);
     }
 
     #[test]

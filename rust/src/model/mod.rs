@@ -7,6 +7,14 @@
 //! corpora (rust/DESIGN.md §5 Substitution ledger). The four LM presets differ
 //! in depth/width/ff-ratio/activation so the "diverse architectures" axis
 //! of Table 1 is preserved.
+//!
+//! Forwards come in two output modes ([`RowSelect`]): `Full` returns
+//! `[B·S, V]` logits (training/eval, bit-identical to the original
+//! implementation), while `LastRow` returns only the `[B, V]` answer rows
+//! and — on the quantized paths — streams attention key blocks with an
+//! online softmax ([`ops::attention_fwd_chunked`], tolerance
+//! [`ATTN_CHUNK_REL_TOL`]), so serving never materializes the full logits
+//! or the `O(S²)` score matrix. See rust/DESIGN.md §Activation memory.
 
 #![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
 
@@ -19,7 +27,8 @@ pub mod quantized;
 pub mod weights;
 
 pub use config::{Activation, ModelConfig};
-pub use forward::{lm_forward, lm_loss, ActivationTap, FwdRecord};
+pub use forward::{lm_forward, lm_forward_rows, lm_loss, ActivationTap, FwdRecord, RowSelect};
 pub use kernels::QmatmulKernel;
+pub use ops::{ATTN_CHUNK, ATTN_CHUNK_REL_TOL};
 pub use quantized::{QuantizedLm, RESIDENT_TAG, WIDE_GROUP_ROWS};
-pub use weights::{LayerNorms, LmSkeleton, LmWeights};
+pub use weights::{LayerNorms, LmSkeleton, LmWeights, TapNames};

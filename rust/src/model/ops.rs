@@ -211,6 +211,107 @@ pub fn attention_fwd(
     (ctx, probs)
 }
 
+/// Default key-block width of the chunked attention path
+/// ([`attention_fwd_chunked`]). Serve forwards process attention scores in
+/// blocks of this many key positions, so the per-query transient is
+/// `O(ATTN_CHUNK + d_head)` instead of the exact path's `O(S²)` per-head
+/// probability matrix.
+pub const ATTN_CHUNK: usize = 32;
+
+/// Agreement bound between the chunked online-softmax attention and the
+/// exact oracle [`attention_fwd`]:
+/// `max|chunked − exact| ≤ ATTN_CHUNK_REL_TOL · max(1, max|exact|)`.
+///
+/// Both paths evaluate the same mathematical softmax; they differ only in
+/// f32 summation order (the chunked path rescales its running accumulator
+/// whenever a later block raises the running max, and normalizes once at
+/// the end instead of per-probability). The defended bound mirrors
+/// [`crate::model::kernels::TILED_REL_TOL`] and is asserted by the
+/// property tests below across chunk-straddling shapes.
+pub const ATTN_CHUNK_REL_TOL: f32 = 1e-5;
+
+/// Causal multi-head self-attention forward with a chunked **online
+/// softmax** — the serve-path variant of [`attention_fwd`].
+///
+/// Scores for each query row are produced in key blocks of `chunk`
+/// positions. Per block the running maximum `m`, running normalizer `z`,
+/// and the unnormalized context accumulator are updated; when a block
+/// raises `m`, history is rescaled by `exp(m_old − m_new)` (the standard
+/// streaming-softmax recurrence). The `[S, S]` probability matrix is never
+/// materialized and no probabilities are returned, so this path cannot
+/// feed [`attention_bwd`] — training keeps the exact oracle.
+///
+/// Numerically within [`ATTN_CHUNK_REL_TOL`] of the oracle for any
+/// `chunk ≥ 1`; bit-deterministic across thread counts (the loop is
+/// sequential per query row and does not parallelize).
+pub fn attention_fwd_chunked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    batch: usize,
+    seq: usize,
+    n_heads: usize,
+    chunk: usize,
+) -> Tensor {
+    let d = q.cols();
+    let dh = d / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let chunk = chunk.max(1);
+    let mut ctx = Tensor::zeros(&[batch * seq, d]);
+    // One reusable block of scores — the only O(chunk) transient.
+    let mut sc = vec![0.0f32; chunk];
+    for b in 0..batch {
+        for h in 0..n_heads {
+            let off = h * dh;
+            for s in 0..seq {
+                let qrow = &q.row(b * seq + s)[off..off + dh];
+                let mut m = f32::NEG_INFINITY; // running max
+                let mut z = 0.0f32; // running Σ exp(score − m)
+                let mut t0 = 0usize;
+                while t0 <= s {
+                    let t1 = (t0 + chunk).min(s + 1);
+                    let mut block_max = f32::NEG_INFINITY;
+                    for t in t0..t1 {
+                        let krow = &k.row(b * seq + t)[off..off + dh];
+                        let e = crate::tensor::dot(qrow, krow) * scale;
+                        sc[t - t0] = e;
+                        if e > block_max {
+                            block_max = e;
+                        }
+                    }
+                    if block_max > m {
+                        // Rescale history to the new max. exp(−inf) = 0
+                        // handles the first block (empty history) too.
+                        let r = (m - block_max).exp();
+                        z *= r;
+                        let crow = &mut ctx.row_mut(b * seq + s)[off..off + dh];
+                        for x in crow.iter_mut() {
+                            *x *= r;
+                        }
+                        m = block_max;
+                    }
+                    let crow = &mut ctx.row_mut(b * seq + s)[off..off + dh];
+                    for t in t0..t1 {
+                        let w = (sc[t - t0] - m).exp();
+                        z += w;
+                        let vrow = &v.row(b * seq + t)[off..off + dh];
+                        for x in 0..dh {
+                            crow[x] += w * vrow[x];
+                        }
+                    }
+                    t0 = t1;
+                }
+                let inv = 1.0 / z;
+                let crow = &mut ctx.row_mut(b * seq + s)[off..off + dh];
+                for x in crow.iter_mut() {
+                    *x *= inv;
+                }
+            }
+        }
+    }
+    ctx
+}
+
 /// Backward of [`attention_fwd`]: given `dctx`, returns `(dq, dk, dv)`.
 pub fn attention_bwd(
     q: &Tensor,
@@ -447,6 +548,76 @@ mod tests {
             assert_eq!(ctx.row(pos), ctx2.row(pos), "pos {pos}");
         }
         assert_ne!(ctx.row(3), ctx2.row(3));
+    }
+
+    /// `max|got − want| ≤ tol · max(1, max|want|)` — the same shape of
+    /// bound the tiled qmatmul kernel defends.
+    fn assert_rel_close(got: &Tensor, want: &Tensor, tol: f32, label: &str) {
+        let ref_mag = want.data().iter().fold(1.0f32, |a, &x| a.max(x.abs()));
+        let diff = got.max_abs_diff(want);
+        assert!(
+            diff <= tol * ref_mag,
+            "{label}: max abs diff {diff:e} > {tol:e} · {ref_mag:e}"
+        );
+    }
+
+    #[test]
+    fn chunked_attention_matches_exact_oracle_across_shapes() {
+        // Odd sequence lengths and chunk widths that straddle, divide,
+        // exceed, and degenerate (chunk = 1) relative to S.
+        let mut rng = Pcg64::seeded(108);
+        for &s in &[1usize, 2, 3, 5, 7, 8, 9, 16, 17, 31, 33] {
+            for &chunk in &[1usize, 2, 3, 4, 8, 16, 64] {
+                let (b, h, d) = (2usize, 2usize, 8usize);
+                let q = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+                let k = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+                let v = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+                let (exact, _) = attention_fwd(&q, &k, &v, b, s, h);
+                let chunked = attention_fwd_chunked(&q, &k, &v, b, s, h, chunk);
+                assert_rel_close(
+                    &chunked,
+                    &exact,
+                    ATTN_CHUNK_REL_TOL,
+                    &format!("s={s} chunk={chunk}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_attention_survives_extreme_score_ranges() {
+        // Large-magnitude Q/K stress the running-max rescale: later blocks
+        // raise the max by tens of units, so history must be rescaled by
+        // exp(large negative) without over/underflow artifacts.
+        let mut rng = Pcg64::seeded(109);
+        let (b, s, h, d) = (1usize, 17usize, 1usize, 8usize);
+        let q = Tensor::randn(&[b * s, d], 6.0, &mut rng);
+        let k = Tensor::randn(&[b * s, d], 6.0, &mut rng);
+        let v = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+        let (exact, _) = attention_fwd(&q, &k, &v, b, s, h);
+        for chunk in [1usize, 3, 5, 16] {
+            let chunked = attention_fwd_chunked(&q, &k, &v, b, s, h, chunk);
+            assert_rel_close(&chunked, &exact, ATTN_CHUNK_REL_TOL, &format!("chunk={chunk}"));
+        }
+    }
+
+    #[test]
+    fn chunked_attention_respects_causality() {
+        let mut rng = Pcg64::seeded(110);
+        let (b, s, h, d) = (1usize, 5usize, 2usize, 8usize);
+        let q = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+        let k = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+        let v = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+        let ctx = attention_fwd_chunked(&q, &k, &v, b, s, h, 2);
+        let mut v2 = v.clone();
+        for x in v2.row_mut(4) {
+            *x += 5.0;
+        }
+        let ctx2 = attention_fwd_chunked(&q, &k, &v2, b, s, h, 2);
+        for pos in 0..4 {
+            assert_eq!(ctx.row(pos), ctx2.row(pos), "pos {pos}");
+        }
+        assert_ne!(ctx.row(4), ctx2.row(4));
     }
 
     #[test]

@@ -10,9 +10,11 @@
 //! qmatmul paths are serve-reachable, so shape problems surface as
 //! `Err`, never as a panic inside a lane thread.
 
-use super::forward::embed_rows;
+use super::forward::{embed_rows, RowSelect};
 use super::kernels;
-use super::ops::{act_fwd, attention_fwd, layernorm_fwd, linear_fwd};
+use super::ops::{
+    act_fwd, attention_fwd, attention_fwd_chunked, layernorm_fwd, linear_fwd, ATTN_CHUNK,
+};
 use super::weights::{LmSkeleton, LmWeights};
 use crate::metrics::MemoryLedger;
 use crate::quant::{QLinearStore, QuantizedLinear};
@@ -292,6 +294,15 @@ impl QuantizedLm {
     /// are **bit-identical** to `forward(seq_i, 1, S_i)` — asserted by the
     /// batch-parity test.
     pub fn forward_batch(&self, seqs: &[&[u32]]) -> Result<Vec<Tensor>> {
+        self.forward_batch_rows(seqs, RowSelect::Full)
+    }
+
+    /// [`Self::forward_batch`] with an explicit [`RowSelect`] mode. In
+    /// `LastRow` mode each returned per-sequence tensor is the single
+    /// answer-row logits `[1, V]`, bit-identical to the last row of the
+    /// same sequence's `forward_rows(…, LastRow)` — the serve lanes'
+    /// batched entry point.
+    pub fn forward_batch_rows(&self, seqs: &[&[u32]], rows: RowSelect) -> Result<Vec<Tensor>> {
         for s in seqs {
             ensure!(!s.is_empty(), "empty sequence in batch");
         }
@@ -313,9 +324,10 @@ impl QuantizedLm {
                     tokens.len() == chunk.len() * seq,
                     "equal-shape chunk mixed sequence lengths"
                 );
-                let logits = self.forward(&tokens, chunk.len(), seq)?;
+                let out_per = rows.out_rows(1, seq);
+                let logits = self.forward_rows(&tokens, chunk.len(), seq, rows)?;
                 Ok((0..chunk.len())
-                    .map(|gi| logits.slice_rows(gi * seq, (gi + 1) * seq))
+                    .map(|gi| logits.slice_rows(gi * out_per, (gi + 1) * out_per))
                     .collect())
             },
         )
@@ -325,7 +337,30 @@ impl QuantizedLm {
     /// addressed through the resolved [`LmPlan`] — no name formatting or
     /// map lookups on the hot path.
     pub fn forward(&self, tokens: &[u32], batch: usize, seq: usize) -> Result<Tensor> {
-        let _span = crate::trace::span_detail("model", "lm.forward", || format!("{batch}x{seq}"));
+        self.forward_rows(tokens, batch, seq, RowSelect::Full)
+    }
+
+    /// [`Self::forward`] with an explicit [`RowSelect`] mode.
+    ///
+    /// `Full` keeps the exact attention oracle and full `[B·S, V]` logits
+    /// bit-identically (eval/perplexity path). `LastRow` is the serve
+    /// path: attention runs chunked ([`attention_fwd_chunked`], key
+    /// blocks of [`ATTN_CHUNK`], within
+    /// [`super::ops::ATTN_CHUNK_REL_TOL`] of the oracle) and only each
+    /// sequence's final position reaches the final layernorm + head
+    /// matmul, so logits are `[B, V]` and no `O(S²)` or `O(B·S·V)`
+    /// transient exists.
+    pub fn forward_rows(
+        &self,
+        tokens: &[u32],
+        batch: usize,
+        seq: usize,
+        rows: RowSelect,
+    ) -> Result<Tensor> {
+        let _span = crate::trace::span_detail("model", "lm.forward", || {
+            format!("{batch}x{seq} {rows:?}")
+        });
+        ensure!(batch > 0 && seq > 0, "forward over an empty token grid");
         let s = &self.skeleton;
         let cfg = &s.config;
         let st = &self.qlinears;
@@ -335,7 +370,12 @@ impl QuantizedLm {
             let q = Self::qmatmul(&ln1, st.at(p.q))?;
             let k = Self::qmatmul(&ln1, st.at(p.k))?;
             let v = Self::qmatmul(&ln1, st.at(p.v))?;
-            let (ctx, _) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
+            let ctx = match rows {
+                RowSelect::Full => attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads).0,
+                RowSelect::LastRow => {
+                    attention_fwd_chunked(&q, &k, &v, batch, seq, cfg.n_heads, ATTN_CHUNK)
+                }
+            };
             let attn_out = Self::qmatmul(&ctx, st.at(p.out))?;
             x.add_assign(&attn_out);
             let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
@@ -343,12 +383,26 @@ impl QuantizedLm {
             let down = Self::qmatmul(&up, st.at(p.down))?;
             x.add_assign(&down);
         }
+        let x = rows.select(x, batch, seq);
         let (lnf, _, _) = layernorm_fwd(&x, &s.lnf_g, &s.lnf_b);
         match self.plan.head {
             Some(h) => Self::qmatmul(&lnf, st.at(h)),
             // tied head stays fp32 (it is the embedding)
             None => Ok(linear_fwd(&lnf, &s.tok_emb)),
         }
+    }
+
+    /// Dominant transient-activation bytes of one fused serve forward of
+    /// `batch` sequences of length `seq` in [`RowSelect::LastRow`] mode:
+    /// the answer-row logits `[B, V]`, the widest per-layer activation
+    /// `[B·S, max(d_model, d_ff)]`, and the chunked attention path's
+    /// `O(ATTN_CHUNK)` score block. This is what the serve lanes book
+    /// against the `activations.<lane>` ledger budget — compare the PR 8
+    /// full-logits booking of `B·S·V` f32s, which row-select removes.
+    pub fn serve_transient_bytes(&self, batch: usize, seq: usize) -> usize {
+        let cfg = &self.skeleton.config;
+        let wide = cfg.d_model.max(cfg.d_ff);
+        (batch * cfg.vocab + batch * seq * wide + ATTN_CHUNK) * 4
     }
 }
 
@@ -552,6 +606,65 @@ mod tests {
             assert_eq!(b.shape(), single.shape());
             assert_eq!(b.data(), single.data(), "len={}", s.len());
         }
+    }
+
+    #[test]
+    fn last_row_batch_parity_and_tolerance_vs_full() {
+        let _kernel = kernel_test_lock(); // fixed kernel across the compares
+        let (_, qlm, _) = build_rtn_qlm(4);
+        let mut rng = Pcg64::seeded(310);
+        let mut seqs: Vec<Vec<u32>> = Vec::new();
+        for len in [1usize, 4, 8, 5, 8] {
+            seqs.push((0..len).map(|_| rng.next_below(32) as u32).collect());
+        }
+        for _ in 0..super::WIDE_GROUP_ROWS + 4 {
+            seqs.push((0..8).map(|_| rng.next_below(32) as u32).collect());
+        }
+        let refs: Vec<&[u32]> = seqs.iter().map(|s| s.as_slice()).collect();
+        // Batch parity: fused LastRow forward ≡ single-sequence LastRow
+        // forward, bit-identically (same code path, row-independent ops).
+        let batched = qlm.forward_batch_rows(&refs, RowSelect::LastRow).expect("batch");
+        for (s, b) in seqs.iter().zip(&batched) {
+            let single = qlm
+                .forward_rows(s, 1, s.len(), RowSelect::LastRow)
+                .expect("forward");
+            assert_eq!(b.shape(), &[1, 32]);
+            assert_eq!(b.data(), single.data(), "len={}", s.len());
+        }
+        // Tolerance vs the exact oracle: LastRow runs the chunked online
+        // softmax; its bounded per-layer deviation compounds across the
+        // blocks, so allow 10× ATTN_CHUNK_REL_TOL end-to-end.
+        for (s, b) in seqs.iter().zip(&batched) {
+            let full = qlm.forward(s, 1, s.len()).expect("forward");
+            let want = full.row(s.len() - 1);
+            let mag = want.iter().fold(1.0f32, |a, &x| a.max(x.abs()));
+            let diff = b
+                .row(0)
+                .iter()
+                .zip(want)
+                .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()));
+            assert!(
+                diff <= 10.0 * crate::model::ops::ATTN_CHUNK_REL_TOL * mag,
+                "len={}: diff={diff:e} mag={mag:e}",
+                s.len()
+            );
+        }
+    }
+
+    #[test]
+    fn serve_transient_bytes_matches_its_documented_formula() {
+        // The quantity the serve lanes book per batch. (The strict-drop
+        // regression vs. the PR 8 full-logits booking only holds where
+        // S·V dominates — bench scale — and lives in benches/footprint.rs;
+        // here we pin the formula itself.)
+        let (_, qlm, _) = build_rtn_qlm(4);
+        let cfg = &qlm.skeleton.config;
+        let (b, s) = (8usize, 8usize);
+        let wide = cfg.d_model.max(cfg.d_ff);
+        assert_eq!(
+            qlm.serve_transient_bytes(b, s),
+            (b * cfg.vocab + b * s * wide + super::ATTN_CHUNK) * 4
+        );
     }
 
     #[test]

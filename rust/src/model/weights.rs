@@ -11,6 +11,54 @@
 use super::config::ModelConfig;
 use crate::rng::Pcg64;
 use crate::tensor::Tensor;
+use std::sync::OnceLock;
+
+/// One transformer block's canonical tap names (the strings
+/// [`crate::model::ActivationTap`] is keyed by).
+#[derive(Clone, Debug)]
+pub struct LayerTapNames {
+    pub attn_q: String,
+    pub attn_k: String,
+    pub attn_v: String,
+    pub attn_out: String,
+    pub mlp_up: String,
+    pub mlp_down: String,
+}
+
+/// Per-layer canonical tap names, formatted once per weights instance.
+///
+/// The calibration sweep runs hundreds of tapped forwards against one
+/// weights instance; formatting `lm.layer{i}.attn.q` etc. inside every
+/// forward was the same hot-path string churn PR 8 removed from the
+/// quantized plans. [`LmWeights::tap_names`] lazily builds this table
+/// exactly once.
+#[derive(Clone, Debug, Default)]
+pub struct TapNames {
+    layers: Vec<LayerTapNames>,
+}
+
+impl TapNames {
+    /// Build the canonical name table for `n_layers` transformer blocks.
+    pub fn for_layers(n_layers: usize) -> Self {
+        let layers = (0..n_layers)
+            .map(|i| LayerTapNames {
+                attn_q: format!("lm.layer{i}.attn.q"),
+                attn_k: format!("lm.layer{i}.attn.k"),
+                attn_v: format!("lm.layer{i}.attn.v"),
+                attn_out: format!("lm.layer{i}.attn.out"),
+                mlp_up: format!("lm.layer{i}.mlp.up"),
+                mlp_down: format!("lm.layer{i}.mlp.down"),
+            })
+            .collect();
+        TapNames { layers }
+    }
+
+    /// Names of block `li` (panics past `n_layers`, like the forward's
+    /// own layer indexing would).
+    pub fn layer(&self, li: usize) -> &LayerTapNames {
+        &self.layers[li]
+    }
+}
 
 /// One transformer block's parameters.
 #[derive(Clone, Debug)]
@@ -40,6 +88,8 @@ pub struct LmWeights {
     pub lnf_b: Tensor,
     /// `[vocab, d_model]`; `None` when tied to `tok_emb`.
     pub head: Option<Tensor>,
+    /// Lazily-built canonical tap names (see [`TapNames`]).
+    tap_names: OnceLock<TapNames>,
 }
 
 impl LmWeights {
@@ -74,12 +124,21 @@ impl LmWeights {
                 Some(Tensor::randn(&[config.vocab, d], std, rng))
             },
             config: config.clone(),
+            tap_names: OnceLock::new(),
         }
     }
 
     /// The LM head matrix (tied or not).
     pub fn head_matrix(&self) -> &Tensor {
         self.head.as_ref().unwrap_or(&self.tok_emb)
+    }
+
+    /// Canonical per-layer tap names, formatted once per weights instance
+    /// and cached — the tapped forwards read from here instead of
+    /// rebuilding the strings per call.
+    pub fn tap_names(&self) -> &TapNames {
+        self.tap_names
+            .get_or_init(|| TapNames::for_layers(self.config.n_layers))
     }
 
     /// All quantizable linear layers in forward order, with canonical

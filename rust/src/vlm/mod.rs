@@ -22,7 +22,7 @@ use crate::model::config::ModelConfig;
 
 pub mod io;
 pub mod train;
-use crate::model::forward::ActivationTap;
+use crate::model::forward::{ActivationTap, RowSelect};
 use crate::model::ops::*;
 use crate::model::quantized::LmPlan;
 use crate::model::weights::LmWeights;
@@ -444,12 +444,26 @@ pub fn vlm_forward(
     patches: &Tensor,
     text: &[u32],
     batch: usize,
+    tap: Option<&mut ActivationTap>,
+) -> Tensor {
+    vlm_forward_rows(w, patches, text, batch, tap, RowSelect::Full)
+}
+
+/// [`vlm_forward`] with an explicit [`RowSelect`] mode. `Full` is
+/// bit-identical to [`vlm_forward`]; `LastRow` returns only each
+/// sequence's answer-row logits `[B, V]`.
+pub fn vlm_forward_rows(
+    w: &VlmWeights,
+    patches: &Tensor,
+    text: &[u32],
+    batch: usize,
     mut tap: Option<&mut ActivationTap>,
+    rows: RowSelect,
 ) -> Tensor {
     let vrec = vision_forward(w, patches, tap.as_deref_mut());
     let x = assemble_embeddings(w, &vrec.img_tokens, text, batch);
     let s = w.config.n_patches + text.len() / batch;
-    lm_body_forward(&w.lm, x, batch, s, tap)
+    lm_body_forward(&w.lm, x, batch, s, tap, rows)
 }
 
 /// The decoder body on pre-assembled embeddings (shared by fp and
@@ -460,33 +474,37 @@ fn lm_body_forward(
     batch: usize,
     seq: usize,
     mut tap: Option<&mut ActivationTap>,
+    rows: RowSelect,
 ) -> Tensor {
     let cfg = &lm.config;
+    let names = lm.tap_names();
     for (li, l) in lm.layers.iter().enumerate() {
+        let names = names.layer(li);
         let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
         if let Some(t) = tap.as_deref_mut() {
-            t.grab_pub(&format!("lm.layer{li}.attn.q"), &ln1);
-            t.grab_pub(&format!("lm.layer{li}.attn.k"), &ln1);
-            t.grab_pub(&format!("lm.layer{li}.attn.v"), &ln1);
+            t.grab_pub(&names.attn_q, &ln1);
+            t.grab_pub(&names.attn_k, &ln1);
+            t.grab_pub(&names.attn_v, &ln1);
         }
         let q = linear_fwd(&ln1, &l.wq);
         let k = linear_fwd(&ln1, &l.wk);
         let v = linear_fwd(&ln1, &l.wv);
         let (ctx, _) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
         if let Some(t) = tap.as_deref_mut() {
-            t.grab_pub(&format!("lm.layer{li}.attn.out"), &ctx);
+            t.grab_pub(&names.attn_out, &ctx);
         }
         x.add_assign(&linear_fwd(&ctx, &l.wo));
         let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
         if let Some(t) = tap.as_deref_mut() {
-            t.grab_pub(&format!("lm.layer{li}.mlp.up"), &ln2);
+            t.grab_pub(&names.mlp_up, &ln2);
         }
         let up = act_fwd(&linear_fwd(&ln2, &l.w_up), cfg.activation);
         if let Some(t) = tap.as_deref_mut() {
-            t.grab_pub(&format!("lm.layer{li}.mlp.down"), &up);
+            t.grab_pub(&names.mlp_down, &up);
         }
         x.add_assign(&linear_fwd(&up, &l.w_down));
     }
+    let x = rows.select(x, batch, seq);
     let (lnf, _, _) = layernorm_fwd(&x, &lm.lnf_g, &lm.lnf_b);
     if let Some(t) = tap.as_deref_mut() {
         if lm.head.is_some() {
@@ -512,6 +530,7 @@ fn lm_body_forward(
 fn forward_pairs_with(
     pairs: &[(&Tensor, &[u32])],
     n_patches: usize,
+    rows: RowSelect,
     f: &(dyn Fn(&Tensor, &[u32], usize) -> Result<Tensor> + Sync),
 ) -> Result<Vec<Tensor>> {
     for (i, (p, q)) in pairs.iter().enumerate() {
@@ -535,8 +554,10 @@ fn forward_pairs_with(
             }
             let patches = Tensor::from_vec(&[b * n_patches, pd], pdata);
             let logits = f(&patches, &text, b)?;
-            let s = n_patches + tlen;
-            Ok((0..b).map(|gi| logits.slice_rows(gi * s, (gi + 1) * s)).collect())
+            let out_per = rows.out_rows(1, n_patches + tlen);
+            Ok((0..b)
+                .map(|gi| logits.slice_rows(gi * out_per, (gi + 1) * out_per))
+                .collect())
         },
     )
 }
@@ -548,7 +569,7 @@ fn forward_pairs_with(
 /// fusion/sharding policy.
 pub fn vlm_forward_batch(w: &VlmWeights, pairs: &[(&Tensor, &[u32])]) -> Result<Vec<Tensor>> {
     let f = |p: &Tensor, t: &[u32], b: usize| Ok(vlm_forward(w, p, t, b, None));
-    forward_pairs_with(pairs, w.config.n_patches, &f)
+    forward_pairs_with(pairs, w.config.n_patches, RowSelect::Full, &f)
 }
 
 /// Quantized VLM: vision/cross/lm linears replaced per the CMDQ policy,
@@ -667,7 +688,24 @@ impl QuantizedVlm {
     /// Quantized forward (mirrors [`vlm_forward`]); linears addressed
     /// through the resolved [`VlmPlan`].
     pub fn forward(&self, patches: &Tensor, text: &[u32], batch: usize) -> Result<Tensor> {
-        let _span = crate::trace::span_detail("model", "vlm.forward", || format!("b{batch}"));
+        self.forward_rows(patches, text, batch, RowSelect::Full)
+    }
+
+    /// [`Self::forward`] with an explicit [`RowSelect`] mode. `Full` keeps
+    /// the exact attention oracle and full combined-sequence logits
+    /// bit-identically; `LastRow` is the VQA serve path — chunked
+    /// attention in the decoder and only the answer row through the head,
+    /// so logits are `[B, V]`.
+    pub fn forward_rows(
+        &self,
+        patches: &Tensor,
+        text: &[u32],
+        batch: usize,
+        rows: RowSelect,
+    ) -> Result<Tensor> {
+        let _span =
+            crate::trace::span_detail("model", "vlm.forward", || format!("b{batch} {rows:?}"));
+        ensure!(batch > 0 && !text.is_empty(), "forward over an empty batch");
         let cfg = &self.skeleton.config;
         let st = &self.qlinears;
         let plan = &self.plan;
@@ -692,18 +730,50 @@ impl QuantizedVlm {
             batch,
         );
         let s = cfg.n_patches + text.len() / batch;
-        self.lm_body(x, batch, s)
+        self.lm_body_rows(x, batch, s, rows)
     }
 
     /// Batched quantized inference over `(patches, question)` pairs — the
     /// VQA serve lane's entry point. Bit-identical per pair to
     /// [`Self::forward`] on that pair alone; see [`forward_pairs_with`].
     pub fn forward_batch(&self, pairs: &[(&Tensor, &[u32])]) -> Result<Vec<Tensor>> {
-        let f = |p: &Tensor, t: &[u32], b: usize| self.forward(p, t, b);
-        forward_pairs_with(pairs, self.skeleton.config.n_patches, &f)
+        self.forward_batch_rows(pairs, RowSelect::Full)
     }
 
-    fn lm_body(&self, mut x: Tensor, batch: usize, seq: usize) -> Result<Tensor> {
+    /// [`Self::forward_batch`] with an explicit [`RowSelect`] mode — in
+    /// `LastRow` mode each returned tensor is `[1, V]`, bit-identical to
+    /// the same pair's `forward_rows(…, LastRow)`.
+    pub fn forward_batch_rows(
+        &self,
+        pairs: &[(&Tensor, &[u32])],
+        rows: RowSelect,
+    ) -> Result<Vec<Tensor>> {
+        let f = |p: &Tensor, t: &[u32], b: usize| self.forward_rows(p, t, b, rows);
+        forward_pairs_with(pairs, self.skeleton.config.n_patches, rows, &f)
+    }
+
+    /// Dominant transient-activation bytes of one fused serve forward of
+    /// `batch` pairs with `question_len`-token questions in
+    /// [`RowSelect::LastRow`] mode: answer-row logits `[B, V]`, the widest
+    /// per-layer activation across the three towers, and the chunked
+    /// attention score block — what the VQA lane books against its
+    /// `activations.vqa` ledger budget.
+    pub fn serve_transient_bytes(&self, batch: usize, question_len: usize) -> usize {
+        let cfg = &self.skeleton.config;
+        let s = cfg.n_patches + question_len;
+        // Vision-tower MLPs widen to 2·d_vision; the LM's d_ff usually
+        // dominates, but take the honest max across towers.
+        let wide = cfg.lm.d_model.max(cfg.lm.d_ff).max(2 * cfg.d_vision).max(cfg.d_cross);
+        (batch * cfg.lm.vocab + batch * s * wide + ATTN_CHUNK) * 4
+    }
+
+    fn lm_body_rows(
+        &self,
+        mut x: Tensor,
+        batch: usize,
+        seq: usize,
+        rows: RowSelect,
+    ) -> Result<Tensor> {
         let lm = &self.skeleton.lm;
         let cfg = &lm.config;
         let st = &self.qlinears;
@@ -712,12 +782,18 @@ impl QuantizedVlm {
             let q = QuantizedLm::qmatmul(&ln1, st.at(p.q))?;
             let k = QuantizedLm::qmatmul(&ln1, st.at(p.k))?;
             let v = QuantizedLm::qmatmul(&ln1, st.at(p.v))?;
-            let (ctx, _) = attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads);
+            let ctx = match rows {
+                RowSelect::Full => attention_fwd(&q, &k, &v, batch, seq, cfg.n_heads).0,
+                RowSelect::LastRow => {
+                    attention_fwd_chunked(&q, &k, &v, batch, seq, cfg.n_heads, ATTN_CHUNK)
+                }
+            };
             x.add_assign(&QuantizedLm::qmatmul(&ctx, st.at(p.out))?);
             let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
             let up = act_fwd(&QuantizedLm::qmatmul(&ln2, st.at(p.up))?, cfg.activation);
             x.add_assign(&QuantizedLm::qmatmul(&up, st.at(p.down))?);
         }
+        let x = rows.select(x, batch, seq);
         let (lnf, _, _) = layernorm_fwd(&x, &lm.lnf_g, &lm.lnf_b);
         match self.plan.lm.head {
             Some(h) => QuantizedLm::qmatmul(&lnf, st.at(h)),
@@ -866,6 +942,55 @@ mod tests {
         for ((p, q), b) in pairs.iter().zip(&batched) {
             let single = qvlm.forward(p, q, 1).expect("forward");
             assert_eq!(b.data(), single.data(), "t_len={}", q.len());
+        }
+    }
+
+    #[test]
+    fn fp_last_row_bit_identical_to_full_last_rows() {
+        // The fp path keeps exact attention in both modes, so LastRow is
+        // pure row selection — bit-identical to the full forward's final
+        // positions.
+        let (w, patches, text, batch) = tiny();
+        let full = vlm_forward(&w, &patches, &text, batch, None);
+        let last = vlm_forward_rows(&w, &patches, &text, batch, None, RowSelect::LastRow);
+        let s = w.config.n_patches + text.len() / batch;
+        assert_eq!(last.shape(), &[batch, 24]);
+        for b in 0..batch {
+            assert_eq!(last.row(b), full.row(b * s + s - 1), "seq {b}");
+        }
+    }
+
+    #[test]
+    fn quantized_last_row_batch_parity_and_tolerance_vs_full() {
+        let _kernel = crate::model::kernels::kernel_test_lock(); // fixed kernel across compares
+        let (w, _, _, _) = tiny();
+        let qvlm = QuantizedVlm::quantize_rtn(w.clone(), QuantGrid::new(4, 8)).expect("complete");
+        let mut rng = Pcg64::seeded(614);
+        let owned = mixed_pairs(&w.config, &mut rng);
+        let pairs: Vec<(&Tensor, &[u32])> =
+            owned.iter().map(|(p, q)| (p, q.as_slice())).collect();
+        // Batch parity: the fused LastRow forward is the same code path as
+        // the single-pair LastRow forward — bit-identical.
+        let batched = qvlm.forward_batch_rows(&pairs, RowSelect::LastRow).expect("batch");
+        for ((p, q), b) in pairs.iter().zip(&batched) {
+            let single = qvlm.forward_rows(p, q, 1, RowSelect::LastRow).expect("forward");
+            assert_eq!(b.shape(), &[1, 24]);
+            assert_eq!(b.data(), single.data(), "t_len={}", q.len());
+        }
+        // Tolerance vs the exact full-logits oracle: LastRow swaps in the
+        // chunked online softmax, whose per-layer deviation is bounded by
+        // ATTN_CHUNK_REL_TOL; allow compounding across the two blocks.
+        for ((p, q), b) in pairs.iter().zip(&batched) {
+            let full = qvlm.forward(p, q, 1).expect("forward");
+            let s = w.config.n_patches + q.len();
+            let want = full.row(s - 1);
+            let mag = want.iter().fold(1.0f32, |a, &x| a.max(x.abs()));
+            let diff = b
+                .row(0)
+                .iter()
+                .zip(want)
+                .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()));
+            assert!(diff <= 1e-4 * mag, "t_len={}: diff={diff:e} mag={mag:e}", q.len());
         }
     }
 

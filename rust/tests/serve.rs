@@ -6,7 +6,8 @@
 //! small runners.
 
 use rpiq::coordinator::{
-    Answer, LaneEngine, Payload, Response, ServeConfig, Server, LANE_SENTIMENT, LANE_VQA,
+    Answer, LaneEngine, Payload, Response, ServeConfig, Server, SubmitError, LANE_SENTIMENT,
+    LANE_VQA,
 };
 use rpiq::data::corpus::Lexicon;
 use rpiq::data::Tokenizer;
@@ -69,6 +70,7 @@ fn backpressure_engages_at_queue_cap() {
             max_batch: 1,
             max_wait: Duration::from_millis(0),
             lanes: 1,
+            ..Default::default()
         },
     );
     // First request: the lane picks it up and parks in run_batch.
@@ -115,6 +117,7 @@ fn shutdown_drains_all_pending_across_every_lane() {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             queue_cap: 64,
+            ..Default::default()
         },
     );
     let n = 40;
@@ -179,6 +182,7 @@ fn mixed_mode_serving_peak_stays_under_fp32_baseline() {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             queue_cap: 64,
+            ..Default::default()
         },
     );
     qlm.register_resident(server.ledger());
@@ -240,6 +244,7 @@ fn mixed_replay_answers_every_id_exactly_once() {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             queue_cap: 128,
+            ..Default::default()
         },
     );
     // Mixed modes AND mixed lengths: several sentiment prompt widths plus
@@ -281,4 +286,72 @@ fn mixed_replay_answers_every_id_exactly_once() {
     assert_eq!(stats.count(), n);
     assert_eq!(stats.lane(LANE_SENTIMENT).unwrap().count(), n / 2);
     assert_eq!(stats.lane(LANE_VQA).unwrap().count(), n / 2);
+}
+
+#[test]
+fn over_budget_requests_rejected_at_submit() {
+    let tok = Lexicon::tokenizer();
+    let qlm = tiny_qlm(&tok);
+    let server = Server::start(
+        Arc::clone(&qlm),
+        &tok,
+        ServeConfig { activation_budget: Some(64), ..Default::default() },
+    );
+    let tokens = tok.encode("sentiment of text : it was fine answer :");
+    // A 64-byte budget is below any single request's booked transient, so
+    // the submit is rejected before it can deadlock a lane.
+    let needed = qlm.serve_transient_bytes(1, tokens.len());
+    assert!(needed > 64, "test premise: one request must overshoot the budget");
+    match server.submit_tokens(tokens).unwrap_err() {
+        SubmitError::OverBudget { needed: n, cap } => {
+            assert_eq!(n, needed);
+            assert_eq!(cap, 64);
+        }
+        other => panic!("expected OverBudget, got {other:?}"),
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.rejects().over_budget, 1);
+    assert_eq!(stats.count(), 0);
+}
+
+#[test]
+fn budget_splits_batches_and_still_answers_everything() {
+    let tok = Lexicon::tokenizer();
+    let qlm = tiny_qlm(&tok);
+    let tokens = tok.encode("sentiment of text : it was fine answer :");
+    // Budget admits exactly one request's transient at a time: fused
+    // groups split into singleton sub-batches and the two lanes serialize
+    // through try_alloc — yet every request must still be answered.
+    let budget = qlm.serve_transient_bytes(1, tokens.len());
+    assert!(
+        qlm.serve_transient_bytes(2, tokens.len()) > budget,
+        "test premise: two fused requests must overshoot the budget"
+    );
+    let server = Server::start(
+        Arc::clone(&qlm),
+        &tok,
+        ServeConfig {
+            lanes: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+            activation_budget: Some(budget),
+        },
+    );
+    let ledger = server.ledger().clone();
+    let n = 16;
+    let channels: Vec<Channel<Response>> = (0..n)
+        .map(|_| server.submit_tokens(tokens.clone()).unwrap())
+        .collect();
+    for ch in &channels {
+        assert!(ch.recv().is_some(), "request dropped under budget");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.count(), n);
+    assert_eq!(stats.rejects().total(), 0);
+    // The enforcement proof: the lane tag's ledger peak never exceeded
+    // the cap even with two lanes booking concurrently.
+    let peak = ledger.peak_for("activations.sentiment") as usize;
+    assert!(peak > 0, "lanes booked transients");
+    assert!(peak <= budget, "peak {peak} must stay within budget {budget}");
 }

@@ -124,6 +124,7 @@ fn span_trees_balance_across_engine_panics() {
             max_batch: 4,
             max_wait: Duration::from_millis(0),
             queue_cap: 16,
+            ..Default::default()
         },
     );
     // The engine panics inside the lane's catch_unwind; the request's
