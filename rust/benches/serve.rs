@@ -1,6 +1,9 @@
 //! Serving-engine sweep: lanes × clients on a mixed sentiment+VQA replay
 //! through the multi-lane sharded batcher, plus a wide-batch arm that
-//! exercises the explicit row-wise sharding of large equal-shape groups.
+//! exercises the explicit row-wise sharding of large equal-shape groups,
+//! plus a streaming-decode arm (paged-KV cached decode vs the
+//! recompute-from-scratch oracle, and a continuous-batching server sweep
+//! with per-token p50/p99) summarized into `BENCH_decode.json`.
 //!
 //! Output is one JSON line per arm (machine-readable, like the table
 //! benches' report files) followed by a human summary. The headline
@@ -14,14 +17,15 @@
 //! ```
 
 use rpiq::coordinator::experiments as exp;
-use rpiq::coordinator::{replay_mixed, ServeConfig, Server};
+use rpiq::coordinator::{replay_generate, replay_mixed, Payload, ServeConfig, Server, LANE_GENERATE};
 use rpiq::jsonx::Json;
-use rpiq::model::{LmWeights, ModelConfig, QuantizedLm};
+use rpiq::metrics::MemoryLedger;
+use rpiq::model::{KvPool, LmWeights, ModelConfig, QuantizedLm, PAGE_SLOTS};
 use rpiq::quant::QuantGrid;
 use rpiq::rng::Pcg64;
 use rpiq::vlm::{QuantizedVlm, VlmConfig, VlmWeights};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Serving latency depends on shapes, not checkpoint quality, so the
 /// bench RTN-quantizes freshly initialized weights instead of running the
@@ -142,6 +146,106 @@ fn main() -> anyhow::Result<()> {
             if p4 < p1 { "multi-lane wins" } else { "single-lane wins here" }
         );
     }
+
+    // -- streaming decode arm -------------------------------------------
+    // Model level: one sequence decoded to the full context window, the
+    // paged-KV cached path against the O(S²) recompute-from-scratch
+    // oracle — the two must emit bit-identical tokens, and the wall-clock
+    // ratio is the headline `cached_vs_recompute` field of
+    // BENCH_decode.json. Server level: a lanes × clients sweep through
+    // the continuous-batching generate lane with per-token p50/p99 from
+    // the lane's token histogram.
+    println!("\n== decode bench: paged KV cache vs recompute oracle ==");
+    let tok = world.tokenizer().clone();
+    let prompt = tok.encode("sentiment of text : i loved this movie answer :");
+    let seq_len = lm.config().seq_len;
+    let max_new = seq_len + 1 - prompt.len();
+    let ledger = MemoryLedger::new();
+    let pool = KvPool::new(
+        lm.config().n_layers,
+        lm.config().d_model,
+        lm.config().n_layers * seq_len.div_ceil(PAGE_SLOTS),
+        ledger.clone(),
+    );
+    let (mut cached_s, mut recompute_s) = (f64::INFINITY, f64::INFINITY);
+    let (mut cached_out, mut oracle_out) = (Vec::new(), Vec::new());
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        cached_out = lm.generate(&pool, &prompt, max_new, None)?;
+        cached_s = cached_s.min(t0.elapsed().as_secs_f64());
+        let t1 = Instant::now();
+        oracle_out = lm.generate_recompute(&prompt, max_new, None)?;
+        recompute_s = recompute_s.min(t1.elapsed().as_secs_f64());
+    }
+    assert_eq!(cached_out, oracle_out, "cached decode must match the oracle bitwise");
+    let cached_tok_s = max_new as f64 / cached_s;
+    let recompute_tok_s = max_new as f64 / recompute_s;
+    let speedup = cached_tok_s / recompute_tok_s;
+    println!(
+        "DECODE_SPEEDUP cached {cached_tok_s:.1} tok/s vs recompute {recompute_tok_s:.1} tok/s: \
+         {speedup:.2}x ({max_new} tokens at seq {seq_len})"
+    );
+    if speedup < 5.0 {
+        println!("WARNING: cached decode below the 5x target over recompute");
+    }
+
+    let max_tokens = 16;
+    let prompts: Vec<Vec<u32>> = world
+        .replay_items("sentiment", 64)
+        .into_iter()
+        .filter_map(|p| match p {
+            Payload::Sentiment { tokens } => Some(tokens),
+            _ => None,
+        })
+        .collect();
+    let mut server_arms = Vec::new();
+    for lanes in [1usize, 2] {
+        for clients in [2usize, 8] {
+            let server = Server::start_generate(
+                Arc::clone(&lm),
+                &tok,
+                ServeConfig {
+                    lanes,
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                    queue_cap: 256,
+                    ..Default::default()
+                },
+            );
+            let (tok_s, total) = replay_generate(&server, prompts.clone(), max_tokens, clients);
+            let stats = server.shutdown();
+            assert_eq!(stats.count(), prompts.len(), "decode replay lost requests");
+            let per_token = stats.lane_tokens(LANE_GENERATE).expect("per-token stats");
+            let rec = Json::obj()
+                .with("bench", Json::Str("decode".into()))
+                .with("arm", Json::Str("generate-sweep".into()))
+                .with("lanes", Json::Num(lanes as f64))
+                .with("clients", Json::Num(clients as f64))
+                .with("requests", Json::Num(prompts.len() as f64))
+                .with("tokens", Json::Num(total as f64))
+                .with("tput_tok_s", Json::Num(tok_s))
+                .with("token_p50_ms", Json::Num(per_token.percentile_ms(50.0)))
+                .with("token_p99_ms", Json::Num(per_token.percentile_ms(99.0)));
+            println!("{}", rec.dump());
+            server_arms.push(rec);
+        }
+    }
+    let decode_json = Json::obj()
+        .with("bench", Json::Str("decode".into()))
+        .with("model", Json::Str(lm.config().name.clone()))
+        .with("seq_len", Json::Num(seq_len as f64))
+        .with("prompt_tokens", Json::Num(prompt.len() as f64))
+        .with("new_tokens", Json::Num(max_new as f64))
+        .with("cached_tok_s", Json::Num(cached_tok_s))
+        .with("recompute_tok_s", Json::Num(recompute_tok_s))
+        .with("cached_vs_recompute", Json::Num(speedup))
+        .with(
+            "kv_cache_peak_bytes",
+            Json::Num(ledger.peak_for(rpiq::metrics::tags::KV_CACHE) as f64),
+        )
+        .with("server_arms", Json::Arr(server_arms));
+    std::fs::write("BENCH_decode.json", decode_json.pretty())?;
+    println!("wrote BENCH_decode.json");
 
     // Optional trace artifact: `RPIQ_TRACE=out.json` records one extra
     // bounded replay (outside the timed sweep, so it cannot perturb the

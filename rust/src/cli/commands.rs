@@ -2,7 +2,10 @@
 
 use super::args::Args;
 use crate::coordinator::experiments::{self as exp, World};
-use crate::coordinator::{quantize_lm, quantize_vlm, replay_mixed, Method, ServeConfig, Server};
+use crate::coordinator::{
+    quantize_lm, quantize_vlm, replay_generate, replay_mixed, Method, Payload, ServeConfig,
+    Server, LANE_GENERATE,
+};
 use crate::model::io::{load_lm, load_qlm, save_lm, save_qlm};
 use crate::model::{ModelConfig, QuantizedLm};
 use crate::quant::{CmdqPolicy, QuantConfig, RpiqParams};
@@ -312,7 +315,10 @@ fn parse_method_named(name: &str, args: &mut Args) -> Result<Method> {
 ///
 /// `--mode sentiment` (default) serves the LM lane; `--mode vqa` the VLM
 /// lane (`--qckpt`/`--ckpt` if the file is a VLM, or
-/// `--vlm-qckpt`/`--vlm-ckpt`); `--mode mixed` serves both side by side.
+/// `--vlm-qckpt`/`--vlm-ckpt`); `--mode mixed` serves both side by side;
+/// `--mode generate` streams greedy decode through the paged KV cache
+/// with continuous batching (`--max-tokens` per request, `--kv-pages`
+/// pool size).
 pub fn serve(args: &mut Args) -> Result<()> {
     let mode = args.get("mode", "sentiment");
     let ckpt = args.opt("ckpt").map(PathBuf::from);
@@ -326,6 +332,13 @@ pub fn serve(args: &mut Args) -> Result<()> {
     // `--activation-budget BYTES` caps each lane's concurrent transient
     // activations on the server ledger; omitted = observe-only.
     let activation_budget: Option<usize> = match args.opt("activation-budget") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    // generate-mode knobs: tokens decoded per request and the paged KV
+    // pool size (pages; omitted = sized for lanes x max_batch sequences)
+    let max_tokens = args.usize_of("max-tokens", 4)?;
+    let kv_pages: Option<usize> = match args.opt("kv-pages") {
         Some(v) => Some(v.parse()?),
         None => None,
     };
@@ -355,12 +368,12 @@ pub fn serve(args: &mut Args) -> Result<()> {
     }
     let w = world();
     let tok = w.tokenizer().clone();
-    let scfg = ServeConfig { max_batch, lanes, activation_budget, ..Default::default() };
+    let scfg = ServeConfig { max_batch, lanes, activation_budget, kv_pages, ..Default::default() };
 
     let want_lm = mode != "vqa";
-    let want_vlm = mode != "sentiment";
-    if !matches!(mode.as_str(), "sentiment" | "vqa" | "mixed") {
-        bail!("unknown mode '{mode}' (sentiment|vqa|mixed)");
+    let want_vlm = matches!(mode.as_str(), "vqa" | "mixed");
+    if !matches!(mode.as_str(), "sentiment" | "vqa" | "mixed" | "generate") {
+        bail!("unknown mode '{mode}' (sentiment|vqa|mixed|generate)");
     }
 
     let mib = |b: usize| b as f64 / (1 << 20) as f64;
@@ -473,6 +486,7 @@ pub fn serve(args: &mut Args) -> Result<()> {
     }
 
     let server = match (&qlm, &qvlm) {
+        (Some(lm), None) if mode == "generate" => Server::start_generate(Arc::clone(lm), &tok, scfg),
         (Some(lm), Some(vlm)) => {
             Server::start_mixed(Arc::clone(lm), Arc::clone(vlm), &tok, scfg)
         }
@@ -494,9 +508,22 @@ pub fn serve(args: &mut Args) -> Result<()> {
     // test sets, interleaved in mixed mode. The heartbeat thread borrows
     // the server for the replay's duration (scoped), polling in short
     // slices so it exits promptly once the replay returns.
-    let items = w.replay_items(&mode, n_requests);
+    // generate mode replays the sentiment prompts as decode requests
+    // (tokens streamed per request); the other modes replay one-shot
+    // payloads through the fused lanes.
+    let gen_prompts: Option<Vec<Vec<u32>>> = (mode == "generate").then(|| {
+        w.replay_items("sentiment", n_requests)
+            .into_iter()
+            .filter_map(|p| match p {
+                Payload::Sentiment { tokens } => Some(tokens),
+                _ => None,
+            })
+            .collect()
+    });
+    let items =
+        if mode == "generate" { Vec::new() } else { w.replay_items(&mode, n_requests) };
     let stop = std::sync::atomic::AtomicBool::new(false);
-    let tput = std::thread::scope(|sc| {
+    let (tput, gen_tokens) = std::thread::scope(|sc| {
         if stats_every > 0.0 {
             let (server, ledger, stop) = (&server, &ledger, &stop);
             let period = std::time::Duration::from_secs_f32(stats_every.max(0.05));
@@ -511,20 +538,54 @@ pub fn serve(args: &mut Args) -> Result<()> {
                 }
             });
         }
-        let tput = replay_mixed(&server, items, n_clients);
+        let out = match gen_prompts {
+            Some(prompts) => {
+                let (tok_s, total) = replay_generate(&server, prompts, max_tokens, n_clients);
+                (tok_s, Some(total))
+            }
+            None => (replay_mixed(&server, items, n_clients), None),
+        };
         stop.store(true, std::sync::atomic::Ordering::Relaxed);
-        tput
+        out
     });
+    let kv_pool = server.kv_pool().cloned();
     let stats = server.shutdown();
-    println!(
-        "served {} requests over {} lane(s): {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p95 {:.2} ms",
-        stats.count(),
-        lanes.max(1),
-        tput,
-        stats.mean_ms(),
-        stats.percentile_ms(50.0),
-        stats.percentile_ms(95.0)
-    );
+    if let Some(total) = gen_tokens {
+        let per_tok = stats
+            .lane_tokens(LANE_GENERATE)
+            .map(|t| {
+                format!(
+                    ", per-token p50 {:.3} ms p99 {:.3} ms",
+                    t.percentile_ms(50.0),
+                    t.percentile_ms(99.0)
+                )
+            })
+            .unwrap_or_default();
+        println!(
+            "generated {total} tokens over {} request(s) on {} lane(s): {tput:.1} tok/s{per_tok}",
+            stats.count(),
+            lanes.max(1)
+        );
+    } else {
+        println!(
+            "served {} requests over {} lane(s): {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p95 {:.2} ms",
+            stats.count(),
+            lanes.max(1),
+            tput,
+            stats.mean_ms(),
+            stats.percentile_ms(50.0),
+            stats.percentile_ms(95.0)
+        );
+    }
+    if let Some(pool) = &kv_pool {
+        println!(
+            "kv pool: {}/{} pages free after drain ({:.1} KiB/page), kv_cache peak {:.1} KiB",
+            pool.free_pages(),
+            pool.capacity_pages(),
+            pool.page_bytes() as f64 / 1024.0,
+            ledger.peak_for(crate::metrics::tags::KV_CACHE) as f64 / 1024.0
+        );
+    }
     for name in stats.lane_names() {
         let l = stats.lane(&name).expect("named lane exists");
         println!(
@@ -567,6 +628,83 @@ pub fn serve(args: &mut Args) -> Result<()> {
         "serving peak {:.2} MiB (model resident {:.2} MiB)",
         ledger.peak_mib(),
         ledger.peak_for(crate::model::RESIDENT_TAG) as f64 / (1 << 20) as f64
+    );
+    if let Some(p) = &trace_out {
+        write_trace(p)?;
+    }
+    Ok(())
+}
+
+/// `rpiq generate` — greedy streaming decode of one prompt through the
+/// paged KV cache, printed beside the recompute-from-scratch oracle: the
+/// two must emit identical tokens (the decode determinism contract), and
+/// the cached path's per-token cost is `O(S)` instead of `O(S²)`.
+pub fn generate(args: &mut Args) -> Result<()> {
+    let ckpt = args.opt("ckpt").map(PathBuf::from);
+    let qckpt = args.opt("qckpt").map(PathBuf::from);
+    let prompt_text = args.get("prompt", "sentiment of text : i loved this movie answer :");
+    let max_tokens = args.usize_of("max-tokens", 8)?;
+    let trace_out = args
+        .opt("trace")
+        .map(PathBuf::from)
+        .or_else(|| args.flag("trace").then(|| PathBuf::from("generate-trace.json")));
+    let method = parse_method(args)?;
+    let cfg = quant_cfg(args)?;
+    args.finish()?;
+    if max_tokens == 0 {
+        bail!("--max-tokens must be at least 1");
+    }
+    if trace_out.is_some() {
+        crate::trace::start();
+    }
+    let w = world();
+    let tok = w.tokenizer().clone();
+    let model: Arc<QuantizedLm> = match (&qckpt, &ckpt) {
+        (Some(_), Some(_)) => bail!("pass exactly one of --ckpt / --qckpt"),
+        (Some(p), None) => Arc::new(load_qlm(p)?),
+        (None, Some(p)) => {
+            let weights = load_lm(p)?;
+            let windows = w.calib_windows(weights.config.seq_len, exp::CALIB_SAMPLES);
+            Arc::new(quantize_lm(&weights, &windows, cfg, method)?.model)
+        }
+        (None, None) => bail!("rpiq generate needs --ckpt or --qckpt"),
+    };
+    let mcfg = model.config().clone();
+    // Same context arithmetic as the serve lane: the longest embedded
+    // prefix is prompt + max_tokens − 1 rows, so left-truncate the prompt
+    // to seq_len + 1 − max_tokens.
+    let keep = (mcfg.seq_len + 1).saturating_sub(max_tokens);
+    if keep == 0 {
+        bail!("--max-tokens {max_tokens} exceeds the model context {}", mcfg.seq_len);
+    }
+    let mut prompt = tok.encode(&prompt_text);
+    if prompt.is_empty() {
+        bail!("--prompt produced no tokens");
+    }
+    if prompt.len() > keep {
+        let cut = prompt.len() - keep;
+        prompt.drain(..cut);
+    }
+    let ledger = crate::metrics::MemoryLedger::new();
+    let pages = mcfg.n_layers * mcfg.seq_len.div_ceil(crate::model::PAGE_SLOTS);
+    let pool = crate::model::KvPool::new(mcfg.n_layers, mcfg.d_model, pages, ledger.clone());
+    let t0 = std::time::Instant::now();
+    let out = model.generate(&pool, &prompt, max_tokens, None)?;
+    let cached_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let oracle = model.generate_recompute(&prompt, max_tokens, None)?;
+    let recompute_s = t1.elapsed().as_secs_f64();
+    anyhow::ensure!(out == oracle, "cached decode diverged from the recompute oracle");
+    println!("prompt ({} tokens): {}", prompt.len(), tok.decode(&prompt));
+    println!("output ({} tokens): {}", out.len(), tok.decode(&out));
+    let cached_tps = out.len() as f64 / cached_s.max(1e-12);
+    let recompute_tps = oracle.len() as f64 / recompute_s.max(1e-12);
+    println!(
+        "cached {cached_tps:.1} tok/s | recompute {recompute_tps:.1} tok/s | speedup {:.2}x | kv peak {:.1} KiB (pool {} pages, all free: {})",
+        cached_tps / recompute_tps.max(1e-12),
+        ledger.peak_for(crate::metrics::tags::KV_CACHE) as f64 / 1024.0,
+        pool.capacity_pages(),
+        pool.free_pages() == pool.capacity_pages()
     );
     if let Some(p) = &trace_out {
         write_trace(p)?;

@@ -5,11 +5,13 @@
 //! rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G]
 //!                [--iters T] [--alpha A] [--out model.rpiq] [--trace t.json]
 //! rpiq eval      --ckpt PATH [--method gptq|rpiq|fp] [--n-test N]
-//! rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed]
+//! rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed|generate]
 //!                [--vlm-ckpt PATH | --vlm-qckpt model.rpiq]
 //!                [--lanes N] [--requests N] [--clients C] [--method ...]
-//!                [--activation-budget BYTES]
+//!                [--activation-budget BYTES] [--max-tokens N] [--kv-pages N]
 //!                [--trace [t.json]] [--stats-every SECS]
+//! rpiq generate  --ckpt PATH | --qckpt model.rpiq [--prompt "TEXT"]
+//!                [--max-tokens N]       # cached vs recompute decode
 //! rpiq inspect   --ckpt PATH               # fp32 or quantized .rpiq
 //! rpiq artifacts --dir artifacts   # validate + smoke-run the AOT bundle
 //! rpiq trace summarize --in t.json # per-phase table of a Chrome trace
@@ -44,6 +46,7 @@ pub fn run(mut argv: Vec<String>) -> anyhow::Result<()> {
         "quantize" => commands::quantize(&mut args),
         "eval" => commands::eval(&mut args),
         "serve" => commands::serve(&mut args),
+        "generate" => commands::generate(&mut args),
         "inspect" => commands::inspect(&mut args),
         "artifacts" => commands::artifacts(&mut args),
         "help" | "" => {
@@ -62,11 +65,12 @@ USAGE:
   rpiq quantize  --ckpt PATH --method gptq|rpiq [--bits B] [--group-size G] [--iters T] [--alpha A]
                  [--out model.rpiq] [--trace trace.json]
   rpiq eval      --ckpt PATH [--method fp|gptq|rpiq] [--n-test N]
-  rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed]
+  rpiq serve     --ckpt PATH | --qckpt model.rpiq [--mode sentiment|vqa|mixed|generate]
                  [--vlm-ckpt PATH | --vlm-qckpt model.rpiq]
                  [--lanes N] [--requests N] [--clients C] [--max-batch B]
-                 [--activation-budget BYTES]
+                 [--activation-budget BYTES] [--max-tokens N] [--kv-pages N]
                  [--trace [trace.json]] [--stats-every SECS]
+  rpiq generate  --ckpt PATH | --qckpt model.rpiq [--prompt \"TEXT\"] [--max-tokens N]
   rpiq inspect   --ckpt PATH               (fp32 checkpoint or quantized .rpiq)
   rpiq artifacts [--dir artifacts]
   rpiq trace summarize --in trace.json     (per-phase table of a recorded trace)
@@ -85,4 +89,10 @@ live/peak) while the replay runs. `serve --activation-budget BYTES` caps
 each lane's concurrent transient activations: over-cap single requests
 are rejected at submit and fused batches split to fit. See rust/DESIGN.md
 §Observability and §Activation memory.
+
+`serve --mode generate` streams greedy decode through the paged KV cache
+with continuous batching (`--max-tokens` per request, `--kv-pages` pool
+size); `rpiq generate` runs one prompt through the same cached decode
+and prints its speedup over the recompute-from-scratch oracle. See
+rust/DESIGN.md §Streaming decode.
 ";

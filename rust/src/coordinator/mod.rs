@@ -14,6 +14,7 @@ pub use pipeline::{
     quantize_lm, quantize_vlm, LayerReport, Method, PipelineOutput, PipelineVlmOutput,
 };
 pub use serve::{
-    replay, replay_mixed, Answer, LaneEngine, Payload, Request, Response, SentimentLane,
-    ServeConfig, Server, SubmitError, VqaLane, LANE_SENTIMENT, LANE_VQA,
+    replay, replay_generate, replay_mixed, Answer, GenerateLane, LaneEngine, Payload, Request,
+    Response, SentimentLane, ServeConfig, Server, SubmitError, VqaLane, LANE_GENERATE,
+    LANE_SENTIMENT, LANE_VQA,
 };

@@ -41,9 +41,22 @@
 //!   caps each lane's concurrent transients: single requests that cannot
 //!   ever fit are rejected at submit ([`SubmitError::OverBudget`], counted
 //!   in [`LaneStats`]), fused groups that would overshoot are split into
-//!   budget-fitting sub-batches, and admission into the cap is arbitrated
-//!   through [`MemoryLedger::try_alloc`] so concurrent lanes cannot
-//!   jointly overshoot their own caps.
+//!   budget-fitting sub-batches, and admission into the cap blocks on
+//!   [`MemoryLedger::alloc_blocking`] — the ledger's notify-on-free
+//!   condvar, no sleep polling — so concurrent lanes cannot jointly
+//!   overshoot their own caps;
+//! * **streaming generation** ([`Server::start_generate`]): a third
+//!   deployment shape where each lane runs a **continuous-batching**
+//!   decode loop instead of the fused batcher — prefill seeds a
+//!   sequence's pages in the paged KV cache ([`crate::model::KvPool`],
+//!   ledger tag [`crate::metrics::tags::KV_CACHE`]), every further step
+//!   is `O(S)` attention against the cache
+//!   ([`QuantizedLm::decode_step`]), sequences join and leave the step
+//!   batch *between* steps (admission gated on free pages + the
+//!   activation budget), and every token streams on the reply channel as
+//!   it is produced ([`Answer::Token`], then a final
+//!   [`Answer::Generated`]) — greedy tokens bit-identical to the
+//!   recompute-from-scratch oracle ([`QuantizedLm::generate_recompute`]).
 //!
 //! Threading: lanes are dedicated event-loop threads (they block on the
 //! request queue, so parking them on pool workers would starve the pool).
@@ -60,9 +73,10 @@ use crate::data::tokenizer::Tokenizer;
 use crate::data::SentimentSet;
 use crate::exec::{Channel, ShardedQueue};
 use crate::metrics::{LaneStats, MemoryLedger};
-use crate::model::{QuantizedLm, RowSelect};
+use crate::model::{greedy_argmax, KvPool, KvSeq, QuantizedLm, RowSelect, PAGE_SLOTS};
 use crate::tensor::Tensor;
 use crate::vlm::QuantizedVlm;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -71,6 +85,8 @@ use std::time::{Duration, Instant};
 pub const LANE_SENTIMENT: &str = "sentiment";
 /// Name of the VQA lane in [`LaneStats`].
 pub const LANE_VQA: &str = "vqa";
+/// Name of the streaming-generation lane in [`LaneStats`].
+pub const LANE_GENERATE: &str = "generate";
 
 /// One unit of work a lane can batch.
 #[derive(Clone, Debug)]
@@ -79,6 +95,10 @@ pub enum Payload {
     Sentiment { tokens: Vec<u32> },
     /// Answer a question about an image (`patches: [n_patches, patch_dim]`).
     Vqa { patches: Tensor, question: Vec<u32> },
+    /// Greedy-decode up to `max_new` tokens after a tokenized prompt,
+    /// streaming each one; stops early after `eos` when given (the EOS
+    /// token itself is included in the output).
+    Generate { tokens: Vec<u32>, max_new: usize, eos: Option<u32> },
 }
 
 /// A lane's answer to one payload.
@@ -88,6 +108,13 @@ pub enum Answer {
     Sentiment { label: usize, label_logits: [f32; 3] },
     /// Argmax answer token over the full vocabulary, decoded.
     Vqa { answer_id: u32, answer: String },
+    /// One streamed token of a generate request: `index` is its 0-based
+    /// position in the generated sequence, `text` its vocabulary word.
+    Token { index: usize, token: u32, text: String },
+    /// Final answer of a generate request: the full generated sequence
+    /// (each token of which was already delivered as [`Answer::Token`]
+    /// on the streaming decode path) and its decoded text.
+    Generated { tokens: Vec<u32>, text: String },
 }
 
 /// Response delivered on the per-request reply channel.
@@ -111,6 +138,23 @@ impl Response {
     pub fn vqa_answer(&self) -> Option<&str> {
         match &self.answer {
             Answer::Vqa { answer, .. } => Some(answer.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Streamed token, if this response is one step of a generate stream.
+    pub fn token(&self) -> Option<u32> {
+        match &self.answer {
+            Answer::Token { token, .. } => Some(*token),
+            _ => None,
+        }
+    }
+
+    /// Full generated sequence, if this is a generate request's final
+    /// [`Answer::Generated`] answer.
+    pub fn generated(&self) -> Option<&[u32]> {
+        match &self.answer {
+            Answer::Generated { tokens, .. } => Some(tokens.as_slice()),
             _ => None,
         }
     }
@@ -459,6 +503,128 @@ impl LaneEngine for VqaLane {
     }
 }
 
+/// Streaming-generation lane: greedy decode over a [`QuantizedLm`]
+/// through the paged KV cache ([`KvPool`]).
+///
+/// Under [`Server::start_generate`] the lane threads run the
+/// continuous-batching decode loop (per-token streaming, `O(S)` cached
+/// steps). Plugged into a generic [`Server::start_engines`] deployment
+/// instead, the lane serves whole requests through
+/// [`LaneEngine::run_batch`] via the recompute-from-scratch oracle
+/// ([`QuantizedLm::generate_recompute`]) — bit-identical answers, no
+/// cache — which is the baseline arm of the decode bench.
+#[derive(Clone)]
+pub struct GenerateLane {
+    model: Arc<QuantizedLm>,
+    tok: Tokenizer,
+    pool: KvPool,
+    max_seq: usize,
+}
+
+impl GenerateLane {
+    pub fn new(model: Arc<QuantizedLm>, tok: &Tokenizer, pool: KvPool) -> Self {
+        let max_seq = model.config().seq_len;
+        GenerateLane { model, tok: tok.clone(), pool, max_seq }
+    }
+
+    /// The lane's paged KV pool (shared with [`Server::kv_pool`]).
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+}
+
+impl LaneEngine for GenerateLane {
+    fn name(&self) -> &'static str {
+        LANE_GENERATE
+    }
+
+    fn accepts(&self, payload: &Payload) -> bool {
+        matches!(payload, Payload::Generate { .. })
+    }
+
+    fn prepare(&self, payload: &mut Payload) -> Result<(), SubmitError> {
+        let Payload::Generate { tokens, max_new, .. } = payload else {
+            return Err(SubmitError::Unsupported);
+        };
+        if tokens.is_empty() {
+            return Err(SubmitError::Invalid("empty prompt".into()));
+        }
+        if *max_new == 0 {
+            return Err(SubmitError::Invalid("max_new must be at least 1".into()));
+        }
+        // The longest prefix ever embedded is `prompt + max_new − 1`
+        // rows (the final sampled token is returned but never
+        // re-embedded), so the prompt may keep `seq_len + 1 − max_new`
+        // tokens: left-truncate, mirroring the sentiment lane.
+        let keep = (self.max_seq + 1).saturating_sub(*max_new);
+        if keep == 0 {
+            return Err(SubmitError::Invalid(format!(
+                "max_new {max_new} exceeds the model context {}",
+                self.max_seq
+            )));
+        }
+        if tokens.len() > keep {
+            let cut = tokens.len() - keep;
+            tokens.drain(..cut);
+        }
+        // A request whose worst-case cache footprint exceeds the whole
+        // pool could never be admitted — reject at submit instead of
+        // parking a decode lane on it forever.
+        let need = self.pool.pages_for(tokens.len() + *max_new - 1);
+        if need > self.pool.capacity_pages() {
+            return Err(SubmitError::OverBudget {
+                needed: need * self.pool.page_bytes(),
+                cap: self.pool.capacity_pages() * self.pool.page_bytes(),
+            });
+        }
+        Ok(())
+    }
+
+    fn transient_bytes(&self, group: &[&Payload]) -> usize {
+        // Decode serves one row per step, but admission must cover the
+        // worst moment: the prefill forward over the full prompt on the
+        // cached path, or the longest recompute prefix on the oracle
+        // fallback — both bounded by the serve transient of a batch-1
+        // forward over `prompt + max_new − 1` rows. The oracle runs the
+        // group one request at a time, so the max (not the sum) is the
+        // dominant concurrent transient.
+        group
+            .iter()
+            .map(|p| match p {
+                Payload::Generate { tokens, max_new, .. } => self
+                    .model
+                    .serve_transient_bytes(1, tokens.len() + max_new.saturating_sub(1)),
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn run_batch(&self, group: &[&Payload]) -> Vec<Answer> {
+        let mut answers = Vec::with_capacity(group.len());
+        for p in group {
+            let Payload::Generate { tokens, max_new, eos } = p else {
+                // Misrouted payload (impossible by construction): a short
+                // answer vector makes the lane loop drop the group cleanly.
+                return Vec::new();
+            };
+            match self.model.generate_recompute(tokens, *max_new, *eos) {
+                Ok(out) => {
+                    let text = self.tok.decode(&out);
+                    answers.push(Answer::Generated { tokens: out, text });
+                }
+                // Same clean group drop as the other lanes: errors become
+                // a short answer vector, never a lane-thread panic.
+                Err(e) => {
+                    crate::trace::log(&format!("generate lane batch failed: {e:#}"));
+                    return Vec::new();
+                }
+            }
+        }
+        answers
+    }
+}
+
 /// Server tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
@@ -478,6 +644,13 @@ pub struct ServeConfig {
     /// ledger math) until their concurrent bookings fit. `None` disables
     /// enforcement — the ledger still observes, it just never gates.
     pub activation_budget: Option<usize>,
+    /// Paged-KV pool size, in pages, for [`Server::start_generate`]
+    /// (ignored by the fused-batch servers). `None` sizes the pool for
+    /// `lanes × max_batch` full-context sequences. Admission into a
+    /// decode step batch is gated on free pages, so this caps the
+    /// resident cache bytes booked under
+    /// [`crate::metrics::tags::KV_CACHE`].
+    pub kv_pages: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -488,6 +661,7 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             lanes: 2,
             activation_budget: None,
+            kv_pages: None,
         }
     }
 }
@@ -506,6 +680,9 @@ pub struct Server {
     /// Copied from [`ServeConfig::activation_budget`]; checked per request
     /// at submit so over-cap payloads never reach a lane.
     activation_budget: Option<usize>,
+    /// The paged KV pool of a [`Server::start_generate`] deployment;
+    /// `None` on fused-batch servers.
+    kv_pool: Option<KvPool>,
     lanes: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -551,8 +728,69 @@ impl Server {
             stats,
             ledger,
             activation_budget: cfg.activation_budget,
+            kv_pool: None,
             lanes,
         }
+    }
+
+    /// Streaming-generation server over a quantized LM: requests enter
+    /// the same sharded queue, but each lane runs a
+    /// **continuous-batching** decode loop instead of the fused batcher —
+    /// sequences join the step batch as soon as pool pages and the
+    /// activation budget admit them and leave on EOS / `max_new`, with
+    /// every token streamed on the reply channel as it is produced.
+    ///
+    /// The paged KV pool ([`KvPool`]) holds [`ServeConfig::kv_pages`]
+    /// pages (default: enough for `lanes × max_batch` full-context
+    /// sequences) and is accounted on the server ledger under
+    /// [`crate::metrics::tags::KV_CACHE`] — after a full drain the tag
+    /// balances to zero and every page is free again.
+    #[allow(clippy::expect_used)] // lane-thread spawn failure is unrecoverable
+    pub fn start_generate(model: Arc<QuantizedLm>, tok: &Tokenizer, cfg: ServeConfig) -> Self {
+        let n_lanes = cfg.lanes.max(1);
+        let mcfg = model.config();
+        let full_seq_pages = mcfg.n_layers * mcfg.seq_len.div_ceil(PAGE_SLOTS);
+        let pages = cfg.kv_pages.unwrap_or(n_lanes * cfg.max_batch.max(1) * full_seq_pages);
+        let ledger = MemoryLedger::new();
+        let pool = KvPool::new(mcfg.n_layers, mcfg.d_model, pages, ledger.clone());
+        let lane = GenerateLane::new(model, tok, pool.clone());
+        let queue: ShardedQueue<Request> = ShardedQueue::new(n_lanes, cfg.queue_cap);
+        let stats = LaneStats::new();
+        if let Some(cap) = cfg.activation_budget {
+            ledger.set_budget(&crate::metrics::tags::activations(LANE_GENERATE), cap);
+        }
+        let lanes = (0..n_lanes)
+            .map(|i| {
+                let queue = queue.clone();
+                let stats = stats.clone();
+                let ledger = ledger.clone();
+                let engine = lane.clone();
+                std::thread::Builder::new()
+                    .name(format!("rpiq-decode-{i}"))
+                    .spawn(move || decode_loop(i, engine, queue, stats, ledger, cfg))
+                    // LINT-ALLOW(no-panic): thread-spawn failure at server
+                    // construction is unrecoverable resource exhaustion.
+                    .expect("spawn decode lane")
+            })
+            .collect();
+        let engines: Vec<Box<dyn LaneEngine>> = vec![Box::new(lane)];
+        Server {
+            queue,
+            engines: Arc::new(engines),
+            next_id: AtomicU64::new(0),
+            stats,
+            ledger,
+            activation_budget: cfg.activation_budget,
+            kv_pool: Some(pool),
+            lanes,
+        }
+    }
+
+    /// The paged KV pool of a [`Server::start_generate`] deployment —
+    /// `None` on fused-batch servers. Tests and benches read page
+    /// occupancy here (`free_pages == capacity_pages` after a drain).
+    pub fn kv_pool(&self) -> Option<&KvPool> {
+        self.kv_pool.as_ref()
     }
 
     /// The server's memory ledger. Register deployed models' resident
@@ -607,7 +845,14 @@ impl Server {
                 return Err(SubmitError::OverBudget { needed, cap });
             }
         }
-        let reply = Channel::bounded(1);
+        // Generate replies stream one response per token plus the final
+        // answer: size the channel so the decode lane never blocks on
+        // delivery (a slow client costs it nothing). One-shot lanes keep
+        // the capacity-1 channel.
+        let reply = match &payload {
+            Payload::Generate { max_new, .. } => Channel::bounded(max_new.saturating_add(2)),
+            _ => Channel::bounded(1),
+        };
         Ok(Request {
             id: self.next_id.fetch_add(1, Ordering::SeqCst),
             payload,
@@ -666,6 +911,47 @@ impl Server {
         self.submit(Payload::Vqa { patches, question })?
             .recv()
             .ok_or(SubmitError::Closed)
+    }
+
+    /// Submit a generate request: the reply channel streams one
+    /// [`Answer::Token`] per decoded token followed by a final
+    /// [`Answer::Generated`], then closes.
+    pub fn submit_generate(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> Result<Channel<Response>, SubmitError> {
+        self.submit(Payload::Generate { tokens, max_new, eos })
+    }
+
+    /// Submit a generate request and drain its stream: returns the full
+    /// generated sequence after checking it against the streamed tokens.
+    pub fn generate(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> Result<Vec<u32>, SubmitError> {
+        let reply = self.submit_generate(tokens, max_new, eos)?;
+        let mut streamed: Vec<u32> = Vec::new();
+        let mut full: Option<Vec<u32>> = None;
+        while let Some(resp) = reply.recv() {
+            match resp.answer {
+                Answer::Token { token, .. } => streamed.push(token),
+                Answer::Generated { tokens, .. } => full = Some(tokens),
+                _ => {}
+            }
+        }
+        match full {
+            // The oracle fallback (GenerateLane under a fused-batch
+            // server) delivers only the final answer — no stream.
+            Some(full) if streamed.is_empty() || full == streamed => Ok(full),
+            // A stream disagreeing with the final answer would be a
+            // server bug; fail loudly rather than return either.
+            Some(_) => Err(SubmitError::Closed),
+            None => Err(SubmitError::Closed),
+        }
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -823,18 +1109,27 @@ fn lane_loop(
                 let batch_span = crate::trace::span_detail("serve", "batch", || {
                     format!("{} n={}", engine.name(), sub.len())
                 });
-                if cap.is_some_and(|c| transient <= c) {
-                    // Every holder of this tag frees its booking after a
-                    // finite forward, so admission always makes progress.
-                    while ledger.try_alloc(tag, transient).is_err() {
-                        std::thread::sleep(Duration::from_micros(100));
-                    }
-                } else {
-                    // Unbudgeted — or oversized despite the submit-time
-                    // check (a custom engine's transient grew after
-                    // prepare): book unconditionally rather than deadlock
-                    // the lane; the ledger still observes the overshoot.
-                    ledger.alloc(tag, transient);
+                // Admission blocks on the ledger's notify-on-free condvar
+                // ([`MemoryLedger::alloc_blocking`]) instead of a sleep
+                // poll: every holder of this tag frees its booking after
+                // a finite forward, so the wait always makes progress —
+                // and the lane wakes the instant bytes free, not a poll
+                // interval later. `Err` means this transient alone can
+                // *never* fit the tag's budget (a custom engine's
+                // transient grew after the submit-time check, or the
+                // budget shrank at runtime): surface it as a counted drop
+                // rather than busy-waiting forever.
+                if let Err(cap_now) = ledger.alloc_blocking(tag, transient) {
+                    stats.record_drop(engine.name(), sub.len());
+                    crate::trace::log(&format!(
+                        "{}: sub-batch of {} dropped, transient {} B can never fit budget {} B",
+                        engine.name(),
+                        sub.len(),
+                        transient,
+                        cap_now
+                    ));
+                    crate::trace::instant("serve", "group.dropped");
+                    continue;
                 }
                 // Contain engine bugs: on a panic (or a miscounted answer
                 // vector) the sub-batch is discarded and each Request's
@@ -889,6 +1184,327 @@ fn lane_loop(
             });
         }
     }
+}
+
+/// Per-sequence decode state held by a continuous-batching lane: the
+/// request (whose reply channel streams the tokens), its cache pages,
+/// and the per-step ledger booking released at retire.
+struct ActiveSeq {
+    /// Declared before `req` on purpose: fields drop in declaration
+    /// order, so the cache pages return to the pool *before* the reply
+    /// channel closes — a client that observes the closed stream can
+    /// rely on the pool/ledger already being balanced.
+    kv: KvSeq,
+    req: Request,
+    out: Vec<u32>,
+    next: u32,
+    max_new: usize,
+    eos: Option<u32>,
+    /// Step-transient bytes booked under `activations.generate` for the
+    /// sequence's whole decode lifetime; freed at retire.
+    step_bytes: usize,
+    picked: Instant,
+    /// Decode error or client disconnect: stop stepping, retire as a
+    /// counted drop (the cache pages and booking are still released).
+    failed: bool,
+}
+
+impl ActiveSeq {
+    fn done(&self) -> bool {
+        self.failed || self.out.len() >= self.max_new || Some(self.next) == self.eos
+    }
+}
+
+/// Outcome of one admission attempt in the decode loop.
+enum Admit {
+    /// Prefilled and streaming: joins the step batch.
+    Active(Box<ActiveSeq>),
+    /// Pool pages (or budget, on a busy lane) are held elsewhere right
+    /// now: park the request and retry after the next step retires.
+    Retry(Request),
+    /// Unrecoverable (decode error / budget shrank): dropped and counted.
+    Dropped,
+}
+
+/// Admit one request into a decode lane's step batch: reserve its cache
+/// pages, book the prefill transient, seed the cache
+/// ([`QuantizedLm::decode_prefill`]), and stream the first token. Only
+/// an otherwise-idle lane blocks on the activation budget (`can_block`);
+/// a lane with sequences mid-decode parks the request instead so the
+/// step batch keeps moving.
+fn admit(
+    lane: &GenerateLane,
+    ledger: &MemoryLedger,
+    tag: &str,
+    stats: &LaneStats,
+    can_block: bool,
+    r: Request,
+) -> Admit {
+    let (prompt, max_new, eos) = match &r.payload {
+        Payload::Generate { tokens, max_new, eos } => (tokens.clone(), *max_new, *eos),
+        // Misrouted payload (impossible by construction): dropping `r`
+        // closes its reply channel so the client observes `Closed`.
+        _ => {
+            stats.record_drop(LANE_GENERATE, 1);
+            return Admit::Dropped;
+        }
+    };
+    let Some(mut kv) = lane.pool.alloc_seq(prompt.len() + max_new.saturating_sub(1)) else {
+        // Pool full right now (other sequences hold the pages): park the
+        // request; prepare() guaranteed it fits an empty pool and every
+        // active sequence retires after finitely many steps, so parked
+        // requests always make progress.
+        return Admit::Retry(r);
+    };
+    let prefill_bytes = lane.model.serve_transient_bytes(1, prompt.len());
+    let step_bytes = lane.model.serve_transient_bytes(1, 1);
+    if can_block {
+        if let Err(cap) = ledger.alloc_blocking(tag, prefill_bytes) {
+            // The budget shrank below even this one prefill after the
+            // submit-time check: surface a counted drop, not a hang.
+            stats.record_drop(LANE_GENERATE, 1);
+            crate::trace::log(&format!(
+                "generate request {} dropped: prefill transient {prefill_bytes} B can never fit budget {cap} B",
+                r.id
+            ));
+            return Admit::Dropped;
+        }
+    } else if ledger.try_alloc(tag, prefill_bytes).is_err() {
+        return Admit::Retry(r);
+    }
+    let picked = Instant::now();
+    let logits = match lane.model.decode_prefill(&mut kv, &prompt) {
+        Ok(l) => l,
+        Err(e) => {
+            ledger.free(tag, prefill_bytes);
+            stats.record_drop(LANE_GENERATE, 1);
+            crate::trace::log(&format!("generate prefill failed: {e:#}"));
+            return Admit::Dropped;
+        }
+    };
+    // Shrink the booking to the per-step transient for the sequence's
+    // remaining lifetime — one ledger op (never free-then-realloc), so
+    // the tag neither transiently overshoots nor re-waits for admission.
+    ledger.free(tag, prefill_bytes.saturating_sub(step_bytes));
+    let next = greedy_argmax(logits.row(0)) as u32;
+    let mut seq = ActiveSeq {
+        req: r,
+        kv,
+        out: vec![next],
+        next,
+        max_new,
+        eos,
+        step_bytes,
+        picked,
+        failed: false,
+    };
+    deliver_token(lane, stats, &mut seq, picked);
+    Admit::Active(Box::new(seq))
+}
+
+/// Stream the newest token of `seq` on its reply channel and record the
+/// per-token latency. A failed send means the client went away
+/// mid-stream: the sequence is marked failed so the next retire sweep
+/// releases its pages and booking.
+fn deliver_token(lane: &GenerateLane, stats: &LaneStats, seq: &mut ActiveSeq, started: Instant) {
+    let Some(&token) = seq.out.last() else {
+        return;
+    };
+    stats.record_token(LANE_GENERATE, started.elapsed().as_secs_f64());
+    let answer = Answer::Token {
+        index: seq.out.len() - 1,
+        token,
+        text: lane.tok.word(token).to_string(),
+    };
+    let latency = seq.req.enqueued.elapsed();
+    if seq.req.reply.send(Response { id: seq.req.id, answer, latency }).is_err() {
+        seq.failed = true;
+    }
+}
+
+/// Retire a finished sequence: release its ledger booking, deliver the
+/// final [`Answer::Generated`], and record the request's latency split.
+/// Dropping `seq` afterwards releases the cache pages back to the pool
+/// and closes the reply channel (the client drains the final answers
+/// from the closed channel).
+fn retire(lane: &GenerateLane, stats: &LaneStats, ledger: &MemoryLedger, tag: &str, seq: ActiveSeq) {
+    ledger.free(tag, seq.step_bytes);
+    if seq.failed {
+        stats.record_drop(LANE_GENERATE, 1);
+        crate::trace::instant("serve", "seq.dropped");
+        return;
+    }
+    let latency = seq.req.enqueued.elapsed();
+    let queue_wait = seq.picked.saturating_duration_since(seq.req.enqueued);
+    let service = latency.saturating_sub(queue_wait);
+    stats.record_split(LANE_GENERATE, queue_wait.as_secs_f64(), service.as_secs_f64());
+    if crate::trace::enabled() {
+        crate::trace::complete_at("serve", "req.queue_wait", seq.req.enqueued, queue_wait);
+        crate::trace::complete_at("serve", "req.service", seq.picked, service);
+    }
+    let tokens = seq.out.clone();
+    let text = lane.tok.decode(&tokens);
+    let _ = seq.req.reply.send(Response {
+        id: seq.req.id,
+        answer: Answer::Generated { tokens, text },
+        latency,
+    });
+}
+
+/// One continuous-batching decode lane: admit sequences from shard
+/// `lane` (stealing when idle) into a step batch as pool pages and the
+/// activation budget allow, run one cached decode step across every
+/// active sequence per iteration, stream each token as it is produced,
+/// and retire sequences on EOS / `max_new` / client disconnect.
+///
+/// Admission happens *between* steps, so a new request waits at most one
+/// token time — never a whole batch — before its prefill runs
+/// (continuous batching); each step is `O(S)` attention against the
+/// paged KV cache instead of the `O(S²)` recompute of the oracle path.
+fn decode_loop(
+    lane: usize,
+    engine: GenerateLane,
+    queue: ShardedQueue<Request>,
+    stats: LaneStats,
+    ledger: MemoryLedger,
+    cfg: ServeConfig,
+) {
+    let tag = crate::metrics::tags::activations(LANE_GENERATE);
+    let max_batch = cfg.max_batch.max(1);
+    let mut active: Vec<ActiveSeq> = Vec::new();
+    let mut pending: VecDeque<Request> = VecDeque::new();
+    loop {
+        // Pick up new work. An idle lane blocks (shutdown wakes the
+        // pop); a lane with sequences in flight drains whatever is
+        // already queued without waiting.
+        if active.is_empty() && pending.is_empty() {
+            match queue.pop(lane, Duration::from_millis(200)) {
+                Some(r) => pending.push_back(r),
+                None => {
+                    if queue.is_closed() && queue.is_empty() {
+                        return;
+                    }
+                    continue;
+                }
+            }
+        }
+        while active.len() + pending.len() < max_batch {
+            match queue.pop(lane, Duration::ZERO) {
+                Some(r) => pending.push_back(r),
+                None => break,
+            }
+        }
+        // Admit pending sequences into the step batch until it is full,
+        // the pool runs out of pages, or the budget defers admission.
+        let mut parked: VecDeque<Request> = VecDeque::new();
+        while active.len() < max_batch {
+            let Some(r) = pending.pop_front() else {
+                break;
+            };
+            let can_block = active.is_empty() && parked.is_empty();
+            match admit(&engine, &ledger, &tag, &stats, can_block, r) {
+                Admit::Active(seq) => {
+                    if seq.done() {
+                        // max_new 1 or EOS on the first token.
+                        retire(&engine, &stats, &ledger, &tag, *seq);
+                    } else {
+                        active.push(*seq);
+                    }
+                }
+                Admit::Retry(r) => parked.push_back(r),
+                Admit::Dropped => {}
+            }
+        }
+        // Parked requests retry once the next retire frees pages or
+        // budget; they keep their place ahead of newer arrivals.
+        while let Some(r) = parked.pop_back() {
+            pending.push_front(r);
+        }
+        if active.is_empty() {
+            if pending.is_empty() {
+                continue;
+            }
+            // Everything is parked on resources held by other lanes'
+            // sequences: nap briefly — still picking up new arrivals —
+            // instead of spinning on admission.
+            if let Some(r) = queue.pop(lane, Duration::from_millis(1)) {
+                pending.push_back(r);
+            }
+            continue;
+        }
+        // One decode step across the whole batch, streaming each token.
+        if crate::trace::enabled() {
+            crate::trace::counter(format!("serve.qdepth.lane{lane}"), queue.shard_len(lane) as f64);
+            crate::trace::counter("serve.decode.batch", active.len() as f64);
+        }
+        stats.record_batch(LANE_GENERATE, active.len());
+        let step_span =
+            crate::trace::span_detail("serve", "decode.step", || format!("n={}", active.len()));
+        for seq in &mut active {
+            let t0 = Instant::now();
+            match engine.model.decode_step(&mut seq.kv, seq.next) {
+                Ok(logits) => {
+                    seq.next = greedy_argmax(logits.row(0)) as u32;
+                    seq.out.push(seq.next);
+                    deliver_token(&engine, &stats, seq, t0);
+                }
+                Err(e) => {
+                    crate::trace::log(&format!("decode step failed: {e:#}"));
+                    seq.failed = true;
+                }
+            }
+        }
+        drop(step_span);
+        // Retire finished sequences, freeing pages + booking for the
+        // parked requests and future admissions.
+        let mut i = 0;
+        while i < active.len() {
+            if active.get(i).is_some_and(|s| s.done()) {
+                let seq = active.swap_remove(i);
+                retire(&engine, &stats, &ledger, &tag, seq);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Replay generate prompts through the server from `n_clients` producer
+/// threads, draining every stream; returns `(tokens/sec, total tokens)`
+/// over the whole replay. Panics if the server rejects or drops a
+/// request — replay is only meaningful on a live server.
+#[allow(clippy::expect_used)] // bench harness: a dead server must abort the measurement
+pub fn replay_generate(
+    server: &Server,
+    prompts: Vec<Vec<u32>>,
+    max_new: usize,
+    n_clients: usize,
+) -> (f64, usize) {
+    let n_clients = n_clients.max(1);
+    let mut per_client: Vec<Vec<Vec<u32>>> = (0..n_clients).map(|_| Vec::new()).collect();
+    for (i, p) in prompts.into_iter().enumerate() {
+        if let Some(c) = per_client.get_mut(i % n_clients) {
+            c.push(p);
+        }
+    }
+    let total = std::sync::atomic::AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for chunk in per_client {
+            let server = &*server;
+            let total = &total;
+            scope.spawn(move || {
+                for p in chunk {
+                    // LINT-ALLOW(no-panic): replay is only meaningful on a
+                    // live server; a rejected request must fail the bench.
+                    let out = server.generate(p, max_new, None).expect("replay generate");
+                    total.fetch_add(out.len(), Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let total = total.into_inner();
+    (total as f64 / t0.elapsed().as_secs_f64(), total)
 }
 
 /// Convenience for benches: replay sentiment prompts through the server
@@ -1114,6 +1730,153 @@ mod tests {
         assert_eq!(stats.count(), 12);
         assert_eq!(stats.lane(LANE_VQA).unwrap().count(), 4);
         assert_eq!(stats.lane(LANE_SENTIMENT).unwrap().count(), 8);
+    }
+
+    #[test]
+    fn generate_server_streams_bit_identical_to_oracle_deterministic() {
+        // fixed kernel: the cached decode and the recompute oracle must
+        // run the same numerics for the bit-equality below
+        let _kernel = crate::model::kernels::kernel_test_lock();
+        let tok = Lexicon::tokenizer();
+        let qlm = test_qlm();
+        let server = Server::start_generate(Arc::clone(&qlm), &tok, ServeConfig::default());
+        let prompt = tok.encode("sentiment of text :");
+        let max_new = qlm.config().seq_len + 1 - prompt.len();
+        let oracle = qlm.generate_recompute(&prompt, max_new, None).expect("oracle");
+        let reply = server.submit_generate(prompt.clone(), max_new, None).expect("submit");
+        let mut streamed: Vec<u32> = Vec::new();
+        let mut full: Option<Vec<u32>> = None;
+        while let Some(resp) = reply.recv() {
+            match resp.answer {
+                Answer::Token { index, token, .. } => {
+                    assert_eq!(index, streamed.len(), "tokens arrive in order");
+                    streamed.push(token);
+                }
+                Answer::Generated { tokens, .. } => full = Some(tokens),
+                ref other => panic!("unexpected answer {other:?}"),
+            }
+        }
+        let full = full.expect("final answer after the stream");
+        assert_eq!(streamed, full, "stream must match the final answer");
+        assert_eq!(full, oracle, "cached decode must match the recompute oracle bitwise");
+        // every page is back and the kv_cache + activation tags balance
+        let pool = server.kv_pool().expect("generate server has a pool");
+        assert_eq!(pool.free_pages(), pool.capacity_pages());
+        assert_eq!(server.ledger().live_bytes(), 0);
+        let stats = server.shutdown();
+        assert_eq!(stats.lane_tokens(LANE_GENERATE).expect("token stats").count(), max_new);
+    }
+
+    #[test]
+    fn generate_rejections_and_pool_cap() {
+        let tok = Lexicon::tokenizer();
+        let qlm = test_qlm();
+        // a 1-page pool cannot hold even one sequence (2 layers ⇒ every
+        // sequence needs at least 2 pages)
+        let server = Server::start_generate(
+            Arc::clone(&qlm),
+            &tok,
+            ServeConfig { kv_pages: Some(1), ..Default::default() },
+        );
+        let prompt = tok.encode("it was fine");
+        assert!(matches!(
+            server.submit_generate(prompt.clone(), 2, None).unwrap_err(),
+            SubmitError::OverBudget { .. }
+        ));
+        assert!(matches!(
+            server.submit_generate(Vec::new(), 2, None).unwrap_err(),
+            SubmitError::Invalid(_)
+        ));
+        assert!(matches!(
+            server.submit_generate(prompt.clone(), 0, None).unwrap_err(),
+            SubmitError::Invalid(_)
+        ));
+        // max_new beyond the whole context can never run
+        assert!(matches!(
+            server.submit_generate(prompt, 64, None).unwrap_err(),
+            SubmitError::Invalid(_)
+        ));
+        // fused payloads have no lane on a generate-only server
+        assert_eq!(
+            server.submit(Payload::Sentiment { tokens: vec![1] }).unwrap_err(),
+            SubmitError::Unsupported
+        );
+    }
+
+    #[test]
+    fn generate_pool_contention_drains_without_deadlock() {
+        let _kernel = crate::model::kernels::kernel_test_lock();
+        let tok = Lexicon::tokenizer();
+        let qlm = test_qlm();
+        // pool fits exactly one sequence (2 layers × 1 page each): the
+        // two lanes must serialize through it without deadlocking
+        let server = Server::start_generate(
+            Arc::clone(&qlm),
+            &tok,
+            ServeConfig { kv_pages: Some(2), lanes: 2, max_batch: 4, ..Default::default() },
+        );
+        let prompt = tok.encode("sentiment of text :");
+        let oracle = qlm.generate_recompute(&prompt, 3, None).expect("oracle");
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let server = &server;
+                let prompt = prompt.clone();
+                let oracle = oracle.clone();
+                scope.spawn(move || {
+                    for _ in 0..2 {
+                        let out = server.generate(prompt.clone(), 3, None).expect("generate");
+                        assert_eq!(out, oracle);
+                    }
+                });
+            }
+        });
+        let pool = server.kv_pool().expect("pool");
+        assert_eq!(pool.free_pages(), pool.capacity_pages());
+        assert_eq!(server.ledger().live_bytes(), 0);
+        let stats = server.shutdown();
+        assert_eq!(stats.lane(LANE_GENERATE).expect("lane stats").count(), 6);
+    }
+
+    #[test]
+    fn generate_client_disconnect_frees_pool_and_ledger() {
+        let tok = Lexicon::tokenizer();
+        let qlm = test_qlm();
+        let server = Server::start_generate(Arc::clone(&qlm), &tok, ServeConfig::default());
+        let prompt = tok.encode("sentiment of text :");
+        let reply = server.submit_generate(prompt, 5, None).expect("submit");
+        let first = reply.recv().expect("first token");
+        assert!(first.token().is_some());
+        // The client walks away: whether the lane observes the closed
+        // channel mid-stream (send fails ⇒ retired as a drop) or had
+        // already finished the short sequence, every page and booking
+        // must come back.
+        reply.close();
+        drop(reply);
+        let pool = server.kv_pool().expect("pool").clone();
+        let ledger = server.ledger().clone();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while (pool.free_pages() != pool.capacity_pages() || ledger.live_bytes() != 0)
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.free_pages(), pool.capacity_pages());
+        assert_eq!(ledger.live_bytes(), 0);
+    }
+
+    #[test]
+    fn generate_lane_oracle_fallback_under_fused_server() {
+        let _kernel = crate::model::kernels::kernel_test_lock();
+        let tok = Lexicon::tokenizer();
+        let qlm = test_qlm();
+        let mcfg = qlm.config().clone();
+        let pool = KvPool::new(mcfg.n_layers, mcfg.d_model, 4, MemoryLedger::new());
+        let lane = GenerateLane::new(Arc::clone(&qlm), &tok, pool);
+        let server = Server::start_engines(vec![Box::new(lane)], ServeConfig::default());
+        let prompt = tok.encode("it was fine");
+        let out = server.generate(prompt.clone(), 3, None).expect("generate");
+        let oracle = qlm.generate_recompute(&prompt, 3, None).expect("oracle");
+        assert_eq!(out, oracle);
     }
 
     #[test]

@@ -23,19 +23,31 @@
 //! `activations.<lane>` tags, so concurrent bookings under one capped tag
 //! never jointly overshoot. Plain [`MemoryLedger::alloc`] is never gated:
 //! accounting stays exact even when a caller opts out of enforcement.
+//! [`MemoryLedger::alloc_blocking`] is the waiting variant: every `free`
+//! (and budget change) notifies a condvar, so a budget-blocked lane parks
+//! until bytes return instead of polling — and a request that can *never*
+//! fit under the cap fails immediately rather than waiting forever.
 
 #![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
 
 pub mod tags;
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 /// Thread-safe allocation ledger with peak tracking.
 #[derive(Clone, Default)]
 pub struct MemoryLedger {
-    inner: Arc<Mutex<LedgerInner>>,
+    inner: Arc<LedgerShared>,
+}
+
+#[derive(Default)]
+struct LedgerShared {
+    state: Mutex<LedgerInner>,
+    /// Notified on every `free`/`set_budget`/`clear_budget` so
+    /// [`MemoryLedger::alloc_blocking`] waiters re-check promptly.
+    freed: Condvar,
 }
 
 #[derive(Default)]
@@ -54,35 +66,31 @@ impl MemoryLedger {
         Self::default()
     }
 
+    fn lock(&self) -> MutexGuard<'_, LedgerInner> {
+        self.inner.state.lock().unwrap()
+    }
+
     /// Record an allocation of `bytes` under `tag`.
     pub fn alloc(&self, tag: &str, bytes: usize) {
         let (tag_live, live) = {
-            let mut g = self.inner.lock().unwrap();
-            g.live += bytes as i64;
-            if g.live > g.peak {
-                g.peak = g.live;
-            }
-            let e = g.by_tag.entry(tag.to_string()).or_insert(0);
-            *e += bytes as i64;
-            let cur = *e;
-            let p = g.peak_by_tag.entry(tag.to_string()).or_insert(0);
-            if cur > *p {
-                *p = cur;
-            }
-            (cur, g.live)
+            let mut g = self.lock();
+            Self::book(&mut g, tag, bytes)
         };
         self.trace_counters(tag, tag_live, live);
     }
 
-    /// Record a release of `bytes` under `tag`.
+    /// Record a release of `bytes` under `tag`, waking any
+    /// [`Self::alloc_blocking`] waiters so budget headroom is re-checked
+    /// immediately instead of on a poll tick.
     pub fn free(&self, tag: &str, bytes: usize) {
         let (tag_live, live) = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.lock();
             g.live -= bytes as i64;
             let e = g.by_tag.entry(tag.to_string()).or_insert(0);
             *e -= bytes as i64;
             (*e, g.live)
         };
+        self.inner.freed.notify_all();
         self.trace_counters(tag, tag_live, live);
     }
 
@@ -103,19 +111,27 @@ impl MemoryLedger {
     /// for the paths that opt in, i.e. the serve lanes' per-lane
     /// `activations.<lane>` caps derived from `ServeConfig`.
     pub fn set_budget(&self, tag: &str, bytes: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.budgets.insert(tag.to_string(), bytes as i64);
+        {
+            let mut g = self.lock();
+            g.budgets.insert(tag.to_string(), bytes as i64);
+        }
+        // a raised cap may unblock waiters; a lowered one makes their
+        // next check fail fast instead of waiting forever
+        self.inner.freed.notify_all();
     }
 
     /// Remove a tag's cap.
     pub fn clear_budget(&self, tag: &str) {
-        let mut g = self.inner.lock().unwrap();
-        g.budgets.remove(tag);
+        {
+            let mut g = self.lock();
+            g.budgets.remove(tag);
+        }
+        self.inner.freed.notify_all();
     }
 
     /// The cap set for `tag`, if any.
     pub fn budget_for(&self, tag: &str) -> Option<usize> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         g.budgets.get(tag).map(|&b| b.max(0) as usize)
     }
 
@@ -127,28 +143,71 @@ impl MemoryLedger {
     /// shared tag's cap.
     pub fn try_alloc(&self, tag: &str, bytes: usize) -> Result<(), usize> {
         let (tag_live, live) = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.lock();
             if let Some(&cap) = g.budgets.get(tag) {
                 let cur = g.by_tag.get(tag).copied().unwrap_or(0);
                 if cur + bytes as i64 > cap {
                     return Err(cap.max(0) as usize);
                 }
             }
-            g.live += bytes as i64;
-            if g.live > g.peak {
-                g.peak = g.live;
-            }
-            let e = g.by_tag.entry(tag.to_string()).or_insert(0);
-            *e += bytes as i64;
-            let cur = *e;
-            let p = g.peak_by_tag.entry(tag.to_string()).or_insert(0);
-            if cur > *p {
-                *p = cur;
-            }
-            (cur, g.live)
+            Self::book(&mut g, tag, bytes)
         };
         self.trace_counters(tag, tag_live, live);
         Ok(())
+    }
+
+    /// Blocking budget-checked allocation: like [`Self::try_alloc`], but
+    /// when the tag is at its cap the caller *parks* on the ledger's
+    /// condvar until a `free` (or budget change) opens enough headroom —
+    /// no polling. Two terminal cases return without booking anything:
+    /// `bytes` alone exceeding the cap can never be satisfied by waiting
+    /// (`Err(cap)` immediately — the caller should surface over-budget,
+    /// not hang), and a cap lowered below `bytes` while waiting fails the
+    /// same way. Without a budget on `tag` this is exactly [`Self::alloc`].
+    pub fn alloc_blocking(&self, tag: &str, bytes: usize) -> Result<(), usize> {
+        let (tag_live, live) = {
+            let mut g = self.lock();
+            loop {
+                match g.budgets.get(tag) {
+                    None => break,
+                    Some(&cap) if (bytes as i64) > cap => return Err(cap.max(0) as usize),
+                    Some(&cap) => {
+                        let cur = g.by_tag.get(tag).copied().unwrap_or(0);
+                        if cur + bytes as i64 <= cap {
+                            break;
+                        }
+                    }
+                }
+                // The timeout is a lost-wakeup backstop only; the free/
+                // budget-change notifications are what wake us in practice.
+                let (guard, _) = self
+                    .inner
+                    .freed
+                    .wait_timeout(g, Duration::from_millis(100))
+                    .unwrap();
+                g = guard;
+            }
+            Self::book(&mut g, tag, bytes)
+        };
+        self.trace_counters(tag, tag_live, live);
+        Ok(())
+    }
+
+    /// Book `bytes` under `tag` (lock already held); returns the tag's and
+    /// the ledger's live bytes for [`Self::trace_counters`].
+    fn book(g: &mut LedgerInner, tag: &str, bytes: usize) -> (i64, i64) {
+        g.live += bytes as i64;
+        if g.live > g.peak {
+            g.peak = g.live;
+        }
+        let e = g.by_tag.entry(tag.to_string()).or_insert(0);
+        *e += bytes as i64;
+        let cur = *e;
+        let p = g.peak_by_tag.entry(tag.to_string()).or_insert(0);
+        if cur > *p {
+            *p = cur;
+        }
+        (cur, g.live)
     }
 
     /// Convenience: account `bytes` for the duration of `f`.
@@ -160,11 +219,11 @@ impl MemoryLedger {
     }
 
     pub fn live_bytes(&self) -> i64 {
-        self.inner.lock().unwrap().live
+        self.lock().live
     }
 
     pub fn peak_bytes(&self) -> i64 {
-        self.inner.lock().unwrap().peak
+        self.lock().peak
     }
 
     pub fn peak_gib(&self) -> f64 {
@@ -177,18 +236,12 @@ impl MemoryLedger {
 
     /// Peak bytes attributed to one tag.
     pub fn peak_for(&self, tag: &str) -> i64 {
-        self.inner
-            .lock()
-            .unwrap()
-            .peak_by_tag
-            .get(tag)
-            .copied()
-            .unwrap_or(0)
+        self.lock().peak_by_tag.get(tag).copied().unwrap_or(0)
     }
 
     /// Snapshot of per-tag peaks, sorted descending.
     pub fn breakdown(&self) -> Vec<(String, i64)> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let mut v: Vec<_> = g.peak_by_tag.iter().map(|(k, &b)| (k.clone(), b)).collect();
         v.sort_by(|a, b| b.1.cmp(&a.1));
         v
@@ -196,7 +249,7 @@ impl MemoryLedger {
 
     /// Reset everything (between experiment arms).
     pub fn reset(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         *g = LedgerInner::default();
     }
 }
@@ -392,6 +445,9 @@ struct LaneRecord {
     drops: u64,
     /// batch size → number of fused groups of that size.
     batches: std::collections::BTreeMap<usize, u64>,
+    /// per-*token* latency on streaming decode lanes (one sample per
+    /// emitted token; the p50/p99 a generative SLA is written against).
+    tokens: LatencyStats,
 }
 
 /// Latency stats for the multi-lane server: one aggregate collector plus
@@ -457,6 +513,13 @@ impl LaneStats {
         self.with_lane(lane, |rec| *rec.batches.entry(size).or_insert(0) += 1);
     }
 
+    /// Record one emitted token's latency on a streaming decode lane
+    /// (decode-step wall time attributed to that token, not the whole
+    /// request — per-token p50/p99 is the generative serving SLA).
+    pub fn record_token(&self, lane: &str, secs: f64) {
+        self.with_lane(lane, |rec| rec.tokens.record(secs));
+    }
+
     /// Record one rejected submission.
     pub fn record_reject(&self, kind: RejectKind) {
         let mut r = self.rejects.lock().unwrap();
@@ -503,6 +566,17 @@ impl LaneStats {
             .iter()
             .find(|(n, _)| n == name)
             .map(|(_, rec)| rec.service.clone())
+    }
+
+    /// Per-token latency collector for one lane (populated by
+    /// [`Self::record_token`] on streaming decode lanes).
+    pub fn lane_tokens(&self, name: &str) -> Option<LatencyStats> {
+        self.lanes
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, rec)| rec.tokens.clone())
     }
 
     /// Dropped-request count for one lane.
@@ -621,6 +695,44 @@ mod tests {
         assert_eq!(led.try_alloc("activations.sentiment", 1 << 20), Ok(()));
         led.free("activations.sentiment", 1 << 20);
         assert_eq!(led.live_bytes(), 0);
+    }
+
+    #[test]
+    fn alloc_blocking_waits_for_free_and_fails_fast_when_impossible() {
+        let led = MemoryLedger::new();
+        led.set_budget("activations.generate", 100);
+        // headroom available: books immediately, like try_alloc
+        assert_eq!(led.alloc_blocking("activations.generate", 80), Ok(()));
+        // larger than the cap itself: can never fit — immediate Err, no hang
+        assert_eq!(led.alloc_blocking("activations.generate", 150), Err(100));
+        assert_eq!(led.live_bytes(), 80);
+        // at the cap: parks until a concurrent free opens headroom
+        let led2 = led.clone();
+        let waiter = std::thread::spawn(move || led2.alloc_blocking("activations.generate", 60));
+        std::thread::sleep(Duration::from_millis(20));
+        led.free("activations.generate", 80);
+        assert_eq!(waiter.join().unwrap(), Ok(()));
+        assert_eq!(led.live_bytes(), 60);
+        led.free("activations.generate", 60);
+        // unbudgeted tags behave exactly like plain alloc
+        assert_eq!(led.alloc_blocking("activations.vqa", 1 << 20), Ok(()));
+        led.free("activations.vqa", 1 << 20);
+        assert_eq!(led.live_bytes(), 0);
+    }
+
+    #[test]
+    fn lane_stats_per_token_latency() {
+        let s = LaneStats::new();
+        for i in 1..=100 {
+            s.record_token("generate", i as f64 / 1000.0);
+        }
+        let t = s.lane_tokens("generate").expect("token stats recorded");
+        assert_eq!(t.count(), 100);
+        assert!((t.percentile_ms(50.0) - 50.0).abs() <= 1.0);
+        assert!((t.percentile_ms(99.0) - 99.0).abs() <= 1.0);
+        // token samples never leak into the request-latency counts
+        assert_eq!(s.count(), 0);
+        assert!(s.lane_tokens("nope").is_none());
     }
 
     #[test]

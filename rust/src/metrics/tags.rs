@@ -44,6 +44,10 @@ pub const RPIQ_PRECOMP: &str = "rpiq_precomp";
 pub const RPIQ_STATE: &str = "rpiq_state";
 /// RPIQ projection scratch (work matrix + level buffer).
 pub const RPIQ_PROJECT: &str = "rpiq_project";
+/// Paged KV-cache pages held by live decode sequences
+/// ([`crate::model::decode::KvPool`]); balances to zero when every
+/// sequence has retired.
+pub const KV_CACHE: &str = "kv_cache";
 
 /// Prefix of the per-lane transient activation tags booked by the serve
 /// engine's lane loop.
@@ -73,6 +77,7 @@ pub const ALL: &[&str] = &[
     RPIQ_PRECOMP,
     RPIQ_STATE,
     RPIQ_PROJECT,
+    KV_CACHE,
 ];
 
 #[cfg(test)]

@@ -1,0 +1,506 @@
+//! Paged KV cache for streaming autoregressive decode.
+//!
+//! One decode step must attend its single query row against every cached
+//! key/value row written by earlier steps — `O(S)` work — instead of
+//! re-running the whole `O(S²)` prefill per token. This module provides
+//! the cache that makes that possible on the serve path:
+//!
+//! * [`KvPool`] — a fixed-capacity pool of cache *pages* shared by every
+//!   in-flight sequence of a serve lane. Each page holds
+//!   [`PAGE_SLOTS`] key rows and [`PAGE_SLOTS`] value rows of one layer.
+//!   Page bytes are booked on the [`MemoryLedger`] under
+//!   [`tags::KV_CACHE`] at allocation and released on sequence drop, so
+//!   the tag balances to zero after every drain; the live page count is
+//!   exported as the `kv.pages` trace counter.
+//! * [`KvSeq`] — one sequence's pages across all layers, allocated
+//!   worst-case up front (admission either gets every page a request can
+//!   ever need or fails immediately — a mid-stream sequence can never hit
+//!   pool exhaustion). Dropping the handle returns the pages and the
+//!   ledger bytes, which is what keeps the ledger balanced even when a
+//!   client disconnects mid-stream.
+//! * [`KvSeq::attend_last`] — single-query causal attention over the
+//!   cached rows, replaying the *exact* online-softmax recurrence of
+//!   [`attention_fwd_chunked`](super::ops::attention_fwd_chunked).
+//!
+//! ## Bit determinism
+//!
+//! Page→slot mapping is bit-deterministic: free slot ids live in a
+//! [`BTreeSet`] and allocation always pops the lowest ids first, so a
+//! fixed sequence of alloc/free calls yields the same slot assignment at
+//! any `RPIQ_THREADS` (the set never observes thread scheduling — only
+//! call order, which admission serializes per pool lock).
+//!
+//! Attention is bit-identical to the chunked serve oracle because
+//! [`PAGE_SLOTS`] equals [`ATTN_CHUNK`](super::ops::ATTN_CHUNK): page
+//! boundaries fall exactly on the chunk boundaries
+//! `t0 = 0, C, 2C, …` that `attention_fwd_chunked` uses for a query at
+//! the same position, and within a block both paths run the same
+//! `dot → block-max → rescale → accumulate` f32 recurrence in the same
+//! order. Greedy decode through this cache therefore reproduces the
+//! recompute-from-scratch oracle token for token (pinned by the
+//! determinism tests below and the parity tests in `model/quantized.rs`).
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used, clippy::panic))]
+#![cfg_attr(not(test), deny(clippy::indexing_slicing))]
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::metrics::{tags, MemoryLedger};
+
+/// Key (and value) rows per cache page. Equal to
+/// [`ATTN_CHUNK`](super::ops::ATTN_CHUNK) **by construction** — the
+/// paged attention below recovers the chunked oracle's block boundaries
+/// from page boundaries, so the two must never diverge.
+pub const PAGE_SLOTS: usize = super::ops::ATTN_CHUNK;
+
+/// Pages needed per layer to hold `tokens` cached positions.
+pub const fn pages_per_layer(tokens: usize) -> usize {
+    tokens.div_ceil(PAGE_SLOTS)
+}
+
+/// Greedy (argmax) token choice over one logits row. `NaN`-safe via
+/// `total_cmp`; ties resolve to the highest index, matching the serve
+/// lanes' answer extraction so cached and recompute decode agree bitwise.
+pub fn greedy_argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Shared fixed-capacity pool of KV-cache pages (cheap `Clone` handle).
+///
+/// Capacity is a page count chosen at serve start; [`Self::alloc_seq`]
+/// either hands a sequence *all* the pages its worst-case length needs or
+/// returns `None` (the decode lane then parks the request until pages
+/// return). Bytes are booked under [`tags::KV_CACHE`] — see the module
+/// docs for the balance/determinism contract.
+#[derive(Clone)]
+pub struct KvPool {
+    inner: Arc<PoolShared>,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    ledger: MemoryLedger,
+    n_layers: usize,
+    d: usize,
+    capacity_pages: usize,
+}
+
+struct PoolState {
+    /// Free slot ids; lowest-first allocation keeps the page→slot mapping
+    /// bit-deterministic (see module docs).
+    free_slots: BTreeSet<usize>,
+}
+
+/// Lock with poison recovery: the state is a free list of slot ids, and a
+/// panicking holder's pages are reclaimed by [`KvSeq`]'s `Drop` anyway,
+/// so continuing with the inner value is always sound.
+fn lock(m: &Mutex<PoolState>) -> MutexGuard<'_, PoolState> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+impl KvPool {
+    /// A pool of `capacity_pages` pages for a model with `n_layers`
+    /// transformer layers of width `d`, accounting page bytes on `ledger`.
+    pub fn new(n_layers: usize, d: usize, capacity_pages: usize, ledger: MemoryLedger) -> Self {
+        Self {
+            inner: Arc::new(PoolShared {
+                state: Mutex::new(PoolState { free_slots: (0..capacity_pages).collect() }),
+                ledger,
+                n_layers,
+                d,
+                capacity_pages,
+            }),
+        }
+    }
+
+    /// Bytes of one page: `2 · PAGE_SLOTS · d` f32s (K rows, then V rows).
+    pub fn page_bytes(&self) -> usize {
+        2 * PAGE_SLOTS * self.inner.d * std::mem::size_of::<f32>()
+    }
+
+    /// Total pages the pool was created with.
+    pub fn capacity_pages(&self) -> usize {
+        self.inner.capacity_pages
+    }
+
+    /// Pages currently free.
+    pub fn free_pages(&self) -> usize {
+        lock(&self.inner.state).free_slots.len()
+    }
+
+    /// Pages a sequence of up to `tokens` cached positions needs across
+    /// all layers — the admission-control quantity.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        self.inner.n_layers * pages_per_layer(tokens)
+    }
+
+    /// Ledger bytes [`Self::alloc_seq`] would book for `tokens` positions.
+    pub fn seq_bytes(&self, tokens: usize) -> usize {
+        self.pages_for(tokens) * self.page_bytes()
+    }
+
+    /// Allocate every page a sequence of up to `capacity_tokens` cached
+    /// positions can need, or `None` if the pool cannot supply them all
+    /// right now (nothing is booked on failure). Books the page bytes
+    /// under [`tags::KV_CACHE`] and updates the `kv.pages` counter.
+    pub fn alloc_seq(&self, capacity_tokens: usize) -> Option<KvSeq> {
+        let per_layer = pages_per_layer(capacity_tokens);
+        let total = per_layer * self.inner.n_layers;
+        let slots = {
+            let mut g = lock(&self.inner.state);
+            if g.free_slots.len() < total {
+                return None;
+            }
+            let mut slots = Vec::with_capacity(total);
+            while slots.len() < total {
+                match g.free_slots.pop_first() {
+                    Some(s) => slots.push(s),
+                    None => break, // unreachable: len checked above
+                }
+            }
+            slots
+        };
+        self.inner.ledger.alloc(tags::KV_CACHE, total * self.page_bytes());
+        self.gauge();
+        let d = self.inner.d;
+        let layers: Vec<Vec<Box<[f32]>>> = (0..self.inner.n_layers)
+            .map(|_| {
+                (0..per_layer)
+                    .map(|_| vec![0.0f32; 2 * PAGE_SLOTS * d].into_boxed_slice())
+                    .collect()
+            })
+            .collect();
+        Some(KvSeq { pool: self.clone(), layers, slots, d, len: 0, cap: capacity_tokens })
+    }
+
+    /// Return `slots` to the free set and release their ledger bytes —
+    /// the [`KvSeq`] `Drop` body.
+    fn release(&self, slots: &[usize]) {
+        if slots.is_empty() {
+            return;
+        }
+        {
+            let mut g = lock(&self.inner.state);
+            for &s in slots {
+                g.free_slots.insert(s);
+            }
+        }
+        self.inner.ledger.free(tags::KV_CACHE, slots.len() * self.page_bytes());
+        self.gauge();
+    }
+
+    /// Export live (allocated) pages as the `kv.pages` trace counter.
+    fn gauge(&self) {
+        if crate::trace::enabled() {
+            let free = lock(&self.inner.state).free_slots.len();
+            let live = self.inner.capacity_pages.saturating_sub(free);
+            crate::trace::counter("kv.pages", live as f64);
+        }
+    }
+}
+
+/// One sequence's cached K/V rows across all layers, backed by pages from
+/// a [`KvPool`]. Dropping the handle returns every page and its ledger
+/// bytes (abrupt client disconnect included — the decode lane just drops
+/// the sequence).
+///
+/// Layout: `layers[l][p]` covers positions `p·PAGE_SLOTS ..` of layer
+/// `l`; within a page the first `PAGE_SLOTS·d` f32s are key rows and the
+/// second half value rows.
+pub struct KvSeq {
+    pool: KvPool,
+    layers: Vec<Vec<Box<[f32]>>>,
+    /// Pool slot ids backing this sequence, in allocation order
+    /// (layer-major) — exposed for the determinism tests.
+    slots: Vec<usize>,
+    d: usize,
+    len: usize,
+    cap: usize,
+}
+
+impl KvSeq {
+    /// Cached positions written and committed so far (via [`Self::advance`]).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True before the prefill has committed any positions.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this sequence's pages can hold.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Transformer layers this cache spans.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Model width `d` of each cached row.
+    pub fn width(&self) -> usize {
+        self.d
+    }
+
+    /// The pool slot ids backing this sequence, in allocation order.
+    pub fn slots(&self) -> &[usize] {
+        &self.slots
+    }
+
+    /// Write the key/value rows of `layer` at position `pos` (which must
+    /// be inside capacity; committing it is [`Self::advance`]'s job).
+    pub fn write(&mut self, layer: usize, pos: usize, krow: &[f32], vrow: &[f32]) -> Result<()> {
+        ensure!(
+            krow.len() == self.d && vrow.len() == self.d,
+            "kv row width {}/{} != cache width {}",
+            krow.len(),
+            vrow.len(),
+            self.d
+        );
+        ensure!(pos < self.cap, "position {pos} outside cache capacity {}", self.cap);
+        let d = self.d;
+        let slot = pos % PAGE_SLOTS;
+        let page = self
+            .layers
+            .get_mut(layer)
+            .and_then(|pages| pages.get_mut(pos / PAGE_SLOTS));
+        let Some(page) = page else {
+            bail!("layer {layer} outside the cache's {} layers", self.layers.len());
+        };
+        let (khalf, vhalf) = page.split_at_mut(PAGE_SLOTS * d);
+        if let Some(dst) = khalf.get_mut(slot * d..(slot + 1) * d) {
+            dst.copy_from_slice(krow);
+        }
+        if let Some(dst) = vhalf.get_mut(slot * d..(slot + 1) * d) {
+            dst.copy_from_slice(vrow);
+        }
+        Ok(())
+    }
+
+    /// Commit `n` written positions (prefill commits the whole prompt at
+    /// once; each decode step commits one).
+    pub fn advance(&mut self, n: usize) -> Result<()> {
+        ensure!(
+            self.len + n <= self.cap,
+            "advance({n}) past cache capacity {} (len {})",
+            self.cap,
+            self.len
+        );
+        self.len += n;
+        Ok(())
+    }
+
+    /// Causal single-query attention for the row at position
+    /// [`Self::len`] of `layer` — whose key/value rows must already be
+    /// [written](Self::write) — against every cached position `0..=len`.
+    /// Returns the `[d]` context row.
+    ///
+    /// Bit-identical to the context row `attention_fwd_chunked` computes
+    /// for query `len` over the same keys/values with
+    /// `chunk = PAGE_SLOTS`: page boundaries *are* the chunk boundaries,
+    /// and each block runs the identical score → block-max → rescale →
+    /// accumulate → normalize f32 recurrence (see module docs).
+    pub fn attend_last(&self, layer: usize, n_heads: usize, q: &[f32]) -> Result<Vec<f32>> {
+        let d = self.d;
+        ensure!(q.len() == d, "query width {} != cache width {d}", q.len());
+        ensure!(
+            n_heads > 0 && d > 0 && d % n_heads == 0,
+            "width {d} not divisible by {n_heads} heads"
+        );
+        ensure!(self.len < self.cap, "attend_last on a full cache (len {})", self.len);
+        let Some(pages) = self.layers.get(layer) else {
+            bail!("layer {layer} outside the cache's {} layers", self.layers.len());
+        };
+        let total = self.len + 1; // cached history + the row being decoded
+        let dh = d / n_heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut out = vec![0.0f32; d];
+        // One reusable block of scores — same shape as the chunked oracle's.
+        let mut sc = vec![0.0f32; PAGE_SLOTS];
+        for h in 0..n_heads {
+            let off = h * dh;
+            let qh = q.get(off..off + dh).unwrap_or(&[]);
+            let mut m = f32::NEG_INFINITY; // running max
+            let mut z = 0.0f32; // running Σ exp(score − m)
+            let mut acc = vec![0.0f32; dh];
+            let mut t0 = 0usize;
+            for page in pages {
+                if t0 >= total {
+                    break;
+                }
+                let t1 = (t0 + PAGE_SLOTS).min(total);
+                let n = t1 - t0;
+                let (khalf, vhalf) = page.split_at(PAGE_SLOTS * d);
+                let mut block_max = f32::NEG_INFINITY;
+                for (e, krow) in sc.iter_mut().zip(khalf.chunks_exact(d)).take(n) {
+                    let kh = krow.get(off..off + dh).unwrap_or(&[]);
+                    let s = crate::tensor::dot(qh, kh) * scale;
+                    *e = s;
+                    if s > block_max {
+                        block_max = s;
+                    }
+                }
+                if block_max > m {
+                    // Rescale history to the new max (exp(−inf) = 0 covers
+                    // the first block) — the streaming-softmax recurrence.
+                    let r = (m - block_max).exp();
+                    z *= r;
+                    for x in acc.iter_mut() {
+                        *x *= r;
+                    }
+                    m = block_max;
+                }
+                for (e, vrow) in sc.iter().zip(vhalf.chunks_exact(d)).take(n) {
+                    let w = (e - m).exp();
+                    z += w;
+                    let vh = vrow.get(off..off + dh).unwrap_or(&[]);
+                    for (a, &vv) in acc.iter_mut().zip(vh.iter()) {
+                        *a += w * vv;
+                    }
+                }
+                t0 = t1;
+            }
+            let inv = 1.0 / z;
+            if let Some(oh) = out.get_mut(off..off + dh) {
+                for (o, a) in oh.iter_mut().zip(acc.iter()) {
+                    *o = a * inv;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for KvSeq {
+    fn drop(&mut self) {
+        let slots = std::mem::take(&mut self.slots);
+        self.layers.clear();
+        self.pool.release(&slots);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ops::{attention_fwd_chunked, ATTN_CHUNK};
+    use crate::rng::Pcg64;
+    use crate::tensor::Tensor;
+
+    fn pool(n_layers: usize, d: usize, pages: usize) -> (KvPool, MemoryLedger) {
+        let ledger = MemoryLedger::new();
+        (KvPool::new(n_layers, d, pages, ledger.clone()), ledger)
+    }
+
+    #[test]
+    fn page_arithmetic() {
+        assert_eq!(pages_per_layer(0), 0);
+        assert_eq!(pages_per_layer(1), 1);
+        assert_eq!(pages_per_layer(PAGE_SLOTS), 1);
+        assert_eq!(pages_per_layer(PAGE_SLOTS + 1), 2);
+        let (p, _) = pool(3, 8, 64);
+        assert_eq!(p.pages_for(PAGE_SLOTS + 1), 6);
+        assert_eq!(p.page_bytes(), 2 * PAGE_SLOTS * 8 * 4);
+        assert_eq!(p.seq_bytes(PAGE_SLOTS), 3 * p.page_bytes());
+    }
+
+    #[test]
+    fn slot_mapping_is_deterministic_lowest_first() {
+        // Page→slot assignment must depend only on the alloc/free call
+        // sequence, never on scheduling: lowest free ids first.
+        let (p, ledger) = pool(2, 4, 8);
+        let a = p.alloc_seq(2 * PAGE_SLOTS).expect("fits"); // 2 pages × 2 layers
+        assert_eq!(a.slots(), &[0, 1, 2, 3]);
+        let b = p.alloc_seq(PAGE_SLOTS).expect("fits");
+        assert_eq!(b.slots(), &[4, 5]);
+        assert_eq!(p.free_pages(), 2);
+        drop(a);
+        assert_eq!(p.free_pages(), 6);
+        // Freed ids are reused lowest-first, independent of drop order.
+        let c = p.alloc_seq(PAGE_SLOTS + 1).expect("fits");
+        assert_eq!(c.slots(), &[0, 1, 2, 3]);
+        drop(b);
+        drop(c);
+        assert_eq!(p.free_pages(), 8);
+        assert_eq!(ledger.live_bytes(), 0, "kv_cache tag must balance after drain");
+    }
+
+    #[test]
+    fn exhaustion_rejects_without_booking() {
+        let (p, ledger) = pool(1, 4, 2);
+        let a = p.alloc_seq(2 * PAGE_SLOTS).expect("exactly fits");
+        assert_eq!(ledger.live_bytes() as usize, 2 * p.page_bytes());
+        assert!(p.alloc_seq(1).is_none(), "pool is drained");
+        assert_eq!(
+            ledger.live_bytes() as usize,
+            2 * p.page_bytes(),
+            "a failed alloc must book nothing"
+        );
+        drop(a);
+        assert_eq!(p.free_pages(), 2);
+        assert_eq!(ledger.live_bytes(), 0);
+        assert!(p.alloc_seq(1).is_some(), "pages are reusable after release");
+    }
+
+    #[test]
+    fn write_and_advance_validate_bounds() {
+        let (p, _) = pool(2, 4, 8);
+        let mut s = p.alloc_seq(PAGE_SLOTS).expect("fits");
+        let row = vec![1.0f32; 4];
+        assert!(s.write(0, 0, &row, &row).is_ok());
+        assert!(s.write(2, 0, &row, &row).is_err(), "layer out of range");
+        assert!(s.write(0, PAGE_SLOTS, &row, &row).is_err(), "pos out of range");
+        assert!(s.write(0, 0, &row, &row[..3]).is_err(), "bad row width");
+        assert!(s.advance(PAGE_SLOTS).is_ok());
+        assert!(s.advance(1).is_err(), "past capacity");
+        assert!(s.attend_last(0, 2, &row).is_err(), "full cache has no next row");
+    }
+
+    #[test]
+    fn paged_attention_matches_chunked_oracle_deterministic() {
+        // Straddle several pages so the rescale path is exercised, and
+        // require *bit* equality with the chunked serve oracle.
+        let (b, heads, d) = (1usize, 2usize, 8usize);
+        for &s in &[1usize, 5, PAGE_SLOTS, PAGE_SLOTS + 3, 2 * PAGE_SLOTS + 7] {
+            let mut rng = Pcg64::seeded(1201 + s as u64);
+            let q = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+            let k = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+            let v = Tensor::randn(&[b * s, d], 1.0, &mut rng);
+            let oracle = attention_fwd_chunked(&q, &k, &v, b, s, heads, ATTN_CHUNK);
+            let (p, ledger) = pool(1, d, pages_per_layer(s));
+            let mut seq = p.alloc_seq(s).expect("fits");
+            for pos in 0..s {
+                seq.write(0, pos, k.row(pos), v.row(pos)).expect("in range");
+                let got = seq.attend_last(0, heads, q.row(pos)).expect("attend");
+                assert_eq!(
+                    got,
+                    oracle.row(pos),
+                    "paged context row {pos} of seq {s} must be bit-identical"
+                );
+                seq.advance(1).expect("in range");
+            }
+            drop(seq);
+            assert_eq!(ledger.live_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn greedy_argmax_is_nan_safe_and_last_tie_wins() {
+        assert_eq!(greedy_argmax(&[]), 0);
+        assert_eq!(greedy_argmax(&[0.5, 2.0, 1.0]), 1);
+        assert_eq!(greedy_argmax(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(greedy_argmax(&[3.0, 3.0]), 1, "ties resolve to the last index");
+    }
+}

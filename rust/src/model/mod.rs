@@ -15,10 +15,17 @@
 //! online softmax ([`ops::attention_fwd_chunked`], tolerance
 //! [`ATTN_CHUNK_REL_TOL`]), so serving never materializes the full logits
 //! or the `O(S²)` score matrix. See rust/DESIGN.md §Activation memory.
+//!
+//! Streaming generation decodes one token at a time against a paged KV
+//! cache ([`decode`]): prefill seeds the cache pages, each step is `O(S)`
+//! attention over the cached rows, and greedy tokens are bit-identical to
+//! the recompute-from-scratch oracle. See rust/DESIGN.md §Streaming
+//! decode.
 
 #![forbid(unsafe_code)] // `exec` is the repo's only unsafe island (see rust/DESIGN.md)
 
 pub mod config;
+pub mod decode;
 pub mod forward;
 pub mod io;
 pub mod kernels;
@@ -27,6 +34,7 @@ pub mod quantized;
 pub mod weights;
 
 pub use config::{Activation, ModelConfig};
+pub use decode::{greedy_argmax, KvPool, KvSeq, PAGE_SLOTS};
 pub use forward::{lm_forward, lm_forward_rows, lm_loss, ActivationTap, FwdRecord, RowSelect};
 pub use kernels::QmatmulKernel;
 pub use ops::{ATTN_CHUNK, ATTN_CHUNK_REL_TOL};

@@ -10,6 +10,7 @@
 //! qmatmul paths are serve-reachable, so shape problems surface as
 //! `Err`, never as a panic inside a lane thread.
 
+use super::decode::{self, KvPool, KvSeq};
 use super::forward::{embed_rows, RowSelect};
 use super::kernels;
 use super::ops::{
@@ -404,6 +405,212 @@ impl QuantizedLm {
         let wide = cfg.d_model.max(cfg.d_ff);
         (batch * cfg.vocab + batch * seq * wide + ATTN_CHUNK) * 4
     }
+
+    /// Validate that `kv` was allocated for this model's geometry and can
+    /// still hold `need` more positions.
+    fn check_cache(&self, kv: &KvSeq, need: usize) -> Result<()> {
+        let cfg = &self.skeleton.config;
+        ensure!(
+            kv.n_layers() == self.skeleton.layers.len() && kv.width() == cfg.d_model,
+            "kv cache geometry {}x{} does not match model {}x{}",
+            kv.n_layers(),
+            kv.width(),
+            self.skeleton.layers.len(),
+            cfg.d_model
+        );
+        ensure!(
+            kv.len() + need <= kv.capacity(),
+            "kv cache capacity {} cannot take {need} more positions (len {})",
+            kv.capacity(),
+            kv.len()
+        );
+        ensure!(
+            kv.len() + need <= cfg.seq_len,
+            "cached positions {} + {need} exceed model context {}",
+            kv.len(),
+            cfg.seq_len
+        );
+        Ok(())
+    }
+
+    /// Prefill for streaming decode: run the serve forward over the whole
+    /// `prompt` (exactly [`Self::forward_rows`] in
+    /// [`RowSelect::LastRow`] mode — chunked attention, answer-row head),
+    /// additionally writing every position's per-layer key/value rows
+    /// into `kv`, and return the `[1, V]` logits of the last prompt
+    /// position. The returned logits — and hence the first greedy token —
+    /// are bit-identical to `forward_rows(prompt, 1, len, LastRow)`; the
+    /// cache writes do not perturb any float op.
+    pub fn decode_prefill(&self, kv: &mut KvSeq, prompt: &[u32]) -> Result<Tensor> {
+        let _span =
+            crate::trace::span_detail("model", "lm.prefill", || format!("len {}", prompt.len()));
+        let s = &self.skeleton;
+        let cfg = &s.config;
+        let st = &self.qlinears;
+        ensure!(!prompt.is_empty(), "prefill over an empty prompt");
+        ensure!(kv.is_empty(), "prefill into a non-empty kv cache (len {})", kv.len());
+        self.check_cache(kv, prompt.len())?;
+        for &t in prompt {
+            ensure!((t as usize) < cfg.vocab, "token id {t} outside vocab {}", cfg.vocab);
+        }
+        let seq = prompt.len();
+        let mut x = embed_rows(&s.tok_emb, &s.pos_emb, cfg.seq_len, prompt, 1, seq);
+        for (li, (l, p)) in s.layers.iter().zip(self.plan.layers.iter()).enumerate() {
+            let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
+            let q = Self::qmatmul(&ln1, st.at(p.q))?;
+            let k = Self::qmatmul(&ln1, st.at(p.k))?;
+            let v = Self::qmatmul(&ln1, st.at(p.v))?;
+            for pos in 0..seq {
+                kv.write(li, pos, k.row(pos), v.row(pos))?;
+            }
+            let ctx = attention_fwd_chunked(&q, &k, &v, 1, seq, cfg.n_heads, ATTN_CHUNK);
+            let attn_out = Self::qmatmul(&ctx, st.at(p.out))?;
+            x.add_assign(&attn_out);
+            let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
+            let up = act_fwd(&Self::qmatmul(&ln2, st.at(p.up))?, cfg.activation);
+            let down = Self::qmatmul(&up, st.at(p.down))?;
+            x.add_assign(&down);
+        }
+        let x = RowSelect::LastRow.select(x, 1, seq);
+        let (lnf, _, _) = layernorm_fwd(&x, &s.lnf_g, &s.lnf_b);
+        let logits = match self.plan.head {
+            Some(h) => Self::qmatmul(&lnf, st.at(h))?,
+            None => linear_fwd(&lnf, &s.tok_emb),
+        };
+        kv.advance(seq)?;
+        Ok(logits)
+    }
+
+    /// One streaming decode step: embed `token` at the next absolute
+    /// position, run a `[1, d]` forward whose attention reads the paged
+    /// cache ([`KvSeq::attend_last`]) instead of recomputing every key
+    /// and value, append this position's key/value rows to `kv`, and
+    /// return the `[1, V]` logits.
+    ///
+    /// `O(S)` per step: every non-attention op touches one row, and
+    /// attention is one pass over the cached rows. Bit-identical to
+    /// `forward_rows(prefix ++ [token], 1, len+1, LastRow)` because each
+    /// op is row-independent in a fixed f32 order and the paged attention
+    /// replays the chunked oracle's block recurrence (see
+    /// [`super::decode`]).
+    pub fn decode_step(&self, kv: &mut KvSeq, token: u32) -> Result<Tensor> {
+        let s = &self.skeleton;
+        let cfg = &s.config;
+        let st = &self.qlinears;
+        let pos = kv.len();
+        let _span = crate::trace::span_detail("model", "lm.decode_step", || format!("pos {pos}"));
+        ensure!(pos > 0, "decode_step before prefill");
+        self.check_cache(kv, 1)?;
+        ensure!((token as usize) < cfg.vocab, "token id {token} outside vocab {}", cfg.vocab);
+        let d = cfg.d_model;
+        // Same arithmetic as `embed_rows` for the single row at `pos`.
+        let mut e = vec![0.0f32; d];
+        let te = s.tok_emb.row(token as usize);
+        let pe = s.pos_emb.row(pos);
+        for ((o, &a), &b) in e.iter_mut().zip(te.iter()).zip(pe.iter()) {
+            *o = a + b;
+        }
+        let mut x = Tensor::from_vec(&[1, d], e);
+        for (li, (l, p)) in s.layers.iter().zip(self.plan.layers.iter()).enumerate() {
+            let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
+            let q = Self::qmatmul(&ln1, st.at(p.q))?;
+            let k = Self::qmatmul(&ln1, st.at(p.k))?;
+            let v = Self::qmatmul(&ln1, st.at(p.v))?;
+            kv.write(li, pos, k.row(0), v.row(0))?;
+            let ctx = Tensor::from_vec(&[1, d], kv.attend_last(li, cfg.n_heads, q.row(0))?);
+            let attn_out = Self::qmatmul(&ctx, st.at(p.out))?;
+            x.add_assign(&attn_out);
+            let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
+            let up = act_fwd(&Self::qmatmul(&ln2, st.at(p.up))?, cfg.activation);
+            let down = Self::qmatmul(&up, st.at(p.down))?;
+            x.add_assign(&down);
+        }
+        let (lnf, _, _) = layernorm_fwd(&x, &s.lnf_g, &s.lnf_b);
+        let logits = match self.plan.head {
+            Some(h) => Self::qmatmul(&lnf, st.at(h))?,
+            None => linear_fwd(&lnf, &s.tok_emb),
+        };
+        kv.advance(1)?;
+        Ok(logits)
+    }
+
+    /// Greedy streaming generation through a paged KV cache: allocate a
+    /// worst-case sequence from `pool`, prefill on `prompt`, then decode
+    /// up to `max_new` tokens (stopping after `eos` when given, which is
+    /// included in the output). Token-for-token bit-identical to
+    /// [`Self::generate_recompute`] — the contract the decode determinism
+    /// tests pin.
+    ///
+    /// The context bound is `prompt.len() + max_new ≤ seq_len + 1`: the
+    /// final sampled token is returned but never re-embedded.
+    pub fn generate(
+        &self,
+        pool: &KvPool,
+        prompt: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> Result<Vec<u32>> {
+        ensure!(max_new > 0, "generate of zero tokens");
+        let cfg = &self.skeleton.config;
+        ensure!(
+            prompt.len() + max_new <= cfg.seq_len + 1,
+            "prompt {} + max_new {max_new} exceeds context {}",
+            prompt.len(),
+            cfg.seq_len
+        );
+        let cap_tokens = prompt.len() + max_new - 1;
+        let Some(mut kv) = pool.alloc_seq(cap_tokens) else {
+            bail!(
+                "kv pool exhausted: {} of {} pages free, need {}",
+                pool.free_pages(),
+                pool.capacity_pages(),
+                pool.pages_for(cap_tokens)
+            );
+        };
+        let logits = self.decode_prefill(&mut kv, prompt)?;
+        let mut next = decode::greedy_argmax(logits.row(0)) as u32;
+        let mut out = vec![next];
+        while out.len() < max_new && Some(next) != eos {
+            let logits = self.decode_step(&mut kv, next)?;
+            next = decode::greedy_argmax(logits.row(0)) as u32;
+            out.push(next);
+        }
+        Ok(out)
+    }
+
+    /// The recompute-from-scratch greedy decode oracle: every step
+    /// re-runs the full serve forward over the growing prefix — `O(S²)`
+    /// per token, no cache. This is the reference [`Self::generate`] must
+    /// match bitwise, and the baseline arm of `benches/serve.rs`'s decode
+    /// comparison.
+    pub fn generate_recompute(
+        &self,
+        prompt: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> Result<Vec<u32>> {
+        ensure!(max_new > 0, "generate of zero tokens");
+        ensure!(!prompt.is_empty(), "prefill over an empty prompt");
+        let cfg = &self.skeleton.config;
+        ensure!(
+            prompt.len() + max_new <= cfg.seq_len + 1,
+            "prompt {} + max_new {max_new} exceeds context {}",
+            prompt.len(),
+            cfg.seq_len
+        );
+        let mut toks = prompt.to_vec();
+        let mut out = Vec::with_capacity(max_new);
+        loop {
+            let logits = self.forward_rows(&toks, 1, toks.len(), RowSelect::LastRow)?;
+            let next = decode::greedy_argmax(logits.row(0)) as u32;
+            out.push(next);
+            if out.len() >= max_new || Some(next) == eos {
+                break;
+            }
+            toks.push(next);
+        }
+        Ok(out)
+    }
 }
 
 /// The one resident-accounting body behind
@@ -786,5 +993,89 @@ mod tests {
         let w = LmWeights::init(&cfg, &mut rng);
         let err = QuantizedLm::from_weights(w, HashMap::new()).expect_err("no linears supplied");
         assert!(err.to_string().contains("missing quantized layer"), "{err}");
+    }
+
+    fn decode_pool(qlm: &QuantizedLm, pages: usize) -> (KvPool, MemoryLedger) {
+        let ledger = MemoryLedger::new();
+        let cfg = &qlm.skeleton.config;
+        (KvPool::new(cfg.n_layers, cfg.d_model, pages, ledger.clone()), ledger)
+    }
+
+    #[test]
+    fn paged_decode_bit_identical_to_recompute_oracle_deterministic() {
+        // The PR's correctness contract, run by the CI determinism matrix
+        // at RPIQ_THREADS=1/2/8: greedy decode through the paged KV cache
+        // reproduces the recompute-from-scratch oracle token for token at
+        // any thread count, and the kv_cache ledger tag drains to zero.
+        let _threads = crate::exec::thread_target_test_lock();
+        let _kernel = kernel_test_lock();
+        let before = crate::exec::num_threads();
+        let (_, qlm, tokens) = build_rtn_qlm(4);
+        let prompt = &tokens[..3];
+        let oracle = qlm.generate_recompute(prompt, 6, None).expect("oracle decode");
+        assert_eq!(oracle.len(), 6);
+        for threads in [1usize, 2, 8] {
+            crate::exec::set_threads(threads);
+            let (pool, ledger) = decode_pool(&qlm, 8);
+            let cached = qlm.generate(&pool, prompt, 6, None).expect("cached decode");
+            assert_eq!(cached, oracle, "threads={threads}");
+            assert_eq!(ledger.live_bytes(), 0, "kv_cache must drain (threads={threads})");
+            assert_eq!(pool.free_pages(), 8, "all pages returned (threads={threads})");
+        }
+        crate::exec::set_threads(before);
+    }
+
+    #[test]
+    fn decode_prefill_matches_last_row_forward_bitwise() {
+        // The first streamed token comes from prefill logits that must be
+        // the serve forward's, exactly.
+        let (_, qlm, tokens) = build_rtn_qlm(4);
+        let prompt = &tokens[..5];
+        let (pool, _ledger) = decode_pool(&qlm, 8);
+        let mut kv = pool.alloc_seq(8).expect("fits");
+        let prefill = qlm.decode_prefill(&mut kv, prompt).expect("prefill");
+        let oracle = qlm
+            .forward_rows(prompt, 1, prompt.len(), RowSelect::LastRow)
+            .expect("forward");
+        assert_eq!(prefill.data(), oracle.data());
+        assert_eq!(kv.len(), prompt.len());
+    }
+
+    #[test]
+    fn decode_eos_stops_early_and_is_included() {
+        let (_, qlm, tokens) = build_rtn_qlm(4);
+        let prompt = &tokens[..3];
+        let free_run = qlm.generate_recompute(prompt, 6, None).expect("oracle");
+        let eos = *free_run.get(2).expect("6 tokens");
+        let (pool, ledger) = decode_pool(&qlm, 8);
+        let stopped = qlm.generate(&pool, prompt, 6, Some(eos)).expect("cached");
+        let oracle = qlm.generate_recompute(prompt, 6, Some(eos)).expect("oracle");
+        assert_eq!(stopped, oracle);
+        assert_eq!(stopped.last(), Some(&eos), "eos token is included");
+        assert!(stopped.len() <= 3, "stopped at the first eos");
+        assert_eq!(ledger.live_bytes(), 0);
+    }
+
+    #[test]
+    fn decode_rejects_bad_shapes_and_exhausted_pool() {
+        let (_, qlm, tokens) = build_rtn_qlm(4);
+        let prompt = &tokens[..3];
+        // context overflow is an Err, not a panic (serve-reachable path)
+        let err = qlm.generate_recompute(prompt, 32, None).expect_err("context");
+        assert!(err.to_string().contains("exceeds context"), "{err}");
+        let (pool, ledger) = decode_pool(&qlm, 8);
+        let err = qlm.generate(&pool, prompt, 32, None).expect_err("context");
+        assert!(err.to_string().contains("exceeds context"), "{err}");
+        // a drained pool surfaces as Err too, booking nothing
+        let hold = pool.alloc_seq(8 * crate::model::decode::PAGE_SLOTS / 2);
+        assert!(hold.is_some());
+        let err = qlm.generate(&pool, prompt, 6, None).expect_err("pool drained");
+        assert!(err.to_string().contains("kv pool exhausted"), "{err}");
+        // a too-small cache is rejected by geometry checks
+        let mut kv = KvPool::new(1, 4, 4, MemoryLedger::new()).alloc_seq(4).expect("fits");
+        let err = qlm.decode_prefill(&mut kv, prompt).expect_err("geometry");
+        assert!(err.to_string().contains("does not match model"), "{err}");
+        drop(hold);
+        assert_eq!(ledger.live_bytes(), 0);
     }
 }

@@ -22,6 +22,7 @@ use crate::model::config::ModelConfig;
 
 pub mod io;
 pub mod train;
+use crate::model::decode::{self, KvPool, KvSeq};
 use crate::model::forward::{ActivationTap, RowSelect};
 use crate::model::ops::*;
 use crate::model::quantized::LmPlan;
@@ -801,6 +802,237 @@ impl QuantizedVlm {
             None => Ok(linear_fwd(&lnf, &lm.tok_emb)),
         }
     }
+
+    /// Validate that `kv` matches this model's decoder geometry and can
+    /// still hold `need` more positions (cached positions count image
+    /// patches *and* text tokens — the decoder sees one combined
+    /// sequence).
+    fn check_cache(&self, kv: &KvSeq, need: usize) -> Result<()> {
+        let lm = &self.skeleton.lm;
+        ensure!(
+            kv.n_layers() == lm.layers.len() && kv.width() == lm.config.d_model,
+            "kv cache geometry {}x{} does not match model {}x{}",
+            kv.n_layers(),
+            kv.width(),
+            lm.layers.len(),
+            lm.config.d_model
+        );
+        ensure!(
+            kv.len() + need <= kv.capacity(),
+            "kv cache capacity {} cannot take {need} more positions (len {})",
+            kv.capacity(),
+            kv.len()
+        );
+        ensure!(
+            kv.len() + need <= lm.config.seq_len,
+            "cached positions {} + {need} exceed model context {}",
+            kv.len(),
+            lm.config.seq_len
+        );
+        Ok(())
+    }
+
+    /// Prefill for streaming VLM decode: run the vision tower and cross
+    /// adapter on `patches`, assemble `[image tokens ; question]`
+    /// embeddings (absolute positions), and run the decoder body exactly
+    /// as [`Self::forward_rows`] in [`RowSelect::LastRow`] mode while
+    /// writing every combined-sequence position's per-layer key/value
+    /// rows into `kv`. Returns the `[1, V]` logits of the last question
+    /// position, bit-identical to
+    /// `forward_rows(patches, question, 1, LastRow)`.
+    pub fn decode_prefill(
+        &self,
+        kv: &mut KvSeq,
+        patches: &Tensor,
+        question: &[u32],
+    ) -> Result<Tensor> {
+        let _span = crate::trace::span_detail("model", "vlm.prefill", || {
+            format!("len {}", question.len())
+        });
+        let cfg = &self.skeleton.config;
+        let st = &self.qlinears;
+        let plan = &self.plan;
+        ensure!(!question.is_empty(), "prefill over an empty question");
+        ensure!(kv.is_empty(), "prefill into a non-empty kv cache (len {})", kv.len());
+        ensure!(
+            patches.rows() == cfg.n_patches && patches.cols() == cfg.patch_dim,
+            "patch grid {}x{} does not match config {}x{}",
+            patches.rows(),
+            patches.cols(),
+            cfg.n_patches,
+            cfg.patch_dim
+        );
+        let seq = cfg.n_patches + question.len();
+        self.check_cache(kv, seq)?;
+        for &t in question {
+            ensure!((t as usize) < cfg.lm.vocab, "token id {t} outside vocab {}", cfg.lm.vocab);
+        }
+        let gelu_act = crate::model::Activation::Gelu;
+        let mut h = QuantizedLm::qmatmul(patches, st.at(plan.patch_proj))?;
+        for &(fc1, fc2) in &plan.vision {
+            let mid = act_fwd(&QuantizedLm::qmatmul(&h, st.at(fc1))?, gelu_act);
+            let out = QuantizedLm::qmatmul(&mid, st.at(fc2))?;
+            h.add_assign(&out);
+        }
+        let cross = act_fwd(&QuantizedLm::qmatmul(&h, st.at(plan.cross_up))?, gelu_act);
+        let img_tokens = QuantizedLm::qmatmul(&cross, st.at(plan.cross_down))?;
+        let lm = &self.skeleton.lm;
+        let mut x = assemble_embeddings_rows(
+            &lm.tok_emb,
+            &lm.pos_emb,
+            cfg.n_patches,
+            cfg.lm.seq_len,
+            &img_tokens,
+            question,
+            1,
+        );
+        for (li, (l, p)) in lm.layers.iter().zip(self.plan.lm.layers.iter()).enumerate() {
+            let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
+            let q = QuantizedLm::qmatmul(&ln1, st.at(p.q))?;
+            let k = QuantizedLm::qmatmul(&ln1, st.at(p.k))?;
+            let v = QuantizedLm::qmatmul(&ln1, st.at(p.v))?;
+            for pos in 0..seq {
+                kv.write(li, pos, k.row(pos), v.row(pos))?;
+            }
+            let ctx = attention_fwd_chunked(&q, &k, &v, 1, seq, cfg.lm.n_heads, ATTN_CHUNK);
+            x.add_assign(&QuantizedLm::qmatmul(&ctx, st.at(p.out))?);
+            let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
+            let up = act_fwd(&QuantizedLm::qmatmul(&ln2, st.at(p.up))?, cfg.lm.activation);
+            x.add_assign(&QuantizedLm::qmatmul(&up, st.at(p.down))?);
+        }
+        let x = RowSelect::LastRow.select(x, 1, seq);
+        let (lnf, _, _) = layernorm_fwd(&x, &lm.lnf_g, &lm.lnf_b);
+        let logits = match self.plan.lm.head {
+            Some(hd) => QuantizedLm::qmatmul(&lnf, st.at(hd))?,
+            None => linear_fwd(&lnf, &lm.tok_emb),
+        };
+        kv.advance(seq)?;
+        Ok(logits)
+    }
+
+    /// One streaming VLM decode step: embed `token` at the next absolute
+    /// combined-sequence position (image patches count — text token `i`
+    /// of the assembled sequence sits at position `n_patches + i`, which
+    /// is exactly [`KvSeq::len`]), run a `[1, d]` decoder forward whose
+    /// attention reads the paged cache, and return the `[1, V]` logits.
+    /// Bit-identical to re-running the full forward on the grown question
+    /// — see [`crate::model::decode`] for the argument.
+    pub fn decode_step(&self, kv: &mut KvSeq, token: u32) -> Result<Tensor> {
+        let lm = &self.skeleton.lm;
+        let cfg = &lm.config;
+        let st = &self.qlinears;
+        let pos = kv.len();
+        let _span = crate::trace::span_detail("model", "vlm.decode_step", || format!("pos {pos}"));
+        ensure!(pos > 0, "decode_step before prefill");
+        self.check_cache(kv, 1)?;
+        ensure!((token as usize) < cfg.vocab, "token id {token} outside vocab {}", cfg.vocab);
+        let d = cfg.d_model;
+        // Same arithmetic as `assemble_embeddings_rows` for one text row.
+        let mut e = vec![0.0f32; d];
+        let te = lm.tok_emb.row(token as usize);
+        let pe = lm.pos_emb.row(pos);
+        for ((o, &a), &b) in e.iter_mut().zip(te.iter()).zip(pe.iter()) {
+            *o = a + b;
+        }
+        let mut x = Tensor::from_vec(&[1, d], e);
+        for (li, (l, p)) in lm.layers.iter().zip(self.plan.lm.layers.iter()).enumerate() {
+            let (ln1, _, _) = layernorm_fwd(&x, &l.ln1_g, &l.ln1_b);
+            let q = QuantizedLm::qmatmul(&ln1, st.at(p.q))?;
+            let k = QuantizedLm::qmatmul(&ln1, st.at(p.k))?;
+            let v = QuantizedLm::qmatmul(&ln1, st.at(p.v))?;
+            kv.write(li, pos, k.row(0), v.row(0))?;
+            let ctx = Tensor::from_vec(&[1, d], kv.attend_last(li, cfg.n_heads, q.row(0))?);
+            x.add_assign(&QuantizedLm::qmatmul(&ctx, st.at(p.out))?);
+            let (ln2, _, _) = layernorm_fwd(&x, &l.ln2_g, &l.ln2_b);
+            let up = act_fwd(&QuantizedLm::qmatmul(&ln2, st.at(p.up))?, cfg.activation);
+            x.add_assign(&QuantizedLm::qmatmul(&up, st.at(p.down))?);
+        }
+        let (lnf, _, _) = layernorm_fwd(&x, &lm.lnf_g, &lm.lnf_b);
+        let logits = match self.plan.lm.head {
+            Some(hd) => QuantizedLm::qmatmul(&lnf, st.at(hd))?,
+            None => linear_fwd(&lnf, &lm.tok_emb),
+        };
+        kv.advance(1)?;
+        Ok(logits)
+    }
+
+    /// Greedy streaming generation for one `(patches, question)` pair
+    /// through a paged KV cache — the VLM counterpart of
+    /// [`QuantizedLm::generate`], bit-identical to
+    /// [`Self::generate_recompute`]. Context bound:
+    /// `n_patches + question + max_new ≤ lm.seq_len + 1`.
+    pub fn generate(
+        &self,
+        pool: &KvPool,
+        patches: &Tensor,
+        question: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> Result<Vec<u32>> {
+        ensure!(max_new > 0, "generate of zero tokens");
+        let cfg = &self.skeleton.config;
+        let s0 = cfg.n_patches + question.len();
+        ensure!(
+            s0 + max_new <= cfg.lm.seq_len + 1,
+            "patches {} + question {} + max_new {max_new} exceeds context {}",
+            cfg.n_patches,
+            question.len(),
+            cfg.lm.seq_len
+        );
+        let cap_tokens = s0 + max_new - 1;
+        let Some(mut kv) = pool.alloc_seq(cap_tokens) else {
+            bail!(
+                "kv pool exhausted: {} of {} pages free, need {}",
+                pool.free_pages(),
+                pool.capacity_pages(),
+                pool.pages_for(cap_tokens)
+            );
+        };
+        let logits = self.decode_prefill(&mut kv, patches, question)?;
+        let mut next = decode::greedy_argmax(logits.row(0)) as u32;
+        let mut out = vec![next];
+        while out.len() < max_new && Some(next) != eos {
+            let logits = self.decode_step(&mut kv, next)?;
+            next = decode::greedy_argmax(logits.row(0)) as u32;
+            out.push(next);
+        }
+        Ok(out)
+    }
+
+    /// The recompute-from-scratch VLM greedy decode oracle: every step
+    /// re-runs [`Self::forward_rows`] (vision tower included) over the
+    /// grown question — the reference [`Self::generate`] must match
+    /// bitwise.
+    pub fn generate_recompute(
+        &self,
+        patches: &Tensor,
+        question: &[u32],
+        max_new: usize,
+        eos: Option<u32>,
+    ) -> Result<Vec<u32>> {
+        ensure!(max_new > 0, "generate of zero tokens");
+        ensure!(!question.is_empty(), "prefill over an empty question");
+        let cfg = &self.skeleton.config;
+        ensure!(
+            cfg.n_patches + question.len() + max_new <= cfg.lm.seq_len + 1,
+            "patches {} + question {} + max_new {max_new} exceeds context {}",
+            cfg.n_patches,
+            question.len(),
+            cfg.lm.seq_len
+        );
+        let mut text = question.to_vec();
+        let mut out = Vec::with_capacity(max_new);
+        loop {
+            let logits = self.forward_rows(patches, &text, 1, RowSelect::LastRow)?;
+            let next = decode::greedy_argmax(logits.row(0)) as u32;
+            out.push(next);
+            if out.len() >= max_new || Some(next) == eos {
+                break;
+            }
+            text.push(next);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -1051,5 +1283,64 @@ mod tests {
         // the fp32 VLM loader must reject the quantized container
         assert!(crate::vlm::io::load_vlm(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn vlm_paged_decode_bit_identical_to_recompute_oracle_deterministic() {
+        // VLM arm of the decode contract, run by the CI determinism
+        // matrix at RPIQ_THREADS=1/2/8: greedy generation through the
+        // paged KV cache (image patches cached alongside text) matches
+        // the recompute oracle token for token, and the kv_cache ledger
+        // tag drains to zero.
+        let _threads = crate::exec::thread_target_test_lock();
+        let _kernel = crate::model::kernels::kernel_test_lock();
+        let before = crate::exec::num_threads();
+        let (w, patches, text, _) = tiny();
+        let cfg = w.config.clone();
+        let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete");
+        // one pair: the first image's patches, a 4-token question
+        let one = patches.slice_rows(0, cfg.n_patches);
+        let question = &text[..4];
+        let max_new = cfg.lm.seq_len + 1 - cfg.n_patches - question.len();
+        let oracle = qvlm
+            .generate_recompute(&one, question, max_new, None)
+            .expect("oracle decode");
+        assert_eq!(oracle.len(), max_new);
+        for threads in [1usize, 2, 8] {
+            crate::exec::set_threads(threads);
+            let ledger = crate::metrics::MemoryLedger::new();
+            let pool =
+                KvPool::new(cfg.lm.n_layers, cfg.lm.d_model, 8, ledger.clone());
+            let cached = qvlm
+                .generate(&pool, &one, question, max_new, None)
+                .expect("cached decode");
+            assert_eq!(cached, oracle, "threads={threads}");
+            assert_eq!(ledger.live_bytes(), 0, "kv_cache must drain (threads={threads})");
+            assert_eq!(pool.free_pages(), 8, "all pages returned (threads={threads})");
+        }
+        crate::exec::set_threads(before);
+    }
+
+    #[test]
+    fn vlm_decode_prefill_matches_last_row_forward_bitwise() {
+        let _kernel = crate::model::kernels::kernel_test_lock();
+        let (w, patches, text, _) = tiny();
+        let cfg = w.config.clone();
+        let qvlm = QuantizedVlm::quantize_rtn(w, QuantGrid::new(4, 8)).expect("complete");
+        let one = patches.slice_rows(0, cfg.n_patches);
+        let question = &text[..4];
+        let pool = KvPool::new(
+            cfg.lm.n_layers,
+            cfg.lm.d_model,
+            8,
+            crate::metrics::MemoryLedger::new(),
+        );
+        let mut kv = pool.alloc_seq(cfg.lm.seq_len).expect("fits");
+        let prefill = qvlm.decode_prefill(&mut kv, &one, question).expect("prefill");
+        let oracle = qvlm
+            .forward_rows(&one, question, 1, RowSelect::LastRow)
+            .expect("forward");
+        assert_eq!(prefill.data(), oracle.data());
+        assert_eq!(kv.len(), cfg.n_patches + question.len(), "patches are cached too");
     }
 }

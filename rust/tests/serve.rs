@@ -6,9 +6,10 @@
 //! small runners.
 
 use rpiq::coordinator::{
-    Answer, LaneEngine, Payload, Response, ServeConfig, Server, SubmitError, LANE_SENTIMENT,
-    LANE_VQA,
+    Answer, LaneEngine, Payload, Response, ServeConfig, Server, SubmitError, LANE_GENERATE,
+    LANE_SENTIMENT, LANE_VQA,
 };
+use rpiq::metrics::tags;
 use rpiq::data::corpus::Lexicon;
 use rpiq::data::Tokenizer;
 use rpiq::exec::Channel;
@@ -336,6 +337,7 @@ fn budget_splits_batches_and_still_answers_everything() {
             max_wait: Duration::from_millis(1),
             queue_cap: 64,
             activation_budget: Some(budget),
+            kv_pages: None,
         },
     );
     let ledger = server.ledger().clone();
@@ -354,4 +356,109 @@ fn budget_splits_batches_and_still_answers_everything() {
     let peak = ledger.peak_for("activations.sentiment") as usize;
     assert!(peak > 0, "lanes booked transients");
     assert!(peak <= budget, "peak {peak} must stay within budget {budget}");
+}
+
+#[test]
+fn generate_streams_each_token_exactly_once_and_matches_oracle_deterministic() {
+    let tok = Lexicon::tokenizer();
+    let qlm = tiny_qlm(&tok);
+    let prompt = tok.encode("sentiment of text :");
+    let max_new = qlm.config().seq_len + 1 - prompt.len();
+    let server = Server::start_generate(
+        Arc::clone(&qlm),
+        &tok,
+        ServeConfig {
+            lanes: 1,
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 16,
+            ..Default::default()
+        },
+    );
+    let pool = server.kv_pool().cloned().expect("generate server owns a kv pool");
+    let ledger = server.ledger().clone();
+    let ch = server.submit_generate(prompt.clone(), max_new, None).unwrap();
+    // The stream contract: one Token per decoded position, indices strictly
+    // 0..max_new in order, then a single terminal Generated recap.
+    let mut streamed: Vec<u32> = Vec::new();
+    let mut finals: Vec<Vec<u32>> = Vec::new();
+    while let Some(resp) = ch.recv() {
+        match resp.answer {
+            Answer::Token { index, token, .. } => {
+                assert_eq!(index, streamed.len(), "token indices arrive in order");
+                streamed.push(token);
+            }
+            Answer::Generated { tokens, .. } => finals.push(tokens),
+            other => panic!("unexpected answer on generate stream: {other:?}"),
+        }
+    }
+    let oracle = qlm.generate_recompute(&prompt, max_new, None).unwrap();
+    assert_eq!(streamed, oracle, "streamed tokens match the recompute oracle");
+    assert_eq!(finals, vec![oracle], "exactly one terminal recap, same tokens");
+    let stats = server.shutdown();
+    assert_eq!(stats.count(), 1);
+    let per_token = stats.lane_tokens(LANE_GENERATE).expect("per-token latency recorded");
+    assert_eq!(per_token.count(), max_new);
+    // KV accounting ran and fully unwound: pages back in the pool, tag at zero.
+    assert!(ledger.peak_for(tags::KV_CACHE) > 0, "kv cache pages were booked");
+    assert_eq!(pool.free_pages(), pool.capacity_pages(), "pool fully free after drain");
+    assert_eq!(ledger.live_bytes(), 0, "ledger balances after drain");
+}
+
+#[test]
+fn generate_client_disconnect_balances_kv_ledger() {
+    let tok = Lexicon::tokenizer();
+    let qlm = tiny_qlm(&tok);
+    let prompt = tok.encode("sentiment of text :");
+    let server = Server::start_generate(
+        Arc::clone(&qlm),
+        &tok,
+        ServeConfig { lanes: 1, max_batch: 2, queue_cap: 16, ..Default::default() },
+    );
+    let pool = server.kv_pool().cloned().expect("generate server owns a kv pool");
+    let ledger = server.ledger().clone();
+    let ch = server.submit_generate(prompt, 5, None).unwrap();
+    assert!(ch.recv().is_some(), "first streamed token arrives");
+    // Walk away mid-stream: the lane must notice the dead reply channel,
+    // retire the sequence, and hand every page and byte back.
+    ch.close();
+    let t0 = Instant::now();
+    while pool.free_pages() != pool.capacity_pages() || ledger.live_bytes() != 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "kv pages/bytes not reclaimed after disconnect: {}/{} pages free, {} bytes live",
+            pool.free_pages(),
+            pool.capacity_pages(),
+            ledger.live_bytes()
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    server.shutdown();
+    assert_eq!(ledger.live_bytes(), 0, "ledger balances after shutdown");
+}
+
+#[test]
+fn generate_pool_exhaustion_rejects_at_submit_without_deadlock() {
+    let tok = Lexicon::tokenizer();
+    let qlm = tiny_qlm(&tok);
+    let prompt = tok.encode("sentiment of text :");
+    // test_tiny needs n_layers = 2 pages per sequence; a 1-page pool can
+    // never hold one, so admission must reject up front — OverBudget in
+    // kv-pool bytes — rather than park the request forever.
+    let server = Server::start_generate(
+        Arc::clone(&qlm),
+        &tok,
+        ServeConfig { lanes: 1, kv_pages: Some(1), ..Default::default() },
+    );
+    let pool = server.kv_pool().cloned().expect("generate server owns a kv pool");
+    match server.submit_generate(prompt, 3, None).unwrap_err() {
+        SubmitError::OverBudget { needed, cap } => {
+            assert_eq!(cap, pool.page_bytes(), "cap reported in kv-pool bytes");
+            assert!(needed > cap, "request needs more pages than the pool holds");
+        }
+        other => panic!("expected OverBudget, got {other:?}"),
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.rejects().over_budget, 1);
+    assert_eq!(stats.count(), 0);
 }
